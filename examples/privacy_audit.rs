@@ -1,0 +1,101 @@
+//! Privacy audit: what actually crosses the device-cloud boundary in HAT,
+//! and how hard is it to invert?
+//!
+//! The U-shaped split exists so raw tokens never leave the device (§2.2).
+//! This example quantifies that on the real artifacts:
+//!
+//! 1. payload inventory — the only uplink payloads are f32 hidden-state
+//!    matrices (per-token wire cost A = hidden×4 B here), never token ids;
+//! 2. inversion attack — a curious cloud tries the classic
+//!    nearest-embedding attack on the uploaded shallow hidden states and
+//!    on raw embeddings (what a split *before* layer 1 would leak):
+//!    embeddings invert ~100%, post-layer-1 states far less.
+
+use hat::engine::Engine;
+use hat::model::DeviceStream;
+use hat::runtime::ArtifactRegistry;
+use hat::util::rng::Rng;
+use hat::workload::PromptPool;
+use xla::FromRawBytes as _;
+
+fn main() -> anyhow::Result<()> {
+    let dir = ArtifactRegistry::default_dir();
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts not found — run `make artifacts` first"
+    );
+    let engine = Engine::load(&dir)?;
+    let spec = engine.spec().clone();
+    let pool = PromptPool::load(&dir.join("prompts.bin"))?;
+    let mut rng = Rng::new(5);
+    let prompt = pool.sample(128, &mut rng);
+
+    // What the device uploads in prefill: shallow hidden states.
+    let mut dev = DeviceStream::new(&spec)?;
+    let hidden = engine.device_input(&mut dev, &prompt)?;
+    println!("=== payload inventory (prefill, {}-token prompt) ===", prompt.len());
+    println!(
+        "uplink payload: f32[{}, {}] hidden states = {} bytes ({} B/token)",
+        prompt.len(),
+        spec.hidden,
+        hidden.len() * 4,
+        spec.hidden * 4
+    );
+    println!("token ids on the wire: 0 (tokens never leave the device)\n");
+
+    // The attack: cloud knows the public embedding table; tries nearest
+    // neighbour against (a) raw embeddings, (b) the actual upload.
+    let npz = dir.join("weights.npz");
+    let lits = xla::Literal::read_npz(&npz, &()).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let embed = lits
+        .iter()
+        .find(|(n, _)| n == "embed")
+        .map(|(_, l)| l.to_vec::<f32>().unwrap())
+        .ok_or_else(|| anyhow::anyhow!("embed weights missing"))?;
+    let v = spec.vocab;
+    let h = spec.hidden;
+
+    let nearest = |row: &[f32]| -> u32 {
+        let mut best = 0usize;
+        let mut best_d = f32::MAX;
+        for t in 0..v {
+            let e = &embed[t * h..(t + 1) * h];
+            let d: f32 = row.iter().zip(e).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d < best_d {
+                best_d = d;
+                best = t;
+            }
+        }
+        best as u32
+    };
+
+    let recover_rate = |rows: &[f32]| -> f64 {
+        let n = rows.len() / h;
+        let hits = (0..n)
+            .filter(|&i| nearest(&rows[i * h..(i + 1) * h]) == prompt[i])
+            .count();
+        hits as f64 / n as f64
+    };
+
+    // (a) raw embeddings — what a layer-0 split would upload.
+    let raw: Vec<f32> = prompt.iter().flat_map(|&t| embed[t as usize * h..(t as usize + 1) * h].to_vec()).collect();
+    let r_raw = recover_rate(&raw);
+    // (b) the actual upload (after m decoder layers).
+    let r_upload = recover_rate(&hidden);
+
+    println!("=== nearest-embedding inversion attack ===");
+    println!("raw embeddings (split before layer 1):  {:>5.1}% tokens recovered", r_raw * 100.0);
+    println!("HAT upload (after {} device layer(s)):  {:>5.1}% tokens recovered", spec.shallow_layers, r_upload * 100.0);
+    anyhow::ensure!(r_raw > 0.95, "embeddings should invert trivially");
+    anyhow::ensure!(
+        r_upload < r_raw * 0.6,
+        "the decoder layer should substantially obscure token identity"
+    );
+    println!(
+        "\nthe on-device decoder layer{} cut naive inversion by {:.0}% — and the\n\
+         output submodel keeps generated tokens device-side symmetrically.",
+        if spec.shallow_layers > 1 { "s" } else { "" },
+        100.0 * (1.0 - r_upload / r_raw)
+    );
+    Ok(())
+}

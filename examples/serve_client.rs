@@ -1,0 +1,77 @@
+//! Serve + client demo: starts the TCP serving mode in-process, connects
+//! as a client, and issues GENERATE/STATS requests over the line protocol.
+//!
+//!     cargo run --release --example serve_client
+//!
+//! Or point it at an already-running `hat serve`:
+//!
+//!     cargo run --release --example serve_client -- --addr 127.0.0.1:7071
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use hat::cli::parse_flags;
+use hat::runtime::ArtifactRegistry;
+use hat::util::rng::Rng;
+use hat::workload::PromptPool;
+
+fn main() -> anyhow::Result<()> {
+    let flags = parse_flags(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let addr = match flags.get("addr") {
+        Some(a) => a.to_string(),
+        None => {
+            // Self-contained: run the server on a background thread.
+            let addr = "127.0.0.1:7171".to_string();
+            let a2 = addr.clone();
+            std::thread::spawn(move || {
+                let f = parse_flags(
+                    ["--addr", &a2, "--max-conns", "2"].iter().map(|s| s.to_string()),
+                )
+                .unwrap();
+                if let Err(e) = hat::server::cmd_serve(&f) {
+                    eprintln!("server: {e}");
+                }
+            });
+            addr
+        }
+    };
+
+    // Wait for the engine to come up (artifact compilation takes seconds).
+    let mut stream = None;
+    for _ in 0..600 {
+        match TcpStream::connect(&addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(100)),
+        }
+    }
+    let stream = stream.ok_or_else(|| anyhow::anyhow!("server at {addr} never came up"))?;
+    println!("connected to {addr}");
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+
+    let dir = ArtifactRegistry::default_dir();
+    let pool = PromptPool::load(&dir.join("prompts.bin"))?;
+    let mut rng = Rng::new(3);
+
+    for (i, plen) in [40usize, 80, 120].iter().enumerate() {
+        let prompt = pool.sample(*plen, &mut rng);
+        let words: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+        writeln!(stream, "GENERATE 24 {}", words.join(" "))?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let short = if line.len() > 110 { &line[..110] } else { line.trim_end() };
+        println!("req {i} (prompt {plen} tok): {short}...");
+        anyhow::ensure!(line.starts_with("OK"), "server error: {line}");
+    }
+
+    writeln!(stream, "STATS")?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    println!("server stats: {}", line.trim_end());
+
+    writeln!(stream, "QUIT")?;
+    Ok(())
+}

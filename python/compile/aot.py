@@ -1,0 +1,377 @@
+"""AOT pipeline: train (cached) → lower every artifact to HLO text →
+write manifest.json + weights.npz + prompts.bin.
+
+Run once by ``make artifacts``; the rust coordinator is self-contained
+afterwards.  Interchange is HLO **text** — the image's xla_extension 0.5.1
+rejects jax≥0.5's 64-bit-id serialized protos, while the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Weights are **runtime parameters**, not baked constants: rust loads
+weights.npz once, uploads each array as a device-resident PJRT buffer, and
+passes them to every execute — keeping the HLO files small and the weights
+shared across all token-bucket variants.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Env:    HAT_AOT_QUICK=1   fewer training steps + buckets (CI smoke)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, train
+from .model import (Config, adapter_forward, draft_forward, flatten_weights,
+                    input_submodel, medusa_forward, output_head, _run_layers,
+                    param_count)
+
+QUICK = os.environ.get("HAT_AOT_QUICK", "") not in ("", "0")
+BUCKETS = [1, 4, 16, 64, 256] if QUICK else [1, 2, 4, 8, 16, 32, 64, 128, 256]
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering (the interchange gotcha lives here)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Weight (un)flattening shared with model.flatten_weights ordering
+# ---------------------------------------------------------------------------
+
+
+def rebuild(names, arrays):
+    """Rebuild nested param structures from flat (name, array) pairs.
+    Supports keys like 'embed', 'layers.3.wq', 'adapter.ln1', 'medusa.0.w1'.
+    Integer-keyed levels become lists ordered by index (indices need not
+    start at 0 — e.g. the middle submodel's layers m..L-1)."""
+    params: dict = {}
+    for name, arr in zip(names, arrays):
+        parts = name.split(".")
+        node = params
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+
+    def listify(d):
+        if isinstance(d, dict):
+            if d and all(k.isdigit() for k in d):
+                return [listify(d[k]) for k in sorted(d, key=int)]
+            return {k: listify(v) for k, v in d.items()}
+        return d
+    return listify(params)
+
+
+# ---------------------------------------------------------------------------
+# Artifact definitions
+# ---------------------------------------------------------------------------
+
+
+def artifact_defs(cfg: Config, weight_names_all: list[str]):
+    """Returns [(kind, t_bucket, weight_names, fn, dyn_specs, out_specs,
+    donate)] where donate lists the *dynamic-arg offsets* of KV caches —
+    donated to XLA so cache updates happen in place instead of copying
+    multi-MB buffers every call (EXPERIMENTS.md §Perf).
+
+    fn takes (*weights, *dynamic) with dynamic args matching dyn_specs —
+    a list of (name, shape, dtype).  All artifacts are lowered with
+    return_tuple=True; rust unwraps the tuple.
+    """
+    m, L = cfg.shallow_layers, cfg.layers
+    nh, hd, H, V, S = cfg.heads, cfg.head_dim, cfg.hidden, cfg.vocab, cfg.max_seq
+
+    lm_names = ["embed"] + [f"layers.{i}.{k}" for i in range(m)
+                            for k in ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd")]
+    mid_names = [f"layers.{i}.{k}" for i in range(m, L)
+                 for k in ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd")]
+    head_names = ["final_ln", "head"]
+    ad_names = [f"adapter.{k}" for k in ("ln1", "wq", "wk", "wv", "wo")]
+    med_names = ["final_ln"] + [f"medusa.{i}.{k}" for i in range(cfg.n_medusa)
+                                for k in ("w1", "b1", "out")]
+
+    f32, i32 = "f32", "i32"
+    defs = []
+
+    def w(names):
+        missing = [n for n in names if n not in weight_names_all]
+        assert not missing, missing
+        return names
+
+    for t in BUCKETS:
+        # --- device input submodel: tokens -> shallow hidden -----------------
+        def di_fn(*args, _t=t, _names=tuple(lm_names)):
+            nw = len(_names)
+            p = rebuild(_names, args[:nw])
+            tokens, skv, pos = args[nw:]
+            h, skv2 = input_submodel(p, tokens, skv, pos, cfg, use_pallas=True)
+            return h, skv2
+        defs.append(("device_input", t, w(lm_names), di_fn, [
+            ("tokens", (t,), i32),
+            ("skv", (m, 2, S, nh, hd), f32),
+            ("pos", (), i32),
+        ], [("hidden", (t, H)), ("skv", (m, 2, S, nh, hd))], [1]))
+
+        # --- cloud middle submodel: shallow hidden -> deep hidden ------------
+        def cm_fn(*args, _t=t, _names=tuple(mid_names)):
+            nw = len(_names)
+            p = rebuild(_names, args[:nw])
+            hidden, mkv, pos = args[nw:]
+            deep, mkv2 = _run_layers(hidden, p["layers"], mkv, pos, cfg, use_pallas=True)
+            return deep, mkv2
+        defs.append(("cloud_middle", t, w(mid_names), cm_fn, [
+            ("hidden", (t, H), f32),
+            ("mkv", (L - m, 2, S, nh, hd), f32),
+            ("pos", (), i32),
+        ], [("deep", (t, H)), ("mkv", (L - m, 2, S, nh, hd))], [1]))
+
+        # --- device head: deep hidden -> logits ------------------------------
+        def dh_fn(*args, _t=t, _names=tuple(head_names)):
+            nw = len(_names)
+            p = rebuild(_names, args[:nw])
+            (deep,) = args[nw:]
+            return (output_head(p, deep),)
+        defs.append(("device_head", t, w(head_names), dh_fn, [
+            ("deep", (t, H), f32),
+        ], [("logits", (t, V))], []))
+
+        # --- adapter prefill: fill Λ's KV over prompt hidden states ----------
+        def ap_fn(*args, _t=t, _names=tuple(ad_names)):
+            nw = len(_names)
+            p = rebuild(_names, args[:nw])["adapter"]
+            hidden, akv, pos = args[nw:]
+            _, akv2 = adapter_forward(p, hidden, akv, pos, cfg, use_pallas=True)
+            return (akv2,)
+        defs.append(("adapter_prefill", t, w(ad_names), ap_fn, [
+            ("hidden", (t, H), f32),
+            ("akv", (2, S, nh, hd), f32),
+            ("pos", (), i32),
+        ], [("akv", (2, S, nh, hd))], [1]))
+
+    # --- draft step (T=1): one autoregressive draft-model step ---------------
+    draft_names = lm_names + ad_names + head_names
+
+    def ds_fn(*args, _names=tuple(draft_names)):
+        nw = len(_names)
+        p = rebuild(_names, args[:nw])
+        lm = {"embed": p["embed"], "layers": p["layers"],
+              "final_ln": p["final_ln"], "head": p["head"]}
+        tokens, skv, akv, pos = args[nw:]
+        logits, skv2, akv2, shallow = draft_forward(
+            lm, p["adapter"], tokens, skv, akv, pos, cfg, use_pallas=True)
+        return logits, skv2, akv2, shallow
+    defs.append(("draft_step", 1, w(draft_names), ds_fn, [
+        ("tokens", (1,), i32),
+        ("skv", (m, 2, S, nh, hd), f32),
+        ("akv", (2, S, nh, hd), f32),
+        ("pos", (), i32),
+    ], [("logits", (1, V)), ("skv", (m, 2, S, nh, hd)),
+        ("akv", (2, S, nh, hd)), ("shallow", (1, H))], [1, 2]))
+
+    # --- medusa decode (T=1): deep hidden -> n_medusa logit sets -------------
+    def md_fn(*args, _names=tuple(med_names)):
+        nw = len(_names)
+        p = rebuild(_names, args[:nw])
+        (deep,) = args[nw:]
+        logits = medusa_forward(p["medusa"], deep, {"final_ln": p["final_ln"]})
+        return (logits,)
+    defs.append(("medusa_decode", 1, w(med_names), md_fn, [
+        ("deep", (1, H), f32),
+    ], [("medusa_logits", (cfg.n_medusa, 1, V))], []))
+
+    return defs
+
+
+_DT = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def lower_artifact(fn, weight_arrays, dyn_specs, donate=()):
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in weight_arrays]
+    specs += [jax.ShapeDtypeStruct(shape, _DT[dt]) for _, shape, dt in dyn_specs]
+    nw = len(weight_arrays)
+    # keep_unused: XLA must see every declared parameter even when DCE'd
+    # (e.g. adapter_prefill discards the output projection) — the rust side
+    # feeds the full weight list per the manifest contract.
+    # donate: KV-cache inputs alias their output slots (in-place update).
+    lowered = jax.jit(
+        fn, keep_unused=True, donate_argnums=tuple(nw + i for i in donate)
+    ).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+# ---------------------------------------------------------------------------
+# prompts.bin
+# ---------------------------------------------------------------------------
+
+
+def write_prompts(path: str, seed: int = 7):
+    """Pool of in-distribution prompts; rust samples by target length.
+    Format: magic 'HATP', u32 count, then per prompt u32 len + u32 tokens."""
+    lengths = []
+    for l in range(16, 577, 8):
+        lengths += [l] * 3
+    prompts = corpus.sample_prompts(seed, lengths)
+    with open(path, "wb") as f:
+        f.write(b"HATP")
+        f.write(struct.pack("<I", len(prompts)))
+        for p in prompts:
+            f.write(struct.pack("<I", len(p)))
+            f.write(np.asarray(p, dtype="<u4").tobytes())
+    return len(prompts)
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+
+def ensure_weights(cfg: Config, out_dir: str, retrain: bool):
+    wpath = os.path.join(out_dir, "weights.npz")
+    if os.path.exists(wpath) and not retrain:
+        print(f"[aot] reusing {wpath}")
+        data = np.load(wpath)
+        flat = [(k, jnp.asarray(data[k])) for k in data.files]
+        names = [k for k, _ in flat]
+        tree = rebuild(names, [a for _, a in flat])
+        meta_path = os.path.join(out_dir, "train_meta.json")
+        meta = json.load(open(meta_path)) if os.path.exists(meta_path) else {}
+        return tree, names, meta
+
+    lm_steps, distill_steps, medusa_steps = (150, 150, 80) if QUICK else (700, 1600, 350)
+    params, losses = train.train_lm(cfg, lm_steps)
+    adapter, dloss = train.distill_adapter(params, cfg, distill_steps)
+    mheads, mloss = train.train_medusa(params, cfg, medusa_steps)
+    accept = train.measure_accept_length(params, adapter, cfg)
+    print(f"[aot] measured accept length (greedy, η=0.6): {accept:.2f}")
+
+    flat = flatten_weights(params, adapter, mheads, cfg)
+    np.savez(wpath, **{k: np.asarray(v) for k, v in flat})
+    meta = {
+        "lm_final_loss": losses[-1],
+        "distill_final_loss": dloss,
+        "medusa_final_loss": mloss,
+        "accept_length_probe": accept,
+        "lm_params": param_count(params),
+        "adapter_params": param_count(adapter),
+        "medusa_params": param_count(mheads),
+    }
+    json.dump(meta, open(os.path.join(out_dir, "train_meta.json"), "w"), indent=1)
+    names = [k for k, _ in flat]
+    return rebuild(names, [a for _, a in flat]), names, meta
+
+
+def write_golden(cfg: Config, out_dir: str, by_name):
+    """Golden generation trace for cross-language verification: rust's
+    engine (PJRT, cached KV, bucket padding) must reproduce these tokens
+    exactly.  Uses the *training-form* forward — python/tests proves the
+    cached path is numerically identical to it."""
+    from .model import full_forward, draft_train_forward
+    from . import corpus as _corpus
+
+    names = list(by_name.keys())
+    tree = rebuild(names, [by_name[n] for n in names])
+    params = {"embed": tree["embed"], "layers": tree["layers"],
+              "final_ln": tree["final_ln"], "head": tree["head"]}
+    adapter = tree["adapter"]
+
+    gen = _corpus.CorpusGenerator(555)
+    prompt = gen.document(32, 32)
+    full_fn = jax.jit(lambda t: full_forward(params, t, cfg)[0])
+    draft_fn = jax.jit(lambda t: draft_train_forward(params, adapter, t, cfg)[0])
+
+    ctx = list(prompt)
+    for _ in range(24):
+        ctx.append(int(jnp.argmax(full_fn(jnp.asarray(ctx, jnp.int32))[-1])))
+    full_gen = ctx[len(prompt):]
+
+    ctx = list(prompt)
+    draft_probs = []
+    for _ in range(24):
+        lg = draft_fn(jnp.asarray(ctx, jnp.int32))[-1]
+        p = jax.nn.softmax(lg)
+        tok = int(jnp.argmax(lg))
+        draft_probs.append(round(float(p[tok]), 6))
+        ctx.append(tok)
+    draft_gen = ctx[len(prompt):]
+
+    golden = {
+        "prompt": [int(t) for t in prompt],
+        "full_greedy": [int(t) for t in full_gen],
+        "draft_greedy": [int(t) for t in draft_gen],
+        "draft_probs": draft_probs,
+    }
+    json.dump(golden, open(os.path.join(out_dir, "golden.json"), "w"), indent=1)
+    print(f"[aot] golden trace written (full: {full_gen[:6]}..., draft: {draft_gen[:6]}...)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--retrain", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = Config()
+    _tree, names, meta = ensure_weights(cfg, args.out, args.retrain)
+    # Flat name -> array lookup for artifact lowering.
+    data = np.load(os.path.join(args.out, "weights.npz"))
+    by_name = {k: jnp.asarray(data[k]) for k in data.files}
+
+    n_prompts = write_prompts(os.path.join(args.out, "prompts.bin"))
+    print(f"[aot] wrote {n_prompts} prompts")
+    write_golden(cfg, args.out, by_name)
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab, "hidden": cfg.hidden, "layers": cfg.layers,
+            "shallow_layers": cfg.shallow_layers, "heads": cfg.heads,
+            "head_dim": cfg.head_dim, "ffn": cfg.ffn, "max_seq": cfg.max_seq,
+            "n_medusa": cfg.n_medusa,
+        },
+        "buckets": BUCKETS,
+        "weights_file": "weights.npz",
+        "prompts_file": "prompts.bin",
+        "train_meta": meta,
+        "artifacts": [],
+    }
+
+    t0 = time.time()
+    for kind, t, wnames, fn, dyn_specs, out_specs, donate in artifact_defs(cfg, names):
+        name = f"{kind}_{t}"
+        fname = f"{name}.hlo.txt"
+        arrays = [by_name[n] for n in wnames]
+        text = lower_artifact(fn, arrays, dyn_specs, donate)
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "name": name, "kind": kind, "t": t, "file": fname,
+            "weights": wnames,
+            "inputs": [{"name": n, "shape": list(s), "dtype": d}
+                       for n, s, d in dyn_specs],
+            "outputs": [{"name": n, "shape": list(s)} for n, s in out_specs],
+        })
+        print(f"[aot] lowered {name} ({len(text) / 1e3:.0f} kB, "
+              f"{time.time() - t0:.0f}s elapsed)", flush=True)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest: {len(manifest['artifacts'])} artifacts, "
+          f"total {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

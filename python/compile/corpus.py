@@ -1,0 +1,124 @@
+"""Synthetic PCFG corpus for the tiny LM.
+
+The paper trains/evaluates on ShareGPT + SpecBench/CNN-DM with Vicuna.
+None of that is available offline, so we substitute a probabilistic
+context-free grammar over a 512-token vocabulary (see DESIGN.md §3).  The
+grammar is designed to mirror the statistical property speculative decoding
+exploits in natural language: a mix of *highly predictable* tokens
+(function words, punctuation, templated continuations — these are what the
+SLM drafts successfully) and *contentful* low-predictability tokens (these
+are where drafts get rejected).
+
+Token map (vocab = 512):
+    0            BOS
+    1            EOS
+    2..9         punctuation   (very high predictability)
+    10..41       determiners / qualifiers (32)
+    42..105      subjects (64)
+    106..233     verbs (128)
+    234..361     objects (128)
+    362..425     adverbs (64)
+    426..489     adjectives (64)
+    490..511     connectives (22)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+VOCAB = 512
+BOS, EOS = 0, 1
+PUNCT = list(range(2, 10))
+DET = list(range(10, 42))
+SUBJ = list(range(42, 106))
+VERB = list(range(106, 234))
+OBJ = list(range(234, 362))
+ADV = list(range(362, 426))
+ADJ = list(range(426, 490))
+CONN = list(range(490, 512))
+
+
+class CorpusGenerator:
+    """Seeded PCFG sentence generator.
+
+    Each "sentence" is  DET [ADJ] SUBJ VERB DET [ADJ] OBJ [ADV] PUNCT,
+    optionally extended with CONN + another clause.  Crucially, several
+    productions are *deterministic given the previous token* (e.g. each
+    subject strongly prefers a small set of verbs; each verb selects its
+    object class), so a well-trained draft model achieves a meaningful
+    accept length, as in natural text.
+    """
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+        # Deterministic-ish bigram preferences: map each subject to 4
+        # preferred verbs, each verb to 4 preferred objects, each object to
+        # 4 preferred adverbs.  Built from a fixed seed so python and any
+        # other consumer agree.
+        g = np.random.default_rng(1234)
+        self.subj2verb = g.choice(VERB, size=(len(SUBJ), 4))
+        self.verb2obj = g.choice(OBJ, size=(len(VERB), 4))
+        self.obj2adv = g.choice(ADV, size=(len(OBJ), 4))
+
+    def _pick(self, arr, p_first=0.7):
+        """Pick arr[0] with prob p_first else uniform among the rest."""
+        if self.rng.random() < p_first:
+            return int(arr[0])
+        return int(self.rng.choice(arr[1:]))
+
+    def sentence(self) -> list[int]:
+        toks: list[int] = []
+        toks.append(int(self.rng.choice(DET)))
+        if self.rng.random() < 0.3:
+            toks.append(int(self.rng.choice(ADJ)))
+        s = int(self.rng.choice(SUBJ))
+        toks.append(s)
+        v = self._pick(self.subj2verb[s - SUBJ[0]])
+        toks.append(v)
+        toks.append(int(self.rng.choice(DET)))
+        if self.rng.random() < 0.2:
+            toks.append(int(self.rng.choice(ADJ)))
+        o = self._pick(self.verb2obj[v - VERB[0]])
+        toks.append(o)
+        if self.rng.random() < 0.5:
+            toks.append(self._pick(self.obj2adv[o - OBJ[0]]))
+        if self.rng.random() < 0.25:
+            toks.append(int(self.rng.choice(CONN)))
+            toks.extend(self.sentence())
+            return toks
+        toks.append(int(self.rng.choice(PUNCT[:2], p=[0.8, 0.2])))
+        return toks
+
+    def document(self, min_len: int, max_len: int | None = None) -> list[int]:
+        """A BOS-prefixed token stream of at least ``min_len`` tokens."""
+        max_len = max_len or min_len
+        toks = [BOS]
+        while len(toks) < min_len:
+            toks.extend(self.sentence())
+        return toks[:max_len] if max_len else toks
+
+    def stream(self, n_tokens: int) -> np.ndarray:
+        """A single contiguous training stream of exactly n_tokens tokens."""
+        out: list[int] = [BOS]
+        while len(out) < n_tokens:
+            out.extend(self.sentence())
+        return np.asarray(out[:n_tokens], dtype=np.int32)
+
+
+def training_batches(seed: int, n_tokens: int, batch: int, seqlen: int):
+    """Yield (inputs, targets) int32 arrays of shape [batch, seqlen] forever."""
+    gen = CorpusGenerator(seed)
+    data = gen.stream(n_tokens)
+    rng = np.random.default_rng(seed + 1)
+    n = len(data) - seqlen - 1
+    while True:
+        idx = rng.integers(0, n, size=batch)
+        x = np.stack([data[i : i + seqlen] for i in idx])
+        y = np.stack([data[i + 1 : i + seqlen + 1] for i in idx])
+        yield x, y
+
+
+def sample_prompts(seed: int, lengths: list[int]) -> list[np.ndarray]:
+    """Generate one in-distribution prompt per requested length."""
+    gen = CorpusGenerator(seed)
+    return [np.asarray(gen.document(l, l), dtype=np.int32) for l in lengths]

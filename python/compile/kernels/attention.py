@@ -1,0 +1,160 @@
+"""L1 Pallas kernels: cached causal flash-attention and fused SwiGLU.
+
+These are the compute hot-spots of the middle submodel (the cloud side of
+HAT) and of the on-device draft model.  They are written TPU-style:
+
+- the attention kernel holds one head's query tile in VMEM and streams the
+  KV cache through it in ``block_k``-sized tiles with a running
+  (max, sum, acc) online-softmax state — the Pallas expression of the
+  HBM↔VMEM schedule FlashAttention/FlashInfer implement with CUDA
+  threadblocks (see DESIGN.md §4);
+- block sizes are multiples of the head dim so q·kᵀ and p·v land on
+  MXU-shaped matmuls;
+- ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls, so the kernels lower to plain HLO through the interpreter.
+  Real-TPU perf is *estimated* from VMEM footprint + MXU utilization in
+  EXPERIMENTS.md §Perf.
+
+Correctness oracle: ``kernels.ref`` (pure jnp), enforced by
+python/tests/test_kernel.py under hypothesis shape sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, *, block_k: int, s_total: int):
+    """One grid cell = one attention head.
+
+    q_ref: [1, T, hd] VMEM tile; k_ref/v_ref: [1, S, hd]; pos_ref: [1] i32.
+    Streams the S axis in block_k tiles, maintaining the online-softmax
+    carry (m, l, acc) — numerically identical to a full softmax.
+    """
+    q = q_ref[0]                                    # [T, hd]
+    pos = pos_ref[0]
+    t, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, q.dtype))
+    qpos = pos + jax.lax.iota(jnp.int32, t)         # absolute query positions
+
+    n_blocks = s_total // block_k
+
+    def body(b, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.ds(b * block_k, block_k), slice(None)))  # [BK, hd]
+        v = pl.load(v_ref, (0, pl.ds(b * block_k, block_k), slice(None)))
+        s = jnp.dot(q, k.T) * scale                 # [T, BK] — MXU matmul
+        kpos = b * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = kpos[None, :] <= qpos[:, None]       # causal + garbage-tail mask
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = alpha * l + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((t,), NEG_INF, q.dtype)
+    l0 = jnp.zeros((t,), q.dtype)
+    acc0 = jnp.zeros((t, hd), q.dtype)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    # Every query attends at least to its own key (written before the call),
+    # so l > 0 always.
+    o_ref[0] = acc / l[:, None]
+
+
+def attention(q, k_cache, v_cache, pos, *, block_k: int = 128, interpret: bool = True):
+    """Cached causal MHA via the flash kernel.  Same contract as
+    ``ref.attention_ref``: q [T, nh, hd], caches [S, nh, hd], pos scalar.
+
+    S must be a multiple of ``block_k`` (the AOT model config guarantees
+    this; the test suite checks the error path).
+    """
+    t, nh, hd = q.shape
+    s = k_cache.shape[0]
+    if s % block_k != 0:
+        raise ValueError(f"cache length {s} not a multiple of block_k {block_k}")
+    qh = jnp.transpose(q, (1, 0, 2))               # [nh, T, hd]
+    kh = jnp.transpose(k_cache, (1, 0, 2))         # [nh, S, hd]
+    vh = jnp.transpose(v_cache, (1, 0, 2))
+    pos_arr = jnp.reshape(pos, (1,)).astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_k=block_k, s_total=s),
+        grid=(nh,),
+        in_specs=[
+            pl.BlockSpec((1, t, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, t, hd), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nh, t, hd), q.dtype),
+        interpret=interpret,
+    )(qh, kh, vh, pos_arr)
+    return jnp.transpose(out, (1, 0, 2))
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, block_f: int, f_total: int):
+    """Fused SwiGLU: accumulates down-projected tiles over the F axis so the
+    [T, F] intermediate never materializes beyond one VMEM tile."""
+    x = x_ref[...]                                  # [T, H]
+    t, h = x.shape
+
+    def body(b, acc):
+        wg = pl.load(wg_ref, (slice(None), pl.ds(b * block_f, block_f)))  # [H, BF]
+        wu = pl.load(wu_ref, (slice(None), pl.ds(b * block_f, block_f)))
+        wd = pl.load(wd_ref, (pl.ds(b * block_f, block_f), slice(None)))  # [BF, H]
+        g = jnp.dot(x, wg)                          # [T, BF]
+        u = jnp.dot(x, wu)
+        act = g * jax.nn.sigmoid(g) * u             # silu(g) * u
+        return acc + jnp.dot(act, wd)
+
+    acc0 = jnp.zeros((t, h), x.dtype)
+    o_ref[...] = jax.lax.fori_loop(0, f_total // block_f, body, acc0)
+
+
+def swiglu(x, w_gate, w_up, w_down, *, block_f: int = 128, interpret: bool = True):
+    """Fused SwiGLU FFN.  Same contract as ``ref.swiglu_ref``."""
+    t, h = x.shape
+    f = w_gate.shape[1]
+    if f % block_f != 0:
+        raise ValueError(f"ffn dim {f} not a multiple of block_f {block_f}")
+    return pl.pallas_call(
+        functools.partial(_swiglu_kernel, block_f=block_f, f_total=f),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((t, h), lambda i: (0, 0)),
+            pl.BlockSpec((h, f), lambda i: (0, 0)),
+            pl.BlockSpec((h, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, h), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h), x.dtype),
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)
+
+
+def vmem_footprint_bytes(t: int, s: int, hd: int, block_k: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one attention grid cell — used by the
+    §Perf block-shape sweep (structure-level optimization; interpret-mode
+    wallclock is CPU-numpy and not a TPU proxy)."""
+    q = t * hd
+    kv_tiles = 2 * block_k * hd
+    carry = t * (hd + 2)
+    out = t * hd
+    return (q + kv_tiles + carry + out) * dtype_bytes
+
+
+def mxu_utilization_estimate(t: int, hd: int, block_k: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes used by the q·kᵀ tile matmul (t×hd @ hd×block_k).
+    The systolic array is mxu×mxu; utilization is the product of the
+    fill ratios of each dimension (capped at 1)."""
+    fill = lambda d: min(d, mxu) / mxu
+    return fill(t) * fill(hd) * fill(block_k)

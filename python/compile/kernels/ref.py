@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: python/tests/test_kernel.py sweeps
+shapes/dtypes with hypothesis and asserts the Pallas kernels match these to
+numerical tolerance.  They are also what the *training* path uses (the
+Pallas kernels only run on the AOT inference path — pallas interpret mode
+has no efficient autodiff).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k_cache, v_cache, pos):
+    """Cached causal multi-head attention.
+
+    Args:
+      q:        [T, nh, hd]  queries for T new tokens at absolute positions
+                pos..pos+T-1.
+      k_cache:  [S, nh, hd]  key cache; positions >= pos+T hold garbage.
+      v_cache:  [S, nh, hd]  value cache.
+      pos:      scalar int32, number of tokens already in the cache.
+
+    Returns:
+      [T, nh, hd] attention output.
+
+    Key j is visible to query i iff j <= pos + i (causal over the absolute
+    position), which also masks the garbage tail of the cache.
+    """
+    T, nh, hd = q.shape
+    S = k_cache.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, q.dtype))
+    # [nh, T, S]
+    scores = jnp.einsum("tnh,snh->nts", q, k_cache) * scale
+    qpos = pos + jnp.arange(T)[:, None]          # [T, 1]
+    kpos = jnp.arange(S)[None, :]                # [1, S]
+    mask = kpos <= qpos                          # [T, S]
+    scores = jnp.where(mask[None, :, :], scores, jnp.finfo(scores.dtype).min)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("nts,snh->tnh", probs, v_cache)
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """SwiGLU feed-forward: (silu(x @ w_gate) * (x @ w_up)) @ w_down.
+
+    Args:
+      x:       [T, H]
+      w_gate:  [H, F]
+      w_up:    [H, F]
+      w_down:  [F, H]
+    Returns:
+      [T, H]
+    """
+    g = x @ w_gate
+    u = x @ w_up
+    act = g * jnp.reciprocal(1.0 + jnp.exp(-g)) * u  # silu(g) * u
+    return act @ w_down
+
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    """RMSNorm over the last axis: x * w / rms(x)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jnp.reciprocal(jnp.sqrt(var + eps)) * w

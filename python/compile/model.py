@@ -1,0 +1,285 @@
+"""L2: the split transformer (HAT's three submodels), adapter Λ, Medusa heads.
+
+Decoder-only LM (RMSNorm → causal MHA w/ RoPE → RMSNorm → SwiGLU, residual
+around each), split per the paper:
+
+- **input submodel**  ``w_L^m``  — embedding + first ``m`` decoder layers
+  (on device);
+- **middle submodel**            — layers ``m..n``  (in the cloud);
+- **output submodel** ``H_L``    — final RMSNorm + LM head (on device);
+- **adapter Λ**                  — one self-attention block (paper §3.4:
+  "the same structure as the self-attention module of the decoder layer"),
+  distilled from the middle submodel via Eq. 4;  the on-device draft model
+  is ``w_S = H_L ∘ Λ ∘ w_L^m``;
+- **Medusa heads**               — 4 ResBlock+linear heads on the deep
+  hidden state (the U-Medusa baseline).
+
+Every function exists in two flavours selected by ``use_pallas``: the
+pure-jnp reference (used for training — interpret-mode pallas has no
+efficient autodiff) and the L1 Pallas kernels (used on the AOT inference
+path).  python/tests asserts the two are allclose.
+
+KV caches are explicit ``[n_layers, 2, S, nh, hd]`` arrays threaded in and
+out of every call (static-shape HLO); attention masks by absolute position,
+so rolling back rejected draft tokens is just rewinding the position
+counter (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as K
+from .kernels import ref as R
+
+
+@dataclass(frozen=True)
+class Config:
+    vocab: int = 512
+    hidden: int = 128
+    layers: int = 8
+    shallow_layers: int = 1      # m — on device
+    heads: int = 4
+    head_dim: int = 32
+    ffn: int = 256
+    max_seq: int = 640
+    n_medusa: int = 4
+    rope_theta: float = 10000.0
+
+    @property
+    def middle_layers(self) -> int:
+        return self.layers - self.shallow_layers
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def _dense(key, n_in, n_out):
+    return jax.random.normal(key, (n_in, n_out)) * (n_in ** -0.5)
+
+
+def init_layer(key, cfg: Config) -> dict:
+    ks = jax.random.split(key, 7)
+    h, f = cfg.hidden, cfg.ffn
+    return {
+        "ln1": jnp.ones((h,)),
+        "wq": _dense(ks[0], h, h),
+        "wk": _dense(ks[1], h, h),
+        "wv": _dense(ks[2], h, h),
+        "wo": _dense(ks[3], h, h),
+        "ln2": jnp.ones((h,)),
+        "wg": _dense(ks[4], h, f),
+        "wu": _dense(ks[5], h, f),
+        "wd": _dense(ks[6], f, h),
+    }
+
+
+def init_params(key, cfg: Config) -> dict:
+    ks = jax.random.split(key, cfg.layers + 2)
+    return {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.hidden)) * 0.02,
+        "layers": [init_layer(ks[1 + i], cfg) for i in range(cfg.layers)],
+        "final_ln": jnp.ones((cfg.hidden,)),
+        "head": _dense(ks[-1], cfg.hidden, cfg.vocab),
+    }
+
+
+def init_adapter(key, cfg: Config) -> dict:
+    """Λ: one self-attention block (ln + qkvo), same shape as a layer's
+    attention half."""
+    ks = jax.random.split(key, 4)
+    h = cfg.hidden
+    return {
+        "ln1": jnp.ones((h,)),
+        "wq": _dense(ks[0], h, h),
+        "wk": _dense(ks[1], h, h),
+        "wv": _dense(ks[2], h, h),
+        "wo": _dense(ks[3], h, h),
+    }
+
+
+def init_medusa(key, cfg: Config) -> list[dict]:
+    heads = []
+    for i in range(cfg.n_medusa):
+        k1, k2, key = jax.random.split(key, 3)
+        heads.append({
+            "w1": _dense(k1, cfg.hidden, cfg.hidden),
+            "b1": jnp.zeros((cfg.hidden,)),
+            "out": _dense(k2, cfg.hidden, cfg.vocab),
+        })
+    return heads
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """Rotary embedding.  x: [T, nh, hd]; positions: [T] absolute."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half) / half)          # [half]
+    ang = positions[:, None].astype(x.dtype) * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(ang)[:, None, :], jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attn_block(h, p, kv, pos, cfg: Config, use_pallas: bool):
+    """Shared attention block: returns (residual-added h, new kv [2,S,nh,hd])."""
+    t = h.shape[0]
+    nh, hd = cfg.heads, cfg.head_dim
+    x = R.rmsnorm_ref(h, p["ln1"])
+    q = (x @ p["wq"]).reshape(t, nh, hd)
+    k = (x @ p["wk"]).reshape(t, nh, hd)
+    v = (x @ p["wv"]).reshape(t, nh, hd)
+    positions = pos + jnp.arange(t)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(kv[0], k, (pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(kv[1], v, (pos, 0, 0))
+    if use_pallas:
+        # AOT/inference path.  block_k sweep (EXPERIMENTS.md §Perf): one
+        # kv block per head minimizes loop overhead at these cache sizes
+        # while the per-head VMEM working set (2·S·hd·4B ≈ 164 kB) stays
+        # far under a TPU core's VMEM.
+        o = K.attention(q, k_cache, v_cache, pos, block_k=k_cache.shape[0])
+    else:
+        o = R.attention_ref(q, k_cache, v_cache, pos)    # [T, nh, hd]
+    h = h + o.reshape(t, cfg.hidden) @ p["wo"]
+    return h, jnp.stack([k_cache, v_cache])
+
+
+def _ffn_block(h, p, cfg: Config, use_pallas: bool):
+    x = R.rmsnorm_ref(h, p["ln2"])
+    ffn_fn = K.swiglu if use_pallas else R.swiglu_ref
+    return h + ffn_fn(x, p["wg"], p["wu"], p["wd"])
+
+
+def decoder_layer(h, p, kv, pos, cfg: Config, use_pallas: bool):
+    h, kv = _attn_block(h, p, kv, pos, cfg, use_pallas)
+    h = _ffn_block(h, p, cfg, use_pallas)
+    return h, kv
+
+
+def _run_layers(h, layer_params, kv, pos, cfg: Config, use_pallas: bool):
+    """kv: [L, 2, S, nh, hd].  Python loop (L is small & static)."""
+    new_kv = []
+    for i, p in enumerate(layer_params):
+        h, kv_i = decoder_layer(h, p, kv[i], pos, cfg, use_pallas)
+        new_kv.append(kv_i)
+    return h, jnp.stack(new_kv)
+
+
+# ---------------------------------------------------------------------------
+# The three submodels + adapter + heads (cached/inference form)
+# ---------------------------------------------------------------------------
+
+def input_submodel(params, tokens, skv, pos, cfg: Config, use_pallas=True):
+    """w_L^m: tokens [T] i32 → shallow hidden [T,H].  skv: [m,2,S,nh,hd]."""
+    h = params["embed"][tokens]
+    return _run_layers(h, params["layers"][: cfg.shallow_layers], skv, pos, cfg, use_pallas)
+
+
+def middle_submodel(params, hidden, mkv, pos, cfg: Config, use_pallas=True):
+    """Cloud side: shallow hidden [T,H] → deep hidden [T,H]."""
+    return _run_layers(hidden, params["layers"][cfg.shallow_layers:], mkv, pos, cfg, use_pallas)
+
+
+def output_head(params, hidden):
+    """H_L: final norm + LM head.  hidden [T,H] → logits [T,V]."""
+    return R.rmsnorm_ref(hidden, params["final_ln"]) @ params["head"]
+
+
+def adapter_forward(ap, hidden, akv, pos, cfg: Config, use_pallas=True):
+    """Λ: shallow hidden [T,H] → approx deep hidden [T,H].  akv: [2,S,nh,hd]."""
+    return _attn_block(hidden, ap, akv, pos, cfg, use_pallas)
+
+
+def draft_forward(params, ap, tokens, skv, akv, pos, cfg: Config, use_pallas=True):
+    """Draft model w_S = H_L ∘ Λ ∘ w_L^m.
+
+    Returns (logits [T,V], skv', akv', shallow_hidden [T,H]).  The shallow
+    hidden states are returned so the device can buffer them during
+    drafting and upload exactly those for verification (the paper's
+    "hidden states of draft tokens") without recomputation.
+    """
+    h, skv = input_submodel(params, tokens, skv, pos, cfg, use_pallas)
+    deep_approx, akv = adapter_forward(ap, h, akv, pos, cfg, use_pallas)
+    return output_head(params, deep_approx), skv, akv, h
+
+
+def medusa_forward(mheads, deep_hidden, params):
+    """U-Medusa heads: deep hidden [T,H] → [n_medusa, T, V] logits.
+    Head j predicts the token at offset j+2 (the base head predicts +1),
+    as in Medusa.  Applied to the *normed* hidden state like the LM head."""
+    x = R.rmsnorm_ref(deep_hidden, params["final_ln"])
+    outs = []
+    for hp in mheads:
+        r = x + jax.nn.silu(x @ hp["w1"] + hp["b1"])
+        outs.append(r @ hp["out"])
+    return jnp.stack(outs)
+
+
+# ---------------------------------------------------------------------------
+# Training-form forward (full sequence, no external cache)
+# ---------------------------------------------------------------------------
+
+def full_forward(params, tokens, cfg: Config):
+    """Single-sequence full forward used for training + distillation.
+
+    tokens [T] → (logits [T,V], shallow_h [T,H], final_h [T,H])
+    where final_h is the pre-final-norm hidden state (the distillation
+    target f^L of Eq. 4).  Uses the jnp reference kernels (differentiable).
+    Numerically identical to the cached path with pos=0, S=T (tested).
+    """
+    t = tokens.shape[0]
+    zkv = jnp.zeros((cfg.layers, 2, t, cfg.heads, cfg.head_dim))
+    h = params["embed"][tokens]
+    shallow = None
+    for i, p in enumerate(params["layers"]):
+        h, _ = decoder_layer(h, p, zkv[i], 0, cfg, use_pallas=False)
+        if i == cfg.shallow_layers - 1:
+            shallow = h
+    return output_head(params, h), shallow, h
+
+
+def draft_train_forward(params, ap, tokens, cfg: Config):
+    """Draft-model forward in training form (teacher-forced full sequence).
+    Returns (draft_logits [T,V], f_S [T,H]) — f_S is Λ's approximation of
+    the deep hidden state, compared against f_L in Eq. 4."""
+    t = tokens.shape[0]
+    zskv = jnp.zeros((cfg.shallow_layers, 2, t, cfg.heads, cfg.head_dim))
+    zakv = jnp.zeros((2, t, cfg.heads, cfg.head_dim))
+    h, _ = input_submodel(params, tokens, zskv, 0, cfg, use_pallas=False)
+    f_s, _ = adapter_forward(ap, h, zakv, 0, cfg, use_pallas=False)
+    return output_head(params, f_s), f_s
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter ordering (shared with the rust side via manifest.json)
+# ---------------------------------------------------------------------------
+
+def flatten_weights(params, adapter, medusa, cfg: Config):
+    """Deterministic name → array ordering for weights.npz and artifact
+    parameter lists.  Rust feeds PJRT buffers in exactly this order."""
+    out: list[tuple[str, jnp.ndarray]] = [("embed", params["embed"])]
+    for i, p in enumerate(params["layers"]):
+        for k in ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd"):
+            out.append((f"layers.{i}.{k}", p[k]))
+    out.append(("final_ln", params["final_ln"]))
+    out.append(("head", params["head"]))
+    for k in ("ln1", "wq", "wk", "wv", "wo"):
+        out.append((f"adapter.{k}", adapter[k]))
+    for i, hp in enumerate(medusa):
+        for k in ("w1", "b1", "out"):
+            out.append((f"medusa.{i}.{k}", hp[k]))
+    return out
+
+
+def param_count(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))

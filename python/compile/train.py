@@ -1,0 +1,238 @@
+"""Build-time training: the tiny LM, the adapter Λ (Eq. 4 distillation),
+and the Medusa heads (U-Medusa baseline).
+
+This is the stand-in for the paper's training pipeline (Vicuna checkpoints
++ ShareGPT distillation): same objectives, tiny scale, pure JAX with a
+hand-rolled Adam (optax is not available offline).  Runs once from
+``aot.py``; results are cached in artifacts/weights.npz.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import (Config, draft_train_forward, full_forward, init_adapter,
+                    init_medusa, init_params, medusa_forward, param_count)
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vhat = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+                                 params, mhat, vhat)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def _warmup(step, base_lr, warmup=20):
+    return base_lr * jnp.minimum(1.0, (step + 1) / warmup)
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: LM pre-training (next-token CE on the PCFG corpus)
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, targets):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+
+
+def train_lm(cfg: Config, steps: int, seed: int = 0, batch: int = 8,
+             seqlen: int = 128, lr: float = 1e-3, log_every: int = 100):
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adam_init(params)
+    batches = corpus.training_batches(seed, n_tokens=200_000, batch=batch, seqlen=seqlen)
+
+    def loss_fn(p, x, y):
+        logits = jax.vmap(lambda toks: full_forward(p, toks, cfg)[0])(x)
+        return cross_entropy(logits, y)
+
+    @jax.jit
+    def step_fn(p, o, x, y, step):
+        loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+        p, o = adam_update(p, grads, o, _warmup(step, lr))
+        return p, o, loss
+
+    t0, losses = time.time(), []
+    for i in range(steps):
+        x, y = next(batches)
+        params, opt, loss = step_fn(params, opt, x, y, i)
+        losses.append(float(loss))
+        if i % log_every == 0 or i == steps - 1:
+            print(f"[train_lm] step {i:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    print(f"[train_lm] {param_count(params):,} params, final loss {losses[-1]:.4f}")
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: adapter Λ distillation (paper Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+def smooth_l1(x, y, beta: float = 1.0):
+    d = jnp.abs(x - y)
+    return jnp.where(d < beta, 0.5 * d * d / beta, d - 0.5 * beta).mean()
+
+
+def soft_ce(teacher_logits, student_logits):
+    """CE between the teacher's output distribution and the student's —
+    the L_ce(H_L(f^L), H_L(f^S)) term."""
+    t = jax.nn.softmax(teacher_logits, axis=-1)
+    return -(t * jax.nn.log_softmax(student_logits, axis=-1)).sum(-1).mean()
+
+
+def distill_adapter(params, cfg: Config, steps: int, seed: int = 1, batch: int = 8,
+                    seqlen: int = 128, lr: float = 1e-3, w_ce: float = 0.1,
+                    log_every: int = 100):
+    """Train Λ so that H_L∘Λ∘w_L^m matches the full model (Eq. 4):
+        Loss = SmoothL1(f^L, f^S) + w_ce · CE(H_L(f^L), H_L(f^S))
+    Only Λ's parameters receive gradients; the LM is frozen (the paper
+    freezes the Vicuna weights and trains the 67M/105M adapter)."""
+    adapter = init_adapter(jax.random.PRNGKey(seed + 100), cfg)
+    opt = adam_init(adapter)
+    batches = corpus.training_batches(seed + 7, n_tokens=200_000, batch=batch, seqlen=seqlen)
+
+    def loss_fn(ap, x):
+        def one(toks):
+            t_logits, _, f_l = full_forward(params, toks, cfg)       # teacher
+            s_logits, f_s = draft_train_forward(params, ap, toks, cfg)
+            return smooth_l1(f_l, f_s) + w_ce * soft_ce(t_logits, s_logits)
+        return jax.vmap(one)(x).mean()
+
+    @jax.jit
+    def step_fn(ap, o, x, step):
+        loss, grads = jax.value_and_grad(loss_fn)(ap, x)
+        ap, o = adam_update(ap, grads, o, _warmup(step, lr))
+        return ap, o, loss
+
+    t0 = time.time()
+    loss = jnp.inf
+    for i in range(steps):
+        x, _ = next(batches)
+        adapter, opt, loss = step_fn(adapter, opt, x, i)
+        if i % log_every == 0 or i == steps - 1:
+            print(f"[distill] step {i:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    print(f"[distill] Λ params: {param_count(adapter):,}")
+    return adapter, float(loss)
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: Medusa heads (baseline)
+# ---------------------------------------------------------------------------
+
+
+def train_medusa(params, cfg: Config, steps: int, seed: int = 2, batch: int = 8,
+                 seqlen: int = 128, lr: float = 1e-3, log_every: int = 100):
+    """Head j learns P(token_{i+j+2} | deep hidden_i); the base LM head
+    covers +1.  Trained with CE on the corpus, LM frozen (as in Medusa-1)."""
+    mheads = init_medusa(jax.random.PRNGKey(seed + 200), cfg)
+    opt = adam_init(mheads)
+    batches = corpus.training_batches(seed + 13, n_tokens=200_000, batch=batch, seqlen=seqlen)
+    n = cfg.n_medusa
+
+    def loss_fn(mh, x, y):
+        def one(toks, targets):
+            _, _, f_l = full_forward(params, toks, cfg)
+            logits = medusa_forward(mh, f_l, params)       # [n, T, V]
+            total = 0.0
+            t = toks.shape[0]
+            for j in range(n):
+                # head j at position i predicts targets[i + j + 1]
+                valid = t - (j + 1)
+                total = total + cross_entropy(logits[j, :valid], targets[j + 1:])
+            return total / n
+        return jax.vmap(one)(x, y).mean()
+
+    @jax.jit
+    def step_fn(mh, o, x, y, step):
+        loss, grads = jax.value_and_grad(loss_fn)(mh, x, y)
+        mh, o = adam_update(mh, grads, o, _warmup(step, lr))
+        return mh, o, loss
+
+    t0 = time.time()
+    loss = jnp.inf
+    for i in range(steps):
+        x, y = next(batches)
+        mheads, opt, loss = step_fn(mheads, opt, x, y, i)
+        if i % log_every == 0 or i == steps - 1:
+            print(f"[medusa] step {i:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    print(f"[medusa] heads params: {param_count(mheads):,}")
+    return mheads, float(loss)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance probe (sanity metric recorded in the manifest)
+# ---------------------------------------------------------------------------
+
+
+def measure_accept_length(params, adapter, cfg: Config, n_docs: int = 8,
+                          prompt_len: int = 64, gen_len: int = 48,
+                          max_draft: int = 8, threshold: float = 0.6,
+                          seed: int = 99) -> float:
+    """Greedy speculative decoding on held-out docs; returns the mean number
+    of tokens produced per verification round (accepted + bonus), the
+    paper's "accept length" metric (Table 4)."""
+    gen = corpus.CorpusGenerator(seed)
+    rounds, produced = 0, 0
+
+    @jax.jit
+    def lm_logits(toks):
+        return full_forward(params, toks, cfg)[0]
+
+    @jax.jit
+    def draft_logits(toks):
+        return draft_train_forward(params, adapter, toks, cfg)[0]
+
+    for _ in range(n_docs):
+        doc = jnp.asarray(gen.document(prompt_len, prompt_len), jnp.int32)
+        ctx = list(np.asarray(doc))
+        # first token from the full model
+        ctx.append(int(jnp.argmax(lm_logits(jnp.asarray(ctx, jnp.int32))[-1])))
+        produced_doc = 1
+        while produced_doc < gen_len:
+            # draft with threshold stopping (Eq. 5)
+            draft: list[int] = []
+            cur = list(ctx)
+            for _ in range(max_draft):
+                lg = draft_logits(jnp.asarray(cur, jnp.int32))[-1]
+                p = jax.nn.softmax(lg)
+                tok = int(jnp.argmax(lg))
+                draft.append(tok)
+                cur.append(tok)
+                if float(p[tok]) < threshold:
+                    break
+            # verify: full model over ctx + draft
+            lg = lm_logits(jnp.asarray(ctx + draft, jnp.int32))
+            base = len(ctx) - 1
+            accepted = 0
+            for j, d in enumerate(draft):
+                if int(jnp.argmax(lg[base + j])) == d:
+                    accepted += 1
+                else:
+                    break
+            bonus = int(jnp.argmax(lg[base + accepted]))
+            ctx.extend(draft[:accepted] + [bonus])
+            rounds += 1
+            produced_doc += accepted + 1
+        produced += produced_doc - 1
+    return produced / max(rounds, 1)

@@ -1,0 +1,131 @@
+"""AOT pipeline tests: weight (un)flattening, artifact definitions,
+prompts.bin format, HLO lowering, and (if built) the shipped manifest.
+"""
+
+import json
+import os
+import struct
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import (Config, flatten_weights, init_adapter, init_medusa,
+                           init_params)
+
+CFG = Config()
+
+
+@pytest.fixture(scope="module")
+def flat():
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    ad = init_adapter(jax.random.PRNGKey(1), CFG)
+    mh = init_medusa(jax.random.PRNGKey(2), CFG)
+    return flatten_weights(params, ad, mh, CFG)
+
+
+def test_rebuild_roundtrips_flatten(flat):
+    names = [k for k, _ in flat]
+    tree = aot.rebuild(names, [a for _, a in flat])
+    assert tree["embed"].shape == (CFG.vocab, CFG.hidden)
+    assert len(tree["layers"]) == CFG.layers
+    assert tree["layers"][3]["wq"].shape == (CFG.hidden, CFG.hidden)
+    assert set(tree["adapter"]) == {"ln1", "wq", "wk", "wv", "wo"}
+    assert len(tree["medusa"]) == CFG.n_medusa
+
+
+def test_rebuild_handles_offset_indices():
+    """Middle-submodel weights start at layer m, not 0."""
+    names = ["layers.3.wq", "layers.5.wq", "layers.4.wq"]
+    arrays = [np.full((1,), i) for i in (3, 5, 4)]
+    tree = aot.rebuild(names, arrays)
+    got = [int(x["wq"][0]) for x in tree["layers"]]
+    assert got == [3, 4, 5]
+
+
+def test_artifact_defs_inventory(flat):
+    names = [k for k, _ in flat]
+    defs = aot.artifact_defs(CFG, names)
+    kinds = {}
+    for kind, t, wnames, fn, dyn, outs, donate in defs:
+        kinds.setdefault(kind, []).append(t)
+        # every weight must exist and every dynamic spec be well-formed
+        assert all(n in names for n in wnames)
+        assert all(len(s) >= 0 and d in ("f32", "i32") for _, s, d in dyn)
+    assert sorted(kinds["device_input"]) == aot.BUCKETS
+    assert sorted(kinds["cloud_middle"]) == aot.BUCKETS
+    assert sorted(kinds["device_head"]) == aot.BUCKETS
+    assert sorted(kinds["adapter_prefill"]) == aot.BUCKETS
+    assert kinds["draft_step"] == [1]
+    assert kinds["medusa_decode"] == [1]
+
+
+def test_lowering_emits_parsable_hlo(flat):
+    """Lower one small artifact and check the HLO text contract:
+    ENTRY present, parameter count = weights + dynamics (keep_unused!)."""
+    names = [k for k, _ in flat]
+    by_name = dict(flat)
+    defs = aot.artifact_defs(CFG, names)
+    kind, t, wnames, fn, dyn, outs, donate = next(
+        d for d in defs if d[0] == "adapter_prefill" and d[1] == 1)
+    text = aot.lower_artifact(fn, [by_name[n] for n in wnames], dyn)
+    assert "ENTRY" in text
+    # Count parameter instructions inside the ENTRY computation only
+    # (inner fusion computations also contain parameter() instructions).
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    end = next(i for i in range(start + 1, len(lines)) if lines[i].startswith("}"))
+    n_params = sum(" parameter(" in l for l in lines[start:end])
+    assert n_params == len(wnames) + len(dyn), (
+        f"{n_params} entry params vs {len(wnames)} weights + {len(dyn)} "
+        f"dynamics (keep_unused regression?)")
+
+
+def test_prompts_bin_roundtrip(tmp_path):
+    path = str(tmp_path / "prompts.bin")
+    n = aot.write_prompts(path, seed=3)
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == b"HATP"
+    (count,) = struct.unpack_from("<I", data, 4)
+    assert count == n
+    off = 8
+    lens = []
+    for _ in range(count):
+        (l,) = struct.unpack_from("<I", data, off)
+        off += 4
+        toks = np.frombuffer(data, dtype="<u4", count=l, offset=off)
+        off += 4 * l
+        assert toks.max() < CFG.vocab
+        lens.append(l)
+    assert off == len(data), "trailing bytes"
+    assert min(lens) == 16 and max(lens) == 576
+
+
+@pytest.mark.skipif(not os.path.exists("../artifacts/manifest.json"),
+                    reason="artifacts not built")
+def test_shipped_manifest_consistent():
+    with open("../artifacts/manifest.json") as f:
+        m = json.load(f)
+    assert m["model"]["hidden"] == CFG.hidden
+    arts = {a["name"]: a for a in m["artifacts"]}
+    assert len(arts) == 4 * len(m["buckets"]) + 2
+    for a in arts.values():
+        assert os.path.exists(os.path.join("../artifacts", a["file"]))
+    # weight names referenced exist in the npz
+    wz = np.load("../artifacts/weights.npz")
+    for a in arts.values():
+        for wname in a["weights"]:
+            assert wname in wz.files, wname
+
+
+@pytest.mark.skipif(not os.path.exists("../artifacts/golden.json"),
+                    reason="artifacts not built")
+def test_shipped_golden_is_self_consistent():
+    with open("../artifacts/golden.json") as f:
+        g = json.load(f)
+    assert len(g["full_greedy"]) == 24
+    assert len(g["draft_greedy"]) == len(g["draft_probs"]) == 24
+    assert all(0 <= t < CFG.vocab for t in g["prompt"] + g["full_greedy"])

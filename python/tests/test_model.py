@@ -1,0 +1,150 @@
+"""L2 model correctness: the cached/chunked/split inference paths must be
+numerically identical to the training-form full forward — the property the
+whole HAT protocol (and the rust golden tests) stands on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus
+from compile.model import (Config, adapter_forward, draft_forward,
+                           draft_train_forward, full_forward, init_adapter,
+                           init_medusa, init_params, input_submodel,
+                           medusa_forward, middle_submodel, output_head,
+                           param_count)
+
+CFG = Config(vocab=128, hidden=64, layers=4, shallow_layers=1, heads=2,
+             head_dim=32, ffn=128, max_seq=128)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def adapter():
+    return init_adapter(jax.random.PRNGKey(1), CFG)
+
+
+def toks(n, seed=0):
+    gen = corpus.CorpusGenerator(seed)
+    return jnp.asarray(gen.document(n, n), jnp.int32) % CFG.vocab
+
+
+def zkv(layers):
+    return jnp.zeros((layers, 2, CFG.max_seq, CFG.heads, CFG.head_dim))
+
+
+def split_forward(params, tokens, chunks, use_pallas):
+    """Run the split pipeline (input → middle → head) with KV caches over
+    `chunks`, returning logits for every position."""
+    skv = zkv(CFG.shallow_layers)
+    mkv = zkv(CFG.layers - CFG.shallow_layers)
+    pos = 0
+    logits = []
+    for c in chunks:
+        seg = tokens[pos:pos + c]
+        h, skv = input_submodel(params, seg, skv, pos, CFG, use_pallas)
+        deep, mkv = middle_submodel(params, h, mkv, pos, CFG, use_pallas)
+        logits.append(output_head(params, deep))
+        pos += c
+    return jnp.concatenate(logits, axis=0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(4, 48), chunk=st.integers(1, 16), seed=st.integers(0, 99))
+def test_split_cached_equals_full_forward(params, n, chunk, seed):
+    tokens = toks(n, seed)
+    full_logits, _, _ = full_forward(params, tokens, CFG)
+    chunks = []
+    left = n
+    while left > 0:
+        chunks.append(min(chunk, left))
+        left -= chunks[-1]
+    split_logits = split_forward(params, tokens, chunks, use_pallas=False)
+    np.testing.assert_allclose(split_logits, full_logits, rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_path_equals_ref_path(params):
+    tokens = toks(24, 3)
+    a = split_forward(params, tokens, [24], use_pallas=True)
+    b = split_forward(params, tokens, [8, 8, 8], use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_draft_cached_equals_teacher_forced(params, adapter):
+    """Token-by-token cached draft model == full-sequence training form."""
+    tokens = toks(20, 5)
+    want, _ = draft_train_forward(params, adapter, tokens, CFG)
+
+    skv = zkv(CFG.shallow_layers)
+    akv = jnp.zeros((2, CFG.max_seq, CFG.heads, CFG.head_dim))
+    got = []
+    for i in range(20):
+        logits, skv, akv, _ = draft_forward(
+            params, adapter, tokens[i:i + 1], skv, akv, i, CFG, use_pallas=False)
+        got.append(logits[0])
+    np.testing.assert_allclose(jnp.stack(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_draft_forward_returns_shallow_hidden(params, adapter):
+    tokens = toks(6, 7)
+    skv, akv = zkv(CFG.shallow_layers), jnp.zeros((2, CFG.max_seq, CFG.heads, CFG.head_dim))
+    _, _, _, shallow = draft_forward(params, adapter, tokens, skv, akv, 0, CFG, False)
+    h, _ = input_submodel(params, tokens, zkv(CFG.shallow_layers), 0, CFG, False)
+    np.testing.assert_allclose(shallow, h, rtol=1e-5, atol=1e-5)
+
+
+def test_kv_rollback_by_position_counter(params):
+    """Stale KV rows beyond the position counter never affect results —
+    the property that makes draft-rejection rollback a counter rewind."""
+    tokens = toks(16, 9)
+    skv = zkv(CFG.shallow_layers)
+    h1, skv = input_submodel(params, tokens[:8], skv, 0, CFG, False)
+    # Write garbage "speculative" rows at positions 8..12, then overwrite
+    # them by continuing from pos=8 with the real tokens.
+    garbage = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    _, skv_g = input_submodel(params, garbage, skv, 8, CFG, False)
+    h2, _ = input_submodel(params, tokens[8:12], skv_g, 8, CFG, False)
+    # Reference: never wrote garbage.
+    h2_ref, _ = input_submodel(params, tokens[8:12], skv, 8, CFG, False)
+    np.testing.assert_allclose(h2, h2_ref, rtol=1e-5, atol=1e-5)
+    del h1
+
+
+def test_adapter_shapes_and_params(adapter):
+    assert param_count(adapter) == CFG.hidden * CFG.hidden * 4 + CFG.hidden
+    h = jax.random.normal(jax.random.PRNGKey(2), (5, CFG.hidden))
+    akv = jnp.zeros((2, CFG.max_seq, CFG.heads, CFG.head_dim))
+    out, akv2 = adapter_forward(adapter, h, akv, 0, CFG, False)
+    assert out.shape == (5, CFG.hidden)
+    assert akv2.shape == akv.shape
+    assert not jnp.allclose(akv2, akv)  # cache was written
+
+
+def test_medusa_heads_shapes(params):
+    mh = init_medusa(jax.random.PRNGKey(3), CFG)
+    deep = jax.random.normal(jax.random.PRNGKey(4), (3, CFG.hidden))
+    out = medusa_forward(mh, deep, params)
+    assert out.shape == (CFG.n_medusa, 3, CFG.vocab)
+
+
+def test_full_forward_is_causal(params):
+    """Changing a future token must not change past logits."""
+    t1 = toks(12, 11)
+    t2 = t1.at[8].set((t1[8] + 1) % CFG.vocab)
+    l1, _, _ = full_forward(params, t1, CFG)
+    l2, _, _ = full_forward(params, t2, CFG)
+    np.testing.assert_allclose(l1[:8], l2[:8], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(l1[8:], l2[8:])
+
+
+def test_param_count_matches_formula(params):
+    h, f, v, l = CFG.hidden, CFG.ffn, CFG.vocab, CFG.layers
+    per_layer = 2 * h + 4 * h * h + 3 * h * f
+    expected = v * h + l * per_layer + h + h * v
+    assert param_count(params) == expected

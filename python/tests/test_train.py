@@ -1,0 +1,146 @@
+"""Training-pipeline tests: the hand-rolled Adam, the Eq. 4 distillation
+loss, the corpus generator, and (slow-marked) short end-to-end training.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus, train
+from compile.model import Config
+
+# vocab must cover the corpus (tokens < 512): out-of-vocab targets make
+# take_along_axis fill NaN inside the CE loss.
+CFG = Config(vocab=512, hidden=64, layers=2, shallow_layers=1, heads=2,
+             head_dim=32, ffn=128, max_seq=128)
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def test_adam_minimizes_quadratic():
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    opt = train.adam_init(params)
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, opt = train.adam_update(params, g, opt, lr=0.1)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adam_bias_correction_first_step():
+    """After one step with gradient g, update ≈ lr · sign(g)."""
+    params = {"x": jnp.asarray([1.0])}
+    opt = train.adam_init(params)
+    grads = {"x": jnp.asarray([0.3])}
+    new, _ = train.adam_update(params, grads, opt, lr=0.01)
+    assert abs(float(new["x"][0]) - (1.0 - 0.01)) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Losses (Eq. 4 pieces)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_smooth_l1_properties(seed):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (8, 4))
+    assert float(train.smooth_l1(x, x)) == 0.0
+    y = x + 0.5
+    # Below beta the loss is quadratic: 0.5 * d^2
+    assert abs(float(train.smooth_l1(x, y)) - 0.5 * 0.25) < 1e-6
+    # Far apart it is linear: |d| - 0.5
+    z = x + 10.0
+    assert abs(float(train.smooth_l1(x, z)) - 9.5) < 1e-5
+
+
+def test_soft_ce_minimized_at_teacher():
+    t = jnp.asarray([[2.0, 0.0, -1.0]])
+    ce_self = float(train.soft_ce(t, t))
+    ce_other = float(train.soft_ce(t, jnp.asarray([[0.0, 2.0, -1.0]])))
+    assert ce_self < ce_other
+
+
+def test_cross_entropy_perfect_prediction():
+    logits = jnp.asarray([[10.0, -10.0], [-10.0, 10.0]])
+    targets = jnp.asarray([0, 1])
+    assert float(train.cross_entropy(logits, targets)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Corpus
+# ---------------------------------------------------------------------------
+
+
+def test_corpus_deterministic_and_in_vocab():
+    a = corpus.CorpusGenerator(7).stream(5000)
+    b = corpus.CorpusGenerator(7).stream(5000)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < corpus.VOCAB
+
+
+def test_corpus_has_predictable_structure():
+    """The bigram preferences must make a corpus that is compressible —
+    subject→verb transitions hit the preferred verb most of the time.
+    This is what gives speculative decoding its accept length."""
+    gen = corpus.CorpusGenerator(3)
+    hits, total = 0, 0
+    for _ in range(500):
+        s = gen.sentence()
+        for i, t in enumerate(s[:-1]):
+            if t in range(corpus.SUBJ[0], corpus.SUBJ[-1] + 1):
+                total += 1
+                if s[i + 1] == gen.subj2verb[t - corpus.SUBJ[0]][0]:
+                    hits += 1
+    assert total > 0
+    assert hits / total > 0.5, f"preferred-verb rate {hits/total}"
+
+
+def test_document_length_contract():
+    gen = corpus.CorpusGenerator(1)
+    for n in [16, 100, 333]:
+        d = gen.document(n, n)
+        assert len(d) == n
+        assert d[0] == corpus.BOS
+
+
+def test_training_batches_shapes_and_shift():
+    it = corpus.training_batches(0, n_tokens=5000, batch=4, seqlen=32)
+    x, y = next(it)
+    assert x.shape == (4, 32) and y.shape == (4, 32)
+    np.testing.assert_array_equal(x[:, 1:], y[:, :-1])
+
+
+def test_sample_prompts_lengths():
+    ps = corpus.sample_prompts(0, [16, 64, 128])
+    assert [len(p) for p in ps] == [16, 64, 128]
+
+
+# ---------------------------------------------------------------------------
+# Short end-to-end training (slow-ish; tiny model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_short_training_reduces_loss():
+    # 20-step LR warmup, then ~60 effective steps — expect a clear drop.
+    _, losses = train.train_lm(CFG, steps=80, batch=4, seqlen=64, log_every=50)
+    early = sum(losses[:5]) / 5
+    late = sum(losses[-5:]) / 5
+    assert late < early * 0.9, f"loss {early} -> {late}"
+
+
+@pytest.mark.slow
+def test_distillation_loss_decreases():
+    params, _ = train.train_lm(CFG, steps=30, batch=4, seqlen=64, log_every=50)
+    _, final = train.distill_adapter(params, CFG, steps=40, batch=4,
+                                     seqlen=64, log_every=50)
+    adapter0 = train.distill_adapter(params, CFG, steps=1, batch=4,
+                                     seqlen=64, log_every=50)
+    assert final < adapter0[1]

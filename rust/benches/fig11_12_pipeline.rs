@@ -1,0 +1,64 @@
+//! Figs. 11–12 — TTFT/TBT vs the server's pipeline length P ∈ {1,2,4,8}.
+//!
+//! Paper shape: all frameworks improve with P (shorter per-stage time →
+//! less admission waiting); HAT stays lowest everywhere; at P=1 the
+//! baselines blow up (request accumulation) while HAT degrades gracefully.
+
+use hat::config::{Dataset, ExperimentConfig, Framework};
+use hat::frameworks::run_experiment;
+use hat::specdec::profile::SdProfile;
+use hat::util::json::{obj, Value};
+use hat::util::report::{section, write_json};
+
+fn main() {
+    let profile = SdProfile::load_or_default(&Default::default(), 4);
+    let mut rows = Vec::new();
+    for (dataset, rate) in [(Dataset::SpecBench, 4.0), (Dataset::CnnDm, 2.0)] {
+        section(&format!(
+            "Fig {}: {} (rate {rate}/s)",
+            if dataset == Dataset::SpecBench { 11 } else { 12 },
+            dataset.name()
+        ));
+        println!("{:>4} {:>11} {:>11} {:>11} {:>11}   metric", "P", "HAT", "U-Sarathi", "U-Medusa", "U-shape");
+        let mut hat_by_p = Vec::new();
+        for p in [1usize, 2, 4, 8] {
+            let mut cells = Vec::new();
+            for fw in Framework::all() {
+                let mut cfg = ExperimentConfig::preset(fw, dataset);
+                cfg.cloud.pipeline_len = p;
+                cfg.workload.rate = rate;
+                cfg.workload.n_requests = 200;
+                let s = run_experiment(&cfg, &profile).summary();
+                cells.push((s.ttft_mean_ms, s.tbt_mean_ms));
+                rows.push(obj(vec![
+                    ("dataset", Value::Str(dataset.name().into())),
+                    ("framework", Value::Str(fw.name().into())),
+                    ("pipeline", Value::Num(p as f64)),
+                    ("ttft_ms", Value::Num(s.ttft_mean_ms)),
+                    ("tbt_ms", Value::Num(s.tbt_mean_ms)),
+                ]));
+            }
+            println!(
+                "{p:>4} {:>11.1} {:>11.1} {:>11.1} {:>11.1}   TTFT(ms)",
+                cells[0].0, cells[1].0, cells[2].0, cells[3].0
+            );
+            println!(
+                "{:>4} {:>11.1} {:>11.1} {:>11.1} {:>11.1}   TBT(ms)",
+                "", cells[0].1, cells[1].1, cells[2].1, cells[3].1
+            );
+            hat_by_p.push(cells[0]);
+            // HAT lowest at every P.
+            for (i, &(ttft, tbt)) in cells.iter().enumerate().skip(1) {
+                assert!(cells[0].0 <= ttft * 1.02, "P={p}: HAT TTFT vs {}", Framework::all()[i].name());
+                assert!(cells[0].1 <= tbt * 1.02, "P={p}: HAT TBT vs {}", Framework::all()[i].name());
+            }
+        }
+        // Longer pipelines help (TBT non-increasing from P=1 to P=8).
+        assert!(
+            hat_by_p.last().unwrap().1 <= hat_by_p[0].1 * 1.05,
+            "HAT TBT should not grow with P"
+        );
+    }
+    let p = write_json("fig11_12_pipeline", &Value::Arr(rows));
+    println!("\nwrote {}", p.display());
+}

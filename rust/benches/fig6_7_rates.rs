@@ -1,0 +1,71 @@
+//! Figs. 6–7 — TTFT and TBT vs request generation rate, all four
+//! frameworks, both datasets (30 devices, P=4, Poisson arrivals).
+//!
+//! Paper shape to reproduce: HAT lowest TTFT and TBT everywhere; HAT and
+//! U-Sarathi degrade gently with rate (chunking isolates decode from long
+//! prompts) while U-Medusa and U-shape degrade sharply.
+
+use hat::config::{Dataset, ExperimentConfig, Framework};
+use hat::frameworks::run_experiment;
+use hat::specdec::profile::SdProfile;
+use hat::util::json::{obj, Value};
+use hat::util::report::{section, write_json};
+
+fn main() {
+    let profile = SdProfile::load_or_default(&Default::default(), 4);
+    let mut out_rows = Vec::new();
+
+    for (dataset, rates) in [
+        (Dataset::SpecBench, vec![4.0, 5.0, 6.0, 7.0, 8.0, 9.0]),
+        (Dataset::CnnDm, vec![2.0, 2.5, 3.0, 3.5, 4.0, 4.5]),
+    ] {
+        section(&format!("Fig {}: {} (P=4, 30 devices)",
+            if dataset == Dataset::SpecBench { 6 } else { 7 }, dataset.name()));
+        println!("{:>6} {:>11} {:>11} {:>11} {:>11}   metric", "rate", "HAT", "U-Sarathi", "U-Medusa", "U-shape");
+        let mut per_rate: Vec<(f64, Vec<(f64, f64)>)> = Vec::new();
+        for &rate in &rates {
+            let mut cells = Vec::new();
+            for fw in Framework::all() {
+                let mut cfg = ExperimentConfig::preset(fw, dataset);
+                cfg.workload.rate = rate;
+                cfg.workload.n_requests = 250;
+                let s = run_experiment(&cfg, &profile).summary();
+                cells.push((s.ttft_mean_ms, s.tbt_mean_ms));
+                out_rows.push(obj(vec![
+                    ("dataset", Value::Str(dataset.name().into())),
+                    ("framework", Value::Str(fw.name().into())),
+                    ("rate", Value::Num(rate)),
+                    ("ttft_ms", Value::Num(s.ttft_mean_ms)),
+                    ("tbt_ms", Value::Num(s.tbt_mean_ms)),
+                ]));
+            }
+            println!(
+                "{rate:>6.1} {:>11.1} {:>11.1} {:>11.1} {:>11.1}   TTFT(ms)",
+                cells[0].0, cells[1].0, cells[2].0, cells[3].0
+            );
+            println!(
+                "{:>6} {:>11.1} {:>11.1} {:>11.1} {:>11.1}   TBT(ms)",
+                "", cells[0].1, cells[1].1, cells[2].1, cells[3].1
+            );
+            per_rate.push((rate, cells));
+        }
+        // Paper shape: HAT has the lowest TTFT and TBT at every rate.
+        for (rate, cells) in &per_rate {
+            let (hat_ttft, hat_tbt) = cells[0];
+            for (i, &(ttft, tbt)) in cells.iter().enumerate().skip(1) {
+                assert!(
+                    hat_ttft <= ttft * 1.02,
+                    "rate {rate}: HAT TTFT {hat_ttft:.1} vs {} {ttft:.1}",
+                    Framework::all()[i].name()
+                );
+                assert!(
+                    hat_tbt <= tbt * 1.02,
+                    "rate {rate}: HAT TBT {hat_tbt:.1} vs {} {tbt:.1}",
+                    Framework::all()[i].name()
+                );
+            }
+        }
+    }
+    let p = write_json("fig6_7_rates", &Value::Arr(out_rows));
+    println!("\nwrote {}", p.display());
+}

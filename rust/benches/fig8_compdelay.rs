@@ -1,0 +1,44 @@
+//! Fig. 8 — per-GPU computation delay (mean ± std) per framework, both
+//! datasets, at the Fig. 6/7 operating point.
+//!
+//! Paper shape: HAT and U-Sarathi achieve low *and stable* per-GPU delay
+//! (chunking bounds the token size of any step); U-Medusa and U-shape show
+//! higher means and much larger standard deviations (long prompts saturate
+//! whole steps).
+
+use hat::config::{Dataset, ExperimentConfig, Framework};
+use hat::frameworks::run_experiment;
+use hat::specdec::profile::SdProfile;
+use hat::util::json::{obj, Value};
+use hat::util::report::{section, write_json};
+
+fn main() {
+    let profile = SdProfile::load_or_default(&Default::default(), 4);
+    let mut rows = Vec::new();
+    for dataset in [Dataset::SpecBench, Dataset::CnnDm] {
+        section(&format!("Fig 8: per-GPU computation delay, {}", dataset.name()));
+        println!("{:<12} {:>10} {:>10} {:>8}", "framework", "mean(ms)", "std(ms)", "steps");
+        let mut stats = Vec::new();
+        for fw in Framework::all() {
+            let mut cfg = ExperimentConfig::preset(fw, dataset);
+            cfg.workload.n_requests = 250;
+            let rec = run_experiment(&cfg, &profile);
+            let (mean, std) = rec.gpu_delay_stats();
+            println!("{:<12} {:>10.2} {:>10.2} {:>8}", fw.name(), mean, std, rec.gpu_step_delays.len());
+            stats.push((fw, mean, std));
+            rows.push(obj(vec![
+                ("dataset", Value::Str(dataset.name().into())),
+                ("framework", Value::Str(fw.name().into())),
+                ("gpu_mean_ms", Value::Num(mean)),
+                ("gpu_std_ms", Value::Num(std)),
+            ]));
+        }
+        // Paper shape: chunking frameworks (HAT, U-Sarathi) have far lower
+        // delay variance than the unchunked ones (U-Medusa, U-shape).
+        let std_of = |f: Framework| stats.iter().find(|(fw, _, _)| *fw == f).unwrap().2;
+        assert!(std_of(Framework::Hat) < std_of(Framework::UShape) * 0.6);
+        assert!(std_of(Framework::USarathi) < std_of(Framework::UMedusa) * 0.6);
+    }
+    let p = write_json("fig8_compdelay", &Value::Arr(rows));
+    println!("\nwrote {}", p.display());
+}

@@ -1,0 +1,85 @@
+//! Figs. 9–10 — SLA compliance CDFs at pipeline length P=1.
+//!
+//! Prefill SLA: delay per 128 prompt tokens; decode SLA: delay per 10
+//! generated tokens (paper §4.2).  We print compliance at an SLA grid and
+//! the SLA each framework needs for 50% / 90% compliance ("50% of requests
+//! in HAT meet a decode SLA of X ms").
+//!
+//! Paper shape: HAT reaches any given compliance rate at the tightest SLA.
+
+use hat::config::{Dataset, ExperimentConfig, Framework};
+use hat::frameworks::run_experiment;
+use hat::metrics::Recorder;
+use hat::specdec::profile::SdProfile;
+use hat::util::json::{obj, Value};
+use hat::util::report::{section, write_json};
+
+fn main() {
+    let profile = SdProfile::load_or_default(&Default::default(), 4);
+    let mut rows = Vec::new();
+    for (dataset, rate) in [(Dataset::SpecBench, 3.0), (Dataset::CnnDm, 1.5)] {
+        section(&format!("Figs 9-10: SLA compliance, {} (P=1, rate {rate}/s)", dataset.name()));
+        let mut samples = Vec::new();
+        for fw in Framework::all() {
+            let mut cfg = ExperimentConfig::preset(fw, dataset);
+            cfg.cloud.pipeline_len = 1;
+            cfg.workload.rate = rate;
+            cfg.workload.n_requests = 200;
+            let rec = run_experiment(&cfg, &profile);
+            samples.push((fw, rec.prefill_sla_sample(), rec.decode_sla_sample()));
+        }
+
+        for (label, idx) in [("prefill (per 128 prompt tokens)", 1usize), ("decode (per 10 tokens)", 2)] {
+            println!("\n-- {label} --");
+            print!("{:<12}", "SLA(ms)");
+            for (fw, _, _) in &samples {
+                print!(" {:>10}", fw.name());
+            }
+            println!();
+            let grid: Vec<f64> = if idx == 1 {
+                vec![200.0, 300.0, 400.0, 600.0, 900.0, 1400.0]
+            } else {
+                vec![300.0, 450.0, 600.0, 900.0, 1400.0, 2000.0]
+            };
+            for &sla in &grid {
+                print!("{sla:<12.0}");
+                for (_, pre, dec) in &samples {
+                    let s = if idx == 1 { pre } else { dec };
+                    print!(" {:>9.1}%", 100.0 * Recorder::compliance(s, sla));
+                }
+                println!();
+            }
+            for q in [0.5, 0.9] {
+                print!("{:<12}", format!("SLA@{:.0}%", q * 100.0));
+                for (_, pre, dec) in &samples {
+                    let s = if idx == 1 { pre } else { dec };
+                    print!(" {:>10.1}", Recorder::sla_at_quantile(s, q));
+                }
+                println!();
+            }
+        }
+
+        // Paper shape: HAT needs the tightest decode SLA for 50% compliance.
+        let hat_q50 = Recorder::sla_at_quantile(&samples[0].2, 0.5);
+        for (fw, _, dec) in samples.iter().skip(1) {
+            let q50 = Recorder::sla_at_quantile(dec, 0.5);
+            assert!(
+                hat_q50 <= q50 * 1.05,
+                "{}: decode SLA@50% {q50:.0} tighter than HAT {hat_q50:.0}",
+                fw.name()
+            );
+        }
+        for (fw, pre, dec) in &samples {
+            rows.push(obj(vec![
+                ("dataset", Value::Str(dataset.name().into())),
+                ("framework", Value::Str(fw.name().into())),
+                ("prefill_sla_p50", Value::Num(Recorder::sla_at_quantile(pre, 0.5))),
+                ("prefill_sla_p90", Value::Num(Recorder::sla_at_quantile(pre, 0.9))),
+                ("decode_sla_p50", Value::Num(Recorder::sla_at_quantile(dec, 0.5))),
+                ("decode_sla_p90", Value::Num(Recorder::sla_at_quantile(dec, 0.9))),
+            ]));
+        }
+    }
+    let p = write_json("fig9_10_sla", &Value::Arr(rows));
+    println!("\nwrote {}", p.display());
+}

@@ -1,0 +1,137 @@
+//! §Perf — hot-path microbenchmarks for the optimization pass
+//! (EXPERIMENTS.md §Perf).  Hand-rolled harness (criterion is not in the
+//! offline crate set): median-of-N wall-clock with warmup.
+//!
+//! L3: event-queue throughput, fleet-sim end-to-end event rate, chunker
+//!     solve, batcher formation.
+//! Runtime: PJRT execute latency per artifact bucket, literal staging.
+
+use std::time::Instant;
+
+use hat::cloud::{optimal_chunk, Batcher, Job, JobKind};
+use hat::config::{Dataset, ExperimentConfig, Framework, GModel};
+use hat::frameworks::run_experiment;
+use hat::sim::{EventQueue, SimTime};
+use hat::specdec::profile::SdProfile;
+use hat::util::json::{obj, Value};
+use hat::util::report::{section, write_json};
+
+fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) -> (f64, u64) {
+    // warmup
+    let mut sink = 0u64;
+    sink ^= f();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        sink ^= f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    println!("{name:<44} {med:>10.3} ms (median of {iters})");
+    (med, sink)
+}
+
+fn main() {
+    section("Perf: L3 hot paths");
+    let mut results = Vec::new();
+
+    // Event queue: schedule+pop 100k events.
+    let (eq_ms, _) = bench("event_queue: 100k schedule+pop", 9, || {
+        let mut q = EventQueue::new();
+        let mut acc = 0u64;
+        for i in 0..100_000u64 {
+            q.schedule_at(SimTime(i * 7 % 1_000_003), i);
+        }
+        while let Some((_, e)) = q.pop() {
+            acc = acc.wrapping_add(e);
+        }
+        acc
+    });
+    results.push(("event_queue_100k_ms", eq_ms));
+
+    // Chunk-size optimizer (Eq. 3 bisection).
+    let g = GModel::vicuna7b();
+    let (ch_ms, _) = bench("chunker: 10k optimal_chunk solves", 9, || {
+        let mut acc = 0u64;
+        for i in 0..10_000 {
+            acc += optimal_chunk(
+                8192.0,
+                5_000.0 + (i % 100) as f64 * 50.0,
+                |b| g.eval(b),
+                (i % 2048) as f64,
+                1 + (i % 8),
+                (16, 512),
+            ) as u64;
+        }
+        acc
+    });
+    results.push(("chunker_10k_ms", ch_ms));
+
+    // Batcher: 10k jobs through form_batch.
+    let (bt_ms, _) = bench("batcher: 10k jobs push+form", 9, || {
+        let mut b = Batcher::new();
+        let mut acc = 0u64;
+        for i in 0..10_000usize {
+            let kind = if i % 3 == 0 { JobKind::PrefillChunk } else { JobKind::Decode };
+            b.push(Job { req: i, kind, tokens: 1 + i % 300, tag: 0 });
+            if i % 8 == 0 {
+                acc += b.form_batch(2048).len() as u64;
+            }
+        }
+        while !b.is_empty() {
+            acc += b.form_batch(2048).len() as u64;
+        }
+        acc
+    });
+    results.push(("batcher_10k_ms", bt_ms));
+
+    // Fleet sim end-to-end: events/second of virtual workload.
+    let profile = SdProfile::default_table();
+    let mut cfg = ExperimentConfig::preset(Framework::Hat, Dataset::SpecBench);
+    cfg.workload.n_requests = 200;
+    let t0 = Instant::now();
+    let rec = run_experiment(&cfg, &profile);
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = rec.requests.iter().map(|r| r.tokens_generated()).sum();
+    println!(
+        "fleet_sim: 200 reqs, {tokens} tokens in {:.2}s wall ({:.0} virtual-tokens/s)",
+        wall,
+        tokens as f64 / wall
+    );
+    results.push(("fleet_sim_200req_s", wall * 1e3));
+
+    // Runtime: PJRT execute latency per bucket (needs artifacts).
+    let dir = hat::runtime::ArtifactRegistry::default_dir();
+    if dir.join("manifest.json").exists() {
+        section("Perf: runtime (PJRT CPU) per-call latency");
+        let reg = hat::runtime::ArtifactRegistry::load(&dir).unwrap();
+        let spec = reg.model().clone();
+        for t in [1usize, 8, 64, 256] {
+            let hidden = vec![0.1f32; t * spec.hidden];
+            let mkv = hat::runtime::zeros_literal(&spec.middle_kv_dims()).unwrap();
+            let name = format!("cloud_middle_{t}");
+            let (ms, _) = bench(&format!("{name} execute"), 15, || {
+                let h = hat::runtime::f32_literal_padded(&hidden, spec.hidden, t).unwrap();
+                let pos = hat::runtime::pos_literal(0);
+                let outs = reg.run(&name, &[&h, &mkv, &pos]).unwrap();
+                outs.len() as u64
+            });
+            results.push((Box::leak(format!("cloud_middle_{t}_ms").into_boxed_str()) as &str, ms));
+        }
+        let s = reg.stats.borrow();
+        println!(
+            "runtime totals: {} compiles ({:.0} ms), {} executes ({:.1} ms avg)",
+            s.compiles,
+            s.compile_ms,
+            s.executions,
+            s.execute_ms / s.executions.max(1) as f64
+        );
+    } else {
+        eprintln!("artifacts/ not built — skipping PJRT microbenches");
+    }
+
+    let out = obj(results.iter().map(|(k, v)| (*k, Value::Num(*v))).collect());
+    let p = write_json("perf_hotpath", &out);
+    println!("\nwrote {}", p.display());
+}

@@ -1,0 +1,62 @@
+//! Table 5 — ablation of HAT's three key strategies: speculative decoding
+//! (SD), prompt chunking (PC) and parallel drafting (PD), both datasets.
+//!
+//! Paper shape: PC is the TTFT lever (≈-40%), SD is the main TBT lever,
+//! PD shaves TBT further; the full stack is best on both metrics.
+
+use hat::config::{Dataset, ExperimentConfig, Framework};
+use hat::frameworks::run_experiment;
+use hat::specdec::profile::SdProfile;
+use hat::util::json::{obj, Value};
+use hat::util::report::{section, write_json};
+
+fn main() {
+    let profile = SdProfile::load_or_default(&Default::default(), 4);
+    let combos: [(bool, bool, bool); 6] = [
+        (false, false, false),
+        (false, true, false),
+        (true, false, false),
+        (true, false, true),
+        (true, true, false),
+        (true, true, true),
+    ];
+    let mut rows = Vec::new();
+    for dataset in [Dataset::SpecBench, Dataset::CnnDm] {
+        section(&format!("Table 5: key strategies on {}", dataset.name()));
+        println!("{:>4} {:>4} {:>4} {:>11} {:>10}", "SD", "PC", "PD", "TTFT(ms)", "TBT(ms)");
+        let mut results = Vec::new();
+        for (sd, pc, pd) in combos {
+            let mut cfg = ExperimentConfig::preset(Framework::Hat, dataset);
+            cfg.strategies.sd = sd;
+            cfg.strategies.pc = pc;
+            cfg.strategies.pd = pd;
+            cfg.workload.n_requests = 250;
+            let s = run_experiment(&cfg, &profile).summary();
+            let mark = |b: bool| if b { "+" } else { "-" };
+            println!(
+                "{:>4} {:>4} {:>4} {:>11.1} {:>10.1}",
+                mark(sd), mark(pc), mark(pd), s.ttft_mean_ms, s.tbt_mean_ms
+            );
+            results.push(((sd, pc, pd), s.ttft_mean_ms, s.tbt_mean_ms));
+            rows.push(obj(vec![
+                ("dataset", Value::Str(dataset.name().into())),
+                ("sd", Value::Bool(sd)),
+                ("pc", Value::Bool(pc)),
+                ("pd", Value::Bool(pd)),
+                ("ttft_ms", Value::Num(s.ttft_mean_ms)),
+                ("tbt_ms", Value::Num(s.tbt_mean_ms)),
+            ]));
+        }
+        let find = |c: (bool, bool, bool)| results.iter().find(|(x, _, _)| *x == c).unwrap();
+        let baseline = find((false, false, false));
+        let pc_only = find((false, true, false));
+        let full = find((true, true, true));
+        let no_pd = find((true, true, false));
+        // Paper shape: PC cuts TTFT; full stack has the lowest TBT; PD helps.
+        assert!(pc_only.1 < baseline.1, "PC should reduce TTFT");
+        assert!(full.2 < baseline.2, "full HAT should beat plain U-shape on TBT");
+        assert!(full.2 <= no_pd.2 * 1.02, "PD should not hurt TBT");
+    }
+    let p = write_json("table5_ablation", &Value::Arr(rows));
+    println!("\nwrote {}", p.display());
+}

@@ -1,0 +1,228 @@
+//! Command-line interface (hand-rolled; clap is not in the offline crate
+//! set).  Subcommands:
+//!
+//! ```text
+//! hat simulate [--framework F] [--dataset D] [--rate R] [--pipeline P]
+//!              [--requests N] [--seed S] [--config FILE]
+//! hat serve    [--addr HOST:PORT]       real TCP serving over the engine
+//! hat profile  [--rounds N]             measure SD round shapes
+//! hat inspect                           print manifest / artifact summary
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::config::{Dataset, ExperimentConfig, Framework};
+use crate::frameworks::run_experiment;
+use crate::metrics::RunSummary;
+use crate::specdec::profile::SdProfile;
+
+/// Parsed flags: `--key value` pairs plus positional args.
+#[derive(Debug, Default)]
+pub struct Flags {
+    pub positional: Vec<String>,
+    pub named: BTreeMap<String, String>,
+}
+
+pub fn parse_flags<I: Iterator<Item = String>>(args: I) -> Result<Flags, String> {
+    let mut f = Flags::default();
+    let mut it = args.peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                _ => "true".to_string(),
+            };
+            if f.named.insert(key.to_string(), val).is_some() {
+                return Err(format!("duplicate flag --{key}"));
+            }
+        } else {
+            f.positional.push(a);
+        }
+    }
+    Ok(f)
+}
+
+impl Flags {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.named.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| format!("--{key}: bad number '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        Ok(self.get_f64(key)?.map(|v| v as usize))
+    }
+}
+
+/// Build an ExperimentConfig from CLI flags (optionally seeded from a
+/// config file).
+pub fn config_from_flags(f: &Flags) -> Result<ExperimentConfig, String> {
+    let mut cfg = if let Some(path) = f.get("config") {
+        crate::config::parser::load_file(path)?
+    } else {
+        let dataset = match f.get("dataset") {
+            Some(d) => Dataset::parse(d).ok_or(format!("unknown dataset {d}"))?,
+            None => Dataset::SpecBench,
+        };
+        let framework = match f.get("framework") {
+            Some(x) => Framework::parse(x).ok_or(format!("unknown framework {x}"))?,
+            None => Framework::Hat,
+        };
+        ExperimentConfig::preset(framework, dataset)
+    };
+    if let Some(r) = f.get_f64("rate")? {
+        cfg.workload.rate = r;
+    }
+    if let Some(p) = f.get_usize("pipeline")? {
+        cfg.cloud.pipeline_len = p;
+    }
+    if let Some(n) = f.get_usize("requests")? {
+        cfg.workload.n_requests = n;
+    }
+    if let Some(s) = f.get_usize("seed")? {
+        cfg.seed = s as u64;
+    }
+    cfg.validate().map_err(|e| e.join("; "))?;
+    Ok(cfg)
+}
+
+fn cmd_simulate(f: &Flags) -> Result<(), String> {
+    let cfg = config_from_flags(f)?;
+    let profile = SdProfile::load_or_default(&cfg.specdec, 3);
+    eprintln!(
+        "simulating {} on {} | rate {}/s | P={} | {} requests",
+        cfg.framework.name(),
+        cfg.workload.dataset.name(),
+        cfg.workload.rate,
+        cfg.cloud.pipeline_len,
+        cfg.workload.n_requests
+    );
+    let rec = run_experiment(&cfg, &profile);
+    println!("{}", RunSummary::header());
+    println!("{}", rec.summary().row(cfg.framework.name()));
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<(), String> {
+    let dir = crate::runtime::ArtifactRegistry::default_dir();
+    let reg = crate::runtime::ArtifactRegistry::load(&dir).map_err(|e| e.to_string())?;
+    let m = &reg.manifest;
+    println!(
+        "model: vocab={} hidden={} layers={} (device {} / cloud {}) heads={} max_seq={}",
+        m.model.vocab,
+        m.model.hidden,
+        m.model.layers,
+        m.model.shallow_layers,
+        m.model.middle_layers(),
+        m.model.heads,
+        m.model.max_seq
+    );
+    println!("buckets: {:?}", m.buckets);
+    println!("artifacts: {}", m.artifacts.len());
+    println!(
+        "params: LLM {} | adapter Λ {} | medusa heads {}",
+        m.train_meta.lm_params, m.train_meta.adapter_params, m.train_meta.medusa_params
+    );
+    println!("accept-length probe (python): {:.2}", m.train_meta.accept_length_probe);
+    Ok(())
+}
+
+fn cmd_profile(f: &Flags) -> Result<(), String> {
+    let n = f.get_usize("rounds")?.unwrap_or(6);
+    let cfg = crate::config::SpecDecConfig::default();
+    let p = SdProfile::load_or_default(&cfg, n);
+    println!(
+        "HAT rounds: {} | accept length {:.2} | pd hits {:.0}%",
+        p.hat.len(),
+        SdProfile::accept_length(&p.hat),
+        100.0 * p.hat.iter().filter(|r| r.pd_hit).count() as f64 / p.hat.len() as f64
+    );
+    println!(
+        "U-Medusa rounds: {} | accept length {:.2}",
+        p.medusa.len(),
+        SdProfile::accept_length(&p.medusa)
+    );
+    Ok(())
+}
+
+/// CLI entry; returns the process exit code.
+pub fn main() -> i32 {
+    let mut args = std::env::args().skip(1);
+    let cmd = match args.next() {
+        Some(c) => c,
+        None => {
+            eprintln!("usage: hat <simulate|serve|profile|inspect> [flags]");
+            return 2;
+        }
+    };
+    let flags = match parse_flags(args) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let r = match cmd.as_str() {
+        "simulate" => cmd_simulate(&flags),
+        "serve" => crate::server::cmd_serve(&flags),
+        "profile" => cmd_profile(&flags),
+        "inspect" => cmd_inspect(),
+        other => Err(format!("unknown command '{other}'")),
+    };
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(s: &[&str]) -> Flags {
+        parse_flags(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed_flags() {
+        // A flag consumes the next non-flag token as its value; trailing
+        // flags with no value become "true".
+        let f = flags(&["pos1", "--rate", "6.5", "--pipeline", "4", "--verbose"]);
+        assert_eq!(f.get("rate"), Some("6.5"));
+        assert_eq!(f.get("verbose"), Some("true"));
+        assert_eq!(f.positional, vec!["pos1"]);
+        assert_eq!(f.get_f64("rate").unwrap(), Some(6.5));
+        assert_eq!(f.get_usize("pipeline").unwrap(), Some(4));
+        assert_eq!(f.get("missing"), None);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_bad_numbers() {
+        assert!(parse_flags(["--a", "1", "--a", "2"].iter().map(|x| x.to_string())).is_err());
+        let f = flags(&["--rate", "abc"]);
+        assert!(f.get_f64("rate").is_err());
+    }
+
+    #[test]
+    fn config_from_flags_overrides_preset() {
+        let f = flags(&["--framework", "ushape", "--rate", "9", "--pipeline", "8", "--requests", "5"]);
+        let c = config_from_flags(&f).unwrap();
+        assert_eq!(c.framework, Framework::UShape);
+        assert_eq!(c.workload.rate, 9.0);
+        assert_eq!(c.cloud.pipeline_len, 8);
+        assert_eq!(c.workload.n_requests, 5);
+    }
+
+    #[test]
+    fn config_from_flags_rejects_unknown_framework() {
+        assert!(config_from_flags(&flags(&["--framework", "zzz"])).is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! Continuous batcher: prefill/decode mixing with a token budget.
+//!
+//! Decode/verify jobs are tiny (1..k tokens) and latency-critical; prefill
+//! chunks are big and throughput-bound.  The batcher admits *all* pending
+//! decode jobs first (they barely move the batch size, §2.1), then fills
+//! the remaining token budget with prefill chunks in FIFO order —
+//! the Sarathi-style mixing HAT builds on.
+
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// Verification / single-token decode for a stream in decode phase.
+    Decode,
+    /// One prompt chunk for a stream in prefill phase.
+    PrefillChunk,
+}
+
+/// One unit of cloud work (per request stream).
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub req: usize,
+    pub kind: JobKind,
+    /// Tokens this job contributes to the batch.
+    pub tokens: usize,
+    /// Opaque tag the simulator uses to route the completion.
+    pub tag: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct Batcher {
+    decode_q: VecDeque<Job>,
+    prefill_q: VecDeque<Job>,
+}
+
+impl Batcher {
+    pub fn new() -> Batcher {
+        Batcher::default()
+    }
+
+    pub fn push(&mut self, job: Job) {
+        match job.kind {
+            JobKind::Decode => self.decode_q.push_back(job),
+            JobKind::PrefillChunk => self.prefill_q.push_back(job),
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.decode_q.len() + self.prefill_q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending() == 0
+    }
+
+    /// Form the next batch under a *prefill* token budget (Sarathi-style
+    /// iteration semantics: each step carries at most `max_prefill_tokens`
+    /// of prompt work).  All decode jobs are admitted — they are
+    /// individually tiny and starving them deadlocks decoding; prefill
+    /// chunks then fill the budget FIFO.  A lone over-budget prefill chunk
+    /// still runs when nothing else is pending (it must eventually).
+    pub fn form_batch(&mut self, max_prefill_tokens: usize) -> Vec<Job> {
+        let mut batch = Vec::new();
+        let mut prefill_tokens = 0usize;
+        while let Some(j) = self.decode_q.pop_front() {
+            batch.push(j);
+        }
+        while let Some(j) = self.prefill_q.front() {
+            if prefill_tokens == 0 || prefill_tokens + j.tokens <= max_prefill_tokens {
+                let j = self.prefill_q.pop_front().unwrap();
+                prefill_tokens += j.tokens;
+                batch.push(j);
+                if prefill_tokens >= max_prefill_tokens {
+                    break;
+                }
+            } else {
+                break;
+            }
+        }
+        batch
+    }
+
+    /// Total tokens across a formed batch.
+    pub fn batch_tokens(batch: &[Job]) -> usize {
+        batch.iter().map(|j| j.tokens).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{cases, forall, vec_usize};
+
+    fn job(req: usize, kind: JobKind, tokens: usize) -> Job {
+        Job { req, kind, tokens, tag: 0 }
+    }
+
+    #[test]
+    fn decode_admitted_first_one_chunk_rides_along() {
+        let mut b = Batcher::new();
+        b.push(job(0, JobKind::PrefillChunk, 512));
+        b.push(job(3, JobKind::PrefillChunk, 512));
+        b.push(job(1, JobKind::Decode, 3));
+        b.push(job(2, JobKind::Decode, 1));
+        let batch = b.form_batch(256);
+        // All decodes + exactly one prefill chunk (the first chunk always
+        // rides, further ones respect the budget).
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].kind, JobKind::Decode);
+        assert_eq!(batch[1].kind, JobKind::Decode);
+        assert_eq!(batch[2].req, 0);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn budget_bounds_prefill_tokens_per_step() {
+        let mut b = Batcher::new();
+        for i in 0..6 {
+            b.push(job(i, JobKind::PrefillChunk, 128));
+        }
+        let batch = b.form_batch(256);
+        assert_eq!(Batcher::batch_tokens(&batch), 256, "two 128-chunks fill the budget");
+        assert_eq!(b.pending(), 4);
+    }
+
+    #[test]
+    fn lone_oversized_prefill_still_runs() {
+        let mut b = Batcher::new();
+        b.push(job(0, JobKind::PrefillChunk, 999));
+        let batch = b.form_batch(256);
+        assert_eq!(batch.len(), 1);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn prefill_fifo_fills_budget() {
+        let mut b = Batcher::new();
+        for (i, t) in [100usize, 100, 100].iter().enumerate() {
+            b.push(job(i, JobKind::PrefillChunk, *t));
+        }
+        let batch = b.form_batch(250);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].req, 0);
+        assert_eq!(batch[1].req, 1);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn prop_batches_drain_everything_exactly_once() {
+        forall(cases(100), |rng| {
+            let mut b = Batcher::new();
+            let sizes = vec_usize(rng, 40, 1, 600);
+            for (i, &t) in sizes.iter().enumerate() {
+                let kind = if rng.bool(0.5) { JobKind::Decode } else { JobKind::PrefillChunk };
+                b.push(job(i, kind, t));
+            }
+            let mut seen = vec![0usize; sizes.len()];
+            let budget = rng.range_usize(64, 1024);
+            let mut guard = 0;
+            while !b.is_empty() {
+                let batch = b.form_batch(budget);
+                if batch.is_empty() {
+                    return Err("empty batch with pending jobs".into());
+                }
+                for j in &batch {
+                    seen[j.req] += 1;
+                }
+                guard += 1;
+                if guard > 1000 {
+                    return Err("did not drain".into());
+                }
+            }
+            if seen.iter().any(|&c| c != 1) {
+                return Err("job lost or duplicated".into());
+            }
+            Ok(())
+        });
+    }
+}

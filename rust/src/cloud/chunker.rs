@@ -1,0 +1,141 @@
+//! Prompt-chunking module (paper §3.3): dynamic chunk-size optimization.
+//!
+//! Eq. 3 balances the upload time of one chunk against the pipelined
+//! in-cloud time of the *previous* chunk, so transmission and computation
+//! overlap with neither side stalling:
+//!
+//! ```text
+//! X_i · A / β_up  =  ( g^t(μ^t) + g^t(μ^t + X_i) ) / P
+//! ```
+//!
+//! LHS (upload of a chunk of X_i tokens) grows linearly in X_i; RHS
+//! (waiting ≈ g(μ) plus compute g(μ+X_i), spread over P pipeline stages)
+//! grows sub-linearly below the saturation knee — so a unique crossing
+//! exists; we find it by bisection and clamp into configured bounds.
+
+/// Solve Eq. 3 for the optimal chunk size.
+///
+/// * `a_bytes`      — hidden-state wire size per token (A).
+/// * `up_bytes_per_ms` — device uplink bandwidth β_up.
+/// * `g`            — the current delay predictor g^t(·) in ms.
+/// * `mu`           — current average batched token size μ^t.
+/// * `p`            — pipeline length P.
+/// * `bounds`       — (min_chunk, max_chunk).
+pub fn optimal_chunk(
+    a_bytes: f64,
+    up_bytes_per_ms: f64,
+    g: impl Fn(f64) -> f64,
+    mu: f64,
+    p: usize,
+    bounds: (usize, usize),
+) -> usize {
+    let (lo_b, hi_b) = bounds;
+    assert!(lo_b >= 1 && lo_b <= hi_b && p >= 1);
+    let upload_ms = |x: f64| x * a_bytes / up_bytes_per_ms.max(1e-9);
+    let cloud_ms = |x: f64| (g(mu) + g(mu + x)) / p as f64;
+    // f(x) = upload(x) - cloud(x): negative while upload is cheaper.
+    let f = |x: f64| upload_ms(x) - cloud_ms(x);
+
+    let (mut lo, mut hi) = (lo_b as f64, hi_b as f64);
+    if f(lo) >= 0.0 {
+        // Even the smallest chunk uploads slower than the cloud computes:
+        // take the smallest (upload-bound link).
+        return lo_b;
+    }
+    if f(hi) <= 0.0 {
+        // Upload always faster: take the largest chunk (compute-bound).
+        return hi_b;
+    }
+    for _ in 0..50 {
+        let mid = 0.5 * (lo + hi);
+        if f(mid) < 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    // Round to a multiple of 8 (token-bucket friendliness), clamped.
+    let x = (0.5 * (lo + hi)).round() as usize;
+    let x = (x / 8).max(1) * 8;
+    x.clamp(lo_b, hi_b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GModel;
+    use crate::util::proptest::{cases, forall};
+
+    fn g7() -> impl Fn(f64) -> f64 {
+        let g = GModel::vicuna7b();
+        move |x| g.eval(x)
+    }
+
+    #[test]
+    fn balances_upload_against_pipelined_cloud_time() {
+        // Busy cloud (μ = 512), short pipeline: the crossing is interior.
+        let x = optimal_chunk(8192.0, 7000.0, g7(), 512.0, 1, (16, 512));
+        assert!((16..512).contains(&x), "X = {x} should be interior");
+        // At the solution, the two sides are close.
+        let up = x as f64 * 8192.0 / 7000.0;
+        let cl = g7()(512.0) + g7()(512.0 + x as f64);
+        assert!((up - cl).abs() / cl < 0.3, "upload {up} vs cloud {cl} at X={x}");
+    }
+
+    #[test]
+    fn idle_cloud_fast_wire_regimes() {
+        // Idle cloud + paper-scale wire: upload-bound → smallest chunk
+        // (maximal overlap; Fig. 1d's "TTFT escalates" regime is avoided
+        // because upload, not compute, is the bottleneck).
+        assert_eq!(optimal_chunk(8192.0, 7000.0, g7(), 8.0, 4, (16, 512)), 16);
+    }
+
+    #[test]
+    fn faster_uplink_means_bigger_chunks() {
+        let slow = optimal_chunk(8192.0, 5000.0, g7(), 64.0, 4, (16, 512));
+        let fast = optimal_chunk(8192.0, 10000.0, g7(), 64.0, 4, (16, 512));
+        assert!(fast >= slow, "fast {fast} < slow {slow}");
+    }
+
+    #[test]
+    fn longer_pipeline_means_smaller_chunks() {
+        // More stages → cloud time per chunk shrinks → smaller chunks keep
+        // the overlap balanced.
+        let p1 = optimal_chunk(8192.0, 7000.0, g7(), 64.0, 1, (16, 512));
+        let p8 = optimal_chunk(8192.0, 7000.0, g7(), 64.0, 8, (16, 512));
+        assert!(p8 <= p1, "p8 {p8} > p1 {p1}");
+    }
+
+    #[test]
+    fn busy_cloud_means_bigger_chunks() {
+        // Higher μ → longer waits → upload can afford to be longer too.
+        let idle = optimal_chunk(8192.0, 7000.0, g7(), 8.0, 4, (16, 512));
+        let busy = optimal_chunk(8192.0, 7000.0, g7(), 1500.0, 4, (16, 512));
+        assert!(busy >= idle, "busy {busy} < idle {idle}");
+    }
+
+    #[test]
+    fn degenerate_links_clamp_to_bounds() {
+        // Hopeless uplink → min chunk.
+        assert_eq!(optimal_chunk(8192.0, 1.0, g7(), 64.0, 4, (16, 512)), 16);
+        // Infinite-ish uplink → max chunk.
+        assert_eq!(optimal_chunk(8192.0, 1e12, g7(), 64.0, 4, (16, 512)), 512);
+    }
+
+    #[test]
+    fn prop_result_in_bounds_and_multiple_of_8_or_clamped() {
+        forall(cases(200), |rng| {
+            let a = rng.range_f64(1000.0, 12000.0);
+            let bw = rng.range_f64(500.0, 20000.0);
+            let mu = rng.range_f64(0.0, 2048.0);
+            let p = rng.range_usize(1, 8);
+            let lo = rng.range_usize(8, 64);
+            let hi = lo + rng.range_usize(8, 512);
+            let x = optimal_chunk(a, bw, g7(), mu, p, (lo, hi));
+            if x < lo || x > hi {
+                return Err(format!("X={x} outside [{lo},{hi}]"));
+            }
+            Ok(())
+        });
+    }
+}

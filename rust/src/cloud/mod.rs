@@ -1,0 +1,19 @@
+//! The cloud coordinator — the paper's §3 system contribution.
+//!
+//! - `state_monitor` — Eqs. 1–2: moving-average workload μ^t and the
+//!   learned in-cloud delay predictor g^t(·);
+//! - `chunker` — Eq. 3: per-device optimal chunk size;
+//! - `pipeline` — pipeline-parallel stage availability (length P) and
+//!   per-GPU computation-delay accounting (Fig. 8);
+//! - `batcher` — continuous batching with prefill/decode mixing and a
+//!   token budget.
+
+pub mod batcher;
+pub mod chunker;
+pub mod pipeline;
+pub mod state_monitor;
+
+pub use batcher::{Batcher, Job, JobKind};
+pub use chunker::optimal_chunk;
+pub use pipeline::Pipeline;
+pub use state_monitor::StateMonitor;

@@ -1,0 +1,94 @@
+//! Pipeline-parallel cloud model (length P).
+//!
+//! The paper's server runs the middle submodel pipeline-parallel over P
+//! GPUs (§3.3, §4.5): a batch occupies each stage for g(B)/P, so a new
+//! batch can enter every g(B)/P while a single batch still takes the full
+//! g(B) to produce results ("computation delay per GPU is inversely
+//! proportional to the number of GPUs ... eliminates the need to wait for
+//! the previous inference to be finished across the entire model").
+//!
+//! We track stage-1 availability (admission) and per-GPU step delays
+//! (the Fig. 8 metric).
+
+use crate::sim::SimTime;
+
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    pub p: usize,
+    /// When stage 1 next becomes free (admission time for the next batch).
+    stage1_free: SimTime,
+    /// Number of steps admitted.
+    pub steps: usize,
+}
+
+impl Pipeline {
+    pub fn new(p: usize) -> Pipeline {
+        assert!(p >= 1);
+        Pipeline { p, stage1_free: SimTime::ZERO, steps: 0 }
+    }
+
+    pub fn stage1_free_at(&self) -> SimTime {
+        self.stage1_free
+    }
+
+    /// Whether a new batch can be admitted at `now`.
+    pub fn can_admit(&self, now: SimTime) -> bool {
+        now >= self.stage1_free
+    }
+
+    /// Admit a batch with full-model delay `g_ms` at `now` (must be
+    /// admissible).  Returns (completion_time, per_gpu_delay_ms).
+    pub fn admit(&mut self, now: SimTime, g_ms: f64) -> (SimTime, f64) {
+        assert!(self.can_admit(now), "admitting into a busy pipeline");
+        let per_stage = g_ms / self.p as f64;
+        self.stage1_free = now.add_ms(per_stage);
+        self.steps += 1;
+        (now.add_ms(g_ms), per_stage)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_stage_serializes_fully() {
+        let mut p = Pipeline::new(1);
+        let (done, per) = p.admit(SimTime::ZERO, 10.0);
+        assert_eq!(done, SimTime::from_ms(10.0));
+        assert_eq!(per, 10.0);
+        assert!(!p.can_admit(SimTime::from_ms(5.0)));
+        assert!(p.can_admit(SimTime::from_ms(10.0)));
+    }
+
+    #[test]
+    fn pipeline_overlaps_batches() {
+        let mut p = Pipeline::new(4);
+        let (done1, per) = p.admit(SimTime::ZERO, 12.0);
+        assert_eq!(per, 3.0);
+        assert_eq!(done1, SimTime::from_ms(12.0));
+        // A second batch can enter after just one stage time.
+        assert!(p.can_admit(SimTime::from_ms(3.0)));
+        let (done2, _) = p.admit(SimTime::from_ms(3.0), 12.0);
+        assert_eq!(done2, SimTime::from_ms(15.0));
+        assert_eq!(p.steps, 2);
+    }
+
+    #[test]
+    fn longer_pipeline_admits_sooner() {
+        let mut a = Pipeline::new(1);
+        let mut b = Pipeline::new(8);
+        a.admit(SimTime::ZERO, 16.0);
+        b.admit(SimTime::ZERO, 16.0);
+        assert_eq!(a.stage1_free_at(), SimTime::from_ms(16.0));
+        assert_eq!(b.stage1_free_at(), SimTime::from_ms(2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "busy pipeline")]
+    fn cannot_double_admit() {
+        let mut p = Pipeline::new(2);
+        p.admit(SimTime::ZERO, 10.0);
+        p.admit(SimTime::from_ms(1.0), 10.0);
+    }
+}

@@ -1,0 +1,237 @@
+//! State monitoring module (paper §3.2).
+//!
+//! The cloud tracks its own workload through two proxies it can observe
+//! directly: the batched token size μ̂^t and the in-cloud computation delay
+//! η̂^t of each step.  Robust estimates come from exponential moving
+//! averages with α (Eq. 1–2):
+//!
+//!   μ^t      = α μ^{t-1}      + (1-α) μ̂^t
+//!   g^t(μ^t) = α g^{t-1}(μ^t) + (1-α) η̂^t
+//!
+//! g^t(·) must predict the delay for *arbitrary* batch sizes (the chunk
+//! optimizer evaluates g(μ+X) for candidate X), so we learn a bucketized
+//! delay curve: observations update the bucket containing the observed
+//! batch size with an EWMA, and queries interpolate linearly between the
+//! nearest observed buckets (falling back to scaled neighbours before any
+//! observation lands there).
+//!
+//! Device-side state (γ_i^t drafting delay, β_i^t bandwidths) is collected
+//! the same way with per-device EWMAs.
+
+/// EWMA scalar (Eq. 1).
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Ewma {
+        Ewma { alpha, value: None }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => self.alpha * v + (1.0 - self.alpha) * x,
+        });
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Learned g^t(·): bucketized EWMA delay curve over batched token size.
+#[derive(Debug, Clone)]
+pub struct GPredictor {
+    alpha: f64,
+    /// Bucket upper edges (token sizes), log-spaced.
+    edges: Vec<f64>,
+    /// EWMA delay per bucket (None until observed).
+    delays: Vec<Option<f64>>,
+}
+
+impl GPredictor {
+    pub fn new(alpha: f64, max_tokens: usize) -> GPredictor {
+        // Log-spaced edges: 1, 2, 4, ..., >= max_tokens.
+        let mut edges = vec![1.0_f64];
+        while *edges.last().unwrap() < max_tokens as f64 {
+            edges.push(edges.last().unwrap() * 2.0);
+        }
+        let n = edges.len();
+        GPredictor { alpha, edges, delays: vec![None; n] }
+    }
+
+    fn bucket(&self, tokens: f64) -> usize {
+        self.edges
+            .iter()
+            .position(|&e| tokens <= e)
+            .unwrap_or(self.edges.len() - 1)
+    }
+
+    /// Record an observed (batch tokens, step delay ms) pair (Eq. 2).
+    pub fn observe(&mut self, tokens: f64, delay_ms: f64) {
+        let b = self.bucket(tokens);
+        self.delays[b] = Some(match self.delays[b] {
+            None => delay_ms,
+            Some(v) => self.alpha * v + (1.0 - self.alpha) * delay_ms,
+        });
+    }
+
+    /// Predict the step delay for a batch of `tokens`.
+    ///
+    /// Interpolates linearly (in token space) between the nearest observed
+    /// buckets below and above; extrapolates flat from the closest one at
+    /// the ends.  Returns None until any observation arrived.
+    pub fn predict(&self, tokens: f64) -> Option<f64> {
+        let any = self.delays.iter().any(|d| d.is_some());
+        if !any {
+            return None;
+        }
+        let b = self.bucket(tokens);
+        let below = (0..=b).rev().find(|&i| self.delays[i].is_some());
+        let above = (b..self.edges.len()).find(|&i| self.delays[i].is_some());
+        match (below, above) {
+            (Some(i), Some(j)) if i == j => self.delays[i],
+            (Some(i), Some(j)) => {
+                let (xi, xj) = (self.edges[i], self.edges[j]);
+                let (yi, yj) = (self.delays[i].unwrap(), self.delays[j].unwrap());
+                let t = ((tokens - xi) / (xj - xi)).clamp(0.0, 1.0);
+                Some(yi + t * (yj - yi))
+            }
+            (Some(i), None) => self.delays[i],
+            (None, Some(j)) => self.delays[j],
+            (None, None) => None,
+        }
+    }
+}
+
+/// Per-device collected state (γ, β_up, β_down — §3.2).
+#[derive(Debug, Clone)]
+pub struct DeviceState {
+    pub gamma_ms: Ewma,
+    pub up_bytes_per_ms: Ewma,
+    pub down_bytes_per_ms: Ewma,
+}
+
+impl DeviceState {
+    fn new(alpha: f64) -> DeviceState {
+        DeviceState {
+            gamma_ms: Ewma::new(alpha),
+            up_bytes_per_ms: Ewma::new(alpha),
+            down_bytes_per_ms: Ewma::new(alpha),
+        }
+    }
+}
+
+/// The full state-monitoring module.
+#[derive(Debug, Clone)]
+pub struct StateMonitor {
+    pub mu: Ewma,
+    pub g: GPredictor,
+    pub devices: Vec<DeviceState>,
+}
+
+impl StateMonitor {
+    pub fn new(alpha: f64, n_devices: usize, max_tokens: usize) -> StateMonitor {
+        StateMonitor {
+            mu: Ewma::new(alpha),
+            g: GPredictor::new(alpha, max_tokens),
+            devices: (0..n_devices).map(|_| DeviceState::new(alpha)).collect(),
+        }
+    }
+
+    /// Record one completed cloud step.
+    pub fn observe_step(&mut self, batch_tokens: usize, delay_ms: f64) {
+        self.mu.observe(batch_tokens as f64);
+        self.g.observe(batch_tokens as f64, delay_ms);
+    }
+
+    /// Record a device report.
+    pub fn observe_device(&mut self, dev: usize, gamma_ms: f64, up_bpms: f64, down_bpms: f64) {
+        let d = &mut self.devices[dev];
+        d.gamma_ms.observe(gamma_ms);
+        d.up_bytes_per_ms.observe(up_bpms);
+        d.down_bytes_per_ms.observe(down_bpms);
+    }
+
+    /// Current μ^t (0 before any step).
+    pub fn mu_t(&self) -> f64 {
+        self.mu.get().unwrap_or(0.0)
+    }
+
+    /// g^t(tokens) with a pessimistic cold-start fallback.
+    pub fn g_t(&self, tokens: f64, fallback: impl Fn(f64) -> f64) -> f64 {
+        self.g.predict(tokens).unwrap_or_else(|| fallback(tokens))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_matches_eq1() {
+        // Eq. 1 with α = 0.8: μ^t = 0.8 μ^{t-1} + 0.2 μ̂^t
+        let mut e = Ewma::new(0.8);
+        e.observe(100.0);
+        assert_eq!(e.get(), Some(100.0));
+        e.observe(200.0);
+        assert!((e.get().unwrap() - (0.8 * 100.0 + 0.2 * 200.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predictor_learns_linear_curve() {
+        let mut g = GPredictor::new(0.8, 2048);
+        // Feed a linear g(B) = 5 + 0.1 B at several sizes, repeatedly.
+        for _ in 0..50 {
+            for &b in &[1.0, 8.0, 64.0, 512.0, 2048.0] {
+                g.observe(b, 5.0 + 0.1 * b);
+            }
+        }
+        for &q in &[4.0, 32.0, 100.0, 1000.0] {
+            let p = g.predict(q).unwrap();
+            let truth = 5.0 + 0.1 * q;
+            assert!((p - truth).abs() / truth < 0.6, "g({q}) = {p}, truth {truth}");
+        }
+        // Monotone between observed anchors.
+        assert!(g.predict(512.0).unwrap() < g.predict(2048.0).unwrap());
+    }
+
+    #[test]
+    fn predictor_cold_start_and_fallback() {
+        let g = GPredictor::new(0.8, 1024);
+        assert_eq!(g.predict(10.0), None);
+        let m = StateMonitor::new(0.8, 2, 1024);
+        let v = m.g_t(100.0, |b| 6.0 + 0.01 * b);
+        assert!((v - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predictor_single_observation_extrapolates_flat() {
+        let mut g = GPredictor::new(0.8, 1024);
+        g.observe(64.0, 8.0);
+        assert_eq!(g.predict(1.0), Some(8.0));
+        assert_eq!(g.predict(1000.0), Some(8.0));
+    }
+
+    #[test]
+    fn monitor_tracks_devices() {
+        let mut m = StateMonitor::new(0.8, 3, 1024);
+        m.observe_device(1, 12.0, 7000.0, 12000.0);
+        m.observe_device(1, 8.0, 7000.0, 12000.0);
+        let g = m.devices[1].gamma_ms.get().unwrap();
+        assert!((g - (0.8 * 12.0 + 0.2 * 8.0)).abs() < 1e-12);
+        assert!(m.devices[0].gamma_ms.get().is_none());
+    }
+
+    #[test]
+    fn observe_step_updates_mu_and_g() {
+        let mut m = StateMonitor::new(0.8, 1, 2048);
+        m.observe_step(128, 10.0);
+        m.observe_step(256, 14.0);
+        assert!(m.mu_t() > 128.0 && m.mu_t() < 256.0);
+        assert!(m.g_t(128.0, |_| 0.0) > 0.0);
+    }
+}

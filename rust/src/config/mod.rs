@@ -1,0 +1,391 @@
+//! Configuration system: typed config structs, dataset/testbed presets
+//! matching the paper's §4.1 setup, and a TOML-subset file parser
+//! (`config::parser`) so experiments are reproducible from checked-in
+//! files instead of flag soup.
+
+pub mod parser;
+
+use crate::util::rng::lognormal_params_from_mean_std;
+
+/// Which dataset's workload statistics to emulate (paper Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    /// SpecBench — mixed tasks, mean prompt 351.2 tokens (Vicuna-7B).
+    SpecBench,
+    /// CNN/DailyMail — summarization, mean prompt 1036.6 tokens (Vicuna-13B).
+    CnnDm,
+}
+
+impl Dataset {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataset::SpecBench => "specbench",
+            Dataset::CnnDm => "cnndm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dataset> {
+        match s.to_ascii_lowercase().as_str() {
+            "specbench" => Some(Dataset::SpecBench),
+            "cnndm" | "cnn/dm" | "cnn_dm" => Some(Dataset::CnnDm),
+            _ => None,
+        }
+    }
+
+    /// (mean, std) of prompt token length — Table 3.
+    pub fn prompt_stats(self) -> (f64, f64) {
+        match self {
+            Dataset::SpecBench => (351.2, 397.3),
+            Dataset::CnnDm => (1036.6, 511.8),
+        }
+    }
+
+    /// Lognormal parameters fit to Table 3 (see workload::PromptSampler).
+    pub fn lognormal(self) -> (f64, f64) {
+        let (m, s) = self.prompt_stats();
+        lognormal_params_from_mean_std(m, s)
+    }
+
+    /// Hidden size of the *paper's* model for this dataset — used only by
+    /// the wire-size / delay model (DESIGN.md §3, dual-scale principle).
+    pub fn paper_hidden(self) -> usize {
+        match self {
+            Dataset::SpecBench => 4096, // Vicuna-7B
+            Dataset::CnnDm => 5120,     // Vicuna-13B
+        }
+    }
+
+    /// The paper's per-dataset fixed chunk size for U-Sarathi (§4.1).
+    pub fn sarathi_chunk(self) -> usize {
+        match self {
+            Dataset::SpecBench => 128,
+            Dataset::CnnDm => 256,
+        }
+    }
+}
+
+/// Cloud compute-delay model g(B): in-cloud computation delay (ms) of one
+/// inference step over a batch of B tokens, through the whole middle
+/// submodel (all pipeline stages).
+///
+/// Calibrated to the paper's preliminary experiments (Fig. 1):
+/// - small batches: g(32) ≈ 1.101 · g(1)  (Fig. 1c: "only 10.1% higher");
+/// - saturation: beyond ~`sat_tokens` the delay grows linearly
+///   (Fig. 1c: "for prompt length more than 512 ... almost linearly");
+/// - g(2048) ≈ 280 ms  (Fig. 1b: in-cloud computation 0.28 s at 2k).
+#[derive(Debug, Clone, Copy)]
+pub struct GModel {
+    /// Base step delay at B→0, ms.
+    pub base_ms: f64,
+    /// Sub-saturation slope, ms/token (GPU fills up, little extra delay).
+    pub sub_slope: f64,
+    /// Saturation knee, tokens.
+    pub sat_tokens: f64,
+    /// Post-saturation slope, ms/token.
+    pub sat_slope: f64,
+}
+
+impl GModel {
+    /// Vicuna-7B on A6000 (SpecBench experiments).
+    ///
+    /// base_ms back-solves the paper's decode round: U-shape TBT ≈ 44 ms
+    /// at P=4 (Fig. 6b) minus ~8 ms comm and device time leaves ≈ 25–35 ms
+    /// in-cloud per step; Fig. 8's per-GPU 8.4 ms × P=4 agrees.
+    pub fn vicuna7b() -> GModel {
+        GModel { base_ms: 32.0, sub_slope: 0.08, sat_tokens: 48.0, sat_slope: 0.135 }
+    }
+
+    /// Vicuna-13B on A6000 (CNN/DM experiments) — ≈1.85× the 7B cost.
+    pub fn vicuna13b() -> GModel {
+        GModel { base_ms: 58.0, sub_slope: 0.15, sat_tokens: 40.0, sat_slope: 0.25 }
+    }
+
+    pub fn for_dataset(d: Dataset) -> GModel {
+        match d {
+            Dataset::SpecBench => GModel::vicuna7b(),
+            Dataset::CnnDm => GModel::vicuna13b(),
+        }
+    }
+
+    /// g(B) in ms.
+    pub fn eval(&self, batch_tokens: f64) -> f64 {
+        let b = batch_tokens.max(0.0);
+        self.base_ms + self.sub_slope * b.min(self.sat_tokens)
+            + self.sat_slope * (b - self.sat_tokens).max(0.0)
+    }
+}
+
+/// Cloud configuration.
+#[derive(Debug, Clone)]
+pub struct CloudConfig {
+    /// Pipeline-parallel length P (number of GPUs in the pipeline).
+    pub pipeline_len: usize,
+    /// Compute model g(·).
+    pub g: GModel,
+    /// Token budget per inference step (continuous batching cap).
+    pub max_batch_tokens: usize,
+    /// Moving-average factor α of Eqs. 1–2 (paper: 0.8).
+    pub alpha: f64,
+}
+
+impl CloudConfig {
+    pub fn preset(dataset: Dataset, pipeline_len: usize) -> CloudConfig {
+        CloudConfig {
+            pipeline_len,
+            g: GModel::for_dataset(dataset),
+            max_batch_tokens: 2048,
+            alpha: 0.8,
+        }
+    }
+}
+
+/// Speculative-decoding configuration (paper §3.4–3.5).
+#[derive(Debug, Clone)]
+pub struct SpecDecConfig {
+    /// Drafting threshold η (Eq. 5; paper: 0.6).
+    pub eta: f64,
+    /// Hard cap on draft sequence length.
+    pub max_draft: usize,
+    /// Top-k candidate continuations for parallel drafting (§3.5).
+    pub top_k: usize,
+}
+
+impl Default for SpecDecConfig {
+    fn default() -> Self {
+        // The paper uses η = 0.6 for Vicuna-scale drafters; the tiny
+        // model's top-probabilities sit lower (PCFG branching), so the
+        // equivalent operating point — measured by sweeping η against
+        // accept length (EXPERIMENTS.md §Table 4) — is ≈ 0.35.
+        SpecDecConfig { eta: 0.35, max_draft: 8, top_k: 2 }
+    }
+}
+
+/// Which collaborative-inference framework to run (§4.1 baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Framework {
+    /// HAT (ours): U-shape + adapter SD + dynamic device-side chunking + PD.
+    Hat,
+    /// U-shape: plain U-shaped inference.
+    UShape,
+    /// U-Medusa: U-shape + Medusa heads on device.
+    UMedusa,
+    /// U-Sarathi: U-shape + server-side fixed-size chunking.
+    USarathi,
+}
+
+impl Framework {
+    pub fn name(self) -> &'static str {
+        match self {
+            Framework::Hat => "HAT",
+            Framework::UShape => "U-shape",
+            Framework::UMedusa => "U-Medusa",
+            Framework::USarathi => "U-Sarathi",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Framework> {
+        match s.to_ascii_lowercase().as_str() {
+            "hat" => Some(Framework::Hat),
+            "ushape" | "u-shape" => Some(Framework::UShape),
+            "umedusa" | "u-medusa" => Some(Framework::UMedusa),
+            "usarathi" | "u-sarathi" => Some(Framework::USarathi),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Framework; 4] {
+        [Framework::Hat, Framework::USarathi, Framework::UMedusa, Framework::UShape]
+    }
+}
+
+/// Ablation switches (Table 5): the three key strategies of HAT layered on
+/// top of U-shaped inference.
+#[derive(Debug, Clone, Copy)]
+pub struct Strategies {
+    /// Speculative decoding via the adapter draft model.
+    pub sd: bool,
+    /// Prompt chunking with dynamic chunk-size optimization (Eq. 3).
+    pub pc: bool,
+    /// Parallel drafting during verification (Eq. 6).
+    pub pd: bool,
+    /// Medusa-head drafting instead of the adapter (U-Medusa baseline).
+    pub medusa: bool,
+    /// Server-side fixed chunking (U-Sarathi baseline).
+    pub server_chunk: Option<usize>,
+}
+
+impl Strategies {
+    pub fn for_framework(fw: Framework, dataset: Dataset) -> Strategies {
+        match fw {
+            Framework::Hat => Strategies { sd: true, pc: true, pd: true, medusa: false, server_chunk: None },
+            Framework::UShape => Strategies { sd: false, pc: false, pd: false, medusa: false, server_chunk: None },
+            Framework::UMedusa => Strategies { sd: true, pc: false, pd: false, medusa: true, server_chunk: None },
+            Framework::USarathi => Strategies {
+                sd: false,
+                pc: false,
+                pd: false,
+                medusa: false,
+                server_chunk: Some(dataset.sarathi_chunk()),
+            },
+        }
+    }
+}
+
+/// Workload configuration.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub dataset: Dataset,
+    /// Aggregate request generation rate (requests/s, Poisson — §4.2).
+    pub rate: f64,
+    pub n_devices: usize,
+    /// Total requests to simulate.
+    pub n_requests: usize,
+    /// Max generation length (paper: 128).
+    pub max_new_tokens: usize,
+    /// Clamp prompt lengths into [min, max].
+    pub min_prompt: usize,
+    pub max_prompt: usize,
+}
+
+impl WorkloadConfig {
+    pub fn preset(dataset: Dataset) -> WorkloadConfig {
+        WorkloadConfig {
+            dataset,
+            rate: match dataset {
+                Dataset::SpecBench => 6.0,
+                Dataset::CnnDm => 3.0,
+            },
+            n_devices: 30,
+            n_requests: 300,
+            max_new_tokens: 128,
+            min_prompt: 16,
+            max_prompt: 3000,
+        }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    pub framework: Framework,
+    pub strategies: Strategies,
+    pub workload: WorkloadConfig,
+    pub cloud: CloudConfig,
+    pub specdec: SpecDecConfig,
+    /// Chunk-size bounds for the Eq. 3 optimizer.
+    pub min_chunk: usize,
+    pub max_chunk: usize,
+}
+
+impl ExperimentConfig {
+    pub fn preset(framework: Framework, dataset: Dataset) -> ExperimentConfig {
+        ExperimentConfig {
+            seed: 42,
+            framework,
+            strategies: Strategies::for_framework(framework, dataset),
+            workload: WorkloadConfig::preset(dataset),
+            cloud: CloudConfig::preset(dataset, 4),
+            specdec: SpecDecConfig::default(),
+            min_chunk: 16,
+            max_chunk: 512,
+        }
+    }
+
+    /// Sanity checks; returns a human-readable error list.
+    pub fn validate(&self) -> Result<(), Vec<String>> {
+        let mut errs = vec![];
+        if self.workload.rate <= 0.0 {
+            errs.push("workload.rate must be > 0".into());
+        }
+        if self.workload.n_devices == 0 {
+            errs.push("workload.n_devices must be > 0".into());
+        }
+        if self.cloud.pipeline_len == 0 {
+            errs.push("cloud.pipeline_len must be > 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.cloud.alpha) {
+            errs.push("cloud.alpha must be in [0,1]".into());
+        }
+        if !(0.0..=1.0).contains(&self.specdec.eta) {
+            errs.push("specdec.eta must be in [0,1]".into());
+        }
+        if self.specdec.max_draft == 0 {
+            errs.push("specdec.max_draft must be > 0".into());
+        }
+        if self.min_chunk == 0 || self.min_chunk > self.max_chunk {
+            errs.push("chunk bounds invalid".into());
+        }
+        if self.workload.min_prompt > self.workload.max_prompt {
+            errs.push("prompt bounds invalid".into());
+        }
+        if errs.is_empty() { Ok(()) } else { Err(errs) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn g_model_matches_fig1_calibration() {
+        let g = GModel::vicuna7b();
+        // Fig 1c: 32-token prompt only ~10.1% above 1-token.
+        let ratio = g.eval(32.0) / g.eval(1.0);
+        assert!((1.05..1.15).contains(&ratio), "ratio {ratio}");
+        // Fig 1b: in-cloud compute ≈ 0.28 s for 2k-token prompt.
+        let g2k = g.eval(2048.0);
+        assert!((250.0..310.0).contains(&g2k), "g(2048) = {g2k}");
+        // Monotone.
+        assert!(g.eval(100.0) < g.eval(200.0));
+    }
+
+    #[test]
+    fn presets_validate() {
+        for fw in Framework::all() {
+            for ds in [Dataset::SpecBench, Dataset::CnnDm] {
+                ExperimentConfig::preset(fw, ds).validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = ExperimentConfig::preset(Framework::Hat, Dataset::SpecBench);
+        c.workload.rate = 0.0;
+        c.cloud.pipeline_len = 0;
+        c.specdec.eta = 1.5;
+        let errs = c.validate().unwrap_err();
+        assert_eq!(errs.len(), 3, "{errs:?}");
+    }
+
+    #[test]
+    fn framework_strategies_match_baseline_definitions() {
+        let hat = Strategies::for_framework(Framework::Hat, Dataset::SpecBench);
+        assert!(hat.sd && hat.pc && hat.pd);
+        let us = Strategies::for_framework(Framework::USarathi, Dataset::CnnDm);
+        assert_eq!(us.server_chunk, Some(256));
+        assert!(!us.sd);
+        let um = Strategies::for_framework(Framework::UMedusa, Dataset::SpecBench);
+        assert!(um.medusa && !um.pc);
+    }
+
+    #[test]
+    fn dataset_parse_roundtrip() {
+        for d in [Dataset::SpecBench, Dataset::CnnDm] {
+            assert_eq!(Dataset::parse(d.name()), Some(d));
+        }
+        assert_eq!(Dataset::parse("nope"), None);
+        for f in Framework::all() {
+            assert_eq!(Framework::parse(f.name()), Some(f));
+        }
+    }
+
+    #[test]
+    fn cnndm_is_heavier_than_specbench() {
+        let g7 = GModel::vicuna7b();
+        let g13 = GModel::vicuna13b();
+        assert!(g13.eval(100.0) > g7.eval(100.0));
+        assert!(Dataset::CnnDm.paper_hidden() > Dataset::SpecBench.paper_hidden());
+    }
+}

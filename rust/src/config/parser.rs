@@ -1,0 +1,210 @@
+//! TOML-subset parser for experiment config files (the offline crate set
+//! has no toml/serde).  Supported grammar:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! key = 1.5          # number
+//! name = "hat"       # string
+//! flag = true        # bool
+//! ```
+//!
+//! Flat `section.key` lookup; `apply()` overlays a parsed file onto an
+//! `ExperimentConfig` preset so config files only need to list overrides.
+
+use std::collections::BTreeMap;
+
+use super::{Dataset, ExperimentConfig, Framework, Strategies};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scalar {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl Scalar {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Scalar::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Scalar::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Scalar::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error on line {line}: {msg}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse into `section.key -> Scalar` (keys before any section header have
+/// no prefix).
+pub fn parse(text: &str) -> Result<BTreeMap<String, Scalar>, ConfigError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(ConfigError { line: i + 1, msg: "empty section name".into() });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or(ConfigError {
+            line: i + 1,
+            msg: format!("expected key = value, got '{line}'"),
+        })?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let v = v.trim();
+        let scalar = if v == "true" {
+            Scalar::Bool(true)
+        } else if v == "false" {
+            Scalar::Bool(false)
+        } else if let Some(s) = v.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+            Scalar::Str(s.to_string())
+        } else {
+            Scalar::Num(v.parse::<f64>().map_err(|_| ConfigError {
+                line: i + 1,
+                msg: format!("bad value '{v}'"),
+            })?)
+        };
+        if out.insert(key.clone(), scalar).is_some() {
+            return Err(ConfigError { line: i + 1, msg: format!("duplicate key '{key}'") });
+        }
+    }
+    Ok(out)
+}
+
+/// Build an ExperimentConfig: start from the preset named by
+/// `framework`/`dataset` keys (defaults: hat/specbench), then overlay every
+/// recognized key.  Unknown keys are an error — silent typos poison
+/// experiments.
+pub fn build(map: &BTreeMap<String, Scalar>) -> Result<ExperimentConfig, String> {
+    let dataset = match map.get("dataset") {
+        Some(s) => Dataset::parse(s.as_str().ok_or("dataset must be a string")?)
+            .ok_or_else(|| format!("unknown dataset {:?}", s))?,
+        None => Dataset::SpecBench,
+    };
+    let framework = match map.get("framework") {
+        Some(s) => Framework::parse(s.as_str().ok_or("framework must be a string")?)
+            .ok_or_else(|| format!("unknown framework {:?}", s))?,
+        None => Framework::Hat,
+    };
+    let mut cfg = ExperimentConfig::preset(framework, dataset);
+
+    for (k, v) in map {
+        let num = || v.as_f64().ok_or_else(|| format!("{k} must be a number"));
+        let us = || v.as_usize().ok_or_else(|| format!("{k} must be a number"));
+        let b = || v.as_bool().ok_or_else(|| format!("{k} must be a bool"));
+        match k.as_str() {
+            "dataset" | "framework" => {}
+            "seed" => cfg.seed = us()? as u64,
+            "min_chunk" => cfg.min_chunk = us()?,
+            "max_chunk" => cfg.max_chunk = us()?,
+            "workload.rate" => cfg.workload.rate = num()?,
+            "workload.n_devices" => cfg.workload.n_devices = us()?,
+            "workload.n_requests" => cfg.workload.n_requests = us()?,
+            "workload.max_new_tokens" => cfg.workload.max_new_tokens = us()?,
+            "workload.min_prompt" => cfg.workload.min_prompt = us()?,
+            "workload.max_prompt" => cfg.workload.max_prompt = us()?,
+            "cloud.pipeline_len" => cfg.cloud.pipeline_len = us()?,
+            "cloud.max_batch_tokens" => cfg.cloud.max_batch_tokens = us()?,
+            "cloud.alpha" => cfg.cloud.alpha = num()?,
+            "specdec.eta" => cfg.specdec.eta = num()?,
+            "specdec.max_draft" => cfg.specdec.max_draft = us()?,
+            "specdec.top_k" => cfg.specdec.top_k = us()?,
+            "strategies.sd" => cfg.strategies.sd = b()?,
+            "strategies.pc" => cfg.strategies.pc = b()?,
+            "strategies.pd" => cfg.strategies.pd = b()?,
+            _ => return Err(format!("unknown config key '{k}'")),
+        }
+    }
+    // Re-derive baseline strategies if framework given but strategies not
+    // overridden is already handled by preset; explicit overrides win.
+    let _ = Strategies::for_framework(framework, dataset);
+    cfg.validate().map_err(|e| e.join("; "))?;
+    Ok(cfg)
+}
+
+pub fn load_file(path: &str) -> Result<ExperimentConfig, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let map = parse(&text).map_err(|e| e.to_string())?;
+    build(&map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_comments_types() {
+        let m = parse(
+            "# experiment\nseed = 7\n[workload]\nrate = 4.5  # req/s\n\n[strategies]\npd = false\nname = \"x\"\n",
+        )
+        .unwrap();
+        assert_eq!(m["seed"], Scalar::Num(7.0));
+        assert_eq!(m["workload.rate"], Scalar::Num(4.5));
+        assert_eq!(m["strategies.pd"], Scalar::Bool(false));
+        assert_eq!(m["strategies.name"], Scalar::Str("x".into()));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("key value\n").is_err());
+        assert!(parse("[]\n").is_err());
+        assert!(parse("a = 1\na = 2\n").is_err());
+        assert!(parse("a = one\n").is_err());
+    }
+
+    #[test]
+    fn builds_overlay_on_preset() {
+        let m = parse(
+            "framework = \"usarathi\"\ndataset = \"cnndm\"\n[workload]\nrate = 2.5\n[cloud]\npipeline_len = 8\n",
+        )
+        .unwrap();
+        let cfg = build(&m).unwrap();
+        assert_eq!(cfg.framework, Framework::USarathi);
+        assert_eq!(cfg.workload.dataset, Dataset::CnnDm);
+        assert_eq!(cfg.workload.rate, 2.5);
+        assert_eq!(cfg.cloud.pipeline_len, 8);
+        assert_eq!(cfg.strategies.server_chunk, Some(256));
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        let m = parse("workloda.rate = 4\n").unwrap();
+        assert!(build(&m).unwrap_err().contains("unknown config key"));
+    }
+
+    #[test]
+    fn invalid_values_fail_validation() {
+        let m = parse("[specdec]\neta = 2.0\n").unwrap();
+        assert!(build(&m).is_err());
+    }
+}

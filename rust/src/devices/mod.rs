@@ -1,0 +1,175 @@
+//! Device fleet model: the 30 heterogeneous NVIDIA Jetson kits.
+//!
+//! Paper §4.1: 20 Jetson AGX Xavier (32 TOPS) + 10 AGX Orin (200 TOPS);
+//! each device runs in one of several power modes, and "the AGX Orin with
+//! the highest performance mode can achieve inference 10× faster than the
+//! AGX Xavier with the lowest performance mode"; modes are re-randomized
+//! every 5 requests to emulate time-varying resources.
+//!
+//! The *numerics* of every device run through the same PJRT artifacts; the
+//! class/mode only scales the device-side compute-delay model (γ_i^t in
+//! Eq. 6 — the per-draft-token delay the state monitor collects).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceClass {
+    AgxXavier,
+    AgxOrin,
+}
+
+impl DeviceClass {
+    /// Paper fleet: 20 Xavier + 10 Orin out of 30.
+    pub fn for_device(device_id: usize, n_devices: usize) -> DeviceClass {
+        // Interleave so distance groups (net::DistanceGroup, assigned by
+        // contiguous id ranges) contain both classes.
+        if device_id % 3 == 2 {
+            DeviceClass::AgxOrin
+        } else {
+            DeviceClass::AgxXavier
+        }
+        .scaled(n_devices)
+    }
+
+    fn scaled(self, _n: usize) -> DeviceClass {
+        self
+    }
+
+    pub fn n_modes(self) -> usize {
+        match self {
+            DeviceClass::AgxXavier => 4,
+            DeviceClass::AgxOrin => 3,
+        }
+    }
+
+    /// Per-draft-token compute delay (ms) of the SLM at a given mode.
+    ///
+    /// Calibration (DESIGN.md §3): a Vicuna-68M-class drafter on AGX Orin
+    /// mode 0 runs ≈ 4 ms/token (Table 5 back-solves to a fleet-average
+    /// γ ≈ 10–15 ms); the paper's 10× spread puts Xavier at its lowest
+    /// mode at ≈ 37 ms/token.  Modes interpolate geometrically.
+    pub fn draft_ms_per_token(self, mode: usize) -> f64 {
+        let (fastest, steps): (f64, f64) = match self {
+            DeviceClass::AgxOrin => (3.0, 1.4),    // modes 0..2 → 3, 4.2, 5.9
+            DeviceClass::AgxXavier => (7.0, 1.55), // modes 0..3 → 7, 10.9, 16.8, 26.1
+        };
+        fastest * steps.powi(mode as i32)
+    }
+
+    /// Delay (ms) for the device-side *prefill* compute of a chunk of
+    /// `tokens` through the input submodel (+ adapter).  Parallel within
+    /// the chunk, so far cheaper per token than autoregressive drafting
+    /// (Fig. 1b: local computation ≈ 0.09 s for a 2k prompt on Orin).
+    pub fn prefill_ms(self, mode: usize, tokens: usize) -> f64 {
+        let per_tok = self.draft_ms_per_token(mode) * 0.011;
+        1.0 + per_tok * tokens as f64
+    }
+
+    /// Delay (ms) for the output-head pass over `tokens` verified tokens.
+    pub fn head_ms(self, mode: usize, tokens: usize) -> f64 {
+        0.3 + self.draft_ms_per_token(mode) * 0.02 * tokens as f64
+    }
+}
+
+/// Mutable per-device compute state: current power mode, re-randomized
+/// every `MODE_SWITCH_PERIOD` requests (paper: every 5 requests).
+pub const MODE_SWITCH_PERIOD: usize = 5;
+
+#[derive(Debug, Clone)]
+pub struct DeviceCompute {
+    pub class: DeviceClass,
+    pub mode: usize,
+    requests_since_switch: usize,
+    rng: Rng,
+}
+
+impl DeviceCompute {
+    pub fn new(device_id: usize, n_devices: usize, root: &Rng) -> Self {
+        let class = DeviceClass::for_device(device_id, n_devices);
+        let mut rng = root.substream(0x0DE0 + device_id as u64);
+        let mode = rng.below(class.n_modes());
+        DeviceCompute { class, mode, requests_since_switch: 0, rng }
+    }
+
+    /// Called when the device starts a new request; possibly switches mode.
+    pub fn on_request(&mut self) {
+        self.requests_since_switch += 1;
+        if self.requests_since_switch >= MODE_SWITCH_PERIOD {
+            self.requests_since_switch = 0;
+            self.mode = self.rng.below(self.class.n_modes());
+        }
+    }
+
+    /// γ_i^t — current drafting delay per token, ms.
+    pub fn gamma_ms(&self) -> f64 {
+        self.class.draft_ms_per_token(self.mode)
+    }
+
+    pub fn prefill_ms(&self, tokens: usize) -> f64 {
+        self.class.prefill_ms(self.mode, tokens)
+    }
+
+    pub fn head_ms(&self, tokens: usize) -> f64 {
+        self.class.head_ms(self.mode, tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_composition_roughly_paper() {
+        let n = 30;
+        let orin = (0..n).filter(|&i| DeviceClass::for_device(i, n) == DeviceClass::AgxOrin).count();
+        assert_eq!(orin, 10, "10 Orin of 30 (paper §4.1)");
+    }
+
+    #[test]
+    fn ten_x_spread_between_extremes() {
+        let fast = DeviceClass::AgxOrin.draft_ms_per_token(0);
+        let slow = DeviceClass::AgxXavier.draft_ms_per_token(3);
+        let ratio = slow / fast;
+        assert!((8.0..12.0).contains(&ratio), "spread {ratio} (paper: 10×)");
+    }
+
+    #[test]
+    fn modes_monotone_slower() {
+        for class in [DeviceClass::AgxOrin, DeviceClass::AgxXavier] {
+            let mut last = 0.0;
+            for m in 0..class.n_modes() {
+                let d = class.draft_ms_per_token(m);
+                assert!(d > last);
+                last = d;
+            }
+        }
+    }
+
+    #[test]
+    fn mode_switches_every_five_requests() {
+        let root = Rng::new(5);
+        let mut d = DeviceCompute::new(0, 30, &root);
+        let mut switches = 0;
+        let mut last_mode = d.mode;
+        for i in 1..=100 {
+            d.on_request();
+            if i % MODE_SWITCH_PERIOD == 0 {
+                // mode *may* resample to the same value; just count changes
+                if d.mode != last_mode {
+                    switches += 1;
+                }
+                last_mode = d.mode;
+            } else {
+                assert_eq!(d.mode, last_mode, "switched off-period at {i}");
+            }
+        }
+        assert!(switches > 0, "never switched in 100 requests");
+    }
+
+    #[test]
+    fn prefill_cheaper_than_drafting_per_token() {
+        let d = DeviceClass::AgxOrin;
+        let per_tok_prefill = d.prefill_ms(0, 128) / 128.0;
+        assert!(per_tok_prefill < d.draft_ms_per_token(0) / 4.0);
+    }
+}

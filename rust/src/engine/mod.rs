@@ -1,0 +1,188 @@
+//! Execution engines: typed wrappers over the artifact registry that
+//! implement the device-side and cloud-side primitives of the HAT protocol
+//! with real PJRT execution (bucket selection, padding, KV threading).
+//!
+//! These are *primitives*; the protocol logic (speculative decoding rounds,
+//! chunked prefill, parallel drafting) lives in `specdec` and `frameworks`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::model::{CloudStream, DeviceStream, TokenId};
+use crate::runtime::{
+    f32_literal_padded, pos_literal, to_f32_vec, tokens_literal, ArtifactRegistry,
+    Manifest, ModelSpec,
+};
+
+/// One shared engine: in the real deployment the input/head/draft artifacts
+/// run on the device and the middle artifact in the cloud; here one PJRT
+/// CPU client executes both sides (the *timing* separation is the
+/// simulator's job, the *data-flow* separation is enforced by the artifact
+/// boundaries — see `examples/privacy_audit.rs`).
+pub struct Engine {
+    pub reg: ArtifactRegistry,
+}
+
+/// Output of one draft-model step.
+pub struct DraftStepOut {
+    pub logits: Vec<f32>,
+    /// Shallow hidden state of the processed token — buffered by the
+    /// device and uploaded for verification (never recomputed).
+    pub shallow: Vec<f32>,
+}
+
+impl Engine {
+    pub fn load(dir: &Path) -> Result<Engine> {
+        Ok(Engine { reg: ArtifactRegistry::load(dir)? })
+    }
+
+    pub fn load_default() -> Result<Engine> {
+        Engine::load(&ArtifactRegistry::default_dir())
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        self.reg.model()
+    }
+
+    // -- device side -------------------------------------------------------
+
+    /// Input submodel over a token chunk: returns the shallow hidden states
+    /// [T, H] and updates the stream's shallow KV at its write position.
+    pub fn device_input(&self, st: &mut DeviceStream, tokens: &[TokenId]) -> Result<Vec<f32>> {
+        let t = tokens.len();
+        let b = self.reg.bucket_for(t)?;
+        let name = Manifest::artifact_name("device_input", b);
+        let pos = st.spos.write_pos();
+        let toks = tokens_literal(tokens, b)?;
+        let posl = pos_literal(pos);
+        let mut outs = self.reg.run(&name, &[&toks, &st.skv, &posl])?;
+        let hidden_full = to_f32_vec(&outs[0])?;
+        st.skv = outs.swap_remove(1);
+        st.spos.wrote(t);
+        Ok(hidden_full[..t * self.spec().hidden].to_vec())
+    }
+
+    /// Adapter prefill over shallow hidden states [T, H]: fills Λ's KV.
+    pub fn adapter_prefill(&self, st: &mut DeviceStream, hidden: &[f32]) -> Result<()> {
+        let h = self.spec().hidden;
+        let t = hidden.len() / h;
+        let b = self.reg.bucket_for(t)?;
+        let name = Manifest::artifact_name("adapter_prefill", b);
+        let pos = st.apos.write_pos();
+        let hid = f32_literal_padded(hidden, h, b)?;
+        let posl = pos_literal(pos);
+        let mut outs = self.reg.run(&name, &[&hid, &st.akv, &posl])?;
+        st.akv = outs.swap_remove(0);
+        st.apos.wrote(t);
+        Ok(())
+    }
+
+    /// One autoregressive draft-model step (w_S = H_L ∘ Λ ∘ w_L^m).
+    /// Advances both shallow and adapter KV write positions by 1.
+    pub fn draft_step(&self, st: &mut DeviceStream, token: TokenId) -> Result<DraftStepOut> {
+        debug_assert_eq!(st.spos.write_pos(), st.apos.write_pos());
+        let pos = st.spos.write_pos();
+        let toks = tokens_literal(&[token], 1)?;
+        let posl = pos_literal(pos);
+        let mut outs = self.reg.run("draft_step_1", &[&toks, &st.skv, &st.akv, &posl])?;
+        let logits = to_f32_vec(&outs[0])?;
+        let shallow = to_f32_vec(&outs[3])?;
+        st.akv = outs.swap_remove(2);
+        st.skv = outs.swap_remove(1);
+        st.spos.wrote(1);
+        st.apos.wrote(1);
+        Ok(DraftStepOut { logits, shallow })
+    }
+
+    /// Output submodel: deep hidden [T, H] → logits [T, V].
+    pub fn head(&self, deep: &[f32]) -> Result<Vec<f32>> {
+        let h = self.spec().hidden;
+        let t = deep.len() / h;
+        let b = self.reg.bucket_for(t)?;
+        let name = Manifest::artifact_name("device_head", b);
+        let d = f32_literal_padded(deep, h, b)?;
+        let outs = self.reg.run(&name, &[&d])?;
+        let logits_full = to_f32_vec(&outs[0])?;
+        Ok(logits_full[..t * self.spec().vocab].to_vec())
+    }
+
+    /// Medusa heads over one deep hidden state [H] → [n_medusa][V] logits.
+    pub fn medusa(&self, deep: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let h = self.spec().hidden;
+        let v = self.spec().vocab;
+        assert_eq!(deep.len(), h);
+        let d = f32_literal_padded(deep, h, 1)?;
+        let outs = self.reg.run("medusa_decode_1", &[&d])?;
+        let flat = to_f32_vec(&outs[0])?;
+        Ok((0..self.spec().n_medusa).map(|j| flat[j * v..(j + 1) * v].to_vec()).collect())
+    }
+
+    // -- cloud side ----------------------------------------------------------
+
+    /// Middle submodel over uploaded shallow hidden states [T, H] → deep
+    /// hidden states [T, H]; updates the stream's middle KV.
+    pub fn cloud_middle(&self, st: &mut CloudStream, hidden: &[f32]) -> Result<Vec<f32>> {
+        let h = self.spec().hidden;
+        let t = hidden.len() / h;
+        let b = self.reg.bucket_for(t)?;
+        let name = Manifest::artifact_name("cloud_middle", b);
+        let pos = st.pos.write_pos();
+        let hid = f32_literal_padded(hidden, h, b)?;
+        let posl = pos_literal(pos);
+        let mut outs = self.reg.run(&name, &[&hid, &st.mkv, &posl])?;
+        let deep_full = to_f32_vec(&outs[0])?;
+        st.mkv = outs.swap_remove(1);
+        st.pos.wrote(t);
+        Ok(deep_full[..t * h].to_vec())
+    }
+
+    // -- helpers -------------------------------------------------------------
+
+    /// Argmax over a logit row.
+    pub fn argmax(logits: &[f32]) -> TokenId {
+        let mut best = 0;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > logits[best] {
+                best = i;
+            }
+        }
+        best as TokenId
+    }
+
+    /// Softmax probability of the argmax token (the Eq. 5 stop signal).
+    pub fn top_prob(logits: &[f32]) -> f32 {
+        let m = logits.iter().cloned().fold(f32::MIN, f32::max);
+        let sum: f32 = logits.iter().map(|&x| (x - m).exp()).sum();
+        1.0 / sum
+    }
+
+    /// Top-k token ids by logit, descending.
+    pub fn top_k(logits: &[f32], k: usize) -> Vec<TokenId> {
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(k);
+        idx.into_iter().map(|i| i as TokenId).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_topk() {
+        let l = [0.1f32, 3.0, -1.0, 2.5];
+        assert_eq!(Engine::argmax(&l), 1);
+        assert_eq!(Engine::top_k(&l, 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn top_prob_matches_softmax() {
+        let l = [1.0f32, 2.0, 3.0];
+        let exp: f32 = (1.0f32.exp() + 2.0f32.exp() + 3.0f32.exp()) / 3.0f32.exp();
+        assert!((Engine::top_prob(&l) - 1.0 / exp).abs() < 1e-6);
+        // uniform logits → 1/n
+        assert!((Engine::top_prob(&[0.0; 4]) - 0.25).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,539 @@
+//! The fleet simulator: 30 heterogeneous devices + the pipeline-parallel
+//! cloud, in virtual time (DES), for HAT and all three baselines.
+//!
+//! Everything the paper *measures* happens here: request arrivals (Poisson),
+//! device-side chunked prefill with upload/compute overlap (Fig. 4), the
+//! continuous batcher with prefill/decode mixing, dynamic chunk sizing
+//! (Eq. 3), state monitoring (Eqs. 1–2), speculative-decoding rounds
+//! (shapes replayed from real-engine profiles), parallel drafting gated by
+//! Eq. 6, and the per-GPU delay accounting of Fig. 8.
+//!
+//! Framework differences are entirely in `Strategies` (Table 5):
+//!
+//! | framework  | sd | pc | pd | medusa | server_chunk |
+//! |------------|----|----|----|--------|--------------|
+//! | HAT        | ✓  | ✓  | ✓  |        |              |
+//! | U-shape    |    |    |    |        |              |
+//! | U-Medusa   | ✓  |    |    | ✓      |              |
+//! | U-Sarathi  |    |    |    |        | fixed        |
+
+use std::collections::HashMap;
+
+use crate::cloud::{optimal_chunk, Batcher, Job, JobKind, Pipeline, StateMonitor};
+use crate::config::ExperimentConfig;
+use crate::devices::DeviceCompute;
+use crate::metrics::{Recorder, RequestRecord};
+use crate::net::{hidden_state_bytes, DeviceLink, Dir};
+use crate::sim::{EventQueue, SimTime};
+use crate::specdec::chunk_sizes;
+use crate::specdec::profile::SdProfile;
+use crate::util::rng::Rng;
+use crate::workload::{generate_trace, Request};
+
+/// U-Medusa's tree-verification size (paper §4.1: "tree verification of
+/// size 8"): tokens per verification step in the cloud and on the wire.
+const MEDUSA_TREE: usize = 8;
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrive(usize),
+    /// Device finished computing prefill chunk `c` of request `r`.
+    ChunkComputed { r: usize, c: usize },
+    /// A payload finished its uplink transfer.
+    UploadArrived { r: usize, kind: JobKind, tokens: usize },
+    /// Try to admit a batch in the cloud.
+    CloudTryStep,
+    /// Cloud step `id` fully completed (all pipeline stages).
+    StepDone { id: u64 },
+    /// Result downlink reached the device.
+    DownloadArrived { r: usize },
+    /// Device finished drafting for the next round.
+    DraftDone { r: usize },
+    /// Device head done — tokens emitted.
+    Emit { r: usize, count: usize, finish: bool },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    Prefill,
+    Decode,
+    Done,
+}
+
+struct ReqSim {
+    req: Request,
+    phase: Phase,
+    chunks: Vec<usize>,
+    next_chunk_compute: usize,
+    chunks_processed: usize,
+    /// Rounds completed (indexes the SD profile).
+    round_idx: usize,
+    /// Current round's shape while in flight.
+    cur_emit: usize,
+    cur_verify: usize,
+    /// PD: the λ budget computed last round and whether the profile says
+    /// the candidate hit.
+    pd_lambda: usize,
+    pd_hit_pending: bool,
+    generated: usize,
+}
+
+pub struct FleetSim {
+    pub cfg: ExperimentConfig,
+    pub profile: SdProfile,
+}
+
+/// Convenience: build + run + summarize.
+pub fn run_experiment(cfg: &ExperimentConfig, profile: &SdProfile) -> Recorder {
+    FleetSim { cfg: cfg.clone(), profile: profile.clone() }.run()
+}
+
+impl FleetSim {
+    pub fn run(&self) -> Recorder {
+        let cfg = &self.cfg;
+        let n_dev = cfg.workload.n_devices;
+        let root = Rng::new(cfg.seed);
+        let mut g_noise = root.substream(0x6001);
+
+        // --- substrate state ------------------------------------------------
+        let mut links: Vec<DeviceLink> =
+            (0..n_dev).map(|i| DeviceLink::new(i, n_dev, &root)).collect();
+        let mut devs: Vec<DeviceCompute> =
+            (0..n_dev).map(|i| DeviceCompute::new(i, n_dev, &root)).collect();
+        let mut dev_compute_free = vec![SimTime::ZERO; n_dev];
+        let mut dev_up_free = vec![SimTime::ZERO; n_dev];
+        let mut dev_down_free = vec![SimTime::ZERO; n_dev];
+
+        let mut pipeline = Pipeline::new(cfg.cloud.pipeline_len);
+        let mut batcher = Batcher::new();
+        let mut monitor = StateMonitor::new(cfg.cloud.alpha, n_dev, cfg.cloud.max_batch_tokens * 4);
+        let mut step_batches: HashMap<u64, Vec<Job>> = HashMap::new();
+        let mut next_step_id = 0u64;
+        let mut try_scheduled = false;
+
+        let a_bytes = hidden_state_bytes(1, cfg.workload.dataset.paper_hidden());
+        let g_model = cfg.cloud.g;
+        let strat = cfg.strategies;
+        // Per-step prefill token budget (Sarathi iteration semantics):
+        // the fixed chunk for U-Sarathi, the Eq. 3 upper bound for HAT,
+        // effectively unlimited for the unchunked baselines (whole prompts
+        // are single jobs — their interference is the point, Fig. 8).
+        let prefill_budget = match strat.server_chunk {
+            Some(sc) => sc,
+            None if strat.pc => cfg.max_chunk,
+            None => cfg.cloud.max_batch_tokens.max(4096),
+        };
+
+        // --- workload + records ----------------------------------------------
+        let trace = generate_trace(&cfg.workload, cfg.seed);
+        let mut rec = Recorder::new();
+        let mut reqs: Vec<ReqSim> = Vec::with_capacity(trace.len());
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        for r in &trace {
+            rec.requests.push(RequestRecord::new(r.id, r.device, r.prompt_len, r.arrival));
+            reqs.push(ReqSim {
+                req: r.clone(),
+                phase: Phase::Prefill,
+                chunks: Vec::new(),
+                next_chunk_compute: 0,
+                chunks_processed: 0,
+                round_idx: 0,
+                cur_emit: 0,
+                cur_verify: 0,
+                pd_lambda: 0,
+                pd_hit_pending: false,
+                generated: 0,
+            });
+            q.schedule_at(r.arrival, Ev::Arrive(r.id));
+        }
+        let mut finished = 0usize;
+
+        // --- the event loop ---------------------------------------------------
+        while let Some((now, ev)) = q.pop() {
+            match ev {
+                Ev::Arrive(r) => {
+                    let dev = reqs[r].req.device;
+                    devs[dev].on_request();
+                    // Device reports its state (γ, β) to the monitor (§3.2).
+                    monitor.observe_device(
+                        dev,
+                        devs[dev].gamma_ms(),
+                        links[dev].up_bytes_per_ms(),
+                        links[dev].down_bytes_per_ms(),
+                    );
+                    // Decide chunking.
+                    let plen = reqs[r].req.prompt_len;
+                    let chunks = if strat.pc {
+                        let x = optimal_chunk(
+                            a_bytes as f64,
+                            monitor.devices[dev].up_bytes_per_ms.get().unwrap_or(7000.0),
+                            |b| monitor.g_t(b, |t| g_model.eval(t)),
+                            monitor.mu_t(),
+                            cfg.cloud.pipeline_len,
+                            (cfg.min_chunk, cfg.max_chunk),
+                        );
+                        rec.chunk_sizes.push(x);
+                        chunk_sizes(plen, x)
+                    } else {
+                        // Whole prompt in one device-side piece (server may
+                        // still chunk it — U-Sarathi).
+                        vec![plen]
+                    };
+                    reqs[r].chunks = chunks;
+                    // Start computing the first chunk on the device.
+                    self.schedule_chunk_compute(&mut q, &mut dev_compute_free, &devs, &mut reqs[r], r, now, 0);
+                }
+
+                Ev::ChunkComputed { r, c } => {
+                    let dev = reqs[r].req.device;
+                    // Pipeline: next chunk's compute starts immediately
+                    // (overlaps this chunk's upload — Fig. 4).
+                    if c + 1 < reqs[r].chunks.len() {
+                        self.schedule_chunk_compute(&mut q, &mut dev_compute_free, &devs, &mut reqs[r], r, now, c + 1);
+                    }
+    // Upload this chunk's hidden states.  Chunks after the
+                    // first ride the same stream (no per-message latency).
+                    let tokens = reqs[r].chunks[c];
+                    let bytes = tokens * a_bytes;
+                    let start = now.max(dev_up_free[dev]);
+                    let dur = if c == 0 {
+                        links[dev].transfer_ms(bytes, Dir::Up)
+                    } else {
+                        links[dev].streamed_ms(bytes, Dir::Up)
+                    };
+                    dev_up_free[dev] = start.add_ms(dur);
+                    q.schedule_at(
+                        dev_up_free[dev],
+                        Ev::UploadArrived { r, kind: JobKind::PrefillChunk, tokens },
+                    );
+                }
+
+                Ev::UploadArrived { r, kind, tokens } => {
+                    match (kind, strat.server_chunk) {
+                        (JobKind::PrefillChunk, Some(sc)) => {
+                            // U-Sarathi: the server splits the uploaded
+                            // prompt into fixed-size chunks processed over
+                            // multiple steps.
+                            for piece in chunk_sizes(tokens, sc) {
+                                batcher.push(Job { req: r, kind, tokens: piece, tag: 0 });
+                            }
+                            // chunks bookkeeping: treat server pieces as
+                            // the chunk count for completion tracking.
+                            reqs[r].chunks = chunk_sizes(tokens, sc);
+                        }
+                        _ => batcher.push(Job { req: r, kind, tokens, tag: 0 }),
+                    }
+                    if !try_scheduled {
+                        try_scheduled = true;
+                        q.schedule_at(now, Ev::CloudTryStep);
+                    }
+                }
+
+                Ev::CloudTryStep => {
+                    try_scheduled = false;
+                    while pipeline.can_admit(now) && !batcher.is_empty() {
+                        let batch = batcher.form_batch(prefill_budget);
+                        let tokens = Batcher::batch_tokens(&batch);
+                        let noise = 1.0 + 0.05 * g_noise.normal();
+                        let g_ms = g_model.eval(tokens as f64) * noise.clamp(0.7, 1.3);
+                        let (done, per_gpu) = pipeline.admit(now, g_ms);
+                        rec.gpu_step_delays.push(per_gpu);
+                        rec.batch_token_sizes.push(tokens);
+                        monitor.observe_step(tokens, g_ms);
+                        let id = next_step_id;
+                        next_step_id += 1;
+                        step_batches.insert(id, batch);
+                        q.schedule_at(done, Ev::StepDone { id });
+                    }
+                    if !batcher.is_empty() && !try_scheduled {
+                        try_scheduled = true;
+                        q.schedule_at(pipeline.stage1_free_at().max(now), Ev::CloudTryStep);
+                    }
+                }
+
+                Ev::StepDone { id } => {
+                    let batch = step_batches.remove(&id).expect("unknown step");
+                    for job in batch {
+                        let r = job.req;
+                        match job.kind {
+                            JobKind::PrefillChunk => {
+                                reqs[r].chunks_processed += 1;
+                                if reqs[r].chunks_processed == reqs[r].chunks.len() {
+                                    // Last chunk processed → send the result
+                                    // row back (first-token path).
+                                    self.schedule_download(
+                                        &mut q, &mut links, &mut dev_down_free, &reqs[r], r, now, 1,
+                                    );
+                                }
+                            }
+                            JobKind::Decode => {
+                                let k = reqs[r].cur_verify;
+                                self.schedule_download(
+                                    &mut q, &mut links, &mut dev_down_free, &reqs[r], r, now, k,
+                                );
+                            }
+                        }
+                    }
+                }
+
+                Ev::DownloadArrived { r } => {
+                    let dev = reqs[r].req.device;
+                    // Device head pass, then emission.
+                    let (count, verify) = match reqs[r].phase {
+                        Phase::Prefill => (1, 1),
+                        Phase::Decode => (reqs[r].cur_emit, reqs[r].cur_verify),
+                        Phase::Done => continue,
+                    };
+                    let start = now.max(dev_compute_free[dev]);
+                    let dur = devs[dev].head_ms(verify.max(1));
+                    dev_compute_free[dev] = start.add_ms(dur);
+                    let will_have = reqs[r].generated + count;
+                    let finish = will_have >= reqs[r].req.max_new_tokens;
+                    q.schedule_at(dev_compute_free[dev], Ev::Emit { r, count, finish });
+                }
+
+                Ev::Emit { r, count, finish } => {
+                    let rr = &mut rec.requests[r];
+                    for _ in 0..count {
+                        if rr.first_token.is_none() {
+                            rr.first_token = Some(now);
+                        }
+                        rr.token_times.push(now);
+                    }
+                    reqs[r].generated += count;
+                    if reqs[r].phase == Phase::Decode {
+                        rr.sd_rounds += 1;
+                        rr.sd_accepted += count;
+                    }
+                    if finish {
+                        rr.finished = Some(now);
+                        reqs[r].phase = Phase::Done;
+                        finished += 1;
+                        continue;
+                    }
+                    reqs[r].phase = Phase::Decode;
+                    // Start the next decode round: drafting on the device.
+                    self.start_round(
+                        &mut q, &mut dev_compute_free, &devs, &monitor, &mut rec, &mut reqs[r], r,
+                        now, a_bytes,
+                    );
+                }
+
+                Ev::DraftDone { r } => {
+                    // Upload the draft hidden states for verification.
+                    let dev = reqs[r].req.device;
+                    let k = reqs[r].cur_verify;
+                    let bytes = k * a_bytes;
+                    let start = now.max(dev_up_free[dev]);
+                    let dur = links[dev].transfer_ms(bytes, Dir::Up);
+                    dev_up_free[dev] = start.add_ms(dur);
+                    q.schedule_at(
+                        dev_up_free[dev],
+                        Ev::UploadArrived { r, kind: JobKind::Decode, tokens: reqs[r].cur_verify },
+                    );
+                }
+            }
+            if finished == reqs.len() {
+                break;
+            }
+        }
+        rec
+    }
+
+    fn schedule_chunk_compute(
+        &self,
+        q: &mut EventQueue<Ev>,
+        compute_free: &mut [SimTime],
+        devs: &[DeviceCompute],
+        rs: &mut ReqSim,
+        r: usize,
+        now: SimTime,
+        c: usize,
+    ) {
+        let dev = rs.req.device;
+        let start = now.max(compute_free[dev]);
+        let dur = devs[dev].prefill_ms(rs.chunks[c]);
+        compute_free[dev] = start.add_ms(dur);
+        rs.next_chunk_compute = c + 1;
+        q.schedule_at(compute_free[dev], Ev::ChunkComputed { r, c });
+    }
+
+    fn schedule_download(
+        &self,
+        q: &mut EventQueue<Ev>,
+        links: &mut [DeviceLink],
+        down_free: &mut [SimTime],
+        rs: &ReqSim,
+        r: usize,
+        now: SimTime,
+        tokens: usize,
+    ) {
+        let dev = rs.req.device;
+        let a = hidden_state_bytes(1, self.cfg.workload.dataset.paper_hidden());
+        let start = now.max(down_free[dev]);
+        let dur = links[dev].transfer_ms(tokens.max(1) * a, Dir::Down);
+        down_free[dev] = start.add_ms(dur);
+        q.schedule_at(down_free[dev], Ev::DownloadArrived { r });
+    }
+
+    /// Begin one decode round for request `r` at `now`: decide the round
+    /// shape from the profile, account drafting time (zero on a parallel-
+    /// drafting hit gated by Eq. 6), then hand over to the uplink.
+    #[allow(clippy::too_many_arguments)]
+    fn start_round(
+        &self,
+        q: &mut EventQueue<Ev>,
+        compute_free: &mut [SimTime],
+        devs: &[DeviceCompute],
+        monitor: &StateMonitor,
+        rec: &mut Recorder,
+        rs: &mut ReqSim,
+        r: usize,
+        now: SimTime,
+        a_bytes: usize,
+    ) {
+        let cfg = &self.cfg;
+        let strat = cfg.strategies;
+        let dev = rs.req.device;
+        let shape = if strat.medusa {
+            self.profile.round(true, cfg.seed ^ r as u64, rs.round_idx)
+        } else if strat.sd {
+            self.profile.round(false, cfg.seed ^ r as u64, rs.round_idx)
+        } else {
+            // Plain U-shape / U-Sarathi: one token per interaction.
+            crate::specdec::profile::RoundShape {
+                draft_steps: 0,
+                verify_tokens: 1,
+                emitted: 1,
+                pd_hit: false,
+            }
+        };
+        rs.round_idx += 1;
+        rs.cur_emit = shape.emitted.max(1);
+        rs.cur_verify = if strat.medusa { MEDUSA_TREE } else { shape.verify_tokens.max(1) };
+
+        // Drafting time.
+        let gamma = devs[dev].gamma_ms();
+        let draft_ms = if strat.medusa {
+            // Medusa heads + shallow pass over the draft tokens: one cheap
+            // device step (the heads are a single matmul each).
+            devs[dev].prefill_ms(self.profile.medusa_verify_len())
+        } else if strat.sd {
+            let hit = strat.pd && rs.pd_hit_pending && rs.pd_lambda >= shape.draft_steps;
+            if hit {
+                rec.requests[r].pd_hits += 1;
+                0.0
+            } else {
+                gamma * shape.draft_steps as f64
+            }
+        } else {
+            // U-shape/U-Sarathi: the device still runs the input submodel
+            // over the single token.
+            devs[dev].prefill_ms(1)
+        };
+
+        // Parallel drafting budget for the *next* round (Eq. 6):
+        //   λ_i = ⌊( μ_i·A/β_up + g^t(μ^t) + μ_i·A/β_down ) / γ_i⌋
+        if strat.pd && strat.sd && !strat.medusa {
+            let k = rs.cur_verify as f64;
+            let up = monitor.devices[dev].up_bytes_per_ms.get().unwrap_or(7000.0);
+            let down = monitor.devices[dev].down_bytes_per_ms.get().unwrap_or(12000.0);
+            let g_mu = monitor.g_t(monitor.mu_t(), |t| self.cfg.cloud.g.eval(t));
+            let lambda = ((k * a_bytes as f64 / up + g_mu + k * a_bytes as f64 / down)
+                / gamma.max(1e-6))
+            .floor() as usize;
+            rs.pd_lambda = lambda.min(cfg.specdec.max_draft);
+            rs.pd_hit_pending = shape.pd_hit;
+        }
+
+        let start = now.max(compute_free[dev]);
+        compute_free[dev] = start.add_ms(draft_ms);
+        q.schedule_at(compute_free[dev], Ev::DraftDone { r });
+    }
+}
+
+impl SdProfile {
+    /// Device-side verify length for a Medusa round (tokens processed
+    /// through the input submodel): n_medusa.
+    pub fn medusa_verify_len(&self) -> usize {
+        self.medusa.first().map(|r| r.verify_tokens).unwrap_or(4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Dataset, ExperimentConfig, Framework};
+
+    fn small_cfg(fw: Framework) -> ExperimentConfig {
+        // The paper's operating point (Fig. 6): 30 devices, 6 req/s, P=4,
+        // 128 generated tokens — trimmed to 100 requests for test speed.
+        let mut c = ExperimentConfig::preset(fw, Dataset::SpecBench);
+        c.workload.n_requests = 100;
+        c
+    }
+
+    fn run(fw: Framework) -> Recorder {
+        run_experiment(&small_cfg(fw), &SdProfile::default_table())
+    }
+
+    #[test]
+    fn all_frameworks_finish_all_requests() {
+        for fw in Framework::all() {
+            let rec = run(fw);
+            assert_eq!(rec.finished_requests().count(), 100, "{}", fw.name());
+            for r in rec.finished_requests() {
+                assert!(r.tokens_generated() >= 128, "{} generated {}", fw.name(), r.tokens_generated());
+                assert!(r.ttft_ms().unwrap() > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run(Framework::Hat).summary();
+        let b = run(Framework::Hat).summary();
+        assert_eq!(a.ttft_mean_ms, b.ttft_mean_ms);
+        assert_eq!(a.tbt_mean_ms, b.tbt_mean_ms);
+    }
+
+    #[test]
+    fn hat_beats_ushape_on_both_metrics() {
+        // The paper's headline (Figs. 6–7): HAT lowest TTFT and TBT.
+        let hat = run(Framework::Hat).summary();
+        let ushape = run(Framework::UShape).summary();
+        assert!(
+            hat.ttft_mean_ms < ushape.ttft_mean_ms,
+            "TTFT: HAT {} vs U-shape {}",
+            hat.ttft_mean_ms,
+            ushape.ttft_mean_ms
+        );
+        assert!(
+            hat.tbt_mean_ms < ushape.tbt_mean_ms,
+            "TBT: HAT {} vs U-shape {}",
+            hat.tbt_mean_ms,
+            ushape.tbt_mean_ms
+        );
+    }
+
+    #[test]
+    fn chunking_reduces_gpu_delay_variance() {
+        // Fig. 8: HAT/U-Sarathi keep per-GPU delay stable; U-shape/U-Medusa
+        // are volatile under long prompts.
+        let hat = run(Framework::Hat).summary();
+        let ushape = run(Framework::UShape).summary();
+        assert!(
+            hat.gpu_delay_std_ms < ushape.gpu_delay_std_ms,
+            "std: HAT {} vs U-shape {}",
+            hat.gpu_delay_std_ms,
+            ushape.gpu_delay_std_ms
+        );
+    }
+
+    #[test]
+    fn hat_records_chunk_sizes_and_pd_hits() {
+        let rec = run(Framework::Hat);
+        assert!(!rec.chunk_sizes.is_empty(), "Eq. 3 optimizer never ran");
+        assert!(rec.accept_length() > 1.0, "accept length {}", rec.accept_length());
+    }
+}

@@ -1,0 +1,7 @@
+//! The four device-cloud collaborative inference frameworks (§4.1):
+//! HAT and the three baselines, all driven by one fleet simulator
+//! parameterized by the ablation switches of Table 5.
+
+pub mod fleet;
+
+pub use fleet::{run_experiment, FleetSim};

@@ -1,0 +1,40 @@
+//! # HAT — Hat-shaped device-cloud collaborative LLM inference
+//!
+//! Reproduction of *"A Novel Hat-Shaped Device-Cloud Collaborative Inference
+//! Framework for Large Language Models"* (Xie et al., 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the paper's coordination contribution: the cloud
+//!   scheduler (continuous batching, prefill/decode mixing, pipeline-parallel
+//!   model), state monitoring (Eqs. 1–2), dynamic prompt chunking (Eq. 3),
+//!   speculative-decoding orchestration (Eq. 5) and parallel drafting
+//!   (Eq. 6), plus the simulated testbed (30 heterogeneous Jetson devices,
+//!   WiFi links, 8-GPU cloud) and the three baselines (U-shape, U-Medusa,
+//!   U-Sarathi).
+//! - **L2/L1 (python/, build-time only)** — the split transformer, adapter
+//!   Λ, Medusa heads, and the Pallas flash-attention/SwiGLU kernels, AOT
+//!   lowered to HLO text artifacts.
+//! - **runtime** — loads the artifacts through the PJRT C API (`xla` crate)
+//!   and executes them on the request path with device-resident weights.
+//!
+//! See DESIGN.md for the substitution table (physical testbed → simulators)
+//! and the per-experiment index, and EXPERIMENTS.md for results.
+
+pub mod cli;
+pub mod cloud;
+pub mod config;
+pub mod devices;
+pub mod engine;
+pub mod frameworks;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod specdec;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

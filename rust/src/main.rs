@@ -1,0 +1,4 @@
+//! CLI entrypoint — see `hat::cli`.
+fn main() {
+    std::process::exit(hat::cli::main());
+}

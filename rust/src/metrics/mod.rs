@@ -1,0 +1,302 @@
+//! Metrics: per-request TTFT/TBT recording, per-GPU computation-delay
+//! tracking (Fig. 8), SLA compliance CDFs (Figs. 9–10), and paper-style
+//! report tables.
+
+use crate::sim::SimTime;
+use crate::util::stats::{cdf_at, quantile, Summary, Welford};
+
+/// Lifecycle record of one request.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: usize,
+    pub device: usize,
+    pub prompt_len: usize,
+    pub arrived: SimTime,
+    pub first_token: Option<SimTime>,
+    /// Virtual times of each generated token (including the first).
+    pub token_times: Vec<SimTime>,
+    pub finished: Option<SimTime>,
+    /// Speculative-decoding accounting.
+    pub sd_rounds: usize,
+    pub sd_accepted: usize,
+    pub pd_hits: usize,
+}
+
+impl RequestRecord {
+    pub fn new(id: usize, device: usize, prompt_len: usize, arrived: SimTime) -> Self {
+        RequestRecord {
+            id,
+            device,
+            prompt_len,
+            arrived,
+            first_token: None,
+            token_times: Vec::new(),
+            finished: None,
+            sd_rounds: 0,
+            sd_accepted: 0,
+            pd_hits: 0,
+        }
+    }
+
+    /// Time-to-first-token, ms.
+    pub fn ttft_ms(&self) -> Option<f64> {
+        self.first_token.map(|t| (t - self.arrived).as_ms())
+    }
+
+    /// Mean time-between-tokens, ms (intervals between consecutive tokens
+    /// in the decode phase).
+    pub fn mean_tbt_ms(&self) -> Option<f64> {
+        if self.token_times.len() < 2 {
+            return None;
+        }
+        let total = (*self.token_times.last().unwrap() - self.token_times[0]).as_ms();
+        Some(total / (self.token_times.len() - 1) as f64)
+    }
+
+    /// Per-interval TBTs, ms.
+    pub fn tbt_intervals_ms(&self) -> Vec<f64> {
+        self.token_times.windows(2).map(|w| (w[1] - w[0]).as_ms()).collect()
+    }
+
+    pub fn tokens_generated(&self) -> usize {
+        self.token_times.len()
+    }
+}
+
+/// Collects everything one experiment run produces.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub requests: Vec<RequestRecord>,
+    /// Per-GPU (pipeline-stage) computation delay per inference step, ms —
+    /// the quantity of Fig. 8.
+    pub gpu_step_delays: Vec<f64>,
+    /// Batched token size per step (state-monitoring μ̂ trace).
+    pub batch_token_sizes: Vec<usize>,
+    /// Chunk sizes chosen by the Eq. 3 optimizer (HAT only).
+    pub chunk_sizes: Vec<usize>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn finished_requests(&self) -> impl Iterator<Item = &RequestRecord> {
+        self.requests.iter().filter(|r| r.finished.is_some())
+    }
+
+    pub fn ttfts_ms(&self) -> Vec<f64> {
+        self.finished_requests().filter_map(|r| r.ttft_ms()).collect()
+    }
+
+    pub fn mean_tbts_ms(&self) -> Vec<f64> {
+        self.finished_requests().filter_map(|r| r.mean_tbt_ms()).collect()
+    }
+
+    pub fn all_tbt_intervals_ms(&self) -> Vec<f64> {
+        self.finished_requests().flat_map(|r| r.tbt_intervals_ms()).collect()
+    }
+
+    /// Mean accept length across SD rounds (tokens produced per
+    /// verification round, Table 4).
+    pub fn accept_length(&self) -> f64 {
+        let rounds: usize = self.requests.iter().map(|r| r.sd_rounds).sum();
+        let acc: usize = self.requests.iter().map(|r| r.sd_accepted).sum();
+        if rounds == 0 { 0.0 } else { acc as f64 / rounds as f64 }
+    }
+
+    /// Fraction of verification rounds whose parallel-drafting candidate hit.
+    pub fn pd_hit_rate(&self) -> f64 {
+        let rounds: usize = self.requests.iter().map(|r| r.sd_rounds).sum();
+        let hits: usize = self.requests.iter().map(|r| r.pd_hits).sum();
+        if rounds == 0 { 0.0 } else { hits as f64 / rounds as f64 }
+    }
+
+    /// Per-GPU computation-delay mean/std (Fig. 8).
+    pub fn gpu_delay_stats(&self) -> (f64, f64) {
+        let mut w = Welford::new();
+        for &d in &self.gpu_step_delays {
+            w.push(d);
+        }
+        (w.mean(), w.std())
+    }
+
+    /// Prefill-SLA sample: delay per 128 prompt tokens, one value per
+    /// request (Figs. 9–10: "the prefill SLA is defined as the delay for
+    /// processing per 128 prompt tokens").
+    pub fn prefill_sla_sample(&self) -> Vec<f64> {
+        self.finished_requests()
+            .filter_map(|r| {
+                let ttft = r.ttft_ms()?;
+                let units = (r.prompt_len as f64 / 128.0).max(1.0);
+                Some(ttft / units)
+            })
+            .collect()
+    }
+
+    /// Decode-SLA sample: delay per 10 generated tokens, sliding windows.
+    pub fn decode_sla_sample(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for r in self.finished_requests() {
+            let ts = &r.token_times;
+            if ts.len() < 11 {
+                continue;
+            }
+            for w in ts.windows(11) {
+                out.push((w[10] - w[0]).as_ms());
+            }
+        }
+        out
+    }
+
+    /// Compliance rate (fraction ≤ sla_ms) for a sample.
+    pub fn compliance(sample: &[f64], sla_ms: f64) -> f64 {
+        if sample.is_empty() {
+            return 0.0;
+        }
+        cdf_at(sample, &[sla_ms])[0]
+    }
+
+    /// "q of requests meet an SLA of X ms": the q-quantile of the sample.
+    pub fn sla_at_quantile(sample: &[f64], q: f64) -> f64 {
+        quantile(sample, q)
+    }
+
+    /// One-line summary for report tables.
+    pub fn summary(&self) -> RunSummary {
+        let ttft = Summary::of(&self.ttfts_ms());
+        let tbt = Summary::of(&self.mean_tbts_ms());
+        let (gmean, gstd) = self.gpu_delay_stats();
+        RunSummary {
+            n_finished: self.finished_requests().count(),
+            ttft_mean_ms: ttft.mean,
+            ttft_p90_ms: ttft.p90,
+            tbt_mean_ms: tbt.mean,
+            tbt_p90_ms: tbt.p90,
+            gpu_delay_mean_ms: gmean,
+            gpu_delay_std_ms: gstd,
+            accept_length: self.accept_length(),
+            pd_hit_rate: self.pd_hit_rate(),
+        }
+    }
+}
+
+/// Flat result row for the bench harnesses.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub n_finished: usize,
+    pub ttft_mean_ms: f64,
+    pub ttft_p90_ms: f64,
+    pub tbt_mean_ms: f64,
+    pub tbt_p90_ms: f64,
+    pub gpu_delay_mean_ms: f64,
+    pub gpu_delay_std_ms: f64,
+    pub accept_length: f64,
+    pub pd_hit_rate: f64,
+}
+
+impl RunSummary {
+    pub fn header() -> String {
+        format!(
+            "{:<12} {:>10} {:>10} {:>9} {:>9} {:>10} {:>9} {:>7}",
+            "run", "TTFT(ms)", "p90", "TBT(ms)", "p90", "gpu(ms)", "±std", "accept"
+        )
+    }
+
+    pub fn row(&self, name: &str) -> String {
+        format!(
+            "{:<12} {:>10.1} {:>10.1} {:>9.1} {:>9.1} {:>10.2} {:>9.2} {:>7.2}",
+            name,
+            self.ttft_mean_ms,
+            self.ttft_p90_ms,
+            self.tbt_mean_ms,
+            self.tbt_p90_ms,
+            self.gpu_delay_mean_ms,
+            self.gpu_delay_std_ms,
+            self.accept_length
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec_with_tokens(times_ms: &[f64], arrived_ms: f64) -> RequestRecord {
+        let mut r = RequestRecord::new(0, 0, 128, SimTime::from_ms(arrived_ms));
+        for &t in times_ms {
+            let st = SimTime::from_ms(t);
+            if r.first_token.is_none() {
+                r.first_token = Some(st);
+            }
+            r.token_times.push(st);
+        }
+        r.finished = r.token_times.last().copied();
+        r
+    }
+
+    #[test]
+    fn ttft_and_tbt() {
+        let r = rec_with_tokens(&[100.0, 120.0, 150.0, 170.0], 40.0);
+        assert!((r.ttft_ms().unwrap() - 60.0).abs() < 1e-9);
+        // total 70ms over 3 intervals
+        assert!((r.mean_tbt_ms().unwrap() - 70.0 / 3.0).abs() < 1e-9);
+        assert_eq!(r.tbt_intervals_ms(), vec![20.0, 30.0, 20.0]);
+    }
+
+    #[test]
+    fn unfinished_requests_excluded() {
+        let mut rec = Recorder::new();
+        rec.requests.push(rec_with_tokens(&[100.0, 110.0], 0.0));
+        let mut unfinished = rec_with_tokens(&[200.0], 0.0);
+        unfinished.finished = None;
+        rec.requests.push(unfinished);
+        assert_eq!(rec.finished_requests().count(), 1);
+        assert_eq!(rec.ttfts_ms(), vec![100.0]);
+    }
+
+    #[test]
+    fn accept_length_weighted_over_rounds() {
+        let mut rec = Recorder::new();
+        let mut a = rec_with_tokens(&[1.0], 0.0);
+        a.sd_rounds = 10;
+        a.sd_accepted = 20;
+        let mut b = rec_with_tokens(&[1.0], 0.0);
+        b.sd_rounds = 5;
+        b.sd_accepted = 5;
+        rec.requests.push(a);
+        rec.requests.push(b);
+        assert!((rec.accept_length() - 25.0 / 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefill_sla_normalizes_by_prompt_units() {
+        let mut rec = Recorder::new();
+        let mut r = rec_with_tokens(&[512.0], 0.0);
+        r.prompt_len = 256; // 2 units of 128
+        rec.requests.push(r);
+        assert_eq!(rec.prefill_sla_sample(), vec![256.0]);
+    }
+
+    #[test]
+    fn decode_sla_windows_of_ten() {
+        let times: Vec<f64> = (0..=12).map(|i| i as f64 * 10.0).collect();
+        let mut rec = Recorder::new();
+        rec.requests.push(rec_with_tokens(&times, 0.0));
+        let s = rec.decode_sla_sample();
+        // 13 tokens -> 3 sliding windows of 11 points, each spanning 100ms
+        assert_eq!(s.len(), 3);
+        assert!(s.iter().all(|&x| (x - 100.0).abs() < 1e-9));
+        assert!((Recorder::compliance(&s, 100.0) - 1.0).abs() < 1e-12);
+        assert_eq!(Recorder::compliance(&s, 99.0), 0.0);
+    }
+
+    #[test]
+    fn gpu_delay_stats_fig8_shape() {
+        let mut rec = Recorder::new();
+        rec.gpu_step_delays = vec![6.0, 7.0, 8.0, 7.0, 6.0];
+        let (m, s) = rec.gpu_delay_stats();
+        assert!((m - 6.8).abs() < 1e-9);
+        assert!(s > 0.0 && s < 1.0);
+    }
+}

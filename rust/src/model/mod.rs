@@ -1,0 +1,174 @@
+//! Per-request model state: token streams and KV-cache handles.
+//!
+//! KV caches are whole-array literals threaded through PJRT calls; masking
+//! is by absolute position, so *rolling back rejected draft tokens is just
+//! rewinding a position counter* (the stale cache rows are overwritten by
+//! the next contiguous write and can never be attended before that).
+//! `KvPos` encodes that state machine and its invariants.
+
+use anyhow::Result;
+
+use crate::runtime::{zeros_literal, ModelSpec};
+
+/// Token id in the tiny model's vocab.
+pub type TokenId = u32;
+
+/// Position-counter state machine for one KV cache.
+///
+/// Invariants (property-tested):
+/// - `committed <= written`: you can only commit what was written;
+/// - rollback sets `written = committed` (stale tail abandoned);
+/// - writes are contiguous: each write starts at `written`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvPos {
+    /// Tokens whose cache rows are verified/kept.
+    pub committed: usize,
+    /// Tokens written into the cache (>= committed; the tail may be
+    /// speculative).
+    pub written: usize,
+}
+
+impl KvPos {
+    pub fn new() -> KvPos {
+        KvPos::default()
+    }
+
+    /// Position at which the next write lands.
+    pub fn write_pos(&self) -> usize {
+        self.written
+    }
+
+    /// Record a contiguous write of `n` tokens.
+    pub fn wrote(&mut self, n: usize) {
+        self.written += n;
+    }
+
+    /// Commit `n` additional tokens (≤ speculative tail).
+    pub fn commit(&mut self, n: usize) {
+        assert!(
+            self.committed + n <= self.written,
+            "commit past written: {} + {n} > {}",
+            self.committed,
+            self.written
+        );
+        self.committed += n;
+    }
+
+    /// Abandon the speculative tail (rejected draft tokens).
+    pub fn rollback(&mut self) {
+        self.written = self.committed;
+    }
+
+    /// Re-align the write head to an absolute position `p` (used when the
+    /// next verified write overwrites a speculative region).  Requires
+    /// committed <= p <= written.
+    pub fn seek(&mut self, p: usize) {
+        assert!(
+            (self.committed..=self.written).contains(&p),
+            "seek {p} outside [{}, {}]",
+            self.committed,
+            self.written
+        );
+        self.written = p;
+    }
+}
+
+/// Device-side state of one request stream: shallow-layer KV + adapter KV.
+pub struct DeviceStream {
+    pub skv: xla::Literal,
+    pub akv: xla::Literal,
+    /// Shallow KV position (shared by drafting and verification paths —
+    /// they produce identical rows for identical tokens).
+    pub spos: KvPos,
+    /// Adapter KV position.
+    pub apos: KvPos,
+}
+
+impl DeviceStream {
+    pub fn new(spec: &ModelSpec) -> Result<DeviceStream> {
+        Ok(DeviceStream {
+            skv: zeros_literal(&spec.shallow_kv_dims())?,
+            akv: zeros_literal(&spec.adapter_kv_dims())?,
+            spos: KvPos::new(),
+            apos: KvPos::new(),
+        })
+    }
+}
+
+/// Cloud-side state of one request stream: middle-submodel KV.
+pub struct CloudStream {
+    pub mkv: xla::Literal,
+    pub pos: KvPos,
+}
+
+impl CloudStream {
+    pub fn new(spec: &ModelSpec) -> Result<CloudStream> {
+        Ok(CloudStream { mkv: zeros_literal(&spec.middle_kv_dims())?, pos: KvPos::new() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{cases, forall};
+
+    #[test]
+    fn kvpos_commit_and_rollback() {
+        let mut p = KvPos::new();
+        p.wrote(5);
+        p.commit(3);
+        assert_eq!(p, KvPos { committed: 3, written: 5 });
+        p.rollback();
+        assert_eq!(p, KvPos { committed: 3, written: 3 });
+        assert_eq!(p.write_pos(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "commit past written")]
+    fn kvpos_cannot_commit_unwritten() {
+        let mut p = KvPos::new();
+        p.wrote(2);
+        p.commit(3);
+    }
+
+    #[test]
+    fn kvpos_seek_bounds() {
+        let mut p = KvPos::new();
+        p.wrote(10);
+        p.commit(4);
+        p.seek(7);
+        assert_eq!(p.written, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "seek")]
+    fn kvpos_seek_below_committed_panics() {
+        let mut p = KvPos::new();
+        p.wrote(10);
+        p.commit(4);
+        p.seek(3);
+    }
+
+    #[test]
+    fn prop_kvpos_invariant_under_random_ops() {
+        forall(cases(100), |rng| {
+            let mut p = KvPos::new();
+            for _ in 0..200 {
+                match rng.below(3) {
+                    0 => p.wrote(rng.range_usize(0, 8)),
+                    1 => {
+                        let room = p.written - p.committed;
+                        if room > 0 {
+                            p.commit(rng.range_usize(0, room));
+                        }
+                    }
+                    _ => p.rollback(),
+                }
+                if p.committed > p.written {
+                    return Err(format!("invariant broken: {p:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,284 @@
+//! Manifest parsing: the contract between `python/compile/aot.py` and the
+//! rust runtime (model dims, token buckets, per-artifact input/output specs
+//! and weight ordering).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Model dimensions of the executable tiny model (NOT the paper-scale
+/// delay-model dims — see DESIGN.md §3 dual-scale principle).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub shallow_layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub n_medusa: usize,
+}
+
+impl ModelSpec {
+    pub fn middle_layers(&self) -> usize {
+        self.layers - self.shallow_layers
+    }
+
+    /// Dims of a shallow-KV literal: [m, 2, S, nh, hd].
+    pub fn shallow_kv_dims(&self) -> Vec<usize> {
+        vec![self.shallow_layers, 2, self.max_seq, self.heads, self.head_dim]
+    }
+
+    /// Dims of a middle-KV literal: [L-m, 2, S, nh, hd].
+    pub fn middle_kv_dims(&self) -> Vec<usize> {
+        vec![self.middle_layers(), 2, self.max_seq, self.heads, self.head_dim]
+    }
+
+    /// Dims of the adapter-KV literal: [2, S, nh, hd].
+    pub fn adapter_kv_dims(&self) -> Vec<usize> {
+        vec![2, self.max_seq, self.heads, self.head_dim]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String,
+    pub t: usize,
+    pub file: String,
+    pub weights: Vec<String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelSpec,
+    pub buckets: Vec<usize>,
+    pub weights_file: String,
+    pub prompts_file: String,
+    pub artifacts: Vec<ArtifactSpec>,
+    /// Training metadata (losses, param counts, accept-length probe).
+    pub train_meta: TrainMeta,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TrainMeta {
+    pub accept_length_probe: f64,
+    pub lm_params: usize,
+    pub adapter_params: usize,
+    pub medusa_params: usize,
+}
+
+fn req<'a>(v: &'a Value, key: &str) -> Result<&'a Value> {
+    v.get(key).ok_or_else(|| anyhow!("manifest missing key '{key}'"))
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize> {
+    req(v, key)?.as_usize().ok_or_else(|| anyhow!("'{key}' not a number"))
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String> {
+    Ok(req(v, key)?.as_str().ok_or_else(|| anyhow!("'{key}' not a string"))?.to_string())
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let m = req(&v, "model")?;
+        let model = ModelSpec {
+            vocab: req_usize(m, "vocab")?,
+            hidden: req_usize(m, "hidden")?,
+            layers: req_usize(m, "layers")?,
+            shallow_layers: req_usize(m, "shallow_layers")?,
+            heads: req_usize(m, "heads")?,
+            head_dim: req_usize(m, "head_dim")?,
+            ffn: req_usize(m, "ffn")?,
+            max_seq: req_usize(m, "max_seq")?,
+            n_medusa: req_usize(m, "n_medusa")?,
+        };
+        anyhow::ensure!(model.shallow_layers < model.layers, "m >= n layers");
+        anyhow::ensure!(model.heads * model.head_dim == model.hidden, "head dims mismatch");
+
+        let buckets: Vec<usize> = req(&v, "buckets")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("buckets not an array"))?
+            .iter()
+            .map(|b| b.as_usize().ok_or_else(|| anyhow!("bad bucket")))
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets not sorted");
+
+        let tensor_list = |val: &Value| -> Result<Vec<TensorSpec>> {
+            val.as_arr()
+                .ok_or_else(|| anyhow!("tensor list not an array"))?
+                .iter()
+                .map(|t| {
+                    Ok(TensorSpec {
+                        name: req_str(t, "name")?,
+                        shape: req(t, "shape")?
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("shape not an array"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<_>>()?,
+                        dtype: t
+                            .get("dtype")
+                            .and_then(|d| d.as_str())
+                            .unwrap_or("f32")
+                            .to_string(),
+                    })
+                })
+                .collect()
+        };
+
+        let artifacts = req(&v, "artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts not an array"))?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    name: req_str(a, "name")?,
+                    kind: req_str(a, "kind")?,
+                    t: req_usize(a, "t")?,
+                    file: req_str(a, "file")?,
+                    weights: req(a, "weights")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("weights not an array"))?
+                        .iter()
+                        .map(|w| {
+                            w.as_str()
+                                .map(String::from)
+                                .ok_or_else(|| anyhow!("bad weight name"))
+                        })
+                        .collect::<Result<_>>()?,
+                    inputs: tensor_list(req(a, "inputs")?)?,
+                    outputs: tensor_list(req(a, "outputs")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(!artifacts.is_empty(), "no artifacts in manifest");
+
+        let tm = v.get("train_meta");
+        let train_meta = TrainMeta {
+            accept_length_probe: tm
+                .and_then(|t| t.get("accept_length_probe"))
+                .and_then(|x| x.as_f64())
+                .unwrap_or(0.0),
+            lm_params: tm
+                .and_then(|t| t.get("lm_params"))
+                .and_then(|x| x.as_usize())
+                .unwrap_or(0),
+            adapter_params: tm
+                .and_then(|t| t.get("adapter_params"))
+                .and_then(|x| x.as_usize())
+                .unwrap_or(0),
+            medusa_params: tm
+                .and_then(|t| t.get("medusa_params"))
+                .and_then(|x| x.as_usize())
+                .unwrap_or(0),
+        };
+
+        Ok(Manifest {
+            model,
+            buckets,
+            weights_file: req_str(&v, "weights_file")?,
+            prompts_file: req_str(&v, "prompts_file")?,
+            artifacts,
+            train_meta,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Artifact name for a (kind, bucket) pair.
+    pub fn artifact_name(kind: &str, bucket: usize) -> String {
+        format!("{kind}_{bucket}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "model": {"vocab": 512, "hidden": 128, "layers": 8, "shallow_layers": 1,
+                "heads": 4, "head_dim": 32, "ffn": 256, "max_seq": 640, "n_medusa": 4},
+      "buckets": [1, 4, 16],
+      "weights_file": "weights.npz",
+      "prompts_file": "prompts.bin",
+      "train_meta": {"accept_length_probe": 1.62, "lm_params": 1443968,
+                     "adapter_params": 65664, "medusa_params": 330240},
+      "artifacts": [
+        {"name": "device_head_1", "kind": "device_head", "t": 1,
+         "file": "device_head_1.hlo.txt", "weights": ["final_ln", "head"],
+         "inputs": [{"name": "deep", "shape": [1, 128], "dtype": "f32"}],
+         "outputs": [{"name": "logits", "shape": [1, 512]}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.model.vocab, 512);
+        assert_eq!(m.model.middle_layers(), 7);
+        assert_eq!(m.buckets, vec![1, 4, 16]);
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.artifact("device_head_1").unwrap();
+        assert_eq!(a.weights, vec!["final_ln", "head"]);
+        assert_eq!(a.inputs[0].shape, vec![1, 128]);
+        assert!((m.train_meta.accept_length_probe - 1.62).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_dims() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.model.shallow_kv_dims(), vec![1, 2, 640, 4, 32]);
+        assert_eq!(m.model.middle_kv_dims(), vec![7, 2, 640, 4, 32]);
+        assert_eq!(m.model.adapter_kv_dims(), vec![2, 640, 4, 32]);
+    }
+
+    #[test]
+    fn rejects_inconsistent_model() {
+        let bad = MINI.replace("\"head_dim\": 32", "\"head_dim\": 16");
+        assert!(Manifest::parse(&bad).is_err());
+        let bad = MINI.replace("[1, 4, 16]", "[4, 1, 16]");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        let p = crate::runtime::ArtifactRegistry::default_dir().join("manifest.json");
+        if !p.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.artifacts.len(), 4 * m.buckets.len() + 2);
+        for kind in ["device_input", "cloud_middle", "device_head", "adapter_prefill"] {
+            for &b in &m.buckets {
+                assert!(m.artifact(&Manifest::artifact_name(kind, b)).is_some());
+            }
+        }
+        assert!(m.artifact("draft_step_1").is_some());
+        assert!(m.artifact("medusa_decode_1").is_some());
+    }
+}

@@ -1,0 +1,223 @@
+//! Real serving mode: a TCP line-protocol server over the real engine
+//! (the offline crate set has no tokio/hyper; std::net + threads is the
+//! substrate we build instead).
+//!
+//! Protocol (UTF-8 lines):
+//!
+//! ```text
+//! C: GENERATE <max_new_tokens> <tok> <tok> ...\n
+//! S: OK <tok> <tok> ... | rounds=<n> accept=<mean>\n
+//! C: STATS\n
+//! S: OK executions=<n> exec_ms=<t> compiles=<n>\n
+//! C: QUIT\n
+//! ```
+//!
+//! The engine is not thread-safe (one PJRT client), so a single worker
+//! thread owns it and connections are multiplexed through a channel — the
+//! same leader/worker shape a production router uses.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+
+use crate::cli::Flags;
+use crate::config::SpecDecConfig;
+use crate::engine::Engine;
+use crate::specdec::{chunk_sizes, Session};
+
+/// A parsed request.
+#[derive(Debug, PartialEq)]
+pub enum Command {
+    Generate { max_new: usize, prompt: Vec<u32> },
+    Stats,
+    Quit,
+}
+
+/// Parse one protocol line.
+pub fn parse_line(line: &str) -> Result<Command, String> {
+    let mut it = line.split_whitespace();
+    match it.next() {
+        Some("GENERATE") => {
+            let max_new: usize = it
+                .next()
+                .ok_or("GENERATE needs max_new_tokens")?
+                .parse()
+                .map_err(|_| "bad max_new_tokens".to_string())?;
+            let prompt: Result<Vec<u32>, _> = it.map(|t| t.parse::<u32>()).collect();
+            let prompt = prompt.map_err(|_| "bad token id".to_string())?;
+            if prompt.is_empty() {
+                return Err("empty prompt".into());
+            }
+            if max_new == 0 || max_new > 512 {
+                return Err("max_new_tokens out of range".into());
+            }
+            Ok(Command::Generate { max_new, prompt })
+        }
+        Some("STATS") => Ok(Command::Stats),
+        Some("QUIT") => Ok(Command::Quit),
+        Some(other) => Err(format!("unknown command {other}")),
+        None => Err("empty line".into()),
+    }
+}
+
+/// Serve one request on the engine: HAT protocol (chunked prefill + SD).
+pub fn generate(engine: &Engine, prompt: &[u32], max_new: usize) -> anyhow::Result<(Vec<u32>, usize, f64)> {
+    let spec_cfg = SpecDecConfig::default();
+    let max_ctx = engine.spec().max_seq;
+    anyhow::ensure!(
+        prompt.len() + max_new + spec_cfg.max_draft + 2 <= max_ctx,
+        "prompt+generation exceeds model max_seq {max_ctx}"
+    );
+    let mut s = Session::new(engine, spec_cfg)?;
+    let chunks = chunk_sizes(prompt.len(), 64);
+    let t1 = s.prefill(prompt, &chunks)?;
+    let mut out = vec![t1];
+    let mut rounds = 0usize;
+    while out.len() < max_new {
+        let r = s.hat_round(true, 4)?;
+        out.extend_from_slice(&r.emitted);
+        rounds += 1;
+    }
+    out.truncate(max_new);
+    let accept = if rounds == 0 { 0.0 } else { (out.len() - 1) as f64 / rounds as f64 };
+    Ok((out, rounds, accept))
+}
+
+enum WorkerMsg {
+    Gen { max_new: usize, prompt: Vec<u32>, reply: mpsc::Sender<String> },
+    Stats { reply: mpsc::Sender<String> },
+}
+
+fn worker_loop(engine: Engine, rx: mpsc::Receiver<WorkerMsg>) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Gen { max_new, prompt, reply } => {
+                let resp = match generate(&engine, &prompt, max_new) {
+                    Ok((toks, rounds, accept)) => {
+                        let toks: Vec<String> = toks.iter().map(|t| t.to_string()).collect();
+                        format!("OK {} | rounds={rounds} accept={accept:.2}", toks.join(" "))
+                    }
+                    Err(e) => format!("ERR {e}"),
+                };
+                let _ = reply.send(resp);
+            }
+            WorkerMsg::Stats { reply } => {
+                let s = engine.reg.stats.borrow().clone();
+                let _ = reply.send(format!(
+                    "OK executions={} exec_ms={:.1} compiles={} compile_ms={:.1}",
+                    s.executions, s.execute_ms, s.compiles, s.compile_ms
+                ));
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: &mpsc::Sender<WorkerMsg>) -> std::io::Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let cmd = match parse_line(line.trim()) {
+            Ok(c) => c,
+            Err(e) => {
+                writeln!(stream, "ERR {e}")?;
+                continue;
+            }
+        };
+        match cmd {
+            Command::Quit => {
+                writeln!(stream, "OK bye")?;
+                return Ok(());
+            }
+            Command::Stats => {
+                let (rtx, rrx) = mpsc::channel();
+                let _ = tx.send(WorkerMsg::Stats { reply: rtx });
+                writeln!(stream, "{}", rrx.recv().unwrap_or_else(|_| "ERR worker gone".into()))?;
+            }
+            Command::Generate { max_new, prompt } => {
+                let (rtx, rrx) = mpsc::channel();
+                let _ = tx.send(WorkerMsg::Gen { max_new, prompt, reply: rtx });
+                writeln!(stream, "{}", rrx.recv().unwrap_or_else(|_| "ERR worker gone".into()))?;
+            }
+        }
+        let _ = peer; // keep for logging hooks
+    }
+}
+
+/// `hat serve --addr 127.0.0.1:7071`
+pub fn cmd_serve(f: &Flags) -> Result<(), String> {
+    let addr = f.get("addr").unwrap_or("127.0.0.1:7071").to_string();
+    // The engine (PJRT client) is !Send: construct it inside its owning
+    // worker thread and hand back only the ready/failed signal.
+    let (tx, rx) = mpsc::channel::<WorkerMsg>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+    std::thread::spawn(move || match Engine::load_default() {
+        Ok(engine) => {
+            let _ = ready_tx.send(Ok(()));
+            worker_loop(engine, rx);
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e.to_string()));
+        }
+    });
+    ready_rx
+        .recv()
+        .map_err(|_| "engine worker died".to_string())?
+        .map_err(|e| format!("engine load: {e}"))?;
+
+    let listener = TcpListener::bind(&addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    eprintln!("hat serving on {addr} (line protocol; see rust/src/server/mod.rs)");
+    let max_conns = f.get_usize("max-conns").map_err(|e| e)?.unwrap_or(usize::MAX);
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(s, &tx) {
+                        eprintln!("conn error: {e}");
+                    }
+                });
+            }
+            Err(e) => eprintln!("accept error: {e}"),
+        }
+        served += 1;
+        if served >= max_conns {
+            break; // test hook: bounded accept loop
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generate() {
+        let c = parse_line("GENERATE 16 1 2 3").unwrap();
+        assert_eq!(c, Command::Generate { max_new: 16, prompt: vec![1, 2, 3] });
+    }
+
+    #[test]
+    fn parses_stats_and_quit() {
+        assert_eq!(parse_line("STATS").unwrap(), Command::Stats);
+        assert_eq!(parse_line("QUIT").unwrap(), Command::Quit);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_line("GENERATE").is_err());
+        assert!(parse_line("GENERATE 10").is_err()); // empty prompt
+        assert!(parse_line("GENERATE 0 1 2").is_err());
+        assert!(parse_line("GENERATE 9999 1").is_err());
+        assert!(parse_line("GENERATE 4 1 x").is_err());
+        assert!(parse_line("NOPE 1").is_err());
+        assert!(parse_line("").is_err());
+    }
+}

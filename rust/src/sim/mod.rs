@@ -1,0 +1,233 @@
+//! Discrete-event simulation core.
+//!
+//! The paper's evaluation runs on a physical testbed (30 Jetsons + 8×A6000
+//! over WiFi).  Without that hardware, all *latency* metrics come from a
+//! deterministic DES in virtual time, while all *token decisions* come from
+//! real PJRT execution of the AOT artifacts (DESIGN.md §3, "dual-scale
+//! principle").  This module is the substrate the offline crate set forced
+//! us to build in place of tokio: a seeded, totally-ordered event queue.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual time in microseconds.  Integer, so event ordering is exact and
+/// runs are bit-reproducible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default, Hash)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_ms(ms: f64) -> SimTime {
+        SimTime((ms * 1000.0).round().max(0.0) as u64)
+    }
+
+    pub fn from_secs(s: f64) -> SimTime {
+        SimTime::from_ms(s * 1e3)
+    }
+
+    pub fn as_ms(self) -> f64 {
+        self.0 as f64 / 1000.0
+    }
+
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    pub fn add_ms(self, ms: f64) -> SimTime {
+        SimTime(self.0 + SimTime::from_ms(ms).0)
+    }
+}
+
+impl std::ops::Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+}
+
+struct Scheduled<E> {
+    time: SimTime,
+    seq: u64, // FIFO tie-break: equal-time events pop in push order
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first.
+        other.time.cmp(&self.time).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic future-event list.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), now: SimTime::ZERO, seq: 0, processed: 0 }
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `event` at absolute time `at`.  Panics if `at` is in the
+    /// past — a DES that time-travels is a bug, not a policy.
+    pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        assert!(at >= self.now, "scheduling into the past: {:?} < {:?}", at, self.now);
+        self.seq += 1;
+        self.heap.push(Scheduled { time: at, seq: self.seq, event });
+    }
+
+    /// Schedule `event` `delay_ms` virtual milliseconds from now.
+    pub fn schedule_in_ms(&mut self, delay_ms: f64, event: E) {
+        let at = self.now.add_ms(delay_ms.max(0.0));
+        self.schedule_at(at, event);
+    }
+
+    /// Pop the earliest event, advancing virtual time.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let s = self.heap.pop()?;
+        debug_assert!(s.time >= self.now);
+        self.now = s.time;
+        self.processed += 1;
+        Some((s.time, s.event))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{cases, forall};
+
+    #[test]
+    fn time_conversions() {
+        assert_eq!(SimTime::from_ms(1.5).0, 1500);
+        assert!((SimTime::from_secs(2.0).as_ms() - 2000.0).abs() < 1e-9);
+        assert_eq!(SimTime::from_ms(-5.0), SimTime::ZERO);
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime(30), "c");
+        q.schedule_at(SimTime(10), "a");
+        q.schedule_at(SimTime(20), "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(q.now(), SimTime(30));
+    }
+
+    #[test]
+    fn equal_times_pop_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.schedule_at(SimTime(5), i);
+        }
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn rejects_past_events() {
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime(10), ());
+        q.pop();
+        q.schedule_at(SimTime(5), ());
+    }
+
+    #[test]
+    fn relative_scheduling_advances_from_now() {
+        let mut q = EventQueue::new();
+        q.schedule_in_ms(1.0, 1);
+        let _ = q.pop();
+        q.schedule_in_ms(2.0, 2);
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, SimTime(3000));
+    }
+
+    #[test]
+    fn prop_monotone_nondecreasing_time() {
+        forall(cases(50), |rng| {
+            let mut q = EventQueue::new();
+            for i in 0..rng.range_usize(1, 200) {
+                q.schedule_at(SimTime(rng.next_u64() % 10_000), i);
+            }
+            let mut last = SimTime::ZERO;
+            while let Some((t, _)) = q.pop() {
+                if t < last {
+                    return Err(format!("time went backwards: {t:?} < {last:?}"));
+                }
+                last = t;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_interleaved_schedule_pop_stays_consistent() {
+        forall(cases(30), |rng| {
+            let mut q = EventQueue::new();
+            let mut popped = 0u64;
+            for _ in 0..200 {
+                if rng.bool(0.6) || q.is_empty() {
+                    let delay = rng.range_f64(0.0, 50.0);
+                    q.schedule_in_ms(delay, ());
+                } else {
+                    q.pop();
+                    popped += 1;
+                }
+            }
+            while q.pop().is_some() {
+                popped += 1;
+            }
+            if popped != q.processed() {
+                return Err("processed counter mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,431 @@
+//! Speculative decoding protocol (real-execution path).
+//!
+//! Implements HAT's §3.4–3.5 data path with actual PJRT calls: threshold
+//! drafting (Eq. 5), hidden-state verification through the cloud middle
+//! submodel, KV rollback of rejected tokens, and parallel drafting with
+//! top-k candidate branches (§3.5).  Also the U-shape per-token decode and
+//! the U-Medusa head-drafting round, so all four frameworks share one
+//! session abstraction.
+//!
+//! Greedy-decoding losslessness (tested in tests/golden.rs): the emitted
+//! token stream equals full-model autoregressive greedy decoding,
+//! regardless of draft quality.
+//!
+//! Timing is *not* this module's concern — the fleet simulator replays
+//! round shapes against the calibrated testbed models; this module is what
+//! `examples/quickstart.rs` runs end-to-end for real.
+
+pub mod profile;
+
+use anyhow::Result;
+
+use crate::config::SpecDecConfig;
+use crate::engine::Engine;
+use crate::model::{CloudStream, DeviceStream, TokenId};
+use crate::runtime::clone_literal;
+
+/// Outcome of one decode round (one device-cloud interaction).
+#[derive(Debug, Clone)]
+pub struct RoundResult {
+    /// Tokens proposed by the drafter this round (d_1..d_k).
+    pub proposed: Vec<TokenId>,
+    /// How many proposals were accepted (a).
+    pub accepted: usize,
+    /// Tokens emitted into the context: d_1..d_a + correction (or all k).
+    pub emitted: Vec<TokenId>,
+    /// Draft-model steps spent in the drafting stage (0 on a PD hit).
+    pub draft_steps: usize,
+    /// Tokens uploaded for verification (= hidden-state rows).
+    pub verify_tokens: usize,
+    /// Parallel-drafting hit: this round's draft was pre-computed during
+    /// the previous round's verification wait.
+    pub pd_hit: bool,
+}
+
+/// Pre-drafted continuation from a parallel-drafting branch.
+struct PreDraft {
+    /// The d_0 this branch assumed.
+    base: TokenId,
+    /// The commit depth (rows) this branch's start position assumes —
+    /// adoption requires both token and position to match.
+    assumed_rows: usize,
+    proposed: Vec<TokenId>,
+    /// Shallow hiddens of the tokens the branch processed.
+    shallow: Vec<f32>,
+    skv: xla::Literal,
+    akv: xla::Literal,
+    steps: usize,
+}
+
+/// One request's end-to-end inference session over the real engine.
+pub struct Session<'e> {
+    pub engine: &'e Engine,
+    pub dev: DeviceStream,
+    pub cloud: CloudStream,
+    /// Full context: prompt + generated tokens.
+    pub ctx: Vec<TokenId>,
+    n_prompt: usize,
+    /// First undrafted token (the d_0 of the next round).
+    pending: Option<TokenId>,
+    /// Deep hidden of the last verified row (Medusa state).
+    last_deep: Vec<f32>,
+    /// Top-k candidates for the correction slot (from the step that
+    /// proposed the last draft token) — PD inputs (§3.5).
+    corr_candidates: Vec<TokenId>,
+    /// Top-k candidates for the bonus slot (from processing the last
+    /// draft token).
+    bonus_candidates: Vec<TokenId>,
+    prebuilt: Option<PreDraft>,
+    cfg: SpecDecConfig,
+}
+
+impl<'e> Session<'e> {
+    pub fn new(engine: &'e Engine, cfg: SpecDecConfig) -> Result<Session<'e>> {
+        Ok(Session {
+            engine,
+            dev: DeviceStream::new(engine.spec())?,
+            cloud: CloudStream::new(engine.spec())?,
+            ctx: Vec::new(),
+            n_prompt: 0,
+            pending: None,
+            last_deep: Vec::new(),
+            corr_candidates: Vec::new(),
+            bonus_candidates: Vec::new(),
+            prebuilt: None,
+            cfg,
+        })
+    }
+
+    /// Prefill the prompt in `chunks` (sizes summing to prompt.len()),
+    /// returning the first output token.  Every chunk flows
+    /// device_input → adapter_prefill → cloud_middle (exactly HAT's
+    /// pipelined prefill data path, Fig. 4 — the virtual-time overlap is
+    /// the simulator's job); the head runs on the last chunk's final row.
+    pub fn prefill(&mut self, prompt: &[TokenId], chunks: &[usize]) -> Result<TokenId> {
+        assert_eq!(chunks.iter().sum::<usize>(), prompt.len(), "chunks must cover prompt");
+        assert!(self.ctx.is_empty(), "prefill on a used session");
+        assert!(!prompt.is_empty());
+        let h = self.engine.spec().hidden;
+        let mut off = 0;
+        let mut last_deep: Vec<f32> = Vec::new();
+        for &c in chunks {
+            let tokens = &prompt[off..off + c];
+            let hidden = self.engine.device_input(&mut self.dev, tokens)?;
+            self.engine.adapter_prefill(&mut self.dev, &hidden)?;
+            let deep = self.engine.cloud_middle(&mut self.cloud, &hidden)?;
+            last_deep = deep[(c - 1) * h..c * h].to_vec();
+            off += c;
+        }
+        self.dev.spos.commit(prompt.len());
+        self.dev.apos.commit(prompt.len());
+        self.cloud.pos.commit(prompt.len());
+        self.ctx.extend_from_slice(prompt);
+        self.n_prompt = prompt.len();
+
+        let logits = self.engine.head(&last_deep)?;
+        let t1 = Engine::argmax(&logits);
+        self.ctx.push(t1);
+        self.pending = Some(t1);
+        self.last_deep = last_deep;
+        Ok(t1)
+    }
+
+    /// Tokens generated so far (beyond the prompt, including the first).
+    pub fn generated(&self) -> usize {
+        self.ctx.len() - self.n_prompt
+    }
+
+    /// HAT decode round: threshold drafting + hidden-state verification.
+    ///
+    /// Drafting processes d_0..d_k through the draft model (k proposals
+    /// from the Eq. 5 stop rule, plus the last proposal itself so its
+    /// shallow hidden — and the adapter-KV row the next round needs — is
+    /// available).  Verification uploads all k+1 hidden states; head row i
+    /// targets proposed[i] for i<k, and row k yields the *bonus token*
+    /// after full acceptance ("the LLM's inference result following the
+    /// last accepted draft token serves as the input for the subsequent
+    /// round", §2.2).
+    ///
+    /// With `parallel_draft`, top-k candidate branches are drafted for
+    /// `lambda` steps each (the work the paper overlaps with the
+    /// verification wait): candidates for the correction slot (from the
+    /// step that proposed d_k) and for the bonus slot (from processing
+    /// d_k).
+    pub fn hat_round(&mut self, parallel_draft: bool, lambda: usize) -> Result<RoundResult> {
+        let d0 = self.pending.expect("call prefill first");
+        let h = self.engine.spec().hidden;
+
+        // --- drafting stage (or adopt a parallel-drafting branch) ---------
+        let (proposed, shallow, draft_steps, pd_hit) = match self.prebuilt.take() {
+            Some(pb) if pb.base == d0 && !pb.proposed.is_empty() => {
+                self.dev.skv = pb.skv;
+                self.dev.akv = pb.akv;
+                self.dev.spos.wrote(pb.steps);
+                self.dev.apos.wrote(pb.steps);
+                // No fresh candidates were computed this round: PD pauses
+                // for one round after a hit.
+                self.corr_candidates.clear();
+                self.bonus_candidates.clear();
+                (pb.proposed, pb.shallow, 0usize, true)
+            }
+            _ => {
+                let (p, s, n) = self.draft_live(d0, self.cfg.max_draft)?;
+                (p, s, n, false)
+            }
+        };
+        let k = proposed.len();
+        debug_assert!(k >= 1);
+        debug_assert_eq!(shallow.len(), (k + 1) * h, "need k+1 hidden rows");
+
+        // --- parallel drafting branches (overlap with verification) -------
+        // Correction case: next d_0 = c at the last draft slot (rows = k).
+        // Bonus case: next d_0 = b one past it (rows = k+1).
+        let mut branches: Vec<PreDraft> = Vec::new();
+        if parallel_draft && lambda > 0 {
+            let base_pos = self.dev.spos.committed; // p
+            for &c in self.corr_candidates.clone().iter().take(self.cfg.top_k) {
+                branches.push(self.draft_branch(c, k, base_pos + k, lambda)?);
+            }
+            for &b in self.bonus_candidates.clone().iter().take(self.cfg.top_k) {
+                branches.push(self.draft_branch(b, k + 1, base_pos + k + 1, lambda)?);
+            }
+        }
+
+        // --- verification --------------------------------------------------
+        let deep = self.engine.cloud_middle(&mut self.cloud, &shallow)?;
+        let logits = self.engine.head(&deep)?;
+        let v = self.engine.spec().vocab;
+        let mut accepted = 0;
+        while accepted < k {
+            let row = &logits[accepted * v..(accepted + 1) * v];
+            if Engine::argmax(row) == proposed[accepted] {
+                accepted += 1;
+            } else {
+                break;
+            }
+        }
+
+        let mut emitted: Vec<TokenId> = proposed[..accepted].to_vec();
+        // Correction (a<k) or bonus (a==k) — either way the LLM's own
+        // output at row `accepted` is the next token.
+        let row = &logits[accepted * v..(accepted + 1) * v];
+        let next_d0 = Engine::argmax(row);
+        emitted.push(next_d0);
+        let committed_rows = accepted + 1;
+        self.last_deep = deep[(committed_rows - 1) * h..committed_rows * h].to_vec();
+
+        // --- KV bookkeeping: commit verified rows, roll back the rest -----
+        self.dev.spos.commit(committed_rows);
+        self.dev.spos.rollback();
+        self.dev.apos.commit(committed_rows);
+        self.dev.apos.rollback();
+        self.cloud.pos.commit(committed_rows);
+        self.cloud.pos.rollback();
+
+        // Adopt a branch whose assumed (token, position) both match.
+        self.prebuilt = branches
+            .into_iter()
+            .find(|pb| pb.base == next_d0 && pb.assumed_rows == committed_rows);
+
+        self.ctx.extend_from_slice(&emitted);
+        self.pending = Some(next_d0);
+        Ok(RoundResult {
+            proposed,
+            accepted,
+            emitted,
+            draft_steps,
+            verify_tokens: k + 1,
+            pd_hit,
+        })
+    }
+
+    /// Threshold drafting on the live device stream: proposes up to `max`
+    /// tokens (Eq. 5 stop rule), then processes the last proposal too.
+    /// Returns (proposals, k+1 shallow hidden rows, steps = k+1).
+    fn draft_live(&mut self, d0: TokenId, max: usize) -> Result<(Vec<TokenId>, Vec<f32>, usize)> {
+        let mut proposed = Vec::new();
+        let mut shallow = Vec::new();
+        let mut cur = d0;
+        self.corr_candidates.clear();
+        self.bonus_candidates.clear();
+        for _ in 0..max {
+            let out = self.engine.draft_step(&mut self.dev, cur)?;
+            shallow.extend_from_slice(&out.shallow);
+            let next = Engine::argmax(&out.logits);
+            let prob = Engine::top_prob(&out.logits);
+            proposed.push(next);
+            self.corr_candidates = Engine::top_k(&out.logits, self.cfg.top_k.max(1));
+            cur = next;
+            if (prob as f64) < self.cfg.eta {
+                break;
+            }
+        }
+        // Process the last proposal itself: its hidden row is needed for
+        // verification (bonus logits) and its adapter-KV row for the next
+        // round.  Its own proposal distribution seeds the bonus-slot
+        // candidates for parallel drafting.
+        let out = self.engine.draft_step(&mut self.dev, cur)?;
+        shallow.extend_from_slice(&out.shallow);
+        self.bonus_candidates = Engine::top_k(&out.logits, self.cfg.top_k.max(1));
+        let steps = proposed.len() + 1;
+        Ok((proposed, shallow, steps))
+    }
+
+    /// Draft a candidate branch on cloned device KVs: `base` assumed at
+    /// absolute position `write_pos` (commit depth `assumed_rows`).
+    fn draft_branch(
+        &self,
+        base: TokenId,
+        assumed_rows: usize,
+        write_pos: usize,
+        lambda: usize,
+    ) -> Result<PreDraft> {
+        let mut spos = self.dev.spos;
+        let mut apos = self.dev.apos;
+        // The live stream has written past this branch's start; rewind the
+        // write head (stale rows are overwritten, never attended).
+        spos.seek(write_pos);
+        apos.seek(write_pos);
+        let mut dev = DeviceStream {
+            skv: clone_literal(&self.dev.skv)?,
+            akv: clone_literal(&self.dev.akv)?,
+            spos,
+            apos,
+        };
+        let mut proposed = Vec::new();
+        let mut shallow = Vec::new();
+        let mut cur = base;
+        for _ in 0..lambda {
+            let out = self.engine.draft_step(&mut dev, cur)?;
+            shallow.extend_from_slice(&out.shallow);
+            let next = Engine::argmax(&out.logits);
+            let prob = Engine::top_prob(&out.logits);
+            proposed.push(next);
+            cur = next;
+            if (prob as f64) < self.cfg.eta {
+                break;
+            }
+        }
+        // Mirror draft_live: process the last proposal for its hidden row.
+        if !proposed.is_empty() {
+            let out = self.engine.draft_step(&mut dev, cur)?;
+            shallow.extend_from_slice(&out.shallow);
+        }
+        let steps = proposed.len() + 1;
+        Ok(PreDraft {
+            base,
+            assumed_rows,
+            proposed,
+            shallow,
+            skv: dev.skv,
+            akv: dev.akv,
+            steps,
+        })
+    }
+
+    /// U-shape decode step: one token per device-cloud interaction.
+    pub fn ushape_step(&mut self) -> Result<TokenId> {
+        let d0 = self.pending.expect("call prefill first");
+        let hidden = self.engine.device_input(&mut self.dev, &[d0])?;
+        let deep = self.engine.cloud_middle(&mut self.cloud, &hidden)?;
+        let logits = self.engine.head(&deep)?;
+        let next = Engine::argmax(&logits);
+        self.dev.spos.commit(1);
+        self.cloud.pos.commit(1);
+        self.last_deep = deep;
+        self.ctx.push(next);
+        self.pending = Some(next);
+        Ok(next)
+    }
+
+    /// U-Medusa decode round: the heads applied to the deep hidden of the
+    /// last verified row propose n_medusa tokens; verification uploads the
+    /// hidden states of [d_0, m_1..m_{n-1}] like a HAT round (no adapter).
+    pub fn medusa_round(&mut self) -> Result<RoundResult> {
+        let d0 = self.pending.expect("call prefill first");
+        let n = self.engine.spec().n_medusa;
+        let h = self.engine.spec().hidden;
+        let v = self.engine.spec().vocab;
+
+        let head_logits = self.engine.medusa(&self.last_deep)?;
+        let proposed: Vec<TokenId> = head_logits.iter().map(|l| Engine::argmax(l)).collect();
+        debug_assert_eq!(proposed.len(), n);
+
+        // Process [d_0, m_1..m_n]: row i targets m_{i+1}, row n yields the
+        // bonus token after full acceptance (same contract as hat_round).
+        let mut toks = vec![d0];
+        toks.extend_from_slice(&proposed);
+        let hidden = self.engine.device_input(&mut self.dev, &toks)?;
+        let deep = self.engine.cloud_middle(&mut self.cloud, &hidden)?;
+        let logits = self.engine.head(&deep)?;
+
+        let k = proposed.len();
+        let mut accepted = 0;
+        while accepted < k {
+            let row = &logits[accepted * v..(accepted + 1) * v];
+            if Engine::argmax(row) == proposed[accepted] {
+                accepted += 1;
+            } else {
+                break;
+            }
+        }
+        let mut emitted: Vec<TokenId> = proposed[..accepted].to_vec();
+        let row = &logits[accepted * v..(accepted + 1) * v];
+        let next_d0 = Engine::argmax(row);
+        emitted.push(next_d0);
+        let committed_rows = accepted + 1;
+        self.last_deep = deep[(committed_rows - 1) * h..committed_rows * h].to_vec();
+
+        self.dev.spos.commit(committed_rows);
+        self.dev.spos.rollback();
+        self.cloud.pos.commit(committed_rows);
+        self.cloud.pos.rollback();
+
+        self.ctx.extend_from_slice(&emitted);
+        self.pending = Some(next_d0);
+        Ok(RoundResult { proposed, accepted, emitted, draft_steps: 0, verify_tokens: k + 1, pd_hit: false })
+    }
+}
+
+/// Even chunking helper: split `n` into chunks of at most `size`.
+pub fn chunk_sizes(n: usize, size: usize) -> Vec<usize> {
+    assert!(size > 0);
+    let mut out = Vec::new();
+    let mut left = n;
+    while left > 0 {
+        let c = left.min(size);
+        out.push(c);
+        left -= c;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_sizes_cover() {
+        assert_eq!(chunk_sizes(10, 4), vec![4, 4, 2]);
+        assert_eq!(chunk_sizes(4, 4), vec![4]);
+        assert_eq!(chunk_sizes(3, 8), vec![3]);
+        assert_eq!(chunk_sizes(0, 8), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn prop_chunks_sum_and_bounds() {
+        use crate::util::proptest::{cases, forall};
+        forall(cases(100), |rng| {
+            let n = rng.range_usize(1, 2000);
+            let s = rng.range_usize(1, 300);
+            let ch = chunk_sizes(n, s);
+            if ch.iter().sum::<usize>() != n {
+                return Err("chunks do not sum to n".into());
+            }
+            if ch.iter().any(|&c| c == 0 || c > s) {
+                return Err("chunk out of bounds".into());
+            }
+            Ok(())
+        });
+    }
+}

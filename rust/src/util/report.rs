@@ -1,0 +1,58 @@
+//! Bench reporting helpers: results directory, JSON dumps, and fixed-width
+//! tables shaped like the paper's.
+
+use std::path::PathBuf;
+
+use super::json::Value;
+
+/// Where bench harnesses write their JSON results.
+pub fn results_dir() -> PathBuf {
+    let d = std::env::var("HAT_BENCH_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("bench_results"));
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+/// Write a JSON result file, returning its path.
+pub fn write_json(name: &str, v: &Value) -> PathBuf {
+    let p = results_dir().join(format!("{name}.json"));
+    std::fs::write(&p, super::json::write(v)).expect("write bench result");
+    p
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Fixed-width row formatting.
+pub fn row(cells: &[String], widths: &[usize]) -> String {
+    cells
+        .iter()
+        .zip(widths)
+        .map(|(c, w)| format!("{c:>width$}", width = w))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    #[test]
+    fn writes_results() {
+        std::env::set_var("HAT_BENCH_DIR", std::env::temp_dir().join("hat_br").to_str().unwrap());
+        let p = write_json("t", &Value::Num(1.0));
+        assert!(p.exists());
+        std::fs::remove_file(p).ok();
+        std::env::remove_var("HAT_BENCH_DIR");
+    }
+
+    #[test]
+    fn row_formats_fixed_width() {
+        let r = row(&["a".into(), "bb".into()], &[3, 4]);
+        assert_eq!(r, "  a   bb");
+    }
+}

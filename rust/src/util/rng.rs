@@ -1,0 +1,180 @@
+//! Deterministic PRNG (SplitMix64 core) with the distributions the
+//! simulator needs: uniform, exponential (Poisson arrivals), normal,
+//! lognormal (prompt lengths, Table 3), and categorical choice.
+//!
+//! Determinism matters: every experiment is seeded, so paper figures
+//! regenerate bit-identically run-to-run.
+
+/// SplitMix64 — tiny, fast, passes BigCrush for our purposes; also used to
+/// seed independent substreams (one per device, one per link, …) so
+/// component behaviour is independent of event interleaving.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    /// Derive an independent substream (e.g. per device id).
+    pub fn substream(&self, tag: u64) -> Rng {
+        let mut r = Rng::new(self.state ^ tag.wrapping_mul(0xD1342543DE82EF95));
+        r.next_u64(); // decorrelate
+        r
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Uniform integer in [0, n). Panics on n == 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "rng.below(0)");
+        // multiply-shift; bias is negligible for our n << 2^64
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda) — Poisson interarrivals.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        let u = 1.0 - self.f64(); // avoid ln(0)
+        -u.ln() / lambda
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Lognormal parameterized by the mean/std of the *underlying* normal.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Pick an element uniformly.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+}
+
+/// Fit lognormal (mu, sigma) from a target mean and std of the distribution
+/// itself (not of the log).  Used to match Table 3's prompt-length stats.
+pub fn lognormal_params_from_mean_std(mean: f64, std: f64) -> (f64, f64) {
+    let cv2 = (std / mean).powi(2);
+    let sigma2 = (1.0 + cv2).ln();
+    let mu = mean.ln() - sigma2 / 2.0;
+    (mu, sigma2.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn substreams_differ() {
+        let root = Rng::new(7);
+        let mut a = root.substream(1);
+        let mut b = root.substream(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(1);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn below_covers_range() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[r.below(10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(9);
+        let lambda = 4.0;
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(lambda)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 40_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn lognormal_fit_matches_target() {
+        // Table 3, SpecBench: mean 351.2, std 397.3
+        let (mu, sigma) = lognormal_params_from_mean_std(351.2, 397.3);
+        let mut r = Rng::new(5);
+        let n = 60_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.lognormal(mu, sigma)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 351.2).abs() / 351.2 < 0.05, "mean {mean}");
+        assert!((var.sqrt() - 397.3).abs() / 397.3 < 0.12, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Rng::new(13);
+        let hits = (0..10_000).filter(|_| r.bool(0.3)).count();
+        assert!((hits as f64 / 10_000.0 - 0.3).abs() < 0.02);
+    }
+}

@@ -1,0 +1,169 @@
+//! Statistics used by the metrics layer: streaming mean/std (Welford),
+//! percentiles, CDFs, and simple moving averages (the paper's Eq. 1–2 use
+//! exponential moving averages — those live in `cloud::state_monitor`).
+
+/// Streaming mean / variance (Welford). O(1) memory.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (matches how the paper reports per-GPU delay std).
+    pub fn var(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.m2 / self.n as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Summary of a sample: mean/std/min/max/percentiles.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary { count: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p90: 0.0, p99: 0.0 };
+        }
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        let var = s.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / s.len() as f64;
+        Summary {
+            count: s.len(),
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            max: *s.last().unwrap(),
+            p50: percentile_sorted(&s, 50.0),
+            p90: percentile_sorted(&s, 90.0),
+            p99: percentile_sorted(&s, 99.0),
+        }
+    }
+}
+
+/// Percentile of a pre-sorted sample (linear interpolation).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Empirical CDF evaluated at `points`: fraction of the sample <= point.
+/// This is how the SLA-compliance curves of Figs. 9–10 are produced
+/// (compliance rate at SLA `s` = CDF of per-unit delay at `s`).
+pub fn cdf_at(sample: &[f64], points: &[f64]) -> Vec<f64> {
+    let mut s = sample.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    points
+        .iter()
+        .map(|&p| {
+            let idx = s.partition_point(|&x| x <= p);
+            idx as f64 / s.len().max(1) as f64
+        })
+        .collect()
+}
+
+/// Inverse of `cdf_at`: the delay at which a fraction `q` of requests comply
+/// ("50% of requests meet a decode SLA of X ms").
+pub fn quantile(sample: &[f64], q: f64) -> f64 {
+    let mut s = sample.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, q * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.var() - var).abs() < 1e-12);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let s = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile_sorted(&s, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 5.0);
+        assert_eq!(percentile_sorted(&s, 50.0), 3.0);
+        assert!((percentile_sorted(&s, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_of_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounds() {
+        let sample = [5.0, 1.0, 3.0, 2.0, 4.0];
+        let pts = [0.0, 1.0, 2.5, 5.0, 10.0];
+        let c = cdf_at(&sample, &pts);
+        assert_eq!(c[0], 0.0);
+        assert_eq!(c[1], 0.2);
+        assert_eq!(c[2], 0.4);
+        assert_eq!(c[3], 1.0);
+        assert_eq!(c[4], 1.0);
+        for w in c.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn quantile_median() {
+        let sample = [10.0, 20.0, 30.0];
+        assert!((quantile(&sample, 0.5) - 20.0).abs() < 1e-12);
+    }
+}

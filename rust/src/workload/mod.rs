@@ -1,0 +1,239 @@
+//! Workload generation: Poisson request arrivals over the device fleet and
+//! prompt-length sampling matched to the paper's Table 3, plus the loader
+//! for `artifacts/prompts.bin` (pre-tokenized in-distribution prompts for
+//! the real-execution path).
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::config::{Dataset, WorkloadConfig};
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+
+/// A generated request (before entering the system).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    pub device: usize,
+    pub arrival: SimTime,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+}
+
+/// Lognormal prompt-length sampler fit to Table 3 per dataset, clamped.
+#[derive(Debug, Clone)]
+pub struct PromptSampler {
+    mu: f64,
+    sigma: f64,
+    min: usize,
+    max: usize,
+}
+
+impl PromptSampler {
+    pub fn new(dataset: Dataset, min: usize, max: usize) -> Self {
+        let (mu, sigma) = dataset.lognormal();
+        PromptSampler { mu, sigma, min, max }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        (rng.lognormal(self.mu, self.sigma).round() as usize).clamp(self.min, self.max)
+    }
+}
+
+/// Generate the full arrival trace: aggregate Poisson process at
+/// `cfg.rate` req/s, each request assigned to a uniformly random device
+/// (paper §4.2: "devices generate requests following a Poisson process").
+pub fn generate_trace(cfg: &WorkloadConfig, seed: u64) -> Vec<Request> {
+    let root = Rng::new(seed);
+    let mut arr_rng = root.substream(0xA11);
+    let mut len_rng = root.substream(0x1E4);
+    let mut dev_rng = root.substream(0xDE7);
+    let sampler = PromptSampler::new(cfg.dataset, cfg.min_prompt, cfg.max_prompt);
+
+    let mut t = 0.0_f64; // seconds
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for id in 0..cfg.n_requests {
+        t += arr_rng.exponential(cfg.rate);
+        out.push(Request {
+            id,
+            device: dev_rng.below(cfg.n_devices),
+            arrival: SimTime::from_secs(t),
+            prompt_len: sampler.sample(&mut len_rng),
+            max_new_tokens: cfg.max_new_tokens,
+        });
+    }
+    out
+}
+
+/// Pool of real token prompts written by `python -m compile.aot`
+/// (format: magic "HATP", u32 count, then per prompt u32 len + u32 toks).
+#[derive(Debug, Clone)]
+pub struct PromptPool {
+    prompts: Vec<Vec<u32>>,
+}
+
+impl PromptPool {
+    pub fn load(path: &Path) -> anyhow::Result<PromptPool> {
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        anyhow::ensure!(buf.len() >= 8 && &buf[..4] == b"HATP", "bad prompts.bin magic");
+        let rd_u32 = |b: &[u8], off: usize| -> u32 {
+            u32::from_le_bytes(b[off..off + 4].try_into().unwrap())
+        };
+        let count = rd_u32(&buf, 4) as usize;
+        let mut prompts = Vec::with_capacity(count);
+        let mut off = 8;
+        for _ in 0..count {
+            anyhow::ensure!(off + 4 <= buf.len(), "truncated prompts.bin");
+            let len = rd_u32(&buf, off) as usize;
+            off += 4;
+            anyhow::ensure!(off + 4 * len <= buf.len(), "truncated prompt body");
+            let toks = (0..len).map(|i| rd_u32(&buf, off + 4 * i)).collect();
+            off += 4 * len;
+            prompts.push(toks);
+        }
+        anyhow::ensure!(!prompts.is_empty(), "empty prompt pool");
+        Ok(PromptPool { prompts })
+    }
+
+    pub fn len(&self) -> usize {
+        self.prompts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prompts.is_empty()
+    }
+
+    /// Pick a prompt of exactly `len` tokens: find the shortest pooled
+    /// prompt with length >= len and truncate (all pool prompts are
+    /// in-distribution prefixes).  Falls back to the longest available.
+    pub fn sample(&self, len: usize, rng: &mut Rng) -> Vec<u32> {
+        let candidates: Vec<&Vec<u32>> =
+            self.prompts.iter().filter(|p| p.len() >= len).collect();
+        if candidates.is_empty() {
+            let longest = self.prompts.iter().max_by_key(|p| p.len()).unwrap();
+            return longest.clone();
+        }
+        let p = candidates[rng.below(candidates.len())];
+        p[..len].to_vec()
+    }
+
+    pub fn max_len(&self) -> usize {
+        self.prompts.iter().map(|p| p.len()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Dataset;
+    use crate::util::proptest::{cases, forall};
+
+    fn wl(rate: f64, n: usize) -> WorkloadConfig {
+        let mut c = WorkloadConfig::preset(Dataset::SpecBench);
+        c.rate = rate;
+        c.n_requests = n;
+        c
+    }
+
+    #[test]
+    fn trace_is_sorted_and_sized() {
+        let tr = generate_trace(&wl(6.0, 200), 1);
+        assert_eq!(tr.len(), 200);
+        for w in tr.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn poisson_rate_approximately_honoured() {
+        let tr = generate_trace(&wl(8.0, 4000), 2);
+        let span = tr.last().unwrap().arrival.as_secs();
+        let rate = tr.len() as f64 / span;
+        assert!((rate - 8.0).abs() < 0.5, "rate {rate}");
+    }
+
+    #[test]
+    fn prompt_lengths_match_table3_mean() {
+        let tr = generate_trace(&wl(6.0, 8000), 3);
+        let mean: f64 =
+            tr.iter().map(|r| r.prompt_len as f64).sum::<f64>() / tr.len() as f64;
+        // Table 3 SpecBench mean 351.2; clamping shifts it slightly.
+        assert!((mean - 351.0).abs() < 40.0, "mean {mean}");
+    }
+
+    #[test]
+    fn devices_covered() {
+        let tr = generate_trace(&wl(6.0, 2000), 4);
+        let mut seen = vec![false; 30];
+        for r in &tr {
+            seen[r.device] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn trace_is_deterministic_per_seed() {
+        let a = generate_trace(&wl(5.0, 100), 9);
+        let b = generate_trace(&wl(5.0, 100), 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.prompt_len, y.prompt_len);
+            assert_eq!(x.device, y.device);
+        }
+    }
+
+    #[test]
+    fn prop_prompt_sampler_respects_clamp() {
+        forall(cases(100), |rng| {
+            let lo = rng.range_usize(1, 50);
+            let hi = lo + rng.range_usize(1, 1000);
+            let s = PromptSampler::new(Dataset::CnnDm, lo, hi);
+            let mut r = Rng::new(rng.next_u64());
+            for _ in 0..50 {
+                let l = s.sample(&mut r);
+                if l < lo || l > hi {
+                    return Err(format!("length {l} outside [{lo},{hi}]"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prompt_pool_roundtrip() {
+        // Synthesize a tiny pool file in-memory format and parse it.
+        let dir = std::env::temp_dir().join("hat_test_prompts.bin");
+        let mut bytes = b"HATP".to_vec();
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        for p in [[1u32, 2, 3].as_slice(), [7u32, 8, 9, 10, 11].as_slice()] {
+            bytes.extend_from_slice(&(p.len() as u32).to_le_bytes());
+            for &t in p {
+                bytes.extend_from_slice(&t.to_le_bytes());
+            }
+        }
+        std::fs::write(&dir, &bytes).unwrap();
+        let pool = PromptPool::load(&dir).unwrap();
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.max_len(), 5);
+        let mut rng = Rng::new(0);
+        let s = pool.sample(4, &mut rng);
+        assert_eq!(s, vec![7, 8, 9, 10]);
+        // longer than everything -> longest available
+        let s = pool.sample(100, &mut rng);
+        assert_eq!(s.len(), 5);
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn prompt_pool_rejects_garbage() {
+        let dir = std::env::temp_dir().join("hat_test_bad.bin");
+        std::fs::write(&dir, b"NOPE").unwrap();
+        assert!(PromptPool::load(&dir).is_err());
+        std::fs::write(&dir, b"HATP\x02\x00\x00\x00\x05\x00\x00\x00").unwrap();
+        assert!(PromptPool::load(&dir).is_err());
+        std::fs::remove_file(&dir).ok();
+    }
+}

@@ -1,0 +1,180 @@
+//! Cross-language golden tests: the rust engine (PJRT artifacts, cached KV,
+//! bucket padding, chunked prefill, speculative decoding with rollback)
+//! must reproduce the token streams computed by the JAX model in
+//! training-form full-sequence forward (python/compile/aot.py →
+//! artifacts/golden.json).
+//!
+//! These tests prove, end to end:
+//! - the AOT HLO round-trip is numerically faithful;
+//! - the cached/chunked inference path equals the full forward;
+//! - speculative decoding (HAT rounds), U-shape decode and U-Medusa rounds
+//!   are all *lossless* under greedy decoding;
+//! - KV rollback of rejected draft tokens never corrupts the stream.
+
+use std::path::PathBuf;
+
+use hat::config::SpecDecConfig;
+use hat::engine::Engine;
+use hat::specdec::{chunk_sizes, Session};
+use hat::util::json;
+
+struct Golden {
+    prompt: Vec<u32>,
+    full_greedy: Vec<u32>,
+    draft_greedy: Vec<u32>,
+}
+
+fn artifacts() -> Option<PathBuf> {
+    let d = hat::runtime::ArtifactRegistry::default_dir();
+    d.join("golden.json").exists().then_some(d)
+}
+
+fn load_golden(dir: &PathBuf) -> Golden {
+    let text = std::fs::read_to_string(dir.join("golden.json")).unwrap();
+    let v = json::parse(&text).unwrap();
+    let toks = |key: &str| -> Vec<u32> {
+        v.get(key)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as u32)
+            .collect()
+    };
+    Golden { prompt: toks("prompt"), full_greedy: toks("full_greedy"), draft_greedy: toks("draft_greedy") }
+}
+
+fn engine(dir: &PathBuf) -> Engine {
+    Engine::load(dir).unwrap()
+}
+
+/// Run a HAT session until >= n tokens generated; returns generated tokens.
+fn run_hat(e: &Engine, prompt: &[u32], chunks: &[usize], pd: bool, n: usize) -> Vec<u32> {
+    let mut s = Session::new(e, SpecDecConfig::default()).unwrap();
+    let t1 = s.prefill(prompt, chunks).unwrap();
+    let mut out = vec![t1];
+    while out.len() < n {
+        let r = s.hat_round(pd, 4).unwrap();
+        out.extend_from_slice(&r.emitted);
+    }
+    out.truncate(n);
+    out
+}
+
+#[test]
+fn hat_rounds_reproduce_full_greedy() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let g = load_golden(&dir);
+    let e = engine(&dir);
+    let n = g.full_greedy.len();
+    let out = run_hat(&e, &g.prompt, &[g.prompt.len()], false, n);
+    assert_eq!(out, g.full_greedy, "HAT (single-chunk prefill) diverged from full greedy");
+}
+
+#[test]
+fn hat_is_lossless_under_chunked_prefill() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let g = load_golden(&dir);
+    let e = engine(&dir);
+    let n = g.full_greedy.len();
+    for chunk in [8usize, 16, 13] {
+        let chunks = chunk_sizes(g.prompt.len(), chunk);
+        let out = run_hat(&e, &g.prompt, &chunks, false, n);
+        assert_eq!(out, g.full_greedy, "chunk size {chunk} changed the output");
+    }
+}
+
+#[test]
+fn hat_parallel_drafting_is_lossless() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let g = load_golden(&dir);
+    let e = engine(&dir);
+    let n = g.full_greedy.len();
+    let out = run_hat(&e, &g.prompt, &[g.prompt.len()], true, n);
+    assert_eq!(out, g.full_greedy, "parallel drafting changed the output");
+}
+
+#[test]
+fn ushape_reproduces_full_greedy() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let g = load_golden(&dir);
+    let e = engine(&dir);
+    let mut s = Session::new(&e, SpecDecConfig::default()).unwrap();
+    let t1 = s.prefill(&g.prompt, &[g.prompt.len()]).unwrap();
+    let mut out = vec![t1];
+    while out.len() < g.full_greedy.len() {
+        out.push(s.ushape_step().unwrap());
+    }
+    assert_eq!(out, g.full_greedy, "U-shape decode diverged");
+}
+
+#[test]
+fn medusa_rounds_reproduce_full_greedy() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let g = load_golden(&dir);
+    let e = engine(&dir);
+    let mut s = Session::new(&e, SpecDecConfig::default()).unwrap();
+    let t1 = s.prefill(&g.prompt, &[g.prompt.len()]).unwrap();
+    let mut out = vec![t1];
+    while out.len() < g.full_greedy.len() {
+        let r = s.medusa_round().unwrap();
+        out.extend_from_slice(&r.emitted);
+    }
+    out.truncate(g.full_greedy.len());
+    assert_eq!(out, g.full_greedy, "U-Medusa decode diverged");
+}
+
+#[test]
+fn draft_model_matches_python_draft_greedy() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let g = load_golden(&dir);
+    let e = engine(&dir);
+    let mut s = Session::new(&e, SpecDecConfig::default()).unwrap();
+    // Prefill fills shallow+adapter KV; then drive the draft model alone.
+    s.prefill(&g.prompt, &[g.prompt.len()]).unwrap();
+    // The draft model's own greedy continuation starts from the prompt's
+    // last token? No: python drafted from the full prompt context, token
+    // by token, appending its own outputs.  Mirror that: first draft input
+    // is the prompt's last token... python's draft_train_forward(ctx)[-1]
+    // predicts the token after ctx — its first output corresponds to
+    // processing the last prompt token.  Here the prompt is already in the
+    // KV, so we must NOT reprocess it; instead each draft step processes
+    // the previously drafted token.  python ctx starts as prompt, so its
+    // first draft output is the draft model's t1 given the prompt — which
+    // for the cached path is the logits of draft_step on the last prompt
+    // token.  But that token is already in the KV.  To align, python's
+    // golden drafted with the *full* prompt; the cached equivalent is:
+    // rebuild a fresh session and prefill with prompt[..len-1], then step
+    // from prompt[len-1].
+    let mut s2 = Session::new(&e, SpecDecConfig::default()).unwrap();
+    let p = &g.prompt[..g.prompt.len() - 1];
+    s2.prefill(p, &[p.len()]).unwrap();
+    drop(s);
+    // Drive draft steps directly through the engine on s2's device state.
+    let mut cur = *g.prompt.last().unwrap();
+    let mut out = Vec::new();
+    for _ in 0..g.draft_greedy.len() {
+        let o = e.draft_step(&mut s2.dev, cur).unwrap();
+        cur = hat::engine::Engine::argmax(&o.logits);
+        out.push(cur);
+    }
+    assert_eq!(out, g.draft_greedy, "draft model diverged from python");
+}

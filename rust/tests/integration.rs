@@ -1,0 +1,177 @@
+//! Cross-module integration tests: fleet-simulator invariants across all
+//! frameworks and operating points, config-file round trips, SD-profile
+//! plumbing, and failure injection.
+
+use hat::config::{parser, Dataset, ExperimentConfig, Framework};
+use hat::frameworks::run_experiment;
+use hat::metrics::Recorder;
+use hat::specdec::profile::SdProfile;
+use hat::util::proptest::{cases, forall};
+
+fn run(cfg: &ExperimentConfig) -> Recorder {
+    run_experiment(cfg, &SdProfile::default_table())
+}
+
+#[test]
+fn prop_fleet_invariants_hold_across_random_configs() {
+    // For random (framework, dataset, rate, P, strategy flags): every
+    // request finishes with exactly max_new_tokens, token times are
+    // monotone, TTFT > 0, and per-GPU delays are positive.
+    forall(cases(25), |rng| {
+        let fw = *rng.choice(&Framework::all());
+        let ds = *rng.choice(&[Dataset::SpecBench, Dataset::CnnDm]);
+        let mut cfg = ExperimentConfig::preset(fw, ds);
+        cfg.seed = rng.next_u64();
+        cfg.workload.rate = rng.range_f64(1.0, 10.0);
+        cfg.workload.n_requests = rng.range_usize(10, 60);
+        cfg.workload.max_new_tokens = rng.range_usize(12, 64);
+        cfg.cloud.pipeline_len = rng.range_usize(1, 8);
+        if rng.bool(0.3) {
+            cfg.strategies.pd = false;
+        }
+        if rng.bool(0.2) {
+            cfg.strategies.sd = false;
+        }
+        let rec = run(&cfg);
+        if rec.finished_requests().count() != cfg.workload.n_requests {
+            return Err(format!(
+                "{}: {} of {} finished",
+                fw.name(),
+                rec.finished_requests().count(),
+                cfg.workload.n_requests
+            ));
+        }
+        for r in rec.finished_requests() {
+            if r.tokens_generated() < cfg.workload.max_new_tokens {
+                return Err(format!("request {} short: {}", r.id, r.tokens_generated()));
+            }
+            let ts = &r.token_times;
+            if ts.windows(2).any(|w| w[1] < w[0]) {
+                return Err("token times not monotone".into());
+            }
+            if r.ttft_ms().unwrap() <= 0.0 {
+                return Err("non-positive TTFT".into());
+            }
+            if r.first_token.unwrap() < r.arrived {
+                return Err("first token before arrival".into());
+            }
+        }
+        if rec.gpu_step_delays.iter().any(|&d| d <= 0.0) {
+            return Err("non-positive gpu step delay".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn virtual_time_is_causally_consistent_with_load() {
+    // Tripling the arrival rate must not *reduce* mean TTFT (queueing).
+    let mut lo = ExperimentConfig::preset(Framework::UShape, Dataset::SpecBench);
+    lo.workload.n_requests = 150;
+    lo.workload.rate = 3.0;
+    let mut hi = lo.clone();
+    hi.workload.rate = 9.0;
+    let s_lo = run(&lo).summary();
+    let s_hi = run(&hi).summary();
+    assert!(
+        s_hi.ttft_mean_ms >= s_lo.ttft_mean_ms * 0.95,
+        "rate 9 TTFT {} < rate 3 TTFT {}",
+        s_hi.ttft_mean_ms,
+        s_lo.ttft_mean_ms
+    );
+}
+
+#[test]
+fn sd_profile_accept_length_feeds_through_metrics() {
+    let profile = SdProfile::default_table();
+    let expected = SdProfile::accept_length(&profile.hat);
+    let mut cfg = ExperimentConfig::preset(Framework::Hat, Dataset::SpecBench);
+    cfg.workload.n_requests = 120;
+    let rec = run_experiment(&cfg, &profile);
+    let measured = rec.accept_length();
+    assert!(
+        (measured - expected).abs() < 0.35,
+        "sim accept {measured:.2} vs profile {expected:.2}"
+    );
+}
+
+#[test]
+fn config_file_round_trip_drives_experiment() {
+    let toml = r#"
+framework = "usarathi"
+dataset = "cnndm"
+seed = 7
+[workload]
+rate = 2.5
+n_requests = 25
+max_new_tokens = 16
+[cloud]
+pipeline_len = 2
+"#;
+    let map = parser::parse(toml).unwrap();
+    let cfg = parser::build(&map).unwrap();
+    assert_eq!(cfg.framework, Framework::USarathi);
+    assert_eq!(cfg.strategies.server_chunk, Some(256));
+    let rec = run(&cfg);
+    assert_eq!(rec.finished_requests().count(), 25);
+}
+
+#[test]
+fn ablation_flags_change_behaviour() {
+    // PC on vs off must change the chunk-size trace; SD off must force
+    // accept length to exactly 1.
+    let mut base = ExperimentConfig::preset(Framework::Hat, Dataset::SpecBench);
+    base.workload.n_requests = 60;
+    let with_pc = run(&base);
+    assert!(!with_pc.chunk_sizes.is_empty());
+
+    let mut no_pc = base.clone();
+    no_pc.strategies.pc = false;
+    let r = run(&no_pc);
+    assert!(r.chunk_sizes.is_empty(), "chunk optimizer ran with PC off");
+
+    let mut no_sd = base.clone();
+    no_sd.strategies.sd = false;
+    let r = run(&no_sd);
+    assert!((r.accept_length() - 1.0).abs() < 1e-9, "accept {}", r.accept_length());
+}
+
+#[test]
+fn failure_injection_bad_configs_are_rejected() {
+    for bad in [
+        "workload.rate = 0\n",
+        "[cloud]\npipeline_len = 0\n",
+        "[specdec]\neta = 1.5\n",
+        "[workload]\nmin_prompt = 100\nmax_prompt = 10\n",
+        "unknown_key = 1\n",
+    ] {
+        let map = parser::parse(bad).unwrap();
+        assert!(parser::build(&map).is_err(), "accepted bad config: {bad}");
+    }
+}
+
+#[test]
+fn medusa_framework_uses_tree_verification_cost() {
+    // U-Medusa verify jobs carry the tree size (8 tokens), visible as a
+    // higher mean per-GPU delay than U-shape's single-token decodes under
+    // identical workload.
+    let mut um = ExperimentConfig::preset(Framework::UMedusa, Dataset::SpecBench);
+    um.workload.n_requests = 100;
+    let mut us = um.clone();
+    us.framework = Framework::UShape;
+    us.strategies = hat::config::Strategies::for_framework(Framework::UShape, Dataset::SpecBench);
+    let (m_mean, _) = run(&um).gpu_delay_stats();
+    let (s_mean, _) = run(&us).gpu_delay_stats();
+    assert!(m_mean > s_mean, "medusa {m_mean} !> ushape {s_mean}");
+}
+
+#[test]
+fn seeds_isolate_experiments() {
+    let mut a = ExperimentConfig::preset(Framework::Hat, Dataset::SpecBench);
+    a.workload.n_requests = 50;
+    let mut b = a.clone();
+    b.seed = 43;
+    let sa = run(&a).summary();
+    let sb = run(&b).summary();
+    assert_ne!(sa.ttft_mean_ms, sb.ttft_mean_ms, "different seeds, same trace?");
+}
