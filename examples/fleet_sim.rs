@@ -2,8 +2,9 @@
 //! small model under a batched multi-device workload and report the
 //! paper's metrics.
 //!
-//! Phase 1 — REAL: load the AOT model, run batched requests back-to-back
-//! through the full HAT protocol on the PJRT runtime, measuring wall-clock
+//! Phase 1 — REAL: load the model (AOT artifacts when built, otherwise
+//! the reference backend's synthetic model), run batched requests
+//! back-to-back through the full HAT protocol, measuring wall-clock
 //! latency/throughput and the SD round shapes.
 //!
 //! Phase 2 — FLEET: replay the measured round shapes through the
@@ -27,15 +28,15 @@ use hat::workload::PromptPool;
 
 fn main() -> anyhow::Result<()> {
     let dir = ArtifactRegistry::default_dir();
-    anyhow::ensure!(
-        dir.join("manifest.json").exists(),
-        "artifacts not found — run `make artifacts` first"
+    let engine = Engine::load_default()?;
+    println!(
+        "=== Phase 1: real batched serving ({} backend) ===",
+        engine.reg.backend_name()
     );
-
-    // ---------------- Phase 1: real serving ------------------------------
-    println!("=== Phase 1: real batched serving over PJRT ===");
-    let engine = Engine::load(&dir)?;
-    let pool = PromptPool::load(&dir.join(&engine.reg.manifest.prompts_file))?;
+    let pool = match PromptPool::load(&dir.join(&engine.reg.manifest().prompts_file)) {
+        Ok(p) => p,
+        Err(_) => PromptPool::synthetic(engine.spec().vocab, 16, 256, 11),
+    };
     let mut rng = Rng::new(11);
     let n_requests = 12;
     let gen_len = 32;
@@ -46,7 +47,8 @@ fn main() -> anyhow::Result<()> {
         let plen = 48 + (i * 37) % 128;
         let prompt = pool.sample(plen, &mut rng);
         let t0 = std::time::Instant::now();
-        let (toks, rounds, accept) = generate(&engine, &prompt, gen_len)?;
+        let (toks, rounds, accept) =
+            generate(&engine, &prompt, gen_len, &SpecDecConfig::default())?;
         let dt = t0.elapsed().as_secs_f64();
         latencies.push(dt * 1e3);
         tokens_out += toks.len();

@@ -16,7 +16,6 @@ use hat::model::DeviceStream;
 use hat::runtime::ArtifactRegistry;
 use hat::util::rng::Rng;
 use hat::workload::PromptPool;
-use xla::FromRawBytes as _;
 
 fn main() -> anyhow::Result<()> {
     let dir = ArtifactRegistry::default_dir();
@@ -25,6 +24,13 @@ fn main() -> anyhow::Result<()> {
         "artifacts not found — run `make artifacts` first"
     );
     let engine = Engine::load(&dir)?;
+    // The audit's numbers are only meaningful on the *trained* model: the
+    // default reference backend would run the attack against seeded
+    // pseudo-weights and report noise.  Fail fast instead.
+    anyhow::ensure!(
+        engine.reg.backend_name() == "pjrt",
+        "privacy_audit needs the trained model: build with --features pjrt and set HAT_BACKEND=pjrt"
+    );
     let spec = engine.spec().clone();
     let pool = PromptPool::load(&dir.join("prompts.bin"))?;
     let mut rng = Rng::new(5);
@@ -45,12 +51,10 @@ fn main() -> anyhow::Result<()> {
 
     // The attack: cloud knows the public embedding table; tries nearest
     // neighbour against (a) raw embeddings, (b) the actual upload.
-    let npz = dir.join("weights.npz");
-    let lits = xla::Literal::read_npz(&npz, &()).map_err(|e| anyhow::anyhow!("{e:?}"))?;
-    let embed = lits
-        .iter()
-        .find(|(n, _)| n == "embed")
-        .map(|(_, l)| l.to_vec::<f32>().unwrap())
+    let embed = engine
+        .reg
+        .weight("embed")
+        .map(|t| t.data)
         .ok_or_else(|| anyhow::anyhow!("embed weights missing"))?;
     let v = spec.vocab;
     let h = spec.hidden;

@@ -1,11 +1,11 @@
 //! Quickstart: one request through the full HAT protocol, for real.
 //!
-//! Loads the AOT artifacts (built by `make artifacts`), picks an
-//! in-distribution prompt, then runs chunked prefill + speculative
-//! decoding with parallel drafting through the PJRT runtime — the same
-//! code path `hat serve` exposes over TCP.
+//! Loads the AOT artifacts when built (`make artifacts`), otherwise the
+//! reference backend's synthetic model; picks an in-distribution prompt,
+//! then runs chunked prefill + speculative decoding with parallel
+//! drafting — the same code path `hat serve` exposes over TCP.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
 use hat::config::SpecDecConfig;
 use hat::engine::Engine;
@@ -16,22 +16,21 @@ use hat::workload::PromptPool;
 
 fn main() -> anyhow::Result<()> {
     let dir = ArtifactRegistry::default_dir();
-    anyhow::ensure!(
-        dir.join("manifest.json").exists(),
-        "artifacts not found — run `make artifacts` first"
-    );
     let t0 = std::time::Instant::now();
-    let engine = Engine::load(&dir)?;
+    let engine = Engine::load_default()?;
     println!(
-        "loaded {} ({} artifacts, {} LLM params, Λ {} params) in {:.1}s",
-        dir.display(),
-        engine.reg.manifest.artifacts.len(),
-        engine.reg.manifest.train_meta.lm_params,
-        engine.reg.manifest.train_meta.adapter_params,
+        "loaded {} backend ({} artifacts, {} LLM params, Λ {} params) in {:.1}s",
+        engine.reg.backend_name(),
+        engine.reg.manifest().artifacts.len(),
+        engine.reg.manifest().train_meta.lm_params,
+        engine.reg.manifest().train_meta.adapter_params,
         t0.elapsed().as_secs_f64()
     );
 
-    let pool = PromptPool::load(&dir.join(&engine.reg.manifest.prompts_file))?;
+    let pool = match PromptPool::load(&dir.join(&engine.reg.manifest().prompts_file)) {
+        Ok(p) => p,
+        Err(_) => PromptPool::synthetic(engine.spec().vocab, 16, 256, 7),
+    };
     let mut rng = Rng::new(7);
     let prompt = pool.sample(96, &mut rng);
     println!("prompt: {} tokens", prompt.len());

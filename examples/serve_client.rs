@@ -53,7 +53,12 @@ fn main() -> anyhow::Result<()> {
     let mut stream = stream;
 
     let dir = ArtifactRegistry::default_dir();
-    let pool = PromptPool::load(&dir.join("prompts.bin"))?;
+    // Token ids < 256 are valid for both the synthetic reference model
+    // (vocab 256) and the trained artifacts (vocab 512).
+    let pool = match PromptPool::load(&dir.join("prompts.bin")) {
+        Ok(p) => p,
+        Err(_) => PromptPool::synthetic(256, 8, 160, 3),
+    };
     let mut rng = Rng::new(3);
 
     for (i, plen) in [40usize, 80, 120].iter().enumerate() {

@@ -4,7 +4,7 @@
 //!
 //! L3: event-queue throughput, fleet-sim end-to-end event rate, chunker
 //!     solve, batcher formation.
-//! Runtime: PJRT execute latency per artifact bucket, literal staging.
+//! Runtime: backend execute latency per artifact bucket, tensor staging.
 
 use std::time::Instant;
 
@@ -101,35 +101,35 @@ fn main() {
     );
     results.push(("fleet_sim_200req_s", wall * 1e3));
 
-    // Runtime: PJRT execute latency per bucket (needs artifacts).
+    // Runtime: backend execute latency per bucket (synthetic reference
+    // model when artifacts are not built, so this always runs).
     let dir = hat::runtime::ArtifactRegistry::default_dir();
-    if dir.join("manifest.json").exists() {
-        section("Perf: runtime (PJRT CPU) per-call latency");
-        let reg = hat::runtime::ArtifactRegistry::load(&dir).unwrap();
-        let spec = reg.model().clone();
-        for t in [1usize, 8, 64, 256] {
-            let hidden = vec![0.1f32; t * spec.hidden];
-            let mkv = hat::runtime::zeros_literal(&spec.middle_kv_dims()).unwrap();
-            let name = format!("cloud_middle_{t}");
-            let (ms, _) = bench(&format!("{name} execute"), 15, || {
-                let h = hat::runtime::f32_literal_padded(&hidden, spec.hidden, t).unwrap();
-                let pos = hat::runtime::pos_literal(0);
-                let outs = reg.run(&name, &[&h, &mkv, &pos]).unwrap();
-                outs.len() as u64
-            });
-            results.push((Box::leak(format!("cloud_middle_{t}_ms").into_boxed_str()) as &str, ms));
+    let reg = hat::runtime::ArtifactRegistry::load_or_synthetic(&dir).unwrap();
+    section(&format!("Perf: runtime ({} backend) per-call latency", reg.backend_name()));
+    let spec = reg.model().clone();
+    for t in [1usize, 4, 16, 64, 256] {
+        let name = format!("cloud_middle_{t}");
+        if reg.manifest().artifact(&name).is_none() {
+            continue;
         }
-        let s = reg.stats.borrow();
-        println!(
-            "runtime totals: {} compiles ({:.0} ms), {} executes ({:.1} ms avg)",
-            s.compiles,
-            s.compile_ms,
-            s.executions,
-            s.execute_ms / s.executions.max(1) as f64
-        );
-    } else {
-        eprintln!("artifacts/ not built — skipping PJRT microbenches");
+        let hidden = vec![0.1f32; t * spec.hidden];
+        let mkv = hat::runtime::zeros_tensor(&spec.middle_kv_dims());
+        let (ms, _) = bench(&format!("{name} execute"), 15, || {
+            let h = hat::runtime::f32_tensor_padded(&hidden, spec.hidden, t).unwrap();
+            let pos = hat::runtime::pos_tensor(0);
+            let outs = reg.run(&name, &[&h, &mkv, &pos]).unwrap();
+            outs.len() as u64
+        });
+        results.push((Box::leak(format!("cloud_middle_{t}_ms").into_boxed_str()) as &str, ms));
     }
+    let s = reg.stats();
+    println!(
+        "runtime totals: {} compiles ({:.0} ms), {} executes ({:.1} ms avg)",
+        s.compiles,
+        s.compile_ms,
+        s.executions,
+        s.execute_ms / s.executions.max(1) as f64
+    );
 
     let out = obj(results.iter().map(|(k, v)| (*k, Value::Num(*v))).collect());
     let p = write_json("perf_hotpath", &out);

@@ -22,7 +22,7 @@ fn main() {
         let pool = PromptPool::load(&dir.join("prompts.bin")).expect("prompts");
         let cfg = SpecDecConfig::default();
         let p = SdProfile::measure(&engine, &pool, &cfg, 8, 48, 42).expect("profile");
-        let tm = &engine.reg.manifest.train_meta;
+        let tm = &engine.reg.manifest().train_meta;
         (p, (tm.lm_params, tm.adapter_params, tm.medusa_params))
     } else {
         eprintln!("artifacts/ not built — using the recorded default profile");

@@ -1,0 +1,243 @@
+//! Execution backends: the seam between the HAT protocol layers and
+//! whatever actually runs the split-model artifacts.
+//!
+//! Everything above this module (engine, specdec, server, cli, the fleet
+//! simulator) speaks plain [`Tensor`]s and artifact names; everything
+//! accelerator-specific lives behind the [`ExecBackend`] trait:
+//!
+//! - [`reference`] — deterministic pure-Rust backend (default).  Executes
+//!   the manifest's artifact shapes with the same bucket/padding/KV
+//!   semantics as the real runtime, from seeded pseudo-weights, so the
+//!   whole stack — speculative decoding, the TCP server, the fleet
+//!   simulator profiles — runs end-to-end on a machine with nothing
+//!   installed.  Can synthesize its own manifest when no artifacts exist.
+//! - [`pjrt`] (cargo feature `pjrt`) — the real path: AOT HLO artifacts
+//!   compiled and executed through the PJRT C API (`xla` crate).
+//!
+//! Backend choice at runtime: `HAT_BACKEND=reference|pjrt` (default
+//! `reference`; `pjrt` requires the feature).
+
+pub mod reference;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+
+/// A plain host tensor: row-major f32 data plus dims.  Integer inputs
+/// (token ids, positions) are carried as exactly-representable f32 values
+/// and converted at the backend boundary per the manifest's dtype spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("tensor dims {:?} need {} elements, got {}", dims, n, data.len());
+        }
+        Ok(Tensor { dims, data })
+    }
+
+    /// Zero-filled tensor.
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        let n: usize = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Rank-0 scalar.
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { dims: Vec::new(), data: vec![v] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Scalar value (rank-0 / single-element tensors).
+    pub fn scalar_value(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("expected scalar tensor, got dims {:?}", self.dims);
+        }
+        Ok(self.data[0])
+    }
+}
+
+/// Build an i32-valued tensor of shape [n] from tokens, padding with 0.
+pub fn tokens_tensor(tokens: &[u32], n: usize) -> Result<Tensor> {
+    if tokens.len() > n {
+        bail!("{} tokens > bucket {n}", tokens.len());
+    }
+    let mut v: Vec<f32> = tokens.iter().map(|&t| t as f32).collect();
+    v.resize(n, 0.0);
+    Tensor::new(vec![n], v)
+}
+
+/// Build an f32 tensor of shape [rows_total, row] from row-major data,
+/// zero-padding missing rows.
+pub fn f32_tensor_padded(data: &[f32], row: usize, rows_total: usize) -> Result<Tensor> {
+    if row == 0 || data.len() % row != 0 {
+        bail!("data len {} not a multiple of row width {row}", data.len());
+    }
+    if data.len() / row > rows_total {
+        bail!("{} rows > {rows_total}", data.len() / row);
+    }
+    let mut v = data.to_vec();
+    v.resize(rows_total * row, 0.0);
+    Tensor::new(vec![rows_total, row], v)
+}
+
+/// Scalar i32 position tensor.
+pub fn pos_tensor(pos: usize) -> Tensor {
+    Tensor::scalar(pos as f32)
+}
+
+/// Zero-filled f32 tensor with the given dims.
+pub fn zeros_tensor(dims: &[usize]) -> Tensor {
+    Tensor::zeros(dims)
+}
+
+/// Extract the f32 data of a tensor.
+pub fn to_f32_vec(t: &Tensor) -> Vec<f32> {
+    t.data.clone()
+}
+
+/// Compile/execute counters shared by all backends (perf harness).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub executions: usize,
+    pub compile_ms: f64,
+    pub execute_ms: f64,
+}
+
+/// The execution seam: everything a backend must provide to serve the HAT
+/// protocol.  Implementations own their manifest, weights and compiled
+/// artifacts; callers thread [`Tensor`]s through named artifacts.
+pub trait ExecBackend {
+    /// Short backend identifier ("reference", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// The manifest this backend executes.
+    fn manifest(&self) -> &Manifest;
+
+    /// Load (or synthesize) the model weights.  Called once by
+    /// `ArtifactRegistry::load` before any `run`; must be idempotent.
+    fn load_weights(&mut self) -> Result<()>;
+
+    /// Ensure artifact `name` is ready to execute (compile + cache).
+    /// `run` compiles lazily on first use; this is the eager entry point.
+    fn compile(&self, name: &str) -> Result<()>;
+
+    /// Execute artifact `name` on `inputs` (manifest input order, weights
+    /// excluded) and return its outputs in manifest output order.
+    fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Host copy of a named weight, if the backend materializes it
+    /// (used by the privacy audit's inversion attack).
+    fn weight(&self, name: &str) -> Option<Tensor>;
+
+    /// Snapshot of the compile/execute counters.
+    fn stats(&self) -> RuntimeStats;
+}
+
+/// Shared arity/shape validation against the manifest spec.
+pub fn validate_inputs(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "artifact {}: expected {} dynamic inputs, got {}",
+            spec.name,
+            spec.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (t, is) in inputs.iter().zip(&spec.inputs) {
+        let want: usize = is.shape.iter().product();
+        if t.element_count() != want {
+            bail!(
+                "artifact {} input '{}': expected shape {:?} ({} elems), got {:?}",
+                spec.name,
+                is.name,
+                is.shape,
+                want,
+                t.dims
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Which backend `ArtifactRegistry::load` should construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Reference,
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Resolve from the `HAT_BACKEND` env var; the reference backend is
+    /// the default so a clean machine runs everything out of the box.
+    pub fn from_env() -> Result<BackendKind> {
+        match std::env::var("HAT_BACKEND").as_deref() {
+            Err(_) | Ok("") | Ok("reference") => Ok(BackendKind::Reference),
+            Ok("pjrt") => {
+                if cfg!(feature = "pjrt") {
+                    Ok(BackendKind::Pjrt)
+                } else {
+                    Err(anyhow!("HAT_BACKEND=pjrt but the 'pjrt' feature is not compiled in"))
+                }
+            }
+            Ok(other) => Err(anyhow!("unknown HAT_BACKEND '{other}' (reference|pjrt)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_helpers_shapes() {
+        let t = tokens_tensor(&[1, 2, 3], 8).unwrap();
+        assert_eq!(t.element_count(), 8);
+        assert_eq!(t.data[2], 3.0);
+        assert_eq!(t.data[5], 0.0);
+        let f = f32_tensor_padded(&[1.0, 2.0, 3.0, 4.0], 2, 4).unwrap();
+        assert_eq!(f.element_count(), 8);
+        assert_eq!(f.dims, vec![4, 2]);
+        let z = zeros_tensor(&[2, 3, 4]);
+        assert_eq!(z.element_count(), 24);
+        assert_eq!(to_f32_vec(&z)[5], 0.0);
+        assert_eq!(pos_tensor(7).scalar_value().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn tensor_rejects_bad_shapes() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(tokens_tensor(&[1, 2, 3], 2).is_err());
+        assert!(f32_tensor_padded(&[1.0, 2.0, 3.0], 2, 4).is_err());
+        assert!(f32_tensor_padded(&[1.0; 10], 2, 4).is_err());
+    }
+
+    #[test]
+    fn clone_is_deep() {
+        let a = f32_tensor_padded(&[1.0, 2.0], 2, 1).unwrap();
+        let mut b = a.clone();
+        b.data[0] = 9.0;
+        assert_eq!(a.data[0], 1.0);
+    }
+
+    #[test]
+    fn backend_kind_default_is_reference() {
+        // No env var manipulation (tests run in parallel): just check the
+        // default resolution path when HAT_BACKEND is unset or empty.
+        if std::env::var("HAT_BACKEND").is_err() {
+            assert_eq!(BackendKind::from_env().unwrap(), BackendKind::Reference);
+        }
+    }
+}

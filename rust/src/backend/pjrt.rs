@@ -1,0 +1,247 @@
+//! PJRT backend (cargo feature `pjrt`): loads the AOT artifacts (HLO text
+//! + weights.npz + manifest) and executes them through the PJRT C API
+//! (`xla` crate, CPU client).  This is the only module in the crate that
+//! may name `xla::` types.
+//!
+//! Key properties (carried over from the original runtime):
+//! - HLO **text** interchange (xla_extension 0.5.1 rejects jax≥0.5's
+//!   64-bit-id serialized protos; the text parser reassigns ids);
+//! - weights are uploaded once as device-resident `PjRtBuffer`s and shared
+//!   by every executable variant (`execute_b` mixes weight buffers with
+//!   staged per-call dynamic inputs);
+//! - executables are compiled lazily per (kind, token-bucket) on first use
+//!   and cached — a fleet simulation only pays for the buckets it touches.
+//!
+//! Plain [`Tensor`]s cross this boundary; token/position inputs are
+//! converted to i32 literals per the manifest's per-input dtype.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::FromRawBytes as _;
+
+use super::{validate_inputs, ExecBackend, RuntimeStats, Tensor};
+use crate::runtime::manifest::{Manifest, TensorSpec};
+
+pub struct PjrtBackend {
+    manifest: Manifest,
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    /// Weight name -> device-resident buffer.
+    weights: HashMap<String, xla::PjRtBuffer>,
+    /// Host copies backing the weight buffers.  TFRT-CPU
+    /// `BufferFromHostLiteral` copies *asynchronously*: the source literal
+    /// must outlive the copy, so we keep them for the backend's lifetime
+    /// (declared after `weights` → dropped after the buffers).
+    weight_literals: Vec<(String, xla::Literal)>,
+    /// Artifact name -> compiled executable (lazy).
+    executables: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl PjrtBackend {
+    /// Open `dir` (usually `artifacts/`): parse the manifest and create
+    /// the CPU client.  Weights are uploaded by `load_weights`.
+    pub fn load(dir: &Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtBackend {
+            manifest,
+            dir: dir.to_path_buf(),
+            client,
+            weights: HashMap::new(),
+            weight_literals: Vec::new(),
+            executables: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = self.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let exe = std::rc::Rc::new(exe);
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        self.executables.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Convert a host tensor into a literal per the manifest dtype.
+    fn to_literal(t: &Tensor, spec: &TensorSpec) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+        match spec.dtype.as_str() {
+            "i32" => {
+                let v: Vec<i32> = t.data.iter().map(|&x| x.round() as i32).collect();
+                if dims.is_empty() {
+                    return Ok(xla::Literal::scalar(v[0]));
+                }
+                xla::Literal::vec1(&v)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("i32 literal '{}': {e:?}", spec.name))
+            }
+            _ => {
+                if dims.is_empty() {
+                    return Ok(xla::Literal::scalar(t.data[0]));
+                }
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("f32 literal '{}': {e:?}", spec.name))
+            }
+        }
+    }
+
+    /// Convert an output literal back into a host tensor.
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+        let data: Vec<f32> = match spec.dtype.as_str() {
+            "i32" => lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("output '{}' to_vec: {e:?}", spec.name))?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect(),
+            _ => lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("output '{}' to_vec: {e:?}", spec.name))?,
+        };
+        Tensor::new(spec.shape.clone(), data)
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load_weights(&mut self) -> Result<()> {
+        if !self.weights.is_empty() {
+            return Ok(());
+        }
+        let npz = self.dir.join(&self.manifest.weights_file);
+        let literals = xla::Literal::read_npz(&npz, &())
+            .map_err(|e| anyhow!("read {}: {e:?}", npz.display()))?;
+        for (name, lit) in literals {
+            let name = name.strip_suffix(".npy").unwrap_or(&name).to_string();
+            let buf = self
+                .client
+                .buffer_from_host_literal(None, &lit)
+                .map_err(|e| anyhow!("upload weight {name}: {e:?}"))?;
+            self.weights.insert(name.clone(), buf);
+            self.weight_literals.push((name, lit));
+        }
+        for art in &self.manifest.artifacts {
+            for w in &art.weights {
+                if !self.weights.contains_key(w) {
+                    bail!("artifact {} references missing weight {w}", art.name);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        validate_inputs(spec, inputs)?;
+        let exe = self.executable(name)?;
+        let t0 = std::time::Instant::now();
+
+        // Mixed-input execute: weights are device-resident buffers, dynamic
+        // inputs are staged from host literals per call.
+        let dynamic: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(t, is)| Self::to_literal(t, is))
+            .collect::<Result<_>>()?;
+        let staged: Vec<xla::PjRtBuffer> = dynamic
+            .iter()
+            .map(|l| {
+                self.client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("stage input: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(spec.weights.len() + staged.len());
+        for w in &spec.weights {
+            args.push(
+                self.weights
+                    .get(w)
+                    .ok_or_else(|| anyhow!("weights not loaded (missing {w})"))?,
+            );
+        }
+        for b in &staged {
+            args.push(b);
+        }
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output of {name}: {e:?}"))?;
+        // Lowered with return_tuple=True: single tuple output.
+        let mut lit = lit;
+        let outs = lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "artifact {name}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                outs.len()
+            );
+        }
+        let tensors: Vec<Tensor> = outs
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(l, os)| Self::from_literal(l, os))
+            .collect::<Result<_>>()?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        Ok(tensors)
+    }
+
+    fn weight(&self, name: &str) -> Option<Tensor> {
+        let (_, lit) = self.weight_literals.iter().find(|(n, _)| n == name)?;
+        let shape = lit.array_shape().ok()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().ok()?;
+        Tensor::new(dims, data).ok()
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+}

@@ -1,0 +1,643 @@
+//! Deterministic pure-Rust reference backend.
+//!
+//! Executes the manifest's artifact set — same names, same bucket/padding
+//! shapes, same KV-threading contract as the PJRT path — from seeded
+//! pseudo-weights, entirely in safe Rust.  Two properties matter:
+//!
+//! 1. **Determinism**: every value is a pure function of (seed, token,
+//!    position, dim), so same-seed runs are bit-identical — the fleet
+//!    profiles, the golden-style protocol tests and the metrics pipeline
+//!    all reproduce exactly.
+//! 2. **KV faithfulness**: each submodel keeps a per-position cache; a row
+//!    at position `p` depends only on rows `< p`, so speculative rollback
+//!    (rewinding a write head and overwriting the stale tail) behaves
+//!    exactly like the real runtime, and chunked prefill is
+//!    chunk-size-invariant.
+//!
+//! The draft path (shallow → adapter Λ → head) intentionally approximates
+//! the verify path (shallow → middle → head) with a small position-keyed
+//! perturbation, so speculative decoding exhibits realistic partial
+//! acceptance instead of degenerate all-or-nothing behaviour.
+//!
+//! When no artifacts are on disk, [`ReferenceBackend::synthetic`] builds a
+//! tiny in-memory manifest (vocab 256, hidden 64, buckets 1..256) so the
+//! whole stack runs with zero build steps.
+
+use std::cell::RefCell;
+use std::collections::HashSet;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{validate_inputs, ExecBackend, RuntimeStats, Tensor};
+use crate::runtime::manifest::{ArtifactSpec, Manifest, ModelSpec, TensorSpec, TrainMeta};
+
+// Hash-stream tags for the pseudo-weight families.
+const TAG_EMBED: u64 = 0xE0BED;
+const TAG_POS: u64 = 0x90511;
+const TAG_MID: u64 = 0x3D1DD;
+const TAG_NOISE: u64 = 0xAD0A7;
+const TAG_HEAD: u64 = 0x4EAD0;
+const TAG_MEDUSA: u64 = 0x3ED05A00;
+
+/// Logit gain: spreads head outputs so the Eq. 5 top-probability stop rule
+/// operates in a realistic regime (neither uniformly tiny nor saturated).
+const LOGIT_GAIN: f32 = 6.0;
+/// Draft-path perturbation amplitude (controls the acceptance rate).
+const DRAFT_NOISE: f32 = 0.25;
+
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+pub struct ReferenceBackend {
+    manifest: Manifest,
+    seed: u64,
+    // Pseudo-weight tables, precomputed once so the execute hot paths are
+    // pure arithmetic (matters for debug-mode test runs).
+    embed: Vec<f32>,       // [V, H]
+    pos_noise: Vec<f32>,   // [S, H]
+    draft_noise: Vec<f32>, // [S, H]
+    mid_bias: Vec<f32>,    // [H]
+    head_w: Vec<f32>,      // [V, H]
+    medusa_w: Vec<f32>,    // [n_medusa, V, H]
+    stats: RefCell<RuntimeStats>,
+    compiled: RefCell<HashSet<String>>,
+}
+
+impl ReferenceBackend {
+    /// Backend over an explicit manifest (weights are synthesized from
+    /// `seed`; nothing is read from disk).
+    pub fn new(manifest: Manifest, seed: u64) -> ReferenceBackend {
+        let m = manifest.model.clone();
+        let (v, h, s, n) = (m.vocab, m.hidden, m.max_seq, m.n_medusa);
+        let unit = |tag: u64, i: usize, j: usize| -> f32 {
+            let k = (i as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (j as u64).wrapping_mul(0xD1342543DE82EF95);
+            let z = mix(seed ^ mix(tag) ^ mix(k));
+            ((z >> 11) as f64 * (2.0 / (1u64 << 53) as f64) - 1.0) as f32
+        };
+        let table = |tag: u64, rows: usize, cols: usize| -> Vec<f32> {
+            let mut t = Vec::with_capacity(rows * cols);
+            for i in 0..rows {
+                for j in 0..cols {
+                    t.push(unit(tag, i, j));
+                }
+            }
+            t
+        };
+        ReferenceBackend {
+            embed: table(TAG_EMBED, v, h),
+            pos_noise: table(TAG_POS, s, h),
+            draft_noise: table(TAG_NOISE, s, h),
+            mid_bias: table(TAG_MID, 1, h),
+            head_w: table(TAG_HEAD, v, h),
+            medusa_w: (0..n).flat_map(|j| table(TAG_MEDUSA + j as u64, v, h)).collect(),
+            manifest,
+            seed,
+            stats: RefCell::new(RuntimeStats::default()),
+            compiled: RefCell::new(HashSet::new()),
+        }
+    }
+
+    /// Backend over `dir/manifest.json` (the artifact files themselves are
+    /// not needed — only the shapes).
+    pub fn load(dir: &Path, seed: u64) -> Result<ReferenceBackend> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        Ok(ReferenceBackend::new(manifest, seed))
+    }
+
+    /// Backend over a self-contained synthetic manifest — no files at all.
+    pub fn synthetic(seed: u64) -> ReferenceBackend {
+        ReferenceBackend::new(synthetic_manifest(), seed)
+    }
+
+    /// The pseudo-weight seed this backend was built from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    // -- pseudo-weight model -----------------------------------------------
+
+    fn embed_row(&self, tok: u32, h: usize) -> &[f32] {
+        let t = (tok as usize).min(self.manifest.model.vocab - 1);
+        &self.embed[t * h..(t + 1) * h]
+    }
+
+    /// Shallow submodel, one token at absolute position `p` given the mean
+    /// of the previous KV rows.
+    fn shallow_core(&self, tok: u32, p: usize, prev_mean: &[f32]) -> Vec<f32> {
+        let h = prev_mean.len();
+        let e = self.embed_row(tok, h);
+        let pn = &self.pos_noise[p * h..(p + 1) * h];
+        (0..h)
+            .map(|d| (e[d] + 0.8 * prev_mean[d] + 0.3 * pn[d]).tanh())
+            .collect()
+    }
+
+    /// Middle submodel / adapter Λ shared core over one shallow row.  The
+    /// two paths differ only in which KV history feeds `prev_mean` and in
+    /// the adapter's extra draft perturbation.
+    fn deep_core(&self, s: &[f32], prev_mean: &[f32]) -> Vec<f32> {
+        (0..s.len())
+            .map(|d| (1.1 * s[d] + 0.7 * prev_mean[d] + 0.1 * self.mid_bias[d]).tanh())
+            .collect()
+    }
+
+    /// Output head: deep hidden row × weight table [vocab, H] → logits.
+    fn head_row(&self, deep: &[f32], w: &[f32], vocab: usize) -> Vec<f32> {
+        let h = deep.len();
+        let scale = LOGIT_GAIN / (h as f32).sqrt();
+        (0..vocab)
+            .map(|v| {
+                let row = &w[v * h..(v + 1) * h];
+                scale * deep.iter().zip(row).map(|(a, b)| a * b).sum::<f32>()
+            })
+            .collect()
+    }
+
+    // -- KV helpers --------------------------------------------------------
+
+    /// Sum of KV rows 0..p (row stride = hidden; rows live in the leading
+    /// max_seq×hidden region of the cache tensor, the rest stays zero).
+    fn kv_prefix_sum(kv: &[f32], p: usize, h: usize) -> Vec<f32> {
+        let mut sum = vec![0.0f32; h];
+        for q in 0..p {
+            for d in 0..h {
+                sum[d] += kv[q * h + d];
+            }
+        }
+        sum
+    }
+
+    fn mean_of(sum: &[f32], rows: usize) -> Vec<f32> {
+        let n = rows.max(1) as f32;
+        sum.iter().map(|&x| x / n).collect()
+    }
+
+    /// Strict bound for a single real row (draft step).
+    fn check_pos(&self, p: usize, rows: usize) -> Result<()> {
+        let s = self.manifest.model.max_seq;
+        if p + rows > s {
+            bail!("KV position {p}+{rows} exceeds max_seq {s}");
+        }
+        Ok(())
+    }
+
+    /// Start-position bound for bucketed chunk artifacts.  The bucket may
+    /// pad past `max_seq` near the end of the context (real tokens are
+    /// bounded by the callers; padding rows are sliced off by the engine),
+    /// so only the start must be in range — rows beyond `max_seq` are
+    /// clipped, mirroring the real runtime's clamped dynamic-update-slice.
+    fn check_start(&self, pos: usize) -> Result<()> {
+        let s = self.manifest.model.max_seq;
+        if pos > s {
+            bail!("KV start position {pos} exceeds max_seq {s}");
+        }
+        Ok(())
+    }
+
+    fn pos_of(t: &Tensor) -> Result<usize> {
+        Ok(t.scalar_value()?.round() as usize)
+    }
+}
+
+impl ExecBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load_weights(&mut self) -> Result<()> {
+        Ok(()) // pseudo-weights are derived on the fly from the seed
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        if self.manifest.artifact(name).is_none() {
+            bail!("unknown artifact {name}");
+        }
+        if self.compiled.borrow_mut().insert(name.to_string()) {
+            self.stats.borrow_mut().compiles += 1;
+        }
+        Ok(())
+    }
+
+    fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        validate_inputs(spec, inputs)?;
+        self.compile(name)?;
+        let t0 = std::time::Instant::now();
+
+        let h = self.manifest.model.hidden;
+        let v = self.manifest.model.vocab;
+        let b = spec.t;
+
+        let outs: Vec<Tensor> = match spec.kind.as_str() {
+            "device_input" => {
+                // [tokens(b), skv, pos] -> [hidden(b,H), skv']
+                let tokens = &inputs[0].data;
+                let mut skv = inputs[1].data.clone();
+                let pos = Self::pos_of(inputs[2])?;
+                self.check_start(pos)?;
+                let s_max = self.manifest.model.max_seq;
+                let mut sum = Self::kv_prefix_sum(&skv, pos, h);
+                let mut hidden = Vec::with_capacity(b * h);
+                for i in 0..b {
+                    let p = pos + i;
+                    if p >= s_max {
+                        hidden.resize((i + 1) * h, 0.0); // clipped padding row
+                        continue;
+                    }
+                    let tok = tokens[i].round() as u32;
+                    let s = self.shallow_core(tok, p, &Self::mean_of(&sum, p));
+                    for d in 0..h {
+                        skv[p * h + d] = s[d];
+                        sum[d] += s[d];
+                    }
+                    hidden.extend_from_slice(&s);
+                }
+                vec![
+                    Tensor::new(vec![b, h], hidden)?,
+                    Tensor::new(inputs[1].dims.clone(), skv)?,
+                ]
+            }
+            "adapter_prefill" => {
+                // [hidden(b,H), akv, pos] -> [akv']
+                let hidden = &inputs[0].data;
+                let mut akv = inputs[1].data.clone();
+                let pos = Self::pos_of(inputs[2])?;
+                self.check_start(pos)?;
+                let s_max = self.manifest.model.max_seq;
+                let mut sum = Self::kv_prefix_sum(&akv, pos, h);
+                for i in 0..b {
+                    let p = pos + i;
+                    if p >= s_max {
+                        continue; // clipped padding row
+                    }
+                    let a = self.deep_core(&hidden[i * h..(i + 1) * h], &Self::mean_of(&sum, p));
+                    for d in 0..h {
+                        akv[p * h + d] = a[d];
+                        sum[d] += a[d];
+                    }
+                }
+                vec![Tensor::new(inputs[1].dims.clone(), akv)?]
+            }
+            "cloud_middle" => {
+                // [hidden(b,H), mkv, pos] -> [deep(b,H), mkv']
+                let hidden = &inputs[0].data;
+                let mut mkv = inputs[1].data.clone();
+                let pos = Self::pos_of(inputs[2])?;
+                self.check_start(pos)?;
+                let s_max = self.manifest.model.max_seq;
+                let mut sum = Self::kv_prefix_sum(&mkv, pos, h);
+                let mut deep = Vec::with_capacity(b * h);
+                for i in 0..b {
+                    let p = pos + i;
+                    if p >= s_max {
+                        deep.resize((i + 1) * h, 0.0); // clipped padding row
+                        continue;
+                    }
+                    let m = self.deep_core(&hidden[i * h..(i + 1) * h], &Self::mean_of(&sum, p));
+                    for d in 0..h {
+                        mkv[p * h + d] = m[d];
+                        sum[d] += m[d];
+                    }
+                    deep.extend_from_slice(&m);
+                }
+                vec![
+                    Tensor::new(vec![b, h], deep)?,
+                    Tensor::new(inputs[1].dims.clone(), mkv)?,
+                ]
+            }
+            "device_head" => {
+                // [deep(b,H)] -> [logits(b,V)]
+                let deep = &inputs[0].data;
+                let mut logits = Vec::with_capacity(b * v);
+                for i in 0..b {
+                    logits.extend(self.head_row(&deep[i * h..(i + 1) * h], &self.head_w, v));
+                }
+                vec![Tensor::new(vec![b, v], logits)?]
+            }
+            "draft_step" => {
+                // [token(1), skv, akv, pos] -> [logits(V), skv', akv', shallow(H)]
+                let tok = inputs[0].data[0].round() as u32;
+                let mut skv = inputs[1].data.clone();
+                let mut akv = inputs[2].data.clone();
+                let p = Self::pos_of(inputs[3])?;
+                self.check_pos(p, 1)?;
+                let ssum = Self::kv_prefix_sum(&skv, p, h);
+                let s = self.shallow_core(tok, p, &Self::mean_of(&ssum, p));
+                skv[p * h..(p + 1) * h].copy_from_slice(&s);
+                let asum = Self::kv_prefix_sum(&akv, p, h);
+                let a = self.deep_core(&s, &Self::mean_of(&asum, p));
+                akv[p * h..(p + 1) * h].copy_from_slice(&a);
+                // Draft deep ≈ verify deep + position-keyed perturbation.
+                let dn = &self.draft_noise[p * h..(p + 1) * h];
+                let draft_deep: Vec<f32> =
+                    (0..h).map(|d| a[d] + DRAFT_NOISE * dn[d]).collect();
+                let logits = self.head_row(&draft_deep, &self.head_w, v);
+                vec![
+                    Tensor::new(vec![v], logits)?,
+                    Tensor::new(inputs[1].dims.clone(), skv)?,
+                    Tensor::new(inputs[2].dims.clone(), akv)?,
+                    Tensor::new(vec![h], s)?,
+                ]
+            }
+            "medusa_decode" => {
+                // [deep(1,H)] -> [logits(n_medusa, V)]
+                let n = self.manifest.model.n_medusa;
+                let deep = &inputs[0].data[..h];
+                let mut logits = Vec::with_capacity(n * v);
+                for j in 0..n {
+                    let w = &self.medusa_w[j * v * h..(j + 1) * v * h];
+                    logits.extend(self.head_row(deep, w, v));
+                }
+                vec![Tensor::new(vec![n, v], logits)?]
+            }
+            other => bail!("reference backend: unknown artifact kind '{other}'"),
+        };
+
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "artifact {name}: expected {} outputs, produced {}",
+                spec.outputs.len(),
+                outs.len()
+            );
+        }
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        Ok(outs)
+    }
+
+    fn weight(&self, name: &str) -> Option<Tensor> {
+        let m = &self.manifest.model;
+        match name {
+            "embed" => {
+                Some(Tensor { dims: vec![m.vocab, m.hidden], data: self.embed.clone() })
+            }
+            "head" => {
+                Some(Tensor { dims: vec![m.vocab, m.hidden], data: self.head_w.clone() })
+            }
+            _ => None,
+        }
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+}
+
+/// Tiny self-contained manifest: same artifact naming scheme as
+/// `python/compile/aot.py` (kind_bucket), buckets 1..256, vocab 256,
+/// hidden 64 — small enough that everything is fast, big enough that the
+/// protocol paths (bucket selection, padding, chunking) are exercised.
+pub fn synthetic_manifest() -> Manifest {
+    let model = ModelSpec {
+        vocab: 256,
+        hidden: 64,
+        layers: 4,
+        shallow_layers: 1,
+        heads: 4,
+        head_dim: 16,
+        ffn: 128,
+        max_seq: 640,
+        n_medusa: 4,
+    };
+    let buckets = vec![1usize, 4, 16, 64, 256];
+    let f32s = |name: &str, shape: Vec<usize>| TensorSpec {
+        name: name.into(),
+        shape,
+        dtype: "f32".into(),
+    };
+    let i32s = |name: &str, shape: Vec<usize>| TensorSpec {
+        name: name.into(),
+        shape,
+        dtype: "i32".into(),
+    };
+    let mut artifacts = Vec::new();
+    for &b in &buckets {
+        artifacts.push(ArtifactSpec {
+            name: Manifest::artifact_name("device_input", b),
+            kind: "device_input".into(),
+            t: b,
+            file: String::new(),
+            weights: Vec::new(),
+            inputs: vec![
+                i32s("tokens", vec![b]),
+                f32s("skv", model.shallow_kv_dims()),
+                i32s("pos", vec![]),
+            ],
+            outputs: vec![
+                f32s("hidden", vec![b, model.hidden]),
+                f32s("skv", model.shallow_kv_dims()),
+            ],
+        });
+        artifacts.push(ArtifactSpec {
+            name: Manifest::artifact_name("adapter_prefill", b),
+            kind: "adapter_prefill".into(),
+            t: b,
+            file: String::new(),
+            weights: Vec::new(),
+            inputs: vec![
+                f32s("hidden", vec![b, model.hidden]),
+                f32s("akv", model.adapter_kv_dims()),
+                i32s("pos", vec![]),
+            ],
+            outputs: vec![f32s("akv", model.adapter_kv_dims())],
+        });
+        artifacts.push(ArtifactSpec {
+            name: Manifest::artifact_name("cloud_middle", b),
+            kind: "cloud_middle".into(),
+            t: b,
+            file: String::new(),
+            weights: Vec::new(),
+            inputs: vec![
+                f32s("hidden", vec![b, model.hidden]),
+                f32s("mkv", model.middle_kv_dims()),
+                i32s("pos", vec![]),
+            ],
+            outputs: vec![
+                f32s("deep", vec![b, model.hidden]),
+                f32s("mkv", model.middle_kv_dims()),
+            ],
+        });
+        artifacts.push(ArtifactSpec {
+            name: Manifest::artifact_name("device_head", b),
+            kind: "device_head".into(),
+            t: b,
+            file: String::new(),
+            weights: Vec::new(),
+            inputs: vec![f32s("deep", vec![b, model.hidden])],
+            outputs: vec![f32s("logits", vec![b, model.vocab])],
+        });
+    }
+    artifacts.push(ArtifactSpec {
+        name: "draft_step_1".into(),
+        kind: "draft_step".into(),
+        t: 1,
+        file: String::new(),
+        weights: Vec::new(),
+        inputs: vec![
+            i32s("token", vec![1]),
+            f32s("skv", model.shallow_kv_dims()),
+            f32s("akv", model.adapter_kv_dims()),
+            i32s("pos", vec![]),
+        ],
+        outputs: vec![
+            f32s("logits", vec![model.vocab]),
+            f32s("skv", model.shallow_kv_dims()),
+            f32s("akv", model.adapter_kv_dims()),
+            f32s("shallow", vec![model.hidden]),
+        ],
+    });
+    artifacts.push(ArtifactSpec {
+        name: "medusa_decode_1".into(),
+        kind: "medusa_decode".into(),
+        t: 1,
+        file: String::new(),
+        weights: Vec::new(),
+        inputs: vec![f32s("deep", vec![1, model.hidden])],
+        outputs: vec![f32s("logits", vec![model.n_medusa, model.vocab])],
+    });
+    Manifest {
+        model,
+        buckets,
+        weights_file: "synthetic".into(),
+        prompts_file: "synthetic".into(),
+        artifacts,
+        train_meta: TrainMeta {
+            accept_length_probe: 0.0,
+            lm_params: 500_000,
+            adapter_params: 20_000,
+            medusa_params: 120_000,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{pos_tensor, tokens_tensor, zeros_tensor};
+
+    fn backend() -> ReferenceBackend {
+        ReferenceBackend::synthetic(42)
+    }
+
+    #[test]
+    fn synthetic_manifest_is_complete() {
+        let m = synthetic_manifest();
+        assert_eq!(m.artifacts.len(), 4 * m.buckets.len() + 2);
+        for kind in ["device_input", "cloud_middle", "device_head", "adapter_prefill"] {
+            for &b in &m.buckets {
+                assert!(m.artifact(&Manifest::artifact_name(kind, b)).is_some());
+            }
+        }
+        assert!(m.artifact("draft_step_1").is_some());
+        assert!(m.artifact("medusa_decode_1").is_some());
+        assert_eq!(m.model.heads * m.model.head_dim, m.model.hidden);
+    }
+
+    #[test]
+    fn device_input_threads_kv_and_is_deterministic() {
+        let be = backend();
+        let h = be.manifest().model.hidden;
+        let skv = zeros_tensor(&be.manifest().model.shallow_kv_dims());
+        let toks = tokens_tensor(&[3, 5, 7], 4).unwrap();
+        let o1 = be.run("device_input_4", &[&toks, &skv, &pos_tensor(0)]).unwrap();
+        let o2 = be.run("device_input_4", &[&toks, &skv, &pos_tensor(0)]).unwrap();
+        assert_eq!(o1[0], o2[0], "same inputs must give bit-identical outputs");
+        assert_eq!(o1[0].dims, vec![4, h]);
+        // KV rows 0..4 were written, row 4 untouched.
+        let kv = &o1[1].data;
+        assert!(kv[..4 * h].iter().any(|&x| x != 0.0));
+        assert!(kv[4 * h..5 * h].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn position_masking_ignores_stale_tail() {
+        // Writing garbage beyond position p must not affect a row computed
+        // at p — the invariant speculative rollback relies on.
+        let be = backend();
+        let h = be.manifest().model.hidden;
+        let skv = zeros_tensor(&be.manifest().model.shallow_kv_dims());
+        let toks = tokens_tensor(&[9], 1).unwrap();
+        let clean = be.run("device_input_1", &[&toks, &skv, &pos_tensor(2)]).unwrap();
+        let mut dirty = skv.clone();
+        for d in 0..h {
+            dirty.data[3 * h + d] = 123.0; // stale row past the write head
+        }
+        let with_stale = be.run("device_input_1", &[&toks, &dirty, &pos_tensor(2)]).unwrap();
+        assert_eq!(clean[0], with_stale[0]);
+    }
+
+    #[test]
+    fn bucket_padding_past_max_seq_is_clipped() {
+        // A chunk whose *bucket* pads past max_seq must not error or write
+        // out of the KV region — only the start position is bounded; the
+        // padded tail rows are clipped (they are sliced off by the engine).
+        let be = backend();
+        let m = be.manifest().model.clone();
+        let h = m.hidden;
+        let skv = zeros_tensor(&m.shallow_kv_dims());
+        let toks = tokens_tensor(&[7], 4).unwrap();
+        let pos = m.max_seq - 2; // bucket rows land on S-2, S-1, S, S+1
+        let outs = be.run("device_input_4", &[&toks, &skv, &pos_tensor(pos)]).unwrap();
+        assert_eq!(outs[0].element_count(), 4 * h);
+        assert!(outs[0].data[2 * h..].iter().all(|&x| x == 0.0), "clipped rows are zero");
+        assert!(outs[1].data[pos * h..(pos + 1) * h].iter().any(|&x| x != 0.0));
+        // A start position beyond max_seq is still an error.
+        let far = pos_tensor(m.max_seq + 1);
+        assert!(be.run("device_input_4", &[&toks, &skv, &far]).is_err());
+    }
+
+    #[test]
+    fn head_is_zero_on_zero_hidden() {
+        let be = backend();
+        let m = be.manifest().model.clone();
+        let deep = zeros_tensor(&[1, m.hidden]);
+        let outs = be.run("device_head_1", &[&deep]).unwrap();
+        assert_eq!(outs[0].element_count(), m.vocab);
+        assert!(outs[0].data.iter().all(|&x| x.abs() < 1e-6));
+    }
+
+    #[test]
+    fn rejects_wrong_arity_and_unknown() {
+        let be = backend();
+        assert!(be.run("device_head_1", &[]).is_err());
+        assert!(be.run("nonexistent", &[]).is_err());
+        let bad = zeros_tensor(&[3, 3]);
+        assert!(be.run("device_head_1", &[&bad]).is_err());
+    }
+
+    #[test]
+    fn embed_weight_rows_are_distinct() {
+        let be = backend();
+        let w = be.weight("embed").unwrap();
+        let m = be.manifest().model.clone();
+        assert_eq!(w.dims, vec![m.vocab, m.hidden]);
+        assert_ne!(w.data[..m.hidden], w.data[m.hidden..2 * m.hidden]);
+        assert!(be.weight("nope").is_none());
+    }
+
+    #[test]
+    fn stats_count_compiles_once_per_artifact() {
+        let be = backend();
+        let deep = zeros_tensor(&[1, be.manifest().model.hidden]);
+        be.run("device_head_1", &[&deep]).unwrap();
+        be.run("device_head_1", &[&deep]).unwrap();
+        let s = be.stats();
+        assert_eq!(s.compiles, 1);
+        assert_eq!(s.executions, 2);
+    }
+}

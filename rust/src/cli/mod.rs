@@ -4,7 +4,7 @@
 //! ```text
 //! hat simulate [--framework F] [--dataset D] [--rate R] [--pipeline P]
 //!              [--requests N] [--seed S] [--config FILE]
-//! hat serve    [--addr HOST:PORT]       real TCP serving over the engine
+//! hat serve    [--addr HOST:PORT] [--config FILE]   real TCP serving over the engine
 //! hat profile  [--rounds N]             measure SD round shapes
 //! hat inspect                           print manifest / artifact summary
 //! ```
@@ -110,8 +110,10 @@ fn cmd_simulate(f: &Flags) -> Result<(), String> {
 
 fn cmd_inspect() -> Result<(), String> {
     let dir = crate::runtime::ArtifactRegistry::default_dir();
-    let reg = crate::runtime::ArtifactRegistry::load(&dir).map_err(|e| e.to_string())?;
-    let m = &reg.manifest;
+    let reg =
+        crate::runtime::ArtifactRegistry::load_or_synthetic(&dir).map_err(|e| e.to_string())?;
+    let m = reg.manifest();
+    println!("backend: {}", reg.backend_name());
     println!(
         "model: vocab={} hidden={} layers={} (device {} / cloud {}) heads={} max_seq={}",
         m.model.vocab,

@@ -54,10 +54,33 @@ pub fn optimal_chunk(
             hi = mid;
         }
     }
-    // Round to a multiple of 8 (token-bucket friendliness), clamped.
-    let x = (0.5 * (lo + hi)).round() as usize;
-    let x = (x / 8).max(1) * 8;
-    x.clamp(lo_b, hi_b)
+    // Round to the nearest in-bracket multiple of 8 (token-bucket
+    // friendliness).  The old `(x / 8).max(1) * 8` always rounded *down*,
+    // which could land below `lo_b` (e.g. 19 → 16 with lo_b = 17) and then
+    // get clamped to a non-multiple, biasing every chunk small.
+    round_to_bucket(0.5 * (lo + hi), lo_b, hi_b)
+}
+
+/// Nearest multiple of 8 to `raw` within [lo, hi]; if the bracket contains
+/// no multiple of 8, fall back to plain rounding clamped into the bracket.
+fn round_to_bucket(raw: f64, lo: usize, hi: usize) -> usize {
+    debug_assert!(lo <= hi);
+    let down = (raw / 8.0).floor() as usize * 8;
+    let up = down + 8;
+    let in_bracket = |x: usize| (lo..=hi).contains(&x);
+    match (in_bracket(down), in_bracket(up)) {
+        (true, true) => {
+            // Nearest wins; ties round down.
+            if raw - down as f64 <= up as f64 - raw {
+                down
+            } else {
+                up
+            }
+        }
+        (true, false) => down,
+        (false, true) => up,
+        (false, false) => (raw.round() as usize).clamp(lo, hi),
+    }
 }
 
 #[cfg(test)]
@@ -120,6 +143,34 @@ mod tests {
         assert_eq!(optimal_chunk(8192.0, 1.0, g7(), 64.0, 4, (16, 512)), 16);
         // Infinite-ish uplink → max chunk.
         assert_eq!(optimal_chunk(8192.0, 1e12, g7(), 64.0, 4, (16, 512)), 512);
+    }
+
+    #[test]
+    fn rounding_respects_odd_lower_bound() {
+        // Regression (lo_b = 17): craft a crossing at x ≈ 19.05 —
+        // upload = 0.31·x, cloud = 4 + 0.1·x, equal at x = 4/0.21.
+        // The old code rounded 19 down to 16 (< lo_b) and clamped to 17,
+        // returning a non-multiple of 8; the fix picks 24, the nearest
+        // in-bracket multiple of 8.
+        let g = |x: f64| 2.0 + 0.1 * x;
+        let x = optimal_chunk(0.31, 1.0, g, 0.0, 1, (17, 512));
+        assert_eq!(x, 24, "nearest in-bracket multiple of 8 above lo_b");
+
+        // Bracket with no multiple of 8 at all: fall back to plain
+        // rounding inside the bracket.
+        let x = optimal_chunk(0.31, 1.0, g, 0.0, 1, (17, 20));
+        assert!((17..=20).contains(&x), "X = {x} outside [17,20]");
+    }
+
+    #[test]
+    fn round_to_bucket_cases() {
+        assert_eq!(round_to_bucket(19.05, 17, 512), 24);
+        assert_eq!(round_to_bucket(19.9, 16, 512), 16); // nearest is 16
+        assert_eq!(round_to_bucket(20.1, 16, 512), 24);
+        assert_eq!(round_to_bucket(510.0, 16, 512), 512);
+        assert_eq!(round_to_bucket(515.0, 16, 513), 512); // 520 > hi → down
+        assert_eq!(round_to_bucket(19.0, 17, 20), 19); // no multiple in bracket
+        assert_eq!(round_to_bucket(4.0, 1, 512), 8); // ties/near-zero stay in bracket
     }
 
     #[test]

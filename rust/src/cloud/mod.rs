@@ -15,5 +15,5 @@ pub mod state_monitor;
 
 pub use batcher::{Batcher, Job, JobKind};
 pub use chunker::optimal_chunk;
-pub use pipeline::Pipeline;
+pub use pipeline::{Admission, Pipeline};
 pub use state_monitor::StateMonitor;

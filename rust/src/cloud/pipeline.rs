@@ -31,20 +31,34 @@ impl Pipeline {
         self.stage1_free
     }
 
-    /// Whether a new batch can be admitted at `now`.
+    /// Whether a new batch can be admitted at `now` without waiting.
     pub fn can_admit(&self, now: SimTime) -> bool {
         now >= self.stage1_free
     }
 
-    /// Admit a batch with full-model delay `g_ms` at `now` (must be
-    /// admissible).  Returns (completion_time, per_gpu_delay_ms).
-    pub fn admit(&mut self, now: SimTime, g_ms: f64) -> (SimTime, f64) {
-        assert!(self.can_admit(now), "admitting into a busy pipeline");
-        let per_stage = g_ms / self.p as f64;
-        self.stage1_free = now.add_ms(per_stage);
+    /// Admit a batch with full-model delay `g_ms`.  If stage 1 is still
+    /// busy at `now` (e.g. duplicate `CloudTryStep` events raced the
+    /// admission check), the batch queues until stage 1 frees instead of
+    /// aborting the whole simulation — the returned [`Admission`] carries
+    /// the actual admission time.
+    pub fn admit(&mut self, now: SimTime, g_ms: f64) -> Admission {
+        let admitted_at = now.max(self.stage1_free);
+        let per_gpu_ms = g_ms / self.p as f64;
+        self.stage1_free = admitted_at.add_ms(per_gpu_ms);
         self.steps += 1;
-        (now.add_ms(g_ms), per_stage)
+        Admission { admitted_at, done: admitted_at.add_ms(g_ms), per_gpu_ms }
     }
+}
+
+/// Outcome of [`Pipeline::admit`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Admission {
+    /// When the batch actually entered stage 1 (>= the requested time).
+    pub admitted_at: SimTime,
+    /// When all pipeline stages complete.
+    pub done: SimTime,
+    /// Per-GPU (per-stage) computation delay, ms — the Fig. 8 metric.
+    pub per_gpu_ms: f64,
 }
 
 #[cfg(test)]
@@ -54,9 +68,10 @@ mod tests {
     #[test]
     fn single_stage_serializes_fully() {
         let mut p = Pipeline::new(1);
-        let (done, per) = p.admit(SimTime::ZERO, 10.0);
-        assert_eq!(done, SimTime::from_ms(10.0));
-        assert_eq!(per, 10.0);
+        let adm = p.admit(SimTime::ZERO, 10.0);
+        assert_eq!(adm.admitted_at, SimTime::ZERO);
+        assert_eq!(adm.done, SimTime::from_ms(10.0));
+        assert_eq!(adm.per_gpu_ms, 10.0);
         assert!(!p.can_admit(SimTime::from_ms(5.0)));
         assert!(p.can_admit(SimTime::from_ms(10.0)));
     }
@@ -64,13 +79,13 @@ mod tests {
     #[test]
     fn pipeline_overlaps_batches() {
         let mut p = Pipeline::new(4);
-        let (done1, per) = p.admit(SimTime::ZERO, 12.0);
-        assert_eq!(per, 3.0);
-        assert_eq!(done1, SimTime::from_ms(12.0));
+        let adm1 = p.admit(SimTime::ZERO, 12.0);
+        assert_eq!(adm1.per_gpu_ms, 3.0);
+        assert_eq!(adm1.done, SimTime::from_ms(12.0));
         // A second batch can enter after just one stage time.
         assert!(p.can_admit(SimTime::from_ms(3.0)));
-        let (done2, _) = p.admit(SimTime::from_ms(3.0), 12.0);
-        assert_eq!(done2, SimTime::from_ms(15.0));
+        let adm2 = p.admit(SimTime::from_ms(3.0), 12.0);
+        assert_eq!(adm2.done, SimTime::from_ms(15.0));
         assert_eq!(p.steps, 2);
     }
 
@@ -85,10 +100,19 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "busy pipeline")]
-    fn cannot_double_admit() {
+    fn racing_admission_defers_instead_of_panicking() {
+        // Regression: duplicate CloudTryStep events used to trip
+        // `assert!(can_admit)` and abort the whole fleet simulation.  Now
+        // the late batch queues behind stage 1.
         let mut p = Pipeline::new(2);
-        p.admit(SimTime::ZERO, 10.0);
-        p.admit(SimTime::from_ms(1.0), 10.0);
+        let adm1 = p.admit(SimTime::ZERO, 10.0); // stage 1 busy until 5ms
+        assert_eq!(adm1.admitted_at, SimTime::ZERO);
+        let adm2 = p.admit(SimTime::from_ms(1.0), 10.0);
+        assert_eq!(adm2.admitted_at, SimTime::from_ms(5.0), "deferred to stage-1 free");
+        assert_eq!(adm2.done, SimTime::from_ms(15.0));
+        assert_eq!(p.stage1_free_at(), SimTime::from_ms(10.0));
+        assert_eq!(p.steps, 2);
+        // Admission times never move backwards.
+        assert!(adm2.admitted_at >= adm1.admitted_at);
     }
 }

@@ -148,6 +148,10 @@ pub struct SpecDecConfig {
     pub max_draft: usize,
     /// Top-k candidate continuations for parallel drafting (§3.5).
     pub top_k: usize,
+    /// Per-request cap on generated tokens accepted by the serving
+    /// front-end (`server::parse_line`) — configurable instead of the old
+    /// hard-coded 512.
+    pub max_new_tokens: usize,
 }
 
 impl Default for SpecDecConfig {
@@ -156,7 +160,7 @@ impl Default for SpecDecConfig {
         // model's top-probabilities sit lower (PCFG branching), so the
         // equivalent operating point — measured by sweeping η against
         // accept length (EXPERIMENTS.md §Table 4) — is ≈ 0.35.
-        SpecDecConfig { eta: 0.35, max_draft: 8, top_k: 2 }
+        SpecDecConfig { eta: 0.35, max_draft: 8, top_k: 2, max_new_tokens: 512 }
     }
 }
 
@@ -312,6 +316,9 @@ impl ExperimentConfig {
         }
         if self.specdec.max_draft == 0 {
             errs.push("specdec.max_draft must be > 0".into());
+        }
+        if self.specdec.max_new_tokens == 0 {
+            errs.push("specdec.max_new_tokens must be > 0".into());
         }
         if self.min_chunk == 0 || self.min_chunk > self.max_chunk {
             errs.push("chunk bounds invalid".into());

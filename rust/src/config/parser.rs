@@ -139,6 +139,7 @@ pub fn build(map: &BTreeMap<String, Scalar>) -> Result<ExperimentConfig, String>
             "specdec.eta" => cfg.specdec.eta = num()?,
             "specdec.max_draft" => cfg.specdec.max_draft = us()?,
             "specdec.top_k" => cfg.specdec.top_k = us()?,
+            "specdec.max_new_tokens" => cfg.specdec.max_new_tokens = us()?,
             "strategies.sd" => cfg.strategies.sd = b()?,
             "strategies.pc" => cfg.strategies.pc = b()?,
             "strategies.pd" => cfg.strategies.pd = b()?,

@@ -1,6 +1,7 @@
 //! Execution engines: typed wrappers over the artifact registry that
 //! implement the device-side and cloud-side primitives of the HAT protocol
-//! with real PJRT execution (bucket selection, padding, KV threading).
+//! against whichever [`ExecBackend`](crate::backend::ExecBackend) the
+//! registry selected (bucket selection, padding, KV threading).
 //!
 //! These are *primitives*; the protocol logic (speculative decoding rounds,
 //! chunked prefill, parallel drafting) lives in `specdec` and `frameworks`.
@@ -11,13 +12,12 @@ use anyhow::Result;
 
 use crate::model::{CloudStream, DeviceStream, TokenId};
 use crate::runtime::{
-    f32_literal_padded, pos_literal, to_f32_vec, tokens_literal, ArtifactRegistry,
-    Manifest, ModelSpec,
+    f32_tensor_padded, pos_tensor, tokens_tensor, ArtifactRegistry, Manifest, ModelSpec,
 };
 
 /// One shared engine: in the real deployment the input/head/draft artifacts
-/// run on the device and the middle artifact in the cloud; here one PJRT
-/// CPU client executes both sides (the *timing* separation is the
+/// run on the device and the middle artifact in the cloud; here one backend
+/// executes both sides (the *timing* separation is the
 /// simulator's job, the *data-flow* separation is enforced by the artifact
 /// boundaries — see `examples/privacy_audit.rs`).
 pub struct Engine {
@@ -37,8 +37,16 @@ impl Engine {
         Ok(Engine { reg: ArtifactRegistry::load(dir)? })
     }
 
+    /// Load from the default artifact dir, falling back to the reference
+    /// backend's synthetic model when no artifacts are built — the server
+    /// and examples run end-to-end on a clean machine.
     pub fn load_default() -> Result<Engine> {
-        Engine::load(&ArtifactRegistry::default_dir())
+        Ok(Engine { reg: ArtifactRegistry::load_or_synthetic(&ArtifactRegistry::default_dir())? })
+    }
+
+    /// Engine over the synthetic reference model (no files needed).
+    pub fn synthetic() -> Engine {
+        Engine { reg: ArtifactRegistry::synthetic() }
     }
 
     pub fn spec(&self) -> &ModelSpec {
@@ -54,13 +62,14 @@ impl Engine {
         let b = self.reg.bucket_for(t)?;
         let name = Manifest::artifact_name("device_input", b);
         let pos = st.spos.write_pos();
-        let toks = tokens_literal(tokens, b)?;
-        let posl = pos_literal(pos);
+        let toks = tokens_tensor(tokens, b)?;
+        let posl = pos_tensor(pos);
         let mut outs = self.reg.run(&name, &[&toks, &st.skv, &posl])?;
-        let hidden_full = to_f32_vec(&outs[0])?;
         st.skv = outs.swap_remove(1);
+        let mut hidden = outs.swap_remove(0).data;
+        hidden.truncate(t * self.spec().hidden);
         st.spos.wrote(t);
-        Ok(hidden_full[..t * self.spec().hidden].to_vec())
+        Ok(hidden)
     }
 
     /// Adapter prefill over shallow hidden states [T, H]: fills Λ's KV.
@@ -70,8 +79,8 @@ impl Engine {
         let b = self.reg.bucket_for(t)?;
         let name = Manifest::artifact_name("adapter_prefill", b);
         let pos = st.apos.write_pos();
-        let hid = f32_literal_padded(hidden, h, b)?;
-        let posl = pos_literal(pos);
+        let hid = f32_tensor_padded(hidden, h, b)?;
+        let posl = pos_tensor(pos);
         let mut outs = self.reg.run(&name, &[&hid, &st.akv, &posl])?;
         st.akv = outs.swap_remove(0);
         st.apos.wrote(t);
@@ -83,13 +92,14 @@ impl Engine {
     pub fn draft_step(&self, st: &mut DeviceStream, token: TokenId) -> Result<DraftStepOut> {
         debug_assert_eq!(st.spos.write_pos(), st.apos.write_pos());
         let pos = st.spos.write_pos();
-        let toks = tokens_literal(&[token], 1)?;
-        let posl = pos_literal(pos);
+        let toks = tokens_tensor(&[token], 1)?;
+        let posl = pos_tensor(pos);
         let mut outs = self.reg.run("draft_step_1", &[&toks, &st.skv, &st.akv, &posl])?;
-        let logits = to_f32_vec(&outs[0])?;
-        let shallow = to_f32_vec(&outs[3])?;
+        // Pop from the back so earlier indices stay stable (no copies).
+        let shallow = outs.swap_remove(3).data;
         st.akv = outs.swap_remove(2);
         st.skv = outs.swap_remove(1);
+        let logits = outs.swap_remove(0).data;
         st.spos.wrote(1);
         st.apos.wrote(1);
         Ok(DraftStepOut { logits, shallow })
@@ -101,10 +111,11 @@ impl Engine {
         let t = deep.len() / h;
         let b = self.reg.bucket_for(t)?;
         let name = Manifest::artifact_name("device_head", b);
-        let d = f32_literal_padded(deep, h, b)?;
-        let outs = self.reg.run(&name, &[&d])?;
-        let logits_full = to_f32_vec(&outs[0])?;
-        Ok(logits_full[..t * self.spec().vocab].to_vec())
+        let d = f32_tensor_padded(deep, h, b)?;
+        let mut outs = self.reg.run(&name, &[&d])?;
+        let mut logits = outs.swap_remove(0).data;
+        logits.truncate(t * self.spec().vocab);
+        Ok(logits)
     }
 
     /// Medusa heads over one deep hidden state [H] → [n_medusa][V] logits.
@@ -112,9 +123,9 @@ impl Engine {
         let h = self.spec().hidden;
         let v = self.spec().vocab;
         assert_eq!(deep.len(), h);
-        let d = f32_literal_padded(deep, h, 1)?;
-        let outs = self.reg.run("medusa_decode_1", &[&d])?;
-        let flat = to_f32_vec(&outs[0])?;
+        let d = f32_tensor_padded(deep, h, 1)?;
+        let mut outs = self.reg.run("medusa_decode_1", &[&d])?;
+        let flat = outs.swap_remove(0).data;
         Ok((0..self.spec().n_medusa).map(|j| flat[j * v..(j + 1) * v].to_vec()).collect())
     }
 
@@ -128,13 +139,14 @@ impl Engine {
         let b = self.reg.bucket_for(t)?;
         let name = Manifest::artifact_name("cloud_middle", b);
         let pos = st.pos.write_pos();
-        let hid = f32_literal_padded(hidden, h, b)?;
-        let posl = pos_literal(pos);
+        let hid = f32_tensor_padded(hidden, h, b)?;
+        let posl = pos_tensor(pos);
         let mut outs = self.reg.run(&name, &[&hid, &st.mkv, &posl])?;
-        let deep_full = to_f32_vec(&outs[0])?;
         st.mkv = outs.swap_remove(1);
+        let mut deep = outs.swap_remove(0).data;
+        deep.truncate(t * h);
         st.pos.wrote(t);
-        Ok(deep_full[..t * h].to_vec())
+        Ok(deep)
     }
 
     // -- helpers -------------------------------------------------------------
@@ -184,5 +196,49 @@ mod tests {
         assert!((Engine::top_prob(&l) - 1.0 / exp).abs() < 1e-6);
         // uniform logits → 1/n
         assert!((Engine::top_prob(&[0.0; 4]) - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn synthetic_engine_runs_device_and_cloud_primitives() {
+        let e = Engine::synthetic();
+        let spec = e.spec().clone();
+        let mut dev = DeviceStream::new(&spec).unwrap();
+        let mut cloud = CloudStream::new(&spec).unwrap();
+
+        let hidden = e.device_input(&mut dev, &[1, 2, 3]).unwrap();
+        assert_eq!(hidden.len(), 3 * spec.hidden);
+        assert_eq!(dev.spos.write_pos(), 3);
+
+        e.adapter_prefill(&mut dev, &hidden).unwrap();
+        assert_eq!(dev.apos.write_pos(), 3);
+
+        let deep = e.cloud_middle(&mut cloud, &hidden).unwrap();
+        assert_eq!(deep.len(), 3 * spec.hidden);
+        assert_eq!(cloud.pos.write_pos(), 3);
+
+        let logits = e.head(&deep[2 * spec.hidden..]).unwrap();
+        assert_eq!(logits.len(), spec.vocab);
+
+        let out = e.draft_step(&mut dev, 7).unwrap();
+        assert_eq!(out.logits.len(), spec.vocab);
+        assert_eq!(out.shallow.len(), spec.hidden);
+        assert_eq!(dev.spos.write_pos(), 4);
+        assert_eq!(dev.apos.write_pos(), 4);
+
+        let heads = e.medusa(&deep[..spec.hidden]).unwrap();
+        assert_eq!(heads.len(), spec.n_medusa);
+        assert!(heads.iter().all(|l| l.len() == spec.vocab));
+    }
+
+    #[test]
+    fn synthetic_engine_is_deterministic() {
+        let run = || {
+            let e = Engine::synthetic();
+            let mut dev = DeviceStream::new(e.spec()).unwrap();
+            let h = e.device_input(&mut dev, &[4, 4, 2, 9]).unwrap();
+            let o = e.draft_step(&mut dev, 11).unwrap();
+            (h, o.logits)
+        };
+        assert_eq!(run(), run());
     }
 }

@@ -236,14 +236,14 @@ impl FleetSim {
                         let tokens = Batcher::batch_tokens(&batch);
                         let noise = 1.0 + 0.05 * g_noise.normal();
                         let g_ms = g_model.eval(tokens as f64) * noise.clamp(0.7, 1.3);
-                        let (done, per_gpu) = pipeline.admit(now, g_ms);
-                        rec.gpu_step_delays.push(per_gpu);
+                        let adm = pipeline.admit(now, g_ms);
+                        rec.gpu_step_delays.push(adm.per_gpu_ms);
                         rec.batch_token_sizes.push(tokens);
                         monitor.observe_step(tokens, g_ms);
                         let id = next_step_id;
                         next_step_id += 1;
                         step_batches.insert(id, batch);
-                        q.schedule_at(done, Ev::StepDone { id });
+                        q.schedule_at(adm.done, Ev::StepDone { id });
                     }
                     if !batcher.is_empty() && !try_scheduled {
                         try_scheduled = true;

@@ -14,12 +14,20 @@
 //! - **L2/L1 (python/, build-time only)** — the split transformer, adapter
 //!   Λ, Medusa heads, and the Pallas flash-attention/SwiGLU kernels, AOT
 //!   lowered to HLO text artifacts.
-//! - **runtime** — loads the artifacts through the PJRT C API (`xla` crate)
-//!   and executes them on the request path with device-resident weights.
+//! - **backend** — the execution seam ([`backend::ExecBackend`]): model
+//!   execution behind a trait over plain `Tensor`s.  Default is the
+//!   deterministic pure-Rust **reference** backend (runs everywhere, zero
+//!   dependencies, can synthesize its own tiny model); the real **PJRT**
+//!   path (`xla` crate, HLO artifacts, device-resident weights) compiles
+//!   behind the `pjrt` cargo feature and is selected with
+//!   `HAT_BACKEND=pjrt`.
+//! - **runtime** — the backend-agnostic artifact registry (manifest,
+//!   token buckets, lazy compile cache) the engine layer talks to.
 //!
 //! See DESIGN.md for the substitution table (physical testbed → simulators)
 //! and the per-experiment index, and EXPERIMENTS.md for results.
 
+pub mod backend;
 pub mod cli;
 pub mod cloud;
 pub mod config;

@@ -1,14 +1,15 @@
 //! Per-request model state: token streams and KV-cache handles.
 //!
-//! KV caches are whole-array literals threaded through PJRT calls; masking
-//! is by absolute position, so *rolling back rejected draft tokens is just
+//! KV caches are whole-array tensors threaded through backend calls;
+//! masking is by absolute position, so *rolling back rejected draft tokens is just
 //! rewinding a position counter* (the stale cache rows are overwritten by
 //! the next contiguous write and can never be attended before that).
 //! `KvPos` encodes that state machine and its invariants.
 
 use anyhow::Result;
 
-use crate::runtime::{zeros_literal, ModelSpec};
+use crate::backend::Tensor;
+use crate::runtime::{zeros_tensor, ModelSpec};
 
 /// Token id in the tiny model's vocab.
 pub type TokenId = u32;
@@ -75,8 +76,8 @@ impl KvPos {
 
 /// Device-side state of one request stream: shallow-layer KV + adapter KV.
 pub struct DeviceStream {
-    pub skv: xla::Literal,
-    pub akv: xla::Literal,
+    pub skv: Tensor,
+    pub akv: Tensor,
     /// Shallow KV position (shared by drafting and verification paths —
     /// they produce identical rows for identical tokens).
     pub spos: KvPos,
@@ -87,8 +88,8 @@ pub struct DeviceStream {
 impl DeviceStream {
     pub fn new(spec: &ModelSpec) -> Result<DeviceStream> {
         Ok(DeviceStream {
-            skv: zeros_literal(&spec.shallow_kv_dims())?,
-            akv: zeros_literal(&spec.adapter_kv_dims())?,
+            skv: zeros_tensor(&spec.shallow_kv_dims()),
+            akv: zeros_tensor(&spec.adapter_kv_dims()),
             spos: KvPos::new(),
             apos: KvPos::new(),
         })
@@ -97,13 +98,13 @@ impl DeviceStream {
 
 /// Cloud-side state of one request stream: middle-submodel KV.
 pub struct CloudStream {
-    pub mkv: xla::Literal,
+    pub mkv: Tensor,
     pub pos: KvPos,
 }
 
 impl CloudStream {
     pub fn new(spec: &ModelSpec) -> Result<CloudStream> {
-        Ok(CloudStream { mkv: zeros_literal(&spec.middle_kv_dims())?, pos: KvPos::new() })
+        Ok(CloudStream { mkv: zeros_tensor(&spec.middle_kv_dims()), pos: KvPos::new() })
     }
 }
 

@@ -28,17 +28,17 @@ impl ModelSpec {
         self.layers - self.shallow_layers
     }
 
-    /// Dims of a shallow-KV literal: [m, 2, S, nh, hd].
+    /// Dims of a shallow-KV tensor: [m, 2, S, nh, hd].
     pub fn shallow_kv_dims(&self) -> Vec<usize> {
         vec![self.shallow_layers, 2, self.max_seq, self.heads, self.head_dim]
     }
 
-    /// Dims of a middle-KV literal: [L-m, 2, S, nh, hd].
+    /// Dims of a middle-KV tensor: [L-m, 2, S, nh, hd].
     pub fn middle_kv_dims(&self) -> Vec<usize> {
         vec![self.middle_layers(), 2, self.max_seq, self.heads, self.head_dim]
     }
 
-    /// Dims of the adapter-KV literal: [2, S, nh, hd].
+    /// Dims of the adapter-KV tensor: [2, S, nh, hd].
     pub fn adapter_kv_dims(&self) -> Vec<usize> {
         vec![2, self.max_seq, self.heads, self.head_dim]
     }

@@ -12,7 +12,7 @@
 //! C: QUIT\n
 //! ```
 //!
-//! The engine is not thread-safe (one PJRT client), so a single worker
+//! The engine is not thread-safe (one backend client), so a single worker
 //! thread owns it and connections are multiplexed through a channel — the
 //! same leader/worker shape a production router uses.
 
@@ -33,8 +33,10 @@ pub enum Command {
     Quit,
 }
 
-/// Parse one protocol line.
-pub fn parse_line(line: &str) -> Result<Command, String> {
+/// Parse one protocol line.  `max_new_cap` bounds GENERATE's
+/// max_new_tokens (from `SpecDecConfig::max_new_tokens` — no hard-coded
+/// limit).
+pub fn parse_line(line: &str, max_new_cap: usize) -> Result<Command, String> {
     let mut it = line.split_whitespace();
     match it.next() {
         Some("GENERATE") => {
@@ -48,8 +50,8 @@ pub fn parse_line(line: &str) -> Result<Command, String> {
             if prompt.is_empty() {
                 return Err("empty prompt".into());
             }
-            if max_new == 0 || max_new > 512 {
-                return Err("max_new_tokens out of range".into());
+            if max_new == 0 || max_new > max_new_cap {
+                return Err(format!("max_new_tokens out of range (1..={max_new_cap})"));
             }
             Ok(Command::Generate { max_new, prompt })
         }
@@ -61,14 +63,18 @@ pub fn parse_line(line: &str) -> Result<Command, String> {
 }
 
 /// Serve one request on the engine: HAT protocol (chunked prefill + SD).
-pub fn generate(engine: &Engine, prompt: &[u32], max_new: usize) -> anyhow::Result<(Vec<u32>, usize, f64)> {
-    let spec_cfg = SpecDecConfig::default();
+pub fn generate(
+    engine: &Engine,
+    prompt: &[u32],
+    max_new: usize,
+    spec_cfg: &SpecDecConfig,
+) -> anyhow::Result<(Vec<u32>, usize, f64)> {
     let max_ctx = engine.spec().max_seq;
     anyhow::ensure!(
         prompt.len() + max_new + spec_cfg.max_draft + 2 <= max_ctx,
         "prompt+generation exceeds model max_seq {max_ctx}"
     );
-    let mut s = Session::new(engine, spec_cfg)?;
+    let mut s = Session::new(engine, spec_cfg.clone())?;
     let chunks = chunk_sizes(prompt.len(), 64);
     let t1 = s.prefill(prompt, &chunks)?;
     let mut out = vec![t1];
@@ -88,11 +94,11 @@ enum WorkerMsg {
     Stats { reply: mpsc::Sender<String> },
 }
 
-fn worker_loop(engine: Engine, rx: mpsc::Receiver<WorkerMsg>) {
+fn worker_loop(engine: Engine, spec_cfg: SpecDecConfig, rx: mpsc::Receiver<WorkerMsg>) {
     while let Ok(msg) = rx.recv() {
         match msg {
             WorkerMsg::Gen { max_new, prompt, reply } => {
-                let resp = match generate(&engine, &prompt, max_new) {
+                let resp = match generate(&engine, &prompt, max_new, &spec_cfg) {
                     Ok((toks, rounds, accept)) => {
                         let toks: Vec<String> = toks.iter().map(|t| t.to_string()).collect();
                         format!("OK {} | rounds={rounds} accept={accept:.2}", toks.join(" "))
@@ -102,7 +108,7 @@ fn worker_loop(engine: Engine, rx: mpsc::Receiver<WorkerMsg>) {
                 let _ = reply.send(resp);
             }
             WorkerMsg::Stats { reply } => {
-                let s = engine.reg.stats.borrow().clone();
+                let s = engine.reg.stats();
                 let _ = reply.send(format!(
                     "OK executions={} exec_ms={:.1} compiles={} compile_ms={:.1}",
                     s.executions, s.execute_ms, s.compiles, s.compile_ms
@@ -112,7 +118,11 @@ fn worker_loop(engine: Engine, rx: mpsc::Receiver<WorkerMsg>) {
     }
 }
 
-fn handle_conn(stream: TcpStream, tx: &mpsc::Sender<WorkerMsg>) -> std::io::Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    tx: &mpsc::Sender<WorkerMsg>,
+    max_new_cap: usize,
+) -> std::io::Result<()> {
     let peer = stream.peer_addr()?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
@@ -122,7 +132,7 @@ fn handle_conn(stream: TcpStream, tx: &mpsc::Sender<WorkerMsg>) -> std::io::Resu
         if reader.read_line(&mut line)? == 0 {
             return Ok(());
         }
-        let cmd = match parse_line(line.trim()) {
+        let cmd = match parse_line(line.trim(), max_new_cap) {
             Ok(c) => c,
             Err(e) => {
                 writeln!(stream, "ERR {e}")?;
@@ -149,17 +159,25 @@ fn handle_conn(stream: TcpStream, tx: &mpsc::Sender<WorkerMsg>) -> std::io::Resu
     }
 }
 
-/// `hat serve --addr 127.0.0.1:7071`
+/// `hat serve --addr 127.0.0.1:7071 [--config FILE]`
+///
+/// `--config` reuses the experiment-config format; its `[specdec]` section
+/// (eta, max_draft, top_k, max_new_tokens) governs serving.
 pub fn cmd_serve(f: &Flags) -> Result<(), String> {
     let addr = f.get("addr").unwrap_or("127.0.0.1:7071").to_string();
-    // The engine (PJRT client) is !Send: construct it inside its owning
+    let spec_cfg = match f.get("config") {
+        Some(path) => crate::config::parser::load_file(path)?.specdec,
+        None => SpecDecConfig::default(),
+    };
+    let max_new_cap = spec_cfg.max_new_tokens;
+    // The engine (backend client) is !Send: construct it inside its owning
     // worker thread and hand back only the ready/failed signal.
     let (tx, rx) = mpsc::channel::<WorkerMsg>();
     let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
     std::thread::spawn(move || match Engine::load_default() {
         Ok(engine) => {
             let _ = ready_tx.send(Ok(()));
-            worker_loop(engine, rx);
+            worker_loop(engine, spec_cfg, rx);
         }
         Err(e) => {
             let _ = ready_tx.send(Err(e.to_string()));
@@ -179,7 +197,7 @@ pub fn cmd_serve(f: &Flags) -> Result<(), String> {
             Ok(s) => {
                 let tx = tx.clone();
                 std::thread::spawn(move || {
-                    if let Err(e) = handle_conn(s, &tx) {
+                    if let Err(e) = handle_conn(s, &tx, max_new_cap) {
                         eprintln!("conn error: {e}");
                     }
                 });
@@ -198,26 +216,58 @@ pub fn cmd_serve(f: &Flags) -> Result<(), String> {
 mod tests {
     use super::*;
 
+    const CAP: usize = 512;
+
     #[test]
     fn parses_generate() {
-        let c = parse_line("GENERATE 16 1 2 3").unwrap();
+        let c = parse_line("GENERATE 16 1 2 3", CAP).unwrap();
         assert_eq!(c, Command::Generate { max_new: 16, prompt: vec![1, 2, 3] });
     }
 
     #[test]
     fn parses_stats_and_quit() {
-        assert_eq!(parse_line("STATS").unwrap(), Command::Stats);
-        assert_eq!(parse_line("QUIT").unwrap(), Command::Quit);
+        assert_eq!(parse_line("STATS", CAP).unwrap(), Command::Stats);
+        assert_eq!(parse_line("QUIT", CAP).unwrap(), Command::Quit);
     }
 
     #[test]
     fn rejects_malformed() {
-        assert!(parse_line("GENERATE").is_err());
-        assert!(parse_line("GENERATE 10").is_err()); // empty prompt
-        assert!(parse_line("GENERATE 0 1 2").is_err());
-        assert!(parse_line("GENERATE 9999 1").is_err());
-        assert!(parse_line("GENERATE 4 1 x").is_err());
-        assert!(parse_line("NOPE 1").is_err());
-        assert!(parse_line("").is_err());
+        assert!(parse_line("GENERATE", CAP).is_err());
+        assert!(parse_line("GENERATE 10", CAP).is_err()); // empty prompt
+        assert!(parse_line("GENERATE 0 1 2", CAP).is_err());
+        assert!(parse_line("GENERATE 9999 1", CAP).is_err());
+        assert!(parse_line("GENERATE 4 1 x", CAP).is_err());
+        assert!(parse_line("NOPE 1", CAP).is_err());
+        assert!(parse_line("", CAP).is_err());
+    }
+
+    #[test]
+    fn cap_comes_from_config_not_hardcode() {
+        // A configured cap of 64 rejects 65 and accepts 64; the old
+        // hard-coded 512 no longer applies.
+        assert!(parse_line("GENERATE 65 1", 64).is_err());
+        let c = parse_line("GENERATE 64 1", 64).unwrap();
+        assert_eq!(c, Command::Generate { max_new: 64, prompt: vec![1] });
+        assert!(parse_line("GENERATE 600 1", 1024).is_ok());
+        assert_eq!(
+            SpecDecConfig::default().max_new_tokens,
+            512,
+            "default cap preserves the old protocol limit"
+        );
+    }
+
+    #[test]
+    fn generate_end_to_end_on_synthetic_engine() {
+        // The headline of the backend seam: real serving path, no
+        // artifacts, no accelerator libraries.
+        let engine = Engine::synthetic();
+        let cfg = SpecDecConfig::default();
+        let (toks, rounds, _accept) = generate(&engine, &[5, 9, 2, 14], 12, &cfg).unwrap();
+        assert_eq!(toks.len(), 12);
+        assert!(rounds >= 1);
+        assert!(toks.iter().all(|&t| (t as usize) < engine.spec().vocab));
+        // Deterministic: same prompt, same stream.
+        let (toks2, _, _) = generate(&engine, &[5, 9, 2, 14], 12, &cfg).unwrap();
+        assert_eq!(toks, toks2);
     }
 }

@@ -48,7 +48,21 @@ impl std::ops::Add for SimTime {
 
 impl std::ops::Sub for SimTime {
     type Output = SimTime;
+
+    /// Difference of two virtual times.
+    ///
+    /// Subtracting a later time from an earlier one is a causality bug in
+    /// the caller (metrics only ever subtract an event's start from its
+    /// end), so debug builds assert `self >= rhs`.  Release builds keep
+    /// the historical saturating behaviour — clamping to `ZERO` — so a
+    /// long simulation degrades a metric instead of aborting.
     fn sub(self, rhs: SimTime) -> SimTime {
+        debug_assert!(
+            self.0 >= rhs.0,
+            "SimTime underflow: {:?} - {:?} (subtracting a later time)",
+            self,
+            rhs
+        );
         SimTime(self.0.saturating_sub(rhs.0))
     }
 }
@@ -147,6 +161,19 @@ mod tests {
         assert_eq!(SimTime::from_ms(1.5).0, 1500);
         assert!((SimTime::from_secs(2.0).as_ms() - 2000.0).abs() < 1e-9);
         assert_eq!(SimTime::from_ms(-5.0), SimTime::ZERO);
+    }
+
+    #[test]
+    fn sub_is_ordered_difference() {
+        assert_eq!(SimTime(30) - SimTime(10), SimTime(20));
+        assert_eq!(SimTime(5) - SimTime(5), SimTime::ZERO);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "SimTime underflow")]
+    fn sub_underflow_asserts_in_debug() {
+        let _ = SimTime(1) - SimTime(2);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Speculative decoding protocol (real-execution path).
 //!
-//! Implements HAT's §3.4–3.5 data path with actual PJRT calls: threshold
+//! Implements HAT's §3.4–3.5 data path with actual backend calls: threshold
 //! drafting (Eq. 5), hidden-state verification through the cloud middle
 //! submodel, KV rollback of rejected tokens, and parallel drafting with
 //! top-k candidate branches (§3.5).  Also the U-shape per-token decode and
@@ -19,10 +19,10 @@ pub mod profile;
 
 use anyhow::Result;
 
+use crate::backend::Tensor;
 use crate::config::SpecDecConfig;
 use crate::engine::Engine;
 use crate::model::{CloudStream, DeviceStream, TokenId};
-use crate::runtime::clone_literal;
 
 /// Outcome of one decode round (one device-cloud interaction).
 #[derive(Debug, Clone)]
@@ -52,8 +52,8 @@ struct PreDraft {
     proposed: Vec<TokenId>,
     /// Shallow hiddens of the tokens the branch processed.
     shallow: Vec<f32>,
-    skv: xla::Literal,
-    akv: xla::Literal,
+    skv: Tensor,
+    akv: Tensor,
     steps: usize,
 }
 
@@ -287,8 +287,8 @@ impl<'e> Session<'e> {
         spos.seek(write_pos);
         apos.seek(write_pos);
         let mut dev = DeviceStream {
-            skv: clone_literal(&self.dev.skv)?,
-            akv: clone_literal(&self.dev.akv)?,
+            skv: self.dev.skv.clone(),
+            akv: self.dev.akv.clone(),
             spos,
             apos,
         };

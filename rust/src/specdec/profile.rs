@@ -5,7 +5,7 @@
 //! how many draft steps ran, how many tokens were uploaded for
 //! verification, how many tokens came out, and whether the parallel-
 //! drafting candidate hit.  `SdProfile::measure` records these from real
-//! PJRT sessions over in-distribution prompts; the fleet simulator then
+//! engine sessions over in-distribution prompts; the fleet simulator then
 //! replays them against the calibrated testbed timing models.  A built-in
 //! table (recorded from a reference run; regenerate with
 //! `hat profile`) keeps the simulator usable without artifacts.
@@ -114,7 +114,7 @@ impl SdProfile {
         let dir = crate::runtime::ArtifactRegistry::default_dir();
         if dir.join("manifest.json").exists() {
             if let Ok(engine) = Engine::load(&dir) {
-                if let Ok(pool) = PromptPool::load(&dir.join(&engine.reg.manifest.prompts_file)) {
+                if let Ok(pool) = PromptPool::load(&dir.join(&engine.reg.manifest().prompts_file)) {
                     if let Ok(p) = SdProfile::measure(&engine, &pool, cfg, n_requests, 32, 42) {
                         return p;
                     }

@@ -98,6 +98,17 @@ impl PromptPool {
         Ok(PromptPool { prompts })
     }
 
+    /// Deterministic synthetic pool for artifact-free runs (reference
+    /// backend): `count` prompts of `max_len` tokens with ids < `vocab`.
+    pub fn synthetic(vocab: usize, count: usize, max_len: usize, seed: u64) -> PromptPool {
+        assert!(vocab > 0 && count > 0 && max_len > 0);
+        let mut rng = Rng::new(seed);
+        let prompts = (0..count)
+            .map(|_| (0..max_len).map(|_| rng.below(vocab) as u32).collect())
+            .collect();
+        PromptPool { prompts }
+    }
+
     pub fn len(&self) -> usize {
         self.prompts.len()
     }

@@ -1,0 +1,131 @@
+//! Backend-seam integration tests: the full protocol stack — chunked
+//! prefill, HAT speculative-decoding rounds with parallel drafting,
+//! U-shape decode, U-Medusa rounds, profile measurement and the
+//! four-framework fleet simulation — running end-to-end against the
+//! deterministic reference backend, with **zero** artifacts on disk and
+//! no accelerator libraries.
+//!
+//! The headline assertions are bit-identity: two same-seed runs of any
+//! layer must produce identical token streams and identical metrics.
+
+use hat::config::{Dataset, ExperimentConfig, Framework, SpecDecConfig};
+use hat::engine::Engine;
+use hat::frameworks::run_experiment;
+use hat::specdec::profile::SdProfile;
+use hat::specdec::{chunk_sizes, Session};
+use hat::workload::PromptPool;
+
+fn prompt(len: usize, seed: u64) -> Vec<u32> {
+    let pool = PromptPool::synthetic(256, 4, 160, seed);
+    let mut rng = hat::util::rng::Rng::new(seed);
+    pool.sample(len, &mut rng)
+}
+
+/// Generate `n` tokens through HAT rounds; returns the full context.
+fn run_hat_session(e: &Engine, p: &[u32], chunk: usize, pd: bool, n: usize) -> Vec<u32> {
+    let mut s = Session::new(e, SpecDecConfig::default()).unwrap();
+    let chunks = chunk_sizes(p.len(), chunk);
+    s.prefill(p, &chunks).unwrap();
+    while s.generated() < n {
+        let r = s.hat_round(pd, 4).unwrap();
+        assert!(!r.emitted.is_empty());
+        assert!(r.accepted <= r.proposed.len());
+        assert_eq!(r.emitted.len(), r.accepted + 1);
+        assert_eq!(r.verify_tokens, r.proposed.len() + 1);
+    }
+    s.ctx.clone()
+}
+
+#[test]
+fn hat_session_runs_end_to_end_and_is_deterministic() {
+    let p = prompt(48, 7);
+    let a = run_hat_session(&Engine::synthetic(), &p, 16, true, 32);
+    let b = run_hat_session(&Engine::synthetic(), &p, 16, true, 32);
+    assert_eq!(a, b, "same-seed HAT sessions must be bit-identical");
+    assert!(a.len() >= p.len() + 32);
+    assert_eq!(&a[..p.len()], &p[..], "context starts with the prompt");
+    let spec = Engine::synthetic().spec().clone();
+    assert!(a.iter().all(|&t| (t as usize) < spec.vocab));
+}
+
+#[test]
+fn hat_output_is_invariant_to_prefill_chunking() {
+    // The reference backend masks by absolute position, so the chunked
+    // prefill data path must not change the generated stream — the same
+    // losslessness property the golden tests check on real artifacts.
+    let e = Engine::synthetic();
+    let p = prompt(40, 11);
+    let whole = run_hat_session(&e, &p, p.len(), false, 24);
+    let e2 = Engine::synthetic();
+    let chunked = run_hat_session(&e2, &p, 8, false, 24);
+    let n = p.len() + 24;
+    assert_eq!(&whole[..n], &chunked[..n], "chunk size changed the output");
+}
+
+#[test]
+fn ushape_and_medusa_rounds_run_on_reference_backend() {
+    let e = Engine::synthetic();
+    let p = prompt(32, 3);
+    let mut s = Session::new(&e, SpecDecConfig::default()).unwrap();
+    s.prefill(&p, &[p.len()]).unwrap();
+    for _ in 0..8 {
+        s.ushape_step().unwrap();
+    }
+    assert!(s.generated() >= 9);
+
+    let mut m = Session::new(&e, SpecDecConfig::default()).unwrap();
+    m.prefill(&p, &[p.len()]).unwrap();
+    while m.generated() < 12 {
+        let r = m.medusa_round().unwrap();
+        assert_eq!(r.proposed.len(), e.spec().n_medusa);
+        assert!(!r.emitted.is_empty());
+    }
+}
+
+#[test]
+fn profile_measures_on_reference_backend_without_artifacts() {
+    let e = Engine::synthetic();
+    let pool = PromptPool::synthetic(e.spec().vocab, 8, 128, 5);
+    let cfg = SpecDecConfig::default();
+    let p1 = SdProfile::measure(&e, &pool, &cfg, 2, 24, 42).unwrap();
+    let e2 = Engine::synthetic();
+    let p2 = SdProfile::measure(&e2, &pool, &cfg, 2, 24, 42).unwrap();
+    assert!(!p1.hat.is_empty() && !p1.medusa.is_empty());
+    assert_eq!(p1.hat, p2.hat, "same-seed profiles must be identical");
+    assert_eq!(p1.medusa, p2.medusa);
+    for r in p1.hat.iter().chain(&p1.medusa) {
+        assert!(r.emitted >= 1);
+        assert!(r.emitted <= r.verify_tokens + 1);
+    }
+}
+
+#[test]
+fn all_four_frameworks_run_on_reference_profile_bit_identically() {
+    // Tiny fleet, profile measured on the reference backend: every
+    // framework finishes every request, and two same-seed runs agree on
+    // every metric to the bit.
+    let e = Engine::synthetic();
+    let pool = PromptPool::synthetic(e.spec().vocab, 8, 128, 9);
+    let profile = SdProfile::measure(&e, &pool, &SpecDecConfig::default(), 2, 24, 42).unwrap();
+
+    for fw in Framework::all() {
+        let mut cfg = ExperimentConfig::preset(fw, Dataset::SpecBench);
+        cfg.workload.n_requests = 25;
+        cfg.workload.max_new_tokens = 32;
+
+        let a = run_experiment(&cfg, &profile);
+        let b = run_experiment(&cfg, &profile);
+
+        assert_eq!(a.finished_requests().count(), 25, "{}", fw.name());
+        for r in a.finished_requests() {
+            assert!(r.tokens_generated() >= 32, "{} generated {}", fw.name(), r.tokens_generated());
+            assert!(r.ttft_ms().unwrap() > 0.0);
+        }
+
+        let (sa, sb) = (a.summary(), b.summary());
+        assert_eq!(sa.ttft_mean_ms, sb.ttft_mean_ms, "{} TTFT drifted", fw.name());
+        assert_eq!(sa.tbt_mean_ms, sb.tbt_mean_ms, "{} TBT drifted", fw.name());
+        assert_eq!(a.gpu_step_delays, b.gpu_step_delays, "{} GPU delays drifted", fw.name());
+        assert_eq!(a.chunk_sizes, b.chunk_sizes, "{} chunk trace drifted", fw.name());
+    }
+}
