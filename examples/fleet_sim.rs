@@ -47,16 +47,17 @@ fn main() -> anyhow::Result<()> {
         let plen = 48 + (i * 37) % 128;
         let prompt = pool.sample(plen, &mut rng);
         let t0 = std::time::Instant::now();
-        let (toks, rounds, accept) =
-            generate(&engine, &prompt, gen_len, &SpecDecConfig::default())?;
+        let gen = generate(&engine, &prompt, gen_len, &SpecDecConfig::default())?;
         let dt = t0.elapsed().as_secs_f64();
         latencies.push(dt * 1e3);
-        tokens_out += toks.len();
+        tokens_out += gen.tokens.len();
         if i < 3 {
             println!(
-                "  req {i}: prompt {plen} tok -> {} tok in {:.0} ms ({rounds} rounds, accept {accept:.2})",
-                toks.len(),
-                dt * 1e3
+                "  req {i}: prompt {plen} tok -> {} tok in {:.0} ms ({} rounds, accept {:.3})",
+                gen.tokens.len(),
+                dt * 1e3,
+                gen.rounds,
+                gen.accept_rate()
             );
         }
     }

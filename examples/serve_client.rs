@@ -1,5 +1,7 @@
 //! Serve + client demo: starts the TCP serving mode in-process, connects
-//! as a client, and issues GENERATE/STATS requests over the line protocol.
+//! as a client, and issues GENERATE/STATS requests over the line protocol
+//! — including two *concurrent* connections to show the
+//! continuous-batching scheduler interleaving sessions.
 //!
 //!     cargo run --release --example serve_client
 //!
@@ -15,6 +17,18 @@ use hat::runtime::ArtifactRegistry;
 use hat::util::rng::Rng;
 use hat::workload::PromptPool;
 
+fn request(addr: &str, max_new: usize, prompt: &[u32]) -> anyhow::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let words: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    writeln!(stream, "GENERATE {max_new} {}", words.join(" "))?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    writeln!(stream, "QUIT")?;
+    anyhow::ensure!(line.starts_with("OK"), "server error: {line}");
+    Ok(line.trim_end().to_string())
+}
+
 fn main() -> anyhow::Result<()> {
     let flags = parse_flags(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
     let addr = match flags.get("addr") {
@@ -25,7 +39,10 @@ fn main() -> anyhow::Result<()> {
             let a2 = addr.clone();
             std::thread::spawn(move || {
                 let f = parse_flags(
-                    ["--addr", &a2, "--max-conns", "2"].iter().map(|s| s.to_string()),
+                    // 1 probe + 3 serial + 2 concurrent + 1 stats connection
+                    ["--addr", &a2, "--max-conns", "8", "--max-sessions", "4"]
+                        .iter()
+                        .map(|s| s.to_string()),
                 )
                 .unwrap();
                 if let Err(e) = hat::server::cmd_serve(&f) {
@@ -36,21 +53,19 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
-    // Wait for the engine to come up (artifact compilation takes seconds).
-    let mut stream = None;
+    // Wait for the background server thread to bind its listener.  The
+    // engine loads before the accept loop starts, so once connect
+    // succeeds, early requests simply queue in the TCP backlog.
+    let mut up = false;
     for _ in 0..600 {
-        match TcpStream::connect(&addr) {
-            Ok(s) => {
-                stream = Some(s);
-                break;
-            }
-            Err(_) => std::thread::sleep(std::time::Duration::from_millis(100)),
+        if TcpStream::connect(&addr).is_ok() {
+            up = true;
+            break;
         }
+        std::thread::sleep(std::time::Duration::from_millis(100));
     }
-    let stream = stream.ok_or_else(|| anyhow::anyhow!("server at {addr} never came up"))?;
+    anyhow::ensure!(up, "server at {addr} never came up");
     println!("connected to {addr}");
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
 
     let dir = ArtifactRegistry::default_dir();
     // Token ids < 256 are valid for both the synthetic reference model
@@ -63,20 +78,34 @@ fn main() -> anyhow::Result<()> {
 
     for (i, plen) in [40usize, 80, 120].iter().enumerate() {
         let prompt = pool.sample(*plen, &mut rng);
-        let words: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
-        writeln!(stream, "GENERATE 24 {}", words.join(" "))?;
-        let mut line = String::new();
-        reader.read_line(&mut line)?;
-        let short = if line.len() > 110 { &line[..110] } else { line.trim_end() };
+        let line = request(&addr, 24, &prompt)?;
+        let short = if line.len() > 110 { &line[..110] } else { &line[..] };
         println!("req {i} (prompt {plen} tok): {short}...");
-        anyhow::ensure!(line.starts_with("OK"), "server error: {line}");
     }
 
+    // Two concurrent connections: the scheduler interleaves their prefill
+    // chunks and verify rounds in one engine worker.
+    println!("issuing 2 concurrent GENERATEs...");
+    let handles: Vec<_> = [64usize, 96]
+        .iter()
+        .map(|&plen| {
+            let addr = addr.clone();
+            let prompt = pool.sample(plen, &mut rng);
+            std::thread::spawn(move || request(&addr, 24, &prompt))
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let line = h.join().expect("client thread panicked")?;
+        let short = if line.len() > 110 { &line[..110] } else { &line[..] };
+        println!("concurrent req {i}: {short}...");
+    }
+
+    let mut stream = TcpStream::connect(&addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
     writeln!(stream, "STATS")?;
     let mut line = String::new();
     reader.read_line(&mut line)?;
     println!("server stats: {}", line.trim_end());
-
     writeln!(stream, "QUIT")?;
     Ok(())
 }

@@ -4,7 +4,10 @@
 //! ```text
 //! hat simulate [--framework F] [--dataset D] [--rate R] [--pipeline P]
 //!              [--requests N] [--seed S] [--config FILE]
-//! hat serve    [--addr HOST:PORT] [--config FILE]   real TCP serving over the engine
+//! hat serve    [--addr HOST:PORT] [--config FILE] [--max-sessions N]
+//!              [--prefill-budget T] [--max-conns N]
+//!              real TCP serving: continuous-batching scheduler over the
+//!              engine (N concurrent sessions, T prefill tokens/iteration)
 //! hat profile  [--rounds N]             measure SD round shapes
 //! hat inspect                           print manifest / artifact summary
 //! ```

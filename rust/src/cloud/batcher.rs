@@ -49,6 +49,17 @@ impl Batcher {
         self.decode_q.len() + self.prefill_q.len()
     }
 
+    /// Pending verify/decode jobs (the serve scheduler reports queue
+    /// depths through STATS).
+    pub fn decode_pending(&self) -> usize {
+        self.decode_q.len()
+    }
+
+    /// Pending prefill chunks.
+    pub fn prefill_pending(&self) -> usize {
+        self.prefill_q.len()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.pending() == 0
     }
@@ -102,6 +113,8 @@ mod tests {
         b.push(job(3, JobKind::PrefillChunk, 512));
         b.push(job(1, JobKind::Decode, 3));
         b.push(job(2, JobKind::Decode, 1));
+        assert_eq!(b.decode_pending(), 2);
+        assert_eq!(b.prefill_pending(), 2);
         let batch = b.form_batch(256);
         // All decodes + exactly one prefill chunk (the first chunk always
         // rides, further ones respect the budget).

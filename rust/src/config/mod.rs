@@ -164,6 +164,52 @@ impl Default for SpecDecConfig {
     }
 }
 
+/// Real-serving configuration (`hat serve`): the continuous-batching
+/// scheduler that interleaves live sessions at chunk/round granularity
+/// (server::scheduler).  The Eq. 3 chunk optimizer needs a wire model and
+/// a delay predictor; defaults follow the paper's §4.1 testbed.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Max sessions the engine worker decodes concurrently
+    /// (`--max-sessions`).
+    pub max_sessions: usize,
+    /// Prefill token budget per scheduler iteration, Sarathi-style
+    /// (`--prefill-budget`).
+    pub prefill_budget: usize,
+    /// Chunk-size bounds for the Eq. 3 optimizer (the upper bound is
+    /// additionally clamped to the engine's largest compiled bucket).
+    pub min_chunk: usize,
+    pub max_chunk: usize,
+    /// EWMA factor α for the batched-token-size moving average μ^t (Eq. 1).
+    pub alpha: f64,
+    /// Pipeline length P assumed by the Eq. 3 optimizer.
+    pub pipeline_len: usize,
+    /// Hidden-state wire bytes per uploaded token (A in Eq. 3).
+    pub a_bytes: f64,
+    /// Assumed device uplink bandwidth β_up, bytes/ms.
+    pub up_bytes_per_ms: f64,
+    /// In-cloud delay predictor g(·) for the optimizer.
+    pub g: GModel,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_sessions: 8,
+            prefill_budget: 256,
+            min_chunk: 16,
+            max_chunk: 256,
+            alpha: 0.8,
+            pipeline_len: 4,
+            // Paper-scale wire model: f16 elements of a 4096-wide hidden
+            // state over a ~56 Mbit/s uplink (§4.1).
+            a_bytes: 2.0 * 4096.0,
+            up_bytes_per_ms: 7000.0,
+            g: GModel::vicuna7b(),
+        }
+    }
+}
+
 /// Which collaborative-inference framework to run (§4.1 baselines).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Framework {
@@ -277,6 +323,8 @@ pub struct ExperimentConfig {
     pub workload: WorkloadConfig,
     pub cloud: CloudConfig,
     pub specdec: SpecDecConfig,
+    /// Real-serving scheduler settings (`hat serve`).
+    pub serve: ServeConfig,
     /// Chunk-size bounds for the Eq. 3 optimizer.
     pub min_chunk: usize,
     pub max_chunk: usize,
@@ -291,6 +339,7 @@ impl ExperimentConfig {
             workload: WorkloadConfig::preset(dataset),
             cloud: CloudConfig::preset(dataset, 4),
             specdec: SpecDecConfig::default(),
+            serve: ServeConfig::default(),
             min_chunk: 16,
             max_chunk: 512,
         }
@@ -322,6 +371,21 @@ impl ExperimentConfig {
         }
         if self.min_chunk == 0 || self.min_chunk > self.max_chunk {
             errs.push("chunk bounds invalid".into());
+        }
+        if self.serve.max_sessions == 0 {
+            errs.push("serve.max_sessions must be > 0".into());
+        }
+        if self.serve.prefill_budget == 0 {
+            errs.push("serve.prefill_budget must be > 0".into());
+        }
+        if self.serve.min_chunk == 0 || self.serve.min_chunk > self.serve.max_chunk {
+            errs.push("serve chunk bounds invalid".into());
+        }
+        if !(0.0..=1.0).contains(&self.serve.alpha) {
+            errs.push("serve.alpha must be in [0,1]".into());
+        }
+        if self.serve.pipeline_len == 0 {
+            errs.push("serve.pipeline_len must be > 0".into());
         }
         if self.workload.min_prompt > self.workload.max_prompt {
             errs.push("prompt bounds invalid".into());

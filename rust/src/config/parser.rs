@@ -140,6 +140,12 @@ pub fn build(map: &BTreeMap<String, Scalar>) -> Result<ExperimentConfig, String>
             "specdec.max_draft" => cfg.specdec.max_draft = us()?,
             "specdec.top_k" => cfg.specdec.top_k = us()?,
             "specdec.max_new_tokens" => cfg.specdec.max_new_tokens = us()?,
+            "serve.max_sessions" => cfg.serve.max_sessions = us()?,
+            "serve.prefill_budget" => cfg.serve.prefill_budget = us()?,
+            "serve.min_chunk" => cfg.serve.min_chunk = us()?,
+            "serve.max_chunk" => cfg.serve.max_chunk = us()?,
+            "serve.alpha" => cfg.serve.alpha = num()?,
+            "serve.pipeline_len" => cfg.serve.pipeline_len = us()?,
             "strategies.sd" => cfg.strategies.sd = b()?,
             "strategies.pc" => cfg.strategies.pc = b()?,
             "strategies.pd" => cfg.strategies.pd = b()?,
@@ -195,6 +201,17 @@ mod tests {
         assert_eq!(cfg.workload.rate, 2.5);
         assert_eq!(cfg.cloud.pipeline_len, 8);
         assert_eq!(cfg.strategies.server_chunk, Some(256));
+    }
+
+    #[test]
+    fn serve_section_overlays_and_validates() {
+        let m = parse("[serve]\nmax_sessions = 4\nprefill_budget = 128\nmin_chunk = 8\n").unwrap();
+        let cfg = build(&m).unwrap();
+        assert_eq!(cfg.serve.max_sessions, 4);
+        assert_eq!(cfg.serve.prefill_budget, 128);
+        assert_eq!(cfg.serve.min_chunk, 8);
+        let m = parse("[serve]\nmax_sessions = 0\n").unwrap();
+        assert!(build(&m).unwrap_err().contains("serve.max_sessions"));
     }
 
     #[test]

@@ -151,11 +151,14 @@ impl Engine {
 
     // -- helpers -------------------------------------------------------------
 
-    /// Argmax over a logit row.
+    /// Argmax over a logit row.  NaN-tolerant: NaN entries rank below every
+    /// real value (a numerically-poisoned row degrades to the first finite
+    /// maximum instead of panicking or sticking at index 0).
     pub fn argmax(logits: &[f32]) -> TokenId {
         let mut best = 0;
         for (i, &x) in logits.iter().enumerate() {
-            if x > logits[best] {
+            let b = logits[best];
+            if b.is_nan() || (!x.is_nan() && x > b) {
                 best = i;
             }
         }
@@ -169,10 +172,13 @@ impl Engine {
         1.0 / sum
     }
 
-    /// Top-k token ids by logit, descending.
+    /// Top-k token ids by logit, descending.  Total order via
+    /// `f32::total_cmp` with NaN mapped below every real value — the old
+    /// `partial_cmp().unwrap()` panicked on any NaN logit.
     pub fn top_k(logits: &[f32], k: usize) -> Vec<TokenId> {
+        let key = |x: f32| if x.is_nan() { f32::NEG_INFINITY } else { x };
         let mut idx: Vec<usize> = (0..logits.len()).collect();
-        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.sort_by(|&a, &b| key(logits[b]).total_cmp(&key(logits[a])));
         idx.truncate(k);
         idx.into_iter().map(|i| i as TokenId).collect()
     }
@@ -187,6 +193,19 @@ mod tests {
         let l = [0.1f32, 3.0, -1.0, 2.5];
         assert_eq!(Engine::argmax(&l), 1);
         assert_eq!(Engine::top_k(&l, 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn argmax_and_topk_tolerate_nan() {
+        // Regression: partial_cmp().unwrap() panicked on NaN logits, and
+        // argmax stuck at index 0 when logits[0] was NaN.
+        let l = [f32::NAN, 1.0, 3.0, f32::NAN, 2.0];
+        assert_eq!(Engine::argmax(&l), 2);
+        assert_eq!(Engine::top_k(&l, 3), vec![2, 4, 1]);
+        // All-NaN rows must not panic either.
+        let all_nan = [f32::NAN; 4];
+        assert!((Engine::argmax(&all_nan) as usize) < all_nan.len());
+        assert_eq!(Engine::top_k(&all_nan, 2).len(), 2);
     }
 
     #[test]

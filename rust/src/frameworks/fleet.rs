@@ -340,6 +340,7 @@ impl FleetSim {
         rec
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn schedule_chunk_compute(
         &self,
         q: &mut EventQueue<Ev>,
@@ -358,6 +359,7 @@ impl FleetSim {
         q.schedule_at(compute_free[dev], Ev::ChunkComputed { r, c });
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn schedule_download(
         &self,
         q: &mut EventQueue<Ev>,

@@ -181,6 +181,88 @@ impl Recorder {
     }
 }
 
+/// Speculative-decoding acceptance rate: Σ accepted / Σ proposed, 0 when
+/// nothing was proposed.  The single definition shared by per-request
+/// GENERATE replies (`server::Generation`) and the STATS aggregates
+/// ([`ServeStats`]) — per-proposal acceptance, independent of truncation.
+pub fn accept_rate(accepted: usize, proposed: usize) -> f64 {
+    if proposed == 0 { 0.0 } else { accepted as f64 / proposed as f64 }
+}
+
+/// Aggregate metrics of the real serving path's continuous-batching
+/// scheduler, surfaced through the TCP `STATS` command.  Unlike
+/// [`Recorder`] (virtual time, fleet simulator) these are wall-clock
+/// measurements of the engine worker.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    /// Completed GENERATE requests.
+    pub finished: usize,
+    /// Scheduler iterations (batches formed).
+    pub iterations: u64,
+    /// Per-request wait between arrival and slot admission, ms.
+    pub queue_wait_ms: Welford,
+    /// Per-request time to first token (arrival → first token), ms.
+    pub ttft_ms: Welford,
+    /// Per-request mean time between tokens in the decode phase, ms.
+    pub tbt_ms: Welford,
+    /// Σ SD rounds across finished requests.
+    pub rounds: usize,
+    /// Σ draft tokens proposed across finished requests' rounds.
+    pub proposed: usize,
+    /// Σ draft tokens accepted across finished requests' rounds.
+    pub accepted: usize,
+    /// Chunk sizes picked by the Eq. 3 optimizer.
+    pub chunk_sizes: Welford,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats::default()
+    }
+
+    /// Record one finished request.
+    pub fn record_finish(
+        &mut self,
+        queue_wait_ms: f64,
+        ttft_ms: f64,
+        mean_tbt_ms: Option<f64>,
+        rounds: usize,
+        proposed: usize,
+        accepted: usize,
+    ) {
+        self.finished += 1;
+        self.queue_wait_ms.push(queue_wait_ms);
+        self.ttft_ms.push(ttft_ms);
+        if let Some(t) = mean_tbt_ms {
+            self.tbt_ms.push(t);
+        }
+        self.rounds += rounds;
+        self.proposed += proposed;
+        self.accepted += accepted;
+    }
+
+    /// Aggregate acceptance rate over all finished requests' rounds.
+    pub fn accept_rate(&self) -> f64 {
+        accept_rate(self.accepted, self.proposed)
+    }
+
+    /// Scheduler fields of the `STATS` reply line.
+    pub fn stats_fields(&self) -> String {
+        format!(
+            "requests={} iterations={} queue_wait_ms={:.1} ttft_ms={:.1} tbt_ms={:.1} \
+             rounds={} accept={:.3} chunk_mean={:.1}",
+            self.finished,
+            self.iterations,
+            self.queue_wait_ms.mean(),
+            self.ttft_ms.mean(),
+            self.tbt_ms.mean(),
+            self.rounds,
+            self.accept_rate(),
+            self.chunk_sizes.mean()
+        )
+    }
+}
+
 /// Flat result row for the bench harnesses.
 #[derive(Debug, Clone)]
 pub struct RunSummary {
@@ -289,6 +371,23 @@ mod tests {
         assert!(s.iter().all(|&x| (x - 100.0).abs() < 1e-9));
         assert!((Recorder::compliance(&s, 100.0) - 1.0).abs() < 1e-12);
         assert_eq!(Recorder::compliance(&s, 99.0), 0.0);
+    }
+
+    #[test]
+    fn serve_stats_aggregate_and_accept_rate() {
+        let mut s = ServeStats::new();
+        assert_eq!(s.accept_rate(), 0.0, "no rounds yet");
+        s.record_finish(2.0, 10.0, Some(4.0), 3, 10, 4);
+        s.record_finish(4.0, 20.0, None, 2, 5, 2);
+        assert_eq!(s.finished, 2);
+        assert!((s.queue_wait_ms.mean() - 3.0).abs() < 1e-12);
+        assert!((s.ttft_ms.mean() - 15.0).abs() < 1e-12);
+        assert_eq!(s.tbt_ms.count(), 1, "1-token requests have no TBT");
+        assert!((s.accept_rate() - 6.0 / 15.0).abs() < 1e-12);
+        let f = s.stats_fields();
+        for key in ["requests=2", "rounds=5", "accept=0.400", "queue_wait_ms=3.0"] {
+            assert!(f.contains(key), "missing {key} in {f}");
+        }
     }
 
     #[test]

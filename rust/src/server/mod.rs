@@ -6,24 +6,48 @@
 //!
 //! ```text
 //! C: GENERATE <max_new_tokens> <tok> <tok> ...\n
-//! S: OK <tok> <tok> ... | rounds=<n> accept=<mean>\n
+//! S: OK <tok> <tok> ... | rounds=<n> accept=<rate>\n
 //! C: STATS\n
-//! S: OK executions=<n> exec_ms=<t> compiles=<n>\n
+//! S: OK executions=<n> exec_ms=<t> compiles=<n> compile_ms=<t>
+//!       requests=<n> iterations=<n> queue_wait_ms=<t> ttft_ms=<t>
+//!       tbt_ms=<t> rounds=<n> accept=<rate> chunk_mean=<x>
+//!       queued=<n> live=<n> decode_q=<n> prefill_q=<n>\n
+//!                                                 (one line on the wire)
 //! C: QUIT\n
+//! S: OK bye\n
 //! ```
 //!
-//! The engine is not thread-safe (one backend client), so a single worker
-//! thread owns it and connections are multiplexed through a channel — the
-//! same leader/worker shape a production router uses.
+//! GENERATE's `accept` is the speculative-decoding acceptance rate
+//! Σ accepted / Σ proposed over the request's rounds (independent of the
+//! final truncation to max_new_tokens).  STATS carries the backend runtime
+//! counters followed by the scheduler aggregates: finished request count,
+//! scheduler iterations, mean queue wait / TTFT / TBT (wall-clock ms),
+//! total SD rounds, the aggregate acceptance rate, the mean Eq. 3 chunk
+//! size, and the current queue depth / live session count.
+//!
+//! Concurrency model: the engine is not thread-safe (one backend client),
+//! so a single worker thread owns it and connections are multiplexed
+//! through a channel.  Unlike the original serial worker (one whole
+//! request at a time), the worker drives a continuous-batching
+//! [`scheduler::Scheduler`]: up to `--max-sessions` live sessions
+//! interleave at prefill-chunk / verify-round granularity, with prefill
+//! admitted under a `--prefill-budget` token budget per iteration and
+//! chunk sizes from the Eq. 3 optimizer.  Greedy-decoding losslessness
+//! makes the interleaving invisible in each connection's output.
+
+pub mod scheduler;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
+use std::time::Instant;
 
 use crate::cli::Flags;
-use crate::config::SpecDecConfig;
+use crate::config::{ServeConfig, SpecDecConfig};
 use crate::engine::Engine;
 use crate::specdec::{chunk_sizes, Session};
+
+use scheduler::{Request, Scheduler};
 
 /// A parsed request.
 #[derive(Debug, PartialEq)]
@@ -62,31 +86,74 @@ pub fn parse_line(line: &str, max_new_cap: usize) -> Result<Command, String> {
     }
 }
 
-/// Serve one request on the engine: HAT protocol (chunked prefill + SD).
+/// Result of one generation, with speculative-decoding accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Generation {
+    pub tokens: Vec<u32>,
+    /// Decode rounds executed.
+    pub rounds: usize,
+    /// Σ draft tokens proposed across rounds.
+    pub proposed: usize,
+    /// Σ draft tokens accepted across rounds.
+    pub accepted: usize,
+}
+
+impl Generation {
+    /// Acceptance rate Σ accepted / Σ proposed.  The old serve path
+    /// reported `(out.len()-1)/rounds` *after* truncation — that measures
+    /// emitted-per-round (it routinely exceeds 1.0) and truncation
+    /// deflated it; this is per-proposal acceptance, truncation-invariant
+    /// (one shared definition: [`crate::metrics::accept_rate`]).
+    pub fn accept_rate(&self) -> f64 {
+        crate::metrics::accept_rate(self.accepted, self.proposed)
+    }
+
+    /// The GENERATE protocol reply line (shared by the serial path and the
+    /// scheduler so the two are byte-identical by construction).
+    pub fn reply_line(&self) -> String {
+        let toks: Vec<String> = self.tokens.iter().map(|t| t.to_string()).collect();
+        format!("OK {} | rounds={} accept={:.3}", toks.join(" "), self.rounds, self.accept_rate())
+    }
+}
+
+/// Serve one request on the engine serially: HAT protocol (chunked prefill
+/// + SD).  This is the reference path the scheduler's interleaved
+/// execution must match byte-for-byte; prefill chunks come from the Eq. 3
+/// optimizer (same helpers as the scheduler) under a default `ServeConfig`
+/// and an idle-cloud assumption (μ = 0) — greedy losslessness means the
+/// chunk plan cannot change the emitted stream either way.
 pub fn generate(
     engine: &Engine,
     prompt: &[u32],
     max_new: usize,
     spec_cfg: &SpecDecConfig,
-) -> anyhow::Result<(Vec<u32>, usize, f64)> {
+) -> anyhow::Result<Generation> {
     let max_ctx = engine.spec().max_seq;
     anyhow::ensure!(
         prompt.len() + max_new + spec_cfg.max_draft + 2 <= max_ctx,
         "prompt+generation exceeds model max_seq {max_ctx}"
     );
+    let mut serve = ServeConfig::default();
+    scheduler::clamp_chunk_bounds(&mut serve, engine);
+    let x = scheduler::eq3_chunk(&serve, 0.0);
+
     let mut s = Session::new(engine, spec_cfg.clone())?;
-    let chunks = chunk_sizes(prompt.len(), 64);
+    let chunks = chunk_sizes(prompt.len(), x);
     let t1 = s.prefill(prompt, &chunks)?;
     let mut out = vec![t1];
-    let mut rounds = 0usize;
+    let (mut rounds, mut proposed, mut accepted) = (0usize, 0usize, 0usize);
     while out.len() < max_new {
-        let r = s.hat_round(true, 4)?;
+        // Cap the round's draft length by the tokens still needed, so the
+        // final round does not draft tokens that would only be truncated.
+        let budget = (max_new - out.len()).saturating_sub(1).max(1);
+        let r = s.hat_round_capped(true, 4, budget)?;
         out.extend_from_slice(&r.emitted);
         rounds += 1;
+        proposed += r.proposed.len();
+        accepted += r.accepted;
     }
     out.truncate(max_new);
-    let accept = if rounds == 0 { 0.0 } else { (out.len() - 1) as f64 / rounds as f64 };
-    Ok((out, rounds, accept))
+    Ok(Generation { tokens: out, rounds, proposed, accepted })
 }
 
 enum WorkerMsg {
@@ -94,38 +161,68 @@ enum WorkerMsg {
     Stats { reply: mpsc::Sender<String> },
 }
 
-fn worker_loop(engine: Engine, spec_cfg: SpecDecConfig, rx: mpsc::Receiver<WorkerMsg>) {
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            WorkerMsg::Gen { max_new, prompt, reply } => {
-                let resp = match generate(&engine, &prompt, max_new, &spec_cfg) {
-                    Ok((toks, rounds, accept)) => {
-                        let toks: Vec<String> = toks.iter().map(|t| t.to_string()).collect();
-                        format!("OK {} | rounds={rounds} accept={accept:.2}", toks.join(" "))
-                    }
-                    Err(e) => format!("ERR {e}"),
-                };
-                let _ = reply.send(resp);
-            }
-            WorkerMsg::Stats { reply } => {
-                let s = engine.reg.stats();
-                let _ = reply.send(format!(
-                    "OK executions={} exec_ms={:.1} compiles={} compile_ms={:.1}",
-                    s.executions, s.execute_ms, s.compiles, s.compile_ms
-                ));
+/// The engine-owning worker: a continuous-batching scheduler loop.  New
+/// commands are drained between iterations (blocking only when fully
+/// idle); GENERATE replies are sent by the scheduler when each request
+/// finishes, so concurrent connections interleave at chunk/round
+/// granularity instead of head-of-line blocking.
+fn worker_loop(
+    engine: Engine,
+    spec_cfg: SpecDecConfig,
+    serve_cfg: ServeConfig,
+    rx: mpsc::Receiver<WorkerMsg>,
+) {
+    let mut sched = Scheduler::new(&engine, spec_cfg, serve_cfg);
+    loop {
+        loop {
+            let msg = if sched.has_work() {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(mpsc::TryRecvError::Empty) => None,
+                    // Connections are gone but admitted work remains:
+                    // finish it (replies go nowhere) and exit via the
+                    // idle recv() error below.
+                    Err(mpsc::TryRecvError::Disconnected) => None,
+                }
+            } else {
+                match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => return,
+                }
+            };
+            match msg {
+                Some(WorkerMsg::Gen { max_new, prompt, reply }) => {
+                    sched.submit(Request { prompt, max_new, reply, enqueued: Instant::now() });
+                }
+                Some(WorkerMsg::Stats { reply }) => {
+                    let s = engine.reg.stats();
+                    let (dq, pq) = sched.job_depths();
+                    let _ = reply.send(format!(
+                        "OK executions={} exec_ms={:.1} compiles={} compile_ms={:.1} {} \
+                         queued={} live={} decode_q={dq} prefill_q={pq}",
+                        s.executions,
+                        s.execute_ms,
+                        s.compiles,
+                        s.compile_ms,
+                        sched.stats.stats_fields(),
+                        sched.queued(),
+                        sched.live_sessions(),
+                    ));
+                }
+                None => break,
             }
         }
+        sched.step();
     }
 }
 
 fn handle_conn(
-    stream: TcpStream,
+    mut stream: TcpStream,
     tx: &mpsc::Sender<WorkerMsg>,
     max_new_cap: usize,
 ) -> std::io::Result<()> {
     let peer = stream.peer_addr()?;
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
     let mut line = String::new();
     loop {
         line.clear();
@@ -159,16 +256,15 @@ fn handle_conn(
     }
 }
 
-/// `hat serve --addr 127.0.0.1:7071 [--config FILE]`
-///
-/// `--config` reuses the experiment-config format; its `[specdec]` section
-/// (eta, max_draft, top_k, max_new_tokens) governs serving.
-pub fn cmd_serve(f: &Flags) -> Result<(), String> {
-    let addr = f.get("addr").unwrap_or("127.0.0.1:7071").to_string();
-    let spec_cfg = match f.get("config") {
-        Some(path) => crate::config::parser::load_file(path)?.specdec,
-        None => SpecDecConfig::default(),
-    };
+/// Run the serve loop on an already-bound listener (the testable core of
+/// [`cmd_serve`]; binding is the caller's job so tests can use port 0).
+/// Accepts at most `max_conns` connections, then returns.
+pub fn serve_listener(
+    listener: TcpListener,
+    spec_cfg: SpecDecConfig,
+    serve_cfg: ServeConfig,
+    max_conns: usize,
+) -> Result<(), String> {
     let max_new_cap = spec_cfg.max_new_tokens;
     // The engine (backend client) is !Send: construct it inside its owning
     // worker thread and hand back only the ready/failed signal.
@@ -177,7 +273,7 @@ pub fn cmd_serve(f: &Flags) -> Result<(), String> {
     std::thread::spawn(move || match Engine::load_default() {
         Ok(engine) => {
             let _ = ready_tx.send(Ok(()));
-            worker_loop(engine, spec_cfg, rx);
+            worker_loop(engine, spec_cfg, serve_cfg, rx);
         }
         Err(e) => {
             let _ = ready_tx.send(Err(e.to_string()));
@@ -188,9 +284,6 @@ pub fn cmd_serve(f: &Flags) -> Result<(), String> {
         .map_err(|_| "engine worker died".to_string())?
         .map_err(|e| format!("engine load: {e}"))?;
 
-    let listener = TcpListener::bind(&addr).map_err(|e| format!("bind {addr}: {e}"))?;
-    eprintln!("hat serving on {addr} (line protocol; see rust/src/server/mod.rs)");
-    let max_conns = f.get_usize("max-conns").map_err(|e| e)?.unwrap_or(usize::MAX);
     let mut served = 0usize;
     for stream in listener.incoming() {
         match stream {
@@ -201,15 +294,57 @@ pub fn cmd_serve(f: &Flags) -> Result<(), String> {
                         eprintln!("conn error: {e}");
                     }
                 });
+                // Only successful accepts count toward the bound: callers
+                // size max_conns exactly (tests, examples), and a transient
+                // accept error must not strand the last expected client.
+                served += 1;
             }
             Err(e) => eprintln!("accept error: {e}"),
         }
-        served += 1;
         if served >= max_conns {
             break; // test hook: bounded accept loop
         }
     }
     Ok(())
+}
+
+/// `hat serve --addr 127.0.0.1:7071 [--config FILE] [--max-sessions N]
+/// [--prefill-budget T] [--max-conns N]`
+///
+/// `--config` reuses the experiment-config format: its `[specdec]` section
+/// (eta, max_draft, top_k, max_new_tokens) and `[serve]` section
+/// (max_sessions, prefill_budget, min_chunk, max_chunk, alpha,
+/// pipeline_len) govern serving; `--max-sessions` / `--prefill-budget`
+/// override the file.
+pub fn cmd_serve(f: &Flags) -> Result<(), String> {
+    let addr = f.get("addr").unwrap_or("127.0.0.1:7071").to_string();
+    let (spec_cfg, mut serve_cfg) = match f.get("config") {
+        Some(path) => {
+            let cfg = crate::config::parser::load_file(path)?;
+            (cfg.specdec, cfg.serve)
+        }
+        None => (SpecDecConfig::default(), ServeConfig::default()),
+    };
+    if let Some(n) = f.get_usize("max-sessions")? {
+        if n == 0 {
+            return Err("--max-sessions must be > 0".into());
+        }
+        serve_cfg.max_sessions = n;
+    }
+    if let Some(t) = f.get_usize("prefill-budget")? {
+        if t == 0 {
+            return Err("--prefill-budget must be > 0".into());
+        }
+        serve_cfg.prefill_budget = t;
+    }
+    let max_conns = f.get_usize("max-conns")?.unwrap_or(usize::MAX);
+
+    let listener = TcpListener::bind(&addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    eprintln!(
+        "hat serving on {addr} ({} sessions, prefill budget {}; line protocol — see rust/src/server/mod.rs)",
+        serve_cfg.max_sessions, serve_cfg.prefill_budget
+    );
+    serve_listener(listener, spec_cfg, serve_cfg, max_conns)
 }
 
 #[cfg(test)]
@@ -262,12 +397,84 @@ mod tests {
         // artifacts, no accelerator libraries.
         let engine = Engine::synthetic();
         let cfg = SpecDecConfig::default();
-        let (toks, rounds, _accept) = generate(&engine, &[5, 9, 2, 14], 12, &cfg).unwrap();
-        assert_eq!(toks.len(), 12);
-        assert!(rounds >= 1);
-        assert!(toks.iter().all(|&t| (t as usize) < engine.spec().vocab));
+        let g = generate(&engine, &[5, 9, 2, 14], 12, &cfg).unwrap();
+        assert_eq!(g.tokens.len(), 12);
+        assert!(g.rounds >= 1);
+        assert!(g.tokens.iter().all(|&t| (t as usize) < engine.spec().vocab));
         // Deterministic: same prompt, same stream.
-        let (toks2, _, _) = generate(&engine, &[5, 9, 2, 14], 12, &cfg).unwrap();
-        assert_eq!(toks, toks2);
+        let g2 = generate(&engine, &[5, 9, 2, 14], 12, &cfg).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn accept_rate_is_truncation_invariant() {
+        // Regression for the old `(out.len()-1)/rounds` metric: replay the
+        // pre-fix serial loop (uncapped rounds, truncate at the end) and
+        // find a case where the final round overshoots max_new — there the
+        // old metric changed under truncation, while Σaccepted/Σproposed
+        // is computed from the rounds themselves and cannot.
+        let engine = Engine::synthetic();
+        let cfg = SpecDecConfig::default();
+        let mut found = false;
+        for seed in 0..20u32 {
+            let prompt = vec![3 + seed, 9, 2, 14];
+            let mut s = Session::new(&engine, cfg.clone()).unwrap();
+            let t1 = s.prefill(&prompt, &[prompt.len()]).unwrap();
+            let mut out = vec![t1];
+            let (mut rounds, mut proposed, mut accepted) = (0usize, 0usize, 0usize);
+            let max_new = 2;
+            while out.len() < max_new {
+                let r = s.hat_round(true, 4).unwrap(); // uncapped, as before
+                out.extend_from_slice(&r.emitted);
+                rounds += 1;
+                proposed += r.proposed.len();
+                accepted += r.accepted;
+            }
+            let before = out.len();
+            out.truncate(max_new);
+            if before > max_new {
+                found = true;
+                let old_untruncated = (before - 1) as f64 / rounds as f64;
+                let old_truncated = (out.len() - 1) as f64 / rounds as f64;
+                assert_ne!(
+                    old_untruncated, old_truncated,
+                    "old metric was truncation-sensitive"
+                );
+                let rate = accepted as f64 / proposed as f64;
+                assert!(rate <= 1.0, "a rate cannot exceed 1: {rate}");
+            }
+        }
+        assert!(found, "no overshooting round in 20 prompts — widen the sweep");
+
+        // The serving path reports the corrected metric.
+        let g = generate(&engine, &[5, 9, 2, 14], 7, &cfg).unwrap();
+        assert_eq!(g.tokens.len(), 7);
+        assert!(g.accept_rate() <= 1.0);
+        assert!(g.proposed >= g.accepted);
+        assert!(
+            g.reply_line().contains(&format!("accept={:.3}", g.accept_rate())),
+            "reply must carry the corrected rate"
+        );
+    }
+
+    #[test]
+    fn generate_is_chunk_plan_invariant() {
+        // The Eq. 3-planned chunks must not change the stream vs the old
+        // fixed-64 chunking (greedy losslessness covers prefill too).
+        let engine = Engine::synthetic();
+        let cfg = SpecDecConfig::default();
+        let prompt: Vec<u32> = (0u32..130).map(|i| (i * 13 + 5) % 256).collect();
+        let g = generate(&engine, &prompt, 10, &cfg).unwrap();
+
+        let mut s = Session::new(&engine, cfg.clone()).unwrap();
+        let t1 = s.prefill(&prompt, &chunk_sizes(prompt.len(), 64)).unwrap();
+        let mut out = vec![t1];
+        while out.len() < 10 {
+            let budget = (10 - out.len()).saturating_sub(1).max(1);
+            let r = s.hat_round_capped(true, 4, budget).unwrap();
+            out.extend_from_slice(&r.emitted);
+        }
+        out.truncate(10);
+        assert_eq!(g.tokens, out);
     }
 }

@@ -57,7 +57,23 @@ struct PreDraft {
     steps: usize,
 }
 
+/// In-flight chunked-prefill state (between [`Session::prefill_begin`] and
+/// the final [`Session::prefill_step`]).
+struct PrefillState {
+    prompt: Vec<TokenId>,
+    /// Prompt tokens already processed.
+    off: usize,
+    /// Deep hidden of the last processed row (head input once complete).
+    last_deep: Vec<f32>,
+}
+
 /// One request's end-to-end inference session over the real engine.
+///
+/// The session is a *resumable step machine*: the serve scheduler drives it
+/// one prefill chunk ([`Session::prefill_step`]) or one decode round
+/// ([`Session::hat_round_capped`]) at a time, interleaving many sessions at
+/// chunk/round granularity.  The one-shot [`Session::prefill`] wrapper
+/// preserves the original monolithic API for offline callers.
 pub struct Session<'e> {
     pub engine: &'e Engine,
     pub dev: DeviceStream,
@@ -65,6 +81,8 @@ pub struct Session<'e> {
     /// Full context: prompt + generated tokens.
     pub ctx: Vec<TokenId>,
     n_prompt: usize,
+    /// Staged chunked prefill, if one is in flight.
+    prefill: Option<PrefillState>,
     /// First undrafted token (the d_0 of the next round).
     pending: Option<TokenId>,
     /// Deep hidden of the last verified row (Medusa state).
@@ -87,6 +105,7 @@ impl<'e> Session<'e> {
             cloud: CloudStream::new(engine.spec())?,
             ctx: Vec::new(),
             n_prompt: 0,
+            prefill: None,
             pending: None,
             last_deep: Vec::new(),
             corr_candidates: Vec::new(),
@@ -96,38 +115,69 @@ impl<'e> Session<'e> {
         })
     }
 
-    /// Prefill the prompt in `chunks` (sizes summing to prompt.len()),
-    /// returning the first output token.  Every chunk flows
-    /// device_input → adapter_prefill → cloud_middle (exactly HAT's
-    /// pipelined prefill data path, Fig. 4 — the virtual-time overlap is
-    /// the simulator's job); the head runs on the last chunk's final row.
-    pub fn prefill(&mut self, prompt: &[TokenId], chunks: &[usize]) -> Result<TokenId> {
-        assert_eq!(chunks.iter().sum::<usize>(), prompt.len(), "chunks must cover prompt");
+    /// Stage a prompt for resumable chunked prefill without processing
+    /// anything yet.  Drive it with [`Session::prefill_step`]; the serve
+    /// scheduler calls that once per batcher-admitted prefill chunk.
+    pub fn prefill_begin(&mut self, prompt: &[TokenId]) {
         assert!(self.ctx.is_empty(), "prefill on a used session");
+        assert!(self.prefill.is_none(), "prefill already staged");
         assert!(!prompt.is_empty());
-        let h = self.engine.spec().hidden;
-        let mut off = 0;
-        let mut last_deep: Vec<f32> = Vec::new();
-        for &c in chunks {
-            let tokens = &prompt[off..off + c];
-            let hidden = self.engine.device_input(&mut self.dev, tokens)?;
-            self.engine.adapter_prefill(&mut self.dev, &hidden)?;
-            let deep = self.engine.cloud_middle(&mut self.cloud, &hidden)?;
-            last_deep = deep[(c - 1) * h..c * h].to_vec();
-            off += c;
-        }
-        self.dev.spos.commit(prompt.len());
-        self.dev.apos.commit(prompt.len());
-        self.cloud.pos.commit(prompt.len());
-        self.ctx.extend_from_slice(prompt);
-        self.n_prompt = prompt.len();
+        self.prefill =
+            Some(PrefillState { prompt: prompt.to_vec(), off: 0, last_deep: Vec::new() });
+    }
 
-        let logits = self.engine.head(&last_deep)?;
+    /// Prompt tokens not yet prefilled (0 when no prefill is staged).
+    pub fn prefill_remaining(&self) -> usize {
+        self.prefill.as_ref().map_or(0, |p| p.prompt.len() - p.off)
+    }
+
+    /// Process the next prefill chunk of up to `max_tokens` prompt tokens.
+    /// Each chunk flows device_input → adapter_prefill → cloud_middle
+    /// (exactly HAT's pipelined prefill data path, Fig. 4 — the
+    /// virtual-time overlap is the simulator's job).  Returns
+    /// `Some(first_token)` when the last chunk completes (the head runs on
+    /// that chunk's final row), `None` while prompt tokens remain.
+    pub fn prefill_step(&mut self, max_tokens: usize) -> Result<Option<TokenId>> {
+        assert!(max_tokens > 0, "empty prefill chunk");
+        let mut st = self.prefill.take().expect("call prefill_begin first");
+        let c = max_tokens.min(st.prompt.len() - st.off);
+        let h = self.engine.spec().hidden;
+        let tokens = &st.prompt[st.off..st.off + c];
+        let hidden = self.engine.device_input(&mut self.dev, tokens)?;
+        self.engine.adapter_prefill(&mut self.dev, &hidden)?;
+        let deep = self.engine.cloud_middle(&mut self.cloud, &hidden)?;
+        st.last_deep = deep[(c - 1) * h..c * h].to_vec();
+        st.off += c;
+        self.dev.spos.commit(c);
+        self.dev.apos.commit(c);
+        self.cloud.pos.commit(c);
+        if st.off < st.prompt.len() {
+            self.prefill = Some(st);
+            return Ok(None);
+        }
+        self.n_prompt = st.prompt.len();
+        self.ctx.extend_from_slice(&st.prompt);
+        let logits = self.engine.head(&st.last_deep)?;
         let t1 = Engine::argmax(&logits);
         self.ctx.push(t1);
         self.pending = Some(t1);
-        self.last_deep = last_deep;
-        Ok(t1)
+        self.last_deep = st.last_deep;
+        Ok(Some(t1))
+    }
+
+    /// One-shot prefill of the whole prompt in `chunks` (sizes summing to
+    /// prompt.len()), returning the first output token.  Wrapper over the
+    /// resumable [`Session::prefill_begin`] / [`Session::prefill_step`]
+    /// machine — the emitted stream is chunk-size-invariant either way.
+    pub fn prefill(&mut self, prompt: &[TokenId], chunks: &[usize]) -> Result<TokenId> {
+        assert_eq!(chunks.iter().sum::<usize>(), prompt.len(), "chunks must cover prompt");
+        self.prefill_begin(prompt);
+        let mut first = None;
+        for &c in chunks {
+            assert!(c > 0, "empty chunk");
+            first = self.prefill_step(c)?;
+        }
+        Ok(first.expect("chunks cover a non-empty prompt"))
     }
 
     /// Tokens generated so far (beyond the prompt, including the first).
@@ -152,8 +202,24 @@ impl<'e> Session<'e> {
     /// step that proposed d_k) and for the bonus slot (from processing
     /// d_k).
     pub fn hat_round(&mut self, parallel_draft: bool, lambda: usize) -> Result<RoundResult> {
+        self.hat_round_capped(parallel_draft, lambda, usize::MAX)
+    }
+
+    /// [`Session::hat_round`] with this round's draft length additionally
+    /// capped at `draft_budget` proposals (≥ 1).  The serve path passes the
+    /// request's remaining token budget so the *final* round does not spend
+    /// device draft steps and KV writes on tokens that would only be
+    /// truncated away: a round with k proposals emits at most k+1 tokens,
+    /// so `draft_budget = remaining - 1` makes the last round exact.
+    pub fn hat_round_capped(
+        &mut self,
+        parallel_draft: bool,
+        lambda: usize,
+        draft_budget: usize,
+    ) -> Result<RoundResult> {
         let d0 = self.pending.expect("call prefill first");
         let h = self.engine.spec().hidden;
+        let max_k = self.cfg.max_draft.min(draft_budget).max(1);
 
         // --- drafting stage (or adopt a parallel-drafting branch) ---------
         let (proposed, shallow, draft_steps, pd_hit) = match self.prebuilt.take() {
@@ -166,10 +232,21 @@ impl<'e> Session<'e> {
                 // for one round after a hit.
                 self.corr_candidates.clear();
                 self.bonus_candidates.clear();
-                (pb.proposed, pb.shallow, 0usize, true)
+                let mut proposed = pb.proposed;
+                let mut shallow = pb.shallow;
+                if proposed.len() > max_k {
+                    // A branch drafted past this round's budget: verify only
+                    // the first max_k proposals (shallow row i belongs to
+                    // token d_i, so the prefix is exactly the rows needed;
+                    // the over-drafted KV tail is rolled back after the
+                    // round like any rejected speculation).
+                    proposed.truncate(max_k);
+                    shallow.truncate((max_k + 1) * h);
+                }
+                (proposed, shallow, 0usize, true)
             }
             _ => {
-                let (p, s, n) = self.draft_live(d0, self.cfg.max_draft)?;
+                let (p, s, n) = self.draft_live(d0, max_k)?;
                 (p, s, n, false)
             }
         };
@@ -403,6 +480,78 @@ pub fn chunk_sizes(n: usize, size: usize) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn resumable_prefill_matches_one_shot() {
+        let engine = Engine::synthetic();
+        let cfg = SpecDecConfig::default();
+        let prompt: Vec<TokenId> = (0u32..37).map(|i| (i * 7 + 3) % 256).collect();
+
+        let mut a = Session::new(&engine, cfg.clone()).unwrap();
+        let t_a = a.prefill(&prompt, &[prompt.len()]).unwrap();
+
+        let mut b = Session::new(&engine, cfg.clone()).unwrap();
+        b.prefill_begin(&prompt);
+        assert_eq!(b.prefill_remaining(), prompt.len());
+        let mut last = None;
+        let mut guard = 0;
+        while b.prefill_remaining() > 0 {
+            last = b.prefill_step(10).unwrap();
+            guard += 1;
+            assert!(guard < 100, "prefill_step does not make progress");
+        }
+        assert_eq!(last, Some(t_a), "chunked prefill must be chunk-size-invariant");
+
+        // Both sessions continue through decode identically.
+        for _ in 0..3 {
+            let ra = a.hat_round(true, 4).unwrap();
+            let rb = b.hat_round(true, 4).unwrap();
+            assert_eq!(ra.emitted, rb.emitted);
+        }
+        assert_eq!(a.ctx, b.ctx);
+    }
+
+    #[test]
+    fn hat_round_capped_respects_draft_budget() {
+        let engine = Engine::synthetic();
+        let mut s = Session::new(&engine, SpecDecConfig::default()).unwrap();
+        s.prefill(&[5, 9, 2, 14], &[4]).unwrap();
+        // Budget 1: exactly one proposal, two uploaded rows, two draft steps
+        // (the proposal plus the processing of the proposal itself).
+        let r = s.hat_round_capped(true, 4, 1).unwrap();
+        assert_eq!(r.proposed.len(), 1);
+        assert_eq!(r.verify_tokens, 2);
+        assert!(r.emitted.len() <= 2);
+        // A follow-up round (possibly adopting a parallel-drafted branch
+        // longer than the budget) still respects the cap.
+        let r = s.hat_round_capped(true, 4, 3).unwrap();
+        assert!(r.proposed.len() <= 3, "budget exceeded: {}", r.proposed.len());
+        assert_eq!(r.verify_tokens, r.proposed.len() + 1);
+    }
+
+    #[test]
+    fn capped_rounds_emit_same_stream_as_uncapped() {
+        // Greedy losslessness means the draft budget must never change the
+        // emitted tokens — only how much speculative work each round does.
+        let engine = Engine::synthetic();
+        let cfg = SpecDecConfig::default();
+        let prompt = [7u32, 3, 200, 41, 5];
+
+        let gen = |budgets: &mut dyn FnMut(usize) -> usize| -> Vec<TokenId> {
+            let mut s = Session::new(&engine, cfg.clone()).unwrap();
+            let t1 = s.prefill(&prompt, &[prompt.len()]).unwrap();
+            let mut out = vec![t1];
+            while out.len() < 12 {
+                let r = s.hat_round_capped(true, 4, budgets(out.len())).unwrap();
+                out.extend_from_slice(&r.emitted);
+            }
+            out.truncate(12);
+            out
+        };
+        let uncapped = gen(&mut |_| usize::MAX);
+        let capped = gen(&mut |len| (12 - len).saturating_sub(1).max(1));
+        assert_eq!(uncapped, capped);
+    }
 
     #[test]
     fn chunk_sizes_cover() {
