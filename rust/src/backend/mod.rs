@@ -16,6 +16,28 @@
 //!
 //! Backend choice at runtime: `HAT_BACKEND=reference|pjrt` (default
 //! `reference`; `pjrt` requires the feature).
+//!
+//! ## The `run_batch` contract
+//!
+//! [`ExecBackend::run_batch`] executes one artifact over a *batch* of
+//! independent input sets — the serving scheduler's cross-session verify
+//! rounds and prefill chunks:
+//!
+//! - every item is a full dynamic-input set for the *same* artifact name
+//!   (same manifest shapes: callers group work by token bucket first);
+//! - item `i`'s outputs land at index `i` of the result, in manifest
+//!   output order — exactly what `run(name, &inputs[i])` would return,
+//!   bit-for-bit;
+//! - items are independent: KV caches and positions are per-item inputs,
+//!   so no state leaks between batch lanes;
+//! - an empty batch returns an empty vec and touches no counters.
+//!
+//! Stats accounting: the default implementation loops over
+//! [`ExecBackend::run`], so it counts one execution *per item*; a
+//! vectorized override (the reference backend) makes one pass over the
+//! stacked batch and counts a *single* execution whose
+//! [`RuntimeStats::batch_occupancy`] grows by the item count — mean
+//! occupancy `batch_occupancy / executions` is the batching win.
 
 pub mod reference;
 
@@ -114,6 +136,22 @@ pub struct RuntimeStats {
     pub executions: usize,
     pub compile_ms: f64,
     pub execute_ms: f64,
+    /// Input sets processed across all executions: a single `run` counts 1,
+    /// a vectorized `run_batch` counts its item count against *one*
+    /// execution — so `batch_occupancy / executions` is the mean batch
+    /// occupancy (1.0 when nothing batches).
+    pub batch_occupancy: usize,
+}
+
+impl RuntimeStats {
+    /// Mean input sets per execution (1.0 when idle or nothing batched).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.executions == 0 {
+            1.0
+        } else {
+            self.batch_occupancy as f64 / self.executions as f64
+        }
+    }
 }
 
 /// The execution seam: everything a backend must provide to serve the HAT
@@ -137,6 +175,16 @@ pub trait ExecBackend {
     /// Execute artifact `name` on `inputs` (manifest input order, weights
     /// excluded) and return its outputs in manifest output order.
     fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Execute artifact `name` over a batch of independent input sets and
+    /// return each item's outputs at the matching index (see the module
+    /// docs for the full contract).  The default implementation loops over
+    /// [`ExecBackend::run`] — correct for any backend, counting one
+    /// execution per item; vectorizing backends override it to make one
+    /// pass and count one execution for the whole batch.
+    fn run_batch(&self, name: &str, inputs: &[Vec<&Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        inputs.iter().map(|item| self.run(name, item)).collect()
+    }
 
     /// Host copy of a named weight, if the backend materializes it
     /// (used by the privacy audit's inversion attack).

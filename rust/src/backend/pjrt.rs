@@ -228,6 +228,7 @@ impl ExecBackend for PjrtBackend {
         {
             let mut s = self.stats.borrow_mut();
             s.executions += 1;
+            s.batch_occupancy += 1;
             s.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
         }
         Ok(tensors)

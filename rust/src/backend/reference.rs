@@ -202,40 +202,11 @@ impl ReferenceBackend {
     fn pos_of(t: &Tensor) -> Result<usize> {
         Ok(t.scalar_value()?.round() as usize)
     }
-}
 
-impl ExecBackend for ReferenceBackend {
-    fn name(&self) -> &'static str {
-        "reference"
-    }
-
-    fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    fn load_weights(&mut self) -> Result<()> {
-        Ok(()) // pseudo-weights are derived on the fly from the seed
-    }
-
-    fn compile(&self, name: &str) -> Result<()> {
-        if self.manifest.artifact(name).is_none() {
-            bail!("unknown artifact {name}");
-        }
-        if self.compiled.borrow_mut().insert(name.to_string()) {
-            self.stats.borrow_mut().compiles += 1;
-        }
-        Ok(())
-    }
-
-    fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let spec = self
-            .manifest
-            .artifact(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
-        validate_inputs(spec, inputs)?;
-        self.compile(name)?;
-        let t0 = std::time::Instant::now();
-
+    /// The compute core shared by [`ExecBackend::run`] and the vectorized
+    /// [`ExecBackend::run_batch`]: one artifact over one validated input
+    /// set, no stats accounting.
+    fn execute_spec(&self, spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         let h = self.manifest.model.hidden;
         let v = self.manifest.model.vocab;
         let b = spec.t;
@@ -367,14 +338,83 @@ impl ExecBackend for ReferenceBackend {
 
         if outs.len() != spec.outputs.len() {
             bail!(
-                "artifact {name}: expected {} outputs, produced {}",
+                "artifact {}: expected {} outputs, produced {}",
+                spec.name,
                 spec.outputs.len(),
                 outs.len()
             );
         }
+        Ok(outs)
+    }
+}
+
+impl ExecBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load_weights(&mut self) -> Result<()> {
+        Ok(()) // pseudo-weights are derived on the fly from the seed
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        if self.manifest.artifact(name).is_none() {
+            bail!("unknown artifact {name}");
+        }
+        if self.compiled.borrow_mut().insert(name.to_string()) {
+            self.stats.borrow_mut().compiles += 1;
+        }
+        Ok(())
+    }
+
+    fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        validate_inputs(spec, inputs)?;
+        self.compile(name)?;
+        let t0 = std::time::Instant::now();
+        let outs = self.execute_spec(spec, inputs)?;
         {
             let mut s = self.stats.borrow_mut();
             s.executions += 1;
+            s.batch_occupancy += 1;
+            s.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        Ok(outs)
+    }
+
+    /// Vectorized batch execution: the batch dimension is stacked as the
+    /// outer loop of a single pass (each lane carries its own KV tensors
+    /// and position, so lanes stay independent — the `run_batch` contract
+    /// in the module docs), validated and timed once, counted as *one*
+    /// execution with `batch_occupancy += items`.
+    fn run_batch(&self, name: &str, inputs: &[Vec<&Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        for item in inputs {
+            validate_inputs(spec, item)?;
+        }
+        self.compile(name)?;
+        let t0 = std::time::Instant::now();
+        let outs: Vec<Vec<Tensor>> = inputs
+            .iter()
+            .map(|item| self.execute_spec(spec, item))
+            .collect::<Result<_>>()?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.batch_occupancy += inputs.len();
             s.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
         }
         Ok(outs)
@@ -639,5 +679,59 @@ mod tests {
         let s = be.stats();
         assert_eq!(s.compiles, 1);
         assert_eq!(s.executions, 2);
+        assert_eq!(s.batch_occupancy, 2);
+        assert_eq!(s.mean_batch_occupancy(), 1.0);
+    }
+
+    #[test]
+    fn run_batch_matches_per_item_run_bitwise() {
+        // The run_batch contract: item i's outputs are exactly what
+        // run(name, &inputs[i]) returns, KV lanes independent.
+        let be = backend();
+        let m = be.manifest().model.clone();
+        let h = m.hidden;
+        // Two lanes with *different* KV histories and positions.
+        let toks_a = tokens_tensor(&[3, 5, 7], 4).unwrap();
+        let toks_b = tokens_tensor(&[9], 4).unwrap();
+        let kv_a = zeros_tensor(&m.shallow_kv_dims());
+        let mut kv_b = zeros_tensor(&m.shallow_kv_dims());
+        for d in 0..h {
+            kv_b.data[d] = 0.25; // lane B attends a non-zero row 0
+        }
+        let (pos_a, pos_b) = (pos_tensor(0), pos_tensor(1));
+        let serial_a = be.run("device_input_4", &[&toks_a, &kv_a, &pos_a]).unwrap();
+        let serial_b = be.run("device_input_4", &[&toks_b, &kv_b, &pos_b]).unwrap();
+        let batched = be
+            .run_batch(
+                "device_input_4",
+                &[vec![&toks_a, &kv_a, &pos_a], vec![&toks_b, &kv_b, &pos_b]],
+            )
+            .unwrap();
+        assert_eq!(batched.len(), 2);
+        assert_eq!(batched[0], serial_a, "lane A diverged from serial run");
+        assert_eq!(batched[1], serial_b, "lane B diverged from serial run");
+    }
+
+    #[test]
+    fn run_batch_counts_one_execution_with_full_occupancy() {
+        let be = backend();
+        let deep = zeros_tensor(&[1, be.manifest().model.hidden]);
+        let items: Vec<Vec<&Tensor>> = (0..3).map(|_| vec![&deep]).collect();
+        be.run_batch("device_head_1", &items).unwrap();
+        let s = be.stats();
+        assert_eq!(s.executions, 1, "a batch is one execution");
+        assert_eq!(s.batch_occupancy, 3);
+        assert_eq!(s.compiles, 1);
+        assert_eq!(s.mean_batch_occupancy(), 3.0);
+    }
+
+    #[test]
+    fn run_batch_empty_and_invalid_items() {
+        let be = backend();
+        assert!(be.run_batch("device_head_1", &[]).unwrap().is_empty());
+        assert_eq!(be.stats().executions, 0, "empty batch touches no counters");
+        let bad = zeros_tensor(&[3, 3]);
+        assert!(be.run_batch("device_head_1", &[vec![&bad]]).is_err());
+        assert!(be.run_batch("nonexistent", &[vec![&bad]]).is_err());
     }
 }

@@ -159,6 +159,50 @@ mod tests {
     }
 
     #[test]
+    fn prop_decode_always_admits_and_prefill_budget_holds() {
+        // The two form_batch invariants the scheduler's batched execution
+        // relies on: every pending decode job is admitted every iteration
+        // (starving one deadlocks its session), and the admitted prefill
+        // tokens never exceed the budget — except the documented
+        // lone-oversized-chunk case, which must then be the only prefill
+        // chunk in the batch.
+        forall(cases(200), |rng| {
+            let mut b = Batcher::new();
+            let n = rng.range_usize(1, 60);
+            let budget = rng.range_usize(16, 512);
+            for i in 0..n {
+                let kind =
+                    if rng.bool(0.4) { JobKind::Decode } else { JobKind::PrefillChunk };
+                b.push(job(i, kind, rng.range_usize(1, 700)));
+            }
+            let mut guard = 0;
+            while !b.is_empty() {
+                let batch = b.form_batch(budget);
+                if b.decode_pending() != 0 {
+                    return Err("decode job left pending after form_batch".into());
+                }
+                let ptoks: usize = batch
+                    .iter()
+                    .filter(|j| j.kind == JobKind::PrefillChunk)
+                    .map(|j| j.tokens)
+                    .sum();
+                let pcount =
+                    batch.iter().filter(|j| j.kind == JobKind::PrefillChunk).count();
+                if ptoks > budget && pcount > 1 {
+                    return Err(format!(
+                        "{ptoks} prefill tokens ({pcount} chunks) exceed budget {budget}"
+                    ));
+                }
+                guard += 1;
+                if guard > 1000 {
+                    return Err("did not drain".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_batches_drain_everything_exactly_once() {
         forall(cases(100), |rng| {
             let mut b = Batcher::new();

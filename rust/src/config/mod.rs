@@ -188,8 +188,14 @@ pub struct ServeConfig {
     pub a_bytes: f64,
     /// Assumed device uplink bandwidth β_up, bytes/ms.
     pub up_bytes_per_ms: f64,
-    /// In-cloud delay predictor g(·) for the optimizer.
+    /// In-cloud delay predictor g(·) for the optimizer — the *static*
+    /// calibration curve, used directly when `learned_g` is off and as the
+    /// cold-start fallback when it is on.
     pub g: GModel,
+    /// Drive the Eq. 3 optimizer with the learned state-monitor delay
+    /// curve g^t(·) (Eq. 2 EWMA over observed iteration delays), falling
+    /// back to the static `g` until observations arrive.
+    pub learned_g: bool,
 }
 
 impl Default for ServeConfig {
@@ -206,6 +212,7 @@ impl Default for ServeConfig {
             a_bytes: 2.0 * 4096.0,
             up_bytes_per_ms: 7000.0,
             g: GModel::vicuna7b(),
+            learned_g: true,
         }
     }
 }

@@ -146,6 +146,7 @@ pub fn build(map: &BTreeMap<String, Scalar>) -> Result<ExperimentConfig, String>
             "serve.max_chunk" => cfg.serve.max_chunk = us()?,
             "serve.alpha" => cfg.serve.alpha = num()?,
             "serve.pipeline_len" => cfg.serve.pipeline_len = us()?,
+            "serve.learned_g" => cfg.serve.learned_g = b()?,
             "strategies.sd" => cfg.strategies.sd = b()?,
             "strategies.pc" => cfg.strategies.pc = b()?,
             "strategies.pd" => cfg.strategies.pd = b()?,
@@ -205,11 +206,19 @@ mod tests {
 
     #[test]
     fn serve_section_overlays_and_validates() {
-        let m = parse("[serve]\nmax_sessions = 4\nprefill_budget = 128\nmin_chunk = 8\n").unwrap();
+        let m = parse(
+            "[serve]\nmax_sessions = 4\nprefill_budget = 128\nmin_chunk = 8\nlearned_g = false\n",
+        )
+        .unwrap();
         let cfg = build(&m).unwrap();
         assert_eq!(cfg.serve.max_sessions, 4);
         assert_eq!(cfg.serve.prefill_budget, 128);
         assert_eq!(cfg.serve.min_chunk, 8);
+        assert!(!cfg.serve.learned_g, "learned_g override ignored");
+        assert!(
+            crate::config::ServeConfig::default().learned_g,
+            "learned predictor on by default"
+        );
         let m = parse("[serve]\nmax_sessions = 0\n").unwrap();
         assert!(build(&m).unwrap_err().contains("serve.max_sessions"));
     }

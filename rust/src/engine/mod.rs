@@ -10,6 +10,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::backend::Tensor;
 use crate::model::{CloudStream, DeviceStream, TokenId};
 use crate::runtime::{
     f32_tensor_padded, pos_tensor, tokens_tensor, ArtifactRegistry, Manifest, ModelSpec,
@@ -105,17 +106,41 @@ impl Engine {
         Ok(DraftStepOut { logits, shallow })
     }
 
-    /// Output submodel: deep hidden [T, H] → logits [T, V].
+    /// Output submodel: deep hidden [T, H] → logits [T, V].  Batch-of-1
+    /// wrapper over [`Engine::head_batch`].
     pub fn head(&self, deep: &[f32]) -> Result<Vec<f32>> {
+        let mut out = self.head_batch(&[deep])?;
+        Ok(out.swap_remove(0))
+    }
+
+    /// Output submodel over a batch of independent deep-hidden uploads
+    /// ([T_i, H] each): one backend call for the whole batch.  Every item
+    /// must pad into the *same* token bucket (the scheduler groups jobs by
+    /// bucket before calling); returns per-item logits [T_i, V].
+    pub fn head_batch(&self, deeps: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if deeps.is_empty() {
+            return Ok(Vec::new());
+        }
         let h = self.spec().hidden;
-        let t = deep.len() / h;
-        let b = self.reg.bucket_for(t)?;
+        let v = self.spec().vocab;
+        let ts: Vec<usize> = deeps.iter().map(|d| d.len() / h).collect();
+        let b = self.common_bucket(&ts, "head_batch")?;
         let name = Manifest::artifact_name("device_head", b);
-        let d = f32_tensor_padded(deep, h, b)?;
-        let mut outs = self.reg.run(&name, &[&d])?;
-        let mut logits = outs.swap_remove(0).data;
-        logits.truncate(t * self.spec().vocab);
-        Ok(logits)
+        let ds: Vec<Tensor> = deeps
+            .iter()
+            .map(|d| f32_tensor_padded(d, h, b))
+            .collect::<Result<_>>()?;
+        let items: Vec<Vec<&Tensor>> = ds.iter().map(|d| vec![d]).collect();
+        let outs = self.reg.run_batch(&name, &items)?;
+        Ok(outs
+            .into_iter()
+            .zip(&ts)
+            .map(|(mut o, &t)| {
+                let mut logits = o.swap_remove(0).data;
+                logits.truncate(t * v);
+                logits
+            })
+            .collect())
     }
 
     /// Medusa heads over one deep hidden state [H] → [n_medusa][V] logits.
@@ -132,24 +157,106 @@ impl Engine {
     // -- cloud side ----------------------------------------------------------
 
     /// Middle submodel over uploaded shallow hidden states [T, H] → deep
-    /// hidden states [T, H]; updates the stream's middle KV.
+    /// hidden states [T, H]; updates the stream's middle KV.  Batch-of-1
+    /// wrapper over [`Engine::cloud_middle_batch`].
     pub fn cloud_middle(&self, st: &mut CloudStream, hidden: &[f32]) -> Result<Vec<f32>> {
+        let mut sts = [st];
+        let mut out = self.cloud_middle_batch(&mut sts, &[hidden])?;
+        Ok(out.swap_remove(0))
+    }
+
+    /// Middle submodel over a batch of per-session uploads: one backend
+    /// call executes every session's chunk, threading each session's
+    /// middle KV and write position independently (lane `i` reads and
+    /// updates only `sts[i]`).  All items must pad into the *same* token
+    /// bucket — the serve scheduler groups jobs by bucket before calling.
+    /// Returns per-session deep hidden rows [T_i, H].
+    pub fn cloud_middle_batch(
+        &self,
+        sts: &mut [&mut CloudStream],
+        hiddens: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            sts.len() == hiddens.len(),
+            "cloud_middle_batch: {} streams vs {} uploads",
+            sts.len(),
+            hiddens.len()
+        );
+        if sts.is_empty() {
+            return Ok(Vec::new());
+        }
         let h = self.spec().hidden;
-        let t = hidden.len() / h;
-        let b = self.reg.bucket_for(t)?;
+        let ts: Vec<usize> = hiddens.iter().map(|x| x.len() / h).collect();
+        let b = self.common_bucket(&ts, "cloud_middle_batch")?;
         let name = Manifest::artifact_name("cloud_middle", b);
-        let pos = st.pos.write_pos();
-        let hid = f32_tensor_padded(hidden, h, b)?;
-        let posl = pos_tensor(pos);
-        let mut outs = self.reg.run(&name, &[&hid, &st.mkv, &posl])?;
-        st.mkv = outs.swap_remove(1);
-        let mut deep = outs.swap_remove(0).data;
-        deep.truncate(t * h);
-        st.pos.wrote(t);
-        Ok(deep)
+        let hids: Vec<Tensor> = hiddens
+            .iter()
+            .map(|x| f32_tensor_padded(x, h, b))
+            .collect::<Result<_>>()?;
+        let poss: Vec<Tensor> =
+            sts.iter().map(|st| pos_tensor(st.pos.write_pos())).collect();
+        let outs = {
+            let items: Vec<Vec<&Tensor>> = (0..sts.len())
+                .map(|i| vec![&hids[i], &sts[i].mkv, &poss[i]])
+                .collect();
+            self.reg.run_batch(&name, &items)?
+        };
+        let mut deeps = Vec::with_capacity(sts.len());
+        for (i, mut out) in outs.into_iter().enumerate() {
+            sts[i].mkv = out.swap_remove(1);
+            let mut deep = out.swap_remove(0).data;
+            deep.truncate(ts[i] * h);
+            sts[i].pos.wrote(ts[i]);
+            deeps.push(deep);
+        }
+        Ok(deeps)
+    }
+
+    /// Batched verify upload: middle submodel then output head over each
+    /// session's uploaded shallow rows — one backend call per stage for
+    /// the whole group.  Returns per-session `(deep, logits)`.
+    ///
+    /// Error contract: a middle failure mutates nothing (the batched call
+    /// is all-or-nothing); a head failure after the middle advanced the
+    /// streams rolls every write head back to its committed prefix (the
+    /// stale KV rows are masked and overwritten by the next write).  A
+    /// verify round starts with all writes committed, so either way a
+    /// failed round leaves the streams as it found them and can simply be
+    /// re-driven.
+    pub fn verify_batch(
+        &self,
+        sts: &mut [&mut CloudStream],
+        shallows: &[&[f32]],
+    ) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+        let deeps = self.cloud_middle_batch(sts, shallows)?;
+        let refs: Vec<&[f32]> = deeps.iter().map(|d| d.as_slice()).collect();
+        match self.head_batch(&refs) {
+            Ok(logits) => Ok(deeps.into_iter().zip(logits).collect()),
+            Err(e) => {
+                for st in sts.iter_mut() {
+                    st.pos.rollback();
+                }
+                Err(e)
+            }
+        }
     }
 
     // -- helpers -------------------------------------------------------------
+
+    /// The single token bucket a batch of per-item row counts pads into.
+    /// Errors when the items mix buckets — the batched primitives' shared
+    /// contract (callers group work by bucket first).
+    fn common_bucket(&self, ts: &[usize], ctx: &str) -> Result<usize> {
+        let b = self.reg.bucket_for(ts[0])?;
+        for &t in &ts[1..] {
+            let bi = self.reg.bucket_for(t)?;
+            anyhow::ensure!(
+                bi == b,
+                "{ctx}: mixed buckets ({bi} vs {b}); group items by bucket first"
+            );
+        }
+        Ok(b)
+    }
 
     /// Argmax over a logit row.  NaN-tolerant: NaN entries rank below every
     /// real value (a numerically-poisoned row degrades to the first finite
@@ -247,6 +354,70 @@ mod tests {
         let heads = e.medusa(&deep[..spec.hidden]).unwrap();
         assert_eq!(heads.len(), spec.n_medusa);
         assert!(heads.iter().all(|l| l.len() == spec.vocab));
+    }
+
+    #[test]
+    fn cloud_middle_batch_threads_each_stream_independently() {
+        // Two sessions with different chunk lengths (2 and 3 tokens — the
+        // same bucket, 4) in one batched call must produce exactly what
+        // two independent single calls produce, including the KV updates.
+        let e = Engine::synthetic();
+        let spec = e.spec().clone();
+        let mut d1 = DeviceStream::new(&spec).unwrap();
+        let mut d2 = DeviceStream::new(&spec).unwrap();
+        let h1 = e.device_input(&mut d1, &[1, 2, 3]).unwrap();
+        let h2 = e.device_input(&mut d2, &[9, 8]).unwrap();
+
+        let mut s1 = CloudStream::new(&spec).unwrap();
+        let mut s2 = CloudStream::new(&spec).unwrap();
+        let deep1 = e.cloud_middle(&mut s1, &h1).unwrap();
+        let deep2 = e.cloud_middle(&mut s2, &h2).unwrap();
+
+        let mut c1 = CloudStream::new(&spec).unwrap();
+        let mut c2 = CloudStream::new(&spec).unwrap();
+        let mut sts = [&mut c1, &mut c2];
+        let deeps = e.cloud_middle_batch(&mut sts, &[&h1, &h2]).unwrap();
+        assert_eq!(deeps[0], deep1, "lane 0 diverged from single call");
+        assert_eq!(deeps[1], deep2, "lane 1 diverged from single call");
+        assert_eq!(c1.pos.write_pos(), 3);
+        assert_eq!(c2.pos.write_pos(), 2);
+        assert_eq!(c1.mkv, s1.mkv, "lane 0 KV diverged");
+        assert_eq!(c2.mkv, s2.mkv, "lane 1 KV diverged");
+    }
+
+    #[test]
+    fn head_batch_matches_singles_and_rejects_mixed_buckets() {
+        let e = Engine::synthetic();
+        let h = e.spec().hidden;
+        let a: Vec<f32> = (0..2 * h).map(|i| (i as f32 * 0.01).sin()).collect();
+        let b: Vec<f32> = (0..3 * h).map(|i| (i as f32 * 0.02).cos()).collect();
+        let la = e.head(&a).unwrap();
+        let lb = e.head(&b).unwrap();
+        let batched = e.head_batch(&[a.as_slice(), b.as_slice()]).unwrap();
+        assert_eq!(batched, vec![la, lb]);
+        assert!(e.head_batch(&[]).unwrap().is_empty());
+        // 1 row (bucket 1) and 2 rows (bucket 4) cannot share a call.
+        let c = vec![0.5f32; h];
+        assert!(e.head_batch(&[c.as_slice(), a.as_slice()]).is_err());
+    }
+
+    #[test]
+    fn verify_batch_is_middle_then_head() {
+        let e = Engine::synthetic();
+        let spec = e.spec().clone();
+        let mut dev = DeviceStream::new(&spec).unwrap();
+        let hidden = e.device_input(&mut dev, &[5, 6]).unwrap();
+
+        let mut serial = CloudStream::new(&spec).unwrap();
+        let deep = e.cloud_middle(&mut serial, &hidden).unwrap();
+        let logits = e.head(&deep).unwrap();
+
+        let mut batched = CloudStream::new(&spec).unwrap();
+        let mut sts = [&mut batched];
+        let outs = e.verify_batch(&mut sts, &[&hidden]).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].0, deep);
+        assert_eq!(outs[0].1, logits);
     }
 
     #[test]

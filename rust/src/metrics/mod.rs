@@ -213,6 +213,16 @@ pub struct ServeStats {
     pub accepted: usize,
     /// Chunk sizes picked by the Eq. 3 optimizer.
     pub chunk_sizes: Welford,
+    /// Sessions per batched engine-call group: one sample per job group
+    /// the scheduler executed batched, sized by the group's lane count (a
+    /// decode group's middle and head `run_batch` calls share one sample)
+    /// — `batch_mean` in the STATS reply.
+    pub batch_occupancy: Welford,
+    /// Batched cloud calls that failed and degraded to per-lane serial
+    /// execution.  Non-zero means the backend is rejecting `run_batch`
+    /// groups and the server is quietly running at serial throughput —
+    /// `fallbacks` in the STATS reply.
+    pub fallbacks: u64,
 }
 
 impl ServeStats {
@@ -250,7 +260,7 @@ impl ServeStats {
     pub fn stats_fields(&self) -> String {
         format!(
             "requests={} iterations={} queue_wait_ms={:.1} ttft_ms={:.1} tbt_ms={:.1} \
-             rounds={} accept={:.3} chunk_mean={:.1}",
+             rounds={} accept={:.3} chunk_mean={:.1} batch_mean={:.2} fallbacks={}",
             self.finished,
             self.iterations,
             self.queue_wait_ms.mean(),
@@ -258,7 +268,9 @@ impl ServeStats {
             self.tbt_ms.mean(),
             self.rounds,
             self.accept_rate(),
-            self.chunk_sizes.mean()
+            self.chunk_sizes.mean(),
+            self.batch_occupancy.mean(),
+            self.fallbacks
         )
     }
 }
@@ -384,8 +396,16 @@ mod tests {
         assert!((s.ttft_ms.mean() - 15.0).abs() < 1e-12);
         assert_eq!(s.tbt_ms.count(), 1, "1-token requests have no TBT");
         assert!((s.accept_rate() - 6.0 / 15.0).abs() < 1e-12);
+        s.batch_occupancy.push(3.0);
         let f = s.stats_fields();
-        for key in ["requests=2", "rounds=5", "accept=0.400", "queue_wait_ms=3.0"] {
+        for key in [
+            "requests=2",
+            "rounds=5",
+            "accept=0.400",
+            "queue_wait_ms=3.0",
+            "batch_mean=3.00",
+            "fallbacks=0",
+        ] {
             assert!(f.contains(key), "missing {key} in {f}");
         }
     }

@@ -53,6 +53,14 @@ impl ArtifactRegistry {
         ArtifactRegistry { backend: Box::new(ReferenceBackend::synthetic(REFERENCE_SEED)) }
     }
 
+    /// Registry over an explicit backend instance — the injection point
+    /// for tests that exercise the failure paths with a fault-injecting
+    /// backend (weights are loaded here, as in [`ArtifactRegistry::load`]).
+    pub fn with_backend(mut backend: Box<dyn ExecBackend>) -> Result<ArtifactRegistry> {
+        backend.load_weights()?;
+        Ok(ArtifactRegistry { backend })
+    }
+
     /// `load(dir)` when a manifest exists there, else the synthetic
     /// reference registry.  An explicit `HAT_BACKEND=pjrt` (or an invalid
     /// value) still errors rather than silently serving the toy model.
@@ -109,6 +117,13 @@ impl ArtifactRegistry {
     /// weights excluded); returns outputs in manifest output order.
     pub fn run(&self, name: &str, dynamic: &[&Tensor]) -> Result<Vec<Tensor>> {
         self.backend.run(name, dynamic)
+    }
+
+    /// Execute artifact `name` over a batch of independent input sets —
+    /// one backend call for the whole batch (see the `run_batch` contract
+    /// in [`crate::backend`]).  Item `i`'s outputs land at index `i`.
+    pub fn run_batch(&self, name: &str, items: &[Vec<&Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        self.backend.run_batch(name, items)
     }
 
     /// Host copy of a named weight, if the backend materializes it.

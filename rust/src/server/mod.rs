@@ -11,6 +11,7 @@
 //! S: OK executions=<n> exec_ms=<t> compiles=<n> compile_ms=<t>
 //!       requests=<n> iterations=<n> queue_wait_ms=<t> ttft_ms=<t>
 //!       tbt_ms=<t> rounds=<n> accept=<rate> chunk_mean=<x>
+//!       batch_mean=<x> fallbacks=<n> g_learned=<0|1>
 //!       queued=<n> live=<n> decode_q=<n> prefill_q=<n>\n
 //!                                                 (one line on the wire)
 //! C: QUIT\n
@@ -23,7 +24,14 @@
 //! counters followed by the scheduler aggregates: finished request count,
 //! scheduler iterations, mean queue wait / TTFT / TBT (wall-clock ms),
 //! total SD rounds, the aggregate acceptance rate, the mean Eq. 3 chunk
-//! size, and the current queue depth / live session count.
+//! size, `batch_mean` — the mean session count per batched engine-call
+//! group the scheduler issued (1.0 means nothing batched, higher means
+//! verify rounds / prefill chunks of concurrent sessions actually
+//! executed as one `run_batch` call) — `fallbacks` — batched cloud calls
+//! that failed and degraded to per-lane serial execution — `g_learned` —
+//! 1 when the Eq. 3 optimizer is driven by the learned state-monitor
+//! delay curve, 0 while it still falls back to the static `GModel`
+//! calibration — and the current queue depth / live session count.
 //!
 //! Concurrency model: the engine is not thread-safe (one backend client),
 //! so a single worker thread owns it and connections are multiplexed
@@ -57,6 +65,21 @@ pub enum Command {
     Quit,
 }
 
+/// Shared GENERATE request validation — the single definition both the
+/// protocol parser ([`parse_line`]) and the directly-driven scheduler
+/// ([`scheduler::Scheduler::submit`]) route through, so their error
+/// strings cannot drift.  `max_new_cap` comes from
+/// `SpecDecConfig::max_new_tokens`.
+pub fn validate_request(prompt: &[u32], max_new: usize, max_new_cap: usize) -> Result<(), String> {
+    if prompt.is_empty() {
+        return Err("empty prompt".into());
+    }
+    if max_new == 0 || max_new > max_new_cap {
+        return Err(format!("max_new_tokens out of range (1..={max_new_cap})"));
+    }
+    Ok(())
+}
+
 /// Parse one protocol line.  `max_new_cap` bounds GENERATE's
 /// max_new_tokens (from `SpecDecConfig::max_new_tokens` — no hard-coded
 /// limit).
@@ -71,12 +94,7 @@ pub fn parse_line(line: &str, max_new_cap: usize) -> Result<Command, String> {
                 .map_err(|_| "bad max_new_tokens".to_string())?;
             let prompt: Result<Vec<u32>, _> = it.map(|t| t.parse::<u32>()).collect();
             let prompt = prompt.map_err(|_| "bad token id".to_string())?;
-            if prompt.is_empty() {
-                return Err("empty prompt".into());
-            }
-            if max_new == 0 || max_new > max_new_cap {
-                return Err(format!("max_new_tokens out of range (1..={max_new_cap})"));
-            }
+            validate_request(&prompt, max_new, max_new_cap)?;
             Ok(Command::Generate { max_new, prompt })
         }
         Some("STATS") => Ok(Command::Stats),
@@ -146,7 +164,9 @@ pub fn generate(
         // Cap the round's draft length by the tokens still needed, so the
         // final round does not draft tokens that would only be truncated.
         let budget = (max_new - out.len()).saturating_sub(1).max(1);
-        let r = s.hat_round_capped(true, 4, budget)?;
+        // λ follows the configured draft cap (the old hard-coded 4
+        // silently disagreed with SpecDecConfig::max_draft).
+        let r = s.hat_round_capped(true, spec_cfg.max_draft, budget)?;
         out.extend_from_slice(&r.emitted);
         rounds += 1;
         proposed += r.proposed.len();
@@ -199,12 +219,13 @@ fn worker_loop(
                     let (dq, pq) = sched.job_depths();
                     let _ = reply.send(format!(
                         "OK executions={} exec_ms={:.1} compiles={} compile_ms={:.1} {} \
-                         queued={} live={} decode_q={dq} prefill_q={pq}",
+                         g_learned={} queued={} live={} decode_q={dq} prefill_q={pq}",
                         s.executions,
                         s.execute_ms,
                         s.compiles,
                         s.compile_ms,
                         sched.stats.stats_fields(),
+                        sched.predictor_learned() as u8,
                         sched.queued(),
                         sched.live_sessions(),
                     ));
@@ -389,6 +410,38 @@ mod tests {
             512,
             "default cap preserves the old protocol limit"
         );
+    }
+
+    #[test]
+    fn parser_and_scheduler_share_validation_strings() {
+        // Both entry points route through validate_request, so the error
+        // strings are identical by construction — a drift regression test.
+        let cap = SpecDecConfig::default().max_new_tokens;
+        let engine = Engine::synthetic();
+
+        let parse_err = parse_line("GENERATE 600 1", cap).unwrap_err();
+        let mut sched =
+            Scheduler::new(&engine, SpecDecConfig::default(), ServeConfig::default());
+        let (tx, rx) = mpsc::channel();
+        sched.submit(Request {
+            prompt: vec![1],
+            max_new: 600,
+            reply: tx,
+            enqueued: Instant::now(),
+        });
+        assert_eq!(rx.recv().unwrap(), format!("ERR {parse_err}"));
+
+        let parse_err = parse_line("GENERATE 4", cap).unwrap_err();
+        assert_eq!(parse_err, "empty prompt");
+        let (tx, rx) = mpsc::channel();
+        sched.submit(Request {
+            prompt: vec![],
+            max_new: 4,
+            reply: tx,
+            enqueued: Instant::now(),
+        });
+        assert_eq!(rx.recv().unwrap(), format!("ERR {parse_err}"));
+        assert!(!sched.has_work(), "rejected requests must not occupy the queue");
     }
 
     #[test]

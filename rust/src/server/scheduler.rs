@@ -10,23 +10,32 @@
 //! latency-critical), prefill chunks filling the remaining token budget
 //! FIFO — so requests interleave at *chunk/round* granularity.
 //!
+//! Batches *execute as batches*: each iteration groups the formed batch's
+//! jobs by kind and token bucket and issues **one batched engine call per
+//! group** — `Engine::verify_batch` for the decode/verify rounds,
+//! `Engine::cloud_middle_batch` for the prefill chunks — instead of
+//! looping jobs through single-sequence calls.  Per-session KV caches and
+//! positions thread independently through the batch lanes, so greedy
+//! losslessness is untouched: every session's stream stays byte-identical
+//! to a serial `generate()` run (tested in `tests/serve.rs`).
+//!
 //! Prefill chunk sizes come from the Eq. 3 optimizer (`optimal_chunk`)
-//! driven by a configured [`GModel`](crate::config::GModel) delay
-//! predictor and the Eq. 1 moving average μ^t of observed batch sizes —
-//! not a hard-coded constant.  Greedy-decoding losslessness makes the
-//! interleaving invisible in the output: each session's token stream is
-//! byte-identical to a serial run (tested in `tests/serve.rs`).
+//! driven by the *learned* state-monitor delay curve g^t(·) (Eq. 2 EWMAs
+//! of observed per-iteration delays, falling back to the configured
+//! static [`GModel`](crate::config::GModel) until observations arrive)
+//! and the Eq. 1 moving average μ^t of observed batch sizes — not a
+//! hard-coded constant.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::cloud::state_monitor::Ewma;
+use crate::cloud::state_monitor::StateMonitor;
 use crate::cloud::{optimal_chunk, Batcher, Job, JobKind};
 use crate::config::{ServeConfig, SpecDecConfig};
 use crate::engine::Engine;
 use crate::metrics::ServeStats;
-use crate::model::TokenId;
+use crate::model::{CloudStream, TokenId};
 use crate::specdec::Session;
 
 use super::Generation;
@@ -56,6 +65,30 @@ struct Active<'e> {
     first_token: Option<Instant>,
 }
 
+/// A job past its device half, awaiting its group's batched cloud call.
+/// The payload is what the kind carries to the upload: a decode round's
+/// row count (`P = usize`, the k+1 it buckets under) or a prefill chunk's
+/// shallow hidden rows (`P = Vec<f32>`, [c, H]).
+struct Staged<'e, P> {
+    slot: usize,
+    a: Active<'e>,
+    payload: P,
+}
+
+impl<'e, P> Staged<'e, P> {
+    fn stream(&mut self) -> &mut CloudStream {
+        &mut self.a.sess.cloud
+    }
+    fn reply(&self) -> &mpsc::Sender<String> {
+        &self.a.reply
+    }
+}
+
+/// A decode round staged past drafting (payload: the k+1 upload rows).
+type StagedVerify<'e> = Staged<'e, usize>;
+/// A prefill chunk staged past the device submodels (payload: [c, H]).
+type StagedPrefill<'e> = Staged<'e, Vec<f32>>;
+
 /// Iteration-level scheduler over one engine: N live sessions multiplexed
 /// through a [`Batcher`].
 pub struct Scheduler<'e> {
@@ -67,9 +100,10 @@ pub struct Scheduler<'e> {
     slots: Vec<Option<Active<'e>>>,
     /// Admission queue beyond `max_sessions`.
     waiting: VecDeque<Request>,
-    /// μ^t (Eq. 1): moving average of executed batch token sizes, feeding
-    /// the Eq. 3 chunk optimizer.
-    mu: Ewma,
+    /// State monitor (§3.2): μ^t (Eq. 1) over executed batch token sizes
+    /// and the learned delay curve g^t(·) (Eq. 2) over observed iteration
+    /// wall times, feeding the Eq. 3 chunk optimizer.
+    monitor: StateMonitor,
     pub stats: ServeStats,
 }
 
@@ -83,24 +117,37 @@ pub fn clamp_chunk_bounds(cfg: &mut ServeConfig, engine: &Engine) {
     cfg.min_chunk = cfg.min_chunk.clamp(1, cfg.max_chunk);
 }
 
-/// Eq. 3 chunk size under `cfg`'s wire model and delay predictor at cloud
-/// load μ (call [`clamp_chunk_bounds`] first).
-pub fn eq3_chunk(cfg: &ServeConfig, mu: f64) -> usize {
-    let g = cfg.g;
+/// Eq. 3 chunk size under `cfg`'s wire model and an explicit delay
+/// predictor at cloud load μ (call [`clamp_chunk_bounds`] first).  The
+/// scheduler passes the learned state-monitor curve here;
+/// [`eq3_chunk`] is the static-`GModel` wrapper.
+pub fn eq3_chunk_with(cfg: &ServeConfig, mu: f64, g: impl Fn(f64) -> f64) -> usize {
     optimal_chunk(
         cfg.a_bytes,
         cfg.up_bytes_per_ms,
-        move |b| g.eval(b),
+        g,
         mu,
         cfg.pipeline_len,
         (cfg.min_chunk, cfg.max_chunk),
     )
 }
 
+/// Eq. 3 chunk size under `cfg`'s wire model and its *static* `GModel`
+/// delay predictor (the serial `generate` path and cold-start behaviour).
+pub fn eq3_chunk(cfg: &ServeConfig, mu: f64) -> usize {
+    let g = cfg.g;
+    eq3_chunk_with(cfg, mu, move |b| g.eval(b))
+}
+
 impl<'e> Scheduler<'e> {
     pub fn new(engine: &'e Engine, spec_cfg: SpecDecConfig, mut cfg: ServeConfig) -> Scheduler<'e> {
         clamp_chunk_bounds(&mut cfg, engine);
-        let alpha = cfg.alpha;
+        // The learned g^t(·) must cover every batch size an iteration can
+        // reach: the prefill budget plus every session's worst-case verify
+        // upload.
+        let g_max_tokens =
+            cfg.prefill_budget + cfg.max_sessions.max(1) * (spec_cfg.max_draft + 1);
+        let monitor = StateMonitor::new(cfg.alpha, 0, g_max_tokens);
         let slots = (0..cfg.max_sessions.max(1)).map(|_| None).collect();
         Scheduler {
             engine,
@@ -109,23 +156,23 @@ impl<'e> Scheduler<'e> {
             batcher: Batcher::new(),
             slots,
             waiting: VecDeque::new(),
-            mu: Ewma::new(alpha),
+            monitor,
             stats: ServeStats::new(),
         }
     }
 
     /// Enqueue a request (admitted to a slot on a later [`Scheduler::step`]).
-    /// Context-bound violations are rejected immediately.
+    /// Validation failures — including the shared request checks of
+    /// [`validate_request`](super::validate_request), which the protocol
+    /// parser applies too — are rejected immediately.
     pub fn submit(&mut self, req: Request) {
+        if let Err(e) =
+            super::validate_request(&req.prompt, req.max_new, self.spec_cfg.max_new_tokens)
+        {
+            let _ = req.reply.send(format!("ERR {e}"));
+            return;
+        }
         let max_ctx = self.engine.spec().max_seq;
-        if req.prompt.is_empty() {
-            let _ = req.reply.send("ERR empty prompt".into());
-            return;
-        }
-        if req.max_new == 0 {
-            let _ = req.reply.send("ERR max_new_tokens must be > 0".into());
-            return;
-        }
         if req.prompt.len() + req.max_new + self.spec_cfg.max_draft + 2 > max_ctx {
             let _ = req
                 .reply
@@ -156,11 +203,12 @@ impl<'e> Scheduler<'e> {
     }
 
     /// One scheduler iteration: admit waiting requests into free slots,
-    /// form a batch under the prefill token budget, and run every job in
-    /// it.  Returns the number of jobs executed (0 = idle).  While any
-    /// session is live, every iteration makes progress on every decoding
-    /// session and on at least the head prefill chunk, so no admitted
-    /// request can starve.
+    /// form a batch under the prefill token budget, group its jobs by kind
+    /// and token bucket, and issue **one batched engine call per group**.
+    /// Returns the number of jobs executed (0 = idle).  While any session
+    /// is live, every iteration makes progress on every decoding session
+    /// and on at least the head prefill chunk, so no admitted request can
+    /// starve.
     pub fn step(&mut self) -> usize {
         self.admit();
         let batch = self.batcher.form_batch(self.cfg.prefill_budget);
@@ -169,11 +217,21 @@ impl<'e> Scheduler<'e> {
         }
         self.stats.iterations += 1;
         let n = batch.len();
-        let mut executed_tokens = 0usize;
-        for job in batch {
-            executed_tokens += self.run_job(job);
+        let (decode_jobs, prefill_jobs): (Vec<Job>, Vec<Job>) =
+            batch.into_iter().partition(|j| j.kind == JobKind::Decode);
+        let (decode_tokens, decode_cloud_ms) = self.run_decode_jobs(decode_jobs);
+        let (prefill_tokens, prefill_cloud_ms) = self.run_prefill_jobs(prefill_jobs);
+        // Feed the state monitor (§3.2): μ^t averages *executed* batch
+        // tokens, and g^t learns (batch tokens → η̂^t), the *in-cloud*
+        // computation delay of the iteration's batched cloud calls — not
+        // whole-iteration wall time, which would fold device drafting into
+        // the curve Eq. 3 treats as cloud-side — so the optimizer tracks
+        // the real engine instead of the static GModel.  Stale-job-only
+        // iterations execute nothing and must not drag the curves to zero.
+        let executed_tokens = decode_tokens + prefill_tokens;
+        if executed_tokens > 0 {
+            self.monitor.observe_step(executed_tokens, decode_cloud_ms + prefill_cloud_ms);
         }
-        self.mu.observe(executed_tokens as f64);
         n
     }
 
@@ -214,11 +272,27 @@ impl<'e> Scheduler<'e> {
     }
 
     /// Eq. 3 chunk size for a session's next prefill chunk, clamped to the
-    /// tokens it still needs.
+    /// tokens it still needs.  Uses the learned g^t(·) delay curve when
+    /// `learned_g` is on (static `GModel` as the cold-start fallback),
+    /// the static curve alone otherwise.
     fn plan_chunk(&mut self, remaining: usize) -> usize {
-        let x = eq3_chunk(&self.cfg, self.mu.get().unwrap_or(0.0));
+        let g_static = self.cfg.g;
+        let mu = self.monitor.mu_t();
+        let x = if self.cfg.learned_g {
+            let mon = &self.monitor;
+            eq3_chunk_with(&self.cfg, mu, |b| mon.g_t(b, |x| g_static.eval(x)))
+        } else {
+            eq3_chunk(&self.cfg, mu)
+        };
         self.stats.chunk_sizes.push(x as f64);
         x.min(remaining).max(1)
+    }
+
+    /// Whether the Eq. 3 optimizer is currently driven by *learned* delay
+    /// observations (vs the static `GModel` fallback) — `g_learned` in
+    /// the STATS reply.
+    pub fn predictor_learned(&self) -> bool {
+        self.cfg.learned_g && self.monitor.g.predict(1.0).is_some()
     }
 
     /// The next verify-round job for a slot.  Decode `tokens` is
@@ -229,75 +303,278 @@ impl<'e> Scheduler<'e> {
         Job { req, kind: JobKind::Decode, tokens: self.spec_cfg.max_draft + 1, tag: 0 }
     }
 
-    /// Execute one batcher job against its slot's session.  Returns the
-    /// tokens actually processed (prefill rows or uploaded verify rows) —
-    /// what μ^t must average, as opposed to the job's *planned* size.
-    fn run_job(&mut self, job: Job) -> usize {
-        let Some(mut a) = self.slots[job.req].take() else {
-            return 0; // session already finished/failed (stale job)
-        };
-        match job.kind {
-            JobKind::PrefillChunk => {
-                let executed = job.tokens.min(a.sess.prefill_remaining());
-                match a.sess.prefill_step(job.tokens) {
-                    Ok(Some(t1)) => {
-                        a.first_token = Some(Instant::now());
-                        a.out.push(t1);
-                        if a.out.len() >= a.max_new {
-                            self.finish(a);
-                        } else {
-                            let j = self.decode_job(job.req);
-                            self.batcher.push(j);
-                            self.slots[job.req] = Some(a);
-                        }
-                    }
-                    Ok(None) => {
-                        let chunk = self.plan_chunk(a.sess.prefill_remaining());
-                        self.batcher.push(Job {
-                            req: job.req,
-                            kind: JobKind::PrefillChunk,
-                            tokens: chunk,
-                            tag: 0,
-                        });
-                        self.slots[job.req] = Some(a);
-                    }
-                    Err(e) => {
-                        let _ = a.reply.send(format!("ERR {e}"));
-                    }
+    /// Execute this iteration's decode/verify jobs.  The device halves
+    /// (drafting, parallel-draft branches) run per session — each lives on
+    /// its own device in the real deployment — then the cloud halves of
+    /// same-bucket rounds execute as **one** batched middle call plus
+    /// **one** batched head call ([`Engine::cloud_middle_batch`] /
+    /// [`Engine::head_batch`]; [`Engine::verify_batch`] is their one-shot
+    /// composition — the scheduler keeps the stages separate so each has
+    /// a state-safe per-lane fallback).  Returns the uploaded verify rows
+    /// — what μ^t must average, as opposed to the jobs' *planned* sizes —
+    /// and the in-cloud ms spent in the cloud calls (the η̂^t feeding
+    /// g^t).
+    fn run_decode_jobs(&mut self, jobs: Vec<Job>) -> (usize, f64) {
+        // Device half: draft every session's round; its k+1 upload rows
+        // decide the bucket it batches under.
+        let mut staged: Vec<StagedVerify<'e>> = Vec::new();
+        for job in jobs {
+            let Some(mut a) = self.slots[job.req].take() else {
+                continue; // session already finished/failed (stale job)
+            };
+            let remaining = a.max_new - a.out.len();
+            let budget = remaining.saturating_sub(1).max(1);
+            match a.sess.verify_begin(true, self.spec_cfg.max_draft, budget) {
+                Ok(rows) => staged.push(StagedVerify { slot: job.req, a, payload: rows }),
+                Err(e) => {
+                    let _ = a.reply.send(format!("ERR {e}"));
                 }
-                executed
             }
-            JobKind::Decode => {
-                let remaining = a.max_new - a.out.len();
-                let budget = remaining.saturating_sub(1).max(1);
-                match a.sess.hat_round_capped(true, 4, budget) {
-                    Ok(r) => {
-                        a.rounds += 1;
-                        a.proposed += r.proposed.len();
-                        a.accepted += r.accepted;
-                        a.out.extend_from_slice(&r.emitted);
-                        let executed = r.verify_tokens;
-                        if a.out.len() >= a.max_new {
-                            a.out.truncate(a.max_new);
-                            self.finish(a);
-                        } else {
-                            let j = self.decode_job(job.req);
-                            self.batcher.push(j);
-                            self.slots[job.req] = Some(a);
-                        }
-                        executed
-                    }
-                    Err(e) => {
-                        let _ = a.reply.send(format!("ERR {e}"));
-                        0
+        }
+        // Group by token bucket (BTreeMap: deterministic group order).
+        let mut groups: BTreeMap<usize, Vec<StagedVerify<'e>>> = BTreeMap::new();
+        for sv in staged {
+            match self.engine.reg.bucket_for(sv.payload) {
+                Ok(b) => groups.entry(b).or_default().push(sv),
+                Err(e) => {
+                    let _ = sv.a.reply.send(format!("ERR {e}"));
+                }
+            }
+        }
+        // Cloud half: one batched middle call + one batched head call per
+        // group, each with a per-lane serial fallback so one poisoned lane
+        // cannot take out its co-batched sessions (the serial path's
+        // failure domain).
+        let mut executed = 0usize;
+        let mut cloud_ms = 0.0f64;
+        for (_bucket, mut group) in groups {
+            let shallows: Vec<Vec<f32>> =
+                group.iter_mut().map(|sv| sv.a.sess.take_verify_shallow()).collect();
+            // Middle stage (KV-mutating).
+            let lanes =
+                self.middle_with_fallback(group, shallows, &mut executed, &mut cloud_ms);
+            // Head stage (stateless).
+            let (heads, head_ms) = {
+                let refs: Vec<&[f32]> = lanes.iter().map(|(_, d)| d.as_slice()).collect();
+                let t0 = Instant::now();
+                let r = self.engine.head_batch(&refs);
+                (r, t0.elapsed().as_secs_f64() * 1e3)
+            };
+            match heads {
+                Ok(logits) => {
+                    cloud_ms += head_ms;
+                    for ((sv, deep), l) in lanes.into_iter().zip(logits) {
+                        self.complete_verify(sv.slot, sv.a, &deep, &l);
                     }
                 }
+                Err(e) => {
+                    if lanes.len() <= 1 {
+                        // Retrying a 1-lane batch re-issues the identical
+                        // call: fail the lane instead.
+                        for (sv, _) in lanes {
+                            let _ = sv.a.reply.send(format!("ERR {e}"));
+                        }
+                    } else {
+                        eprintln!(
+                            "batched head call failed ({e}); degrading {}-lane group to serial",
+                            lanes.len()
+                        );
+                        self.stats.fallbacks += 1;
+                        for (sv, deep) in lanes {
+                            let t0 = Instant::now();
+                            match self.engine.head(&deep) {
+                                Ok(l) => {
+                                    cloud_ms += t0.elapsed().as_secs_f64() * 1e3;
+                                    self.complete_verify(sv.slot, sv.a, &deep, &l);
+                                }
+                                Err(e) => {
+                                    let _ = sv.a.reply.send(format!("ERR {e}"));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (executed, cloud_ms)
+    }
+
+    /// Finish one session's verify round given its verified (deep, logits)
+    /// lane: acceptance bookkeeping, requeue or completion.
+    fn complete_verify(&mut self, slot: usize, mut a: Active<'e>, deep: &[f32], logits: &[f32]) {
+        match a.sess.verify_finish(deep, logits) {
+            Ok(r) => {
+                a.rounds += 1;
+                a.proposed += r.proposed.len();
+                a.accepted += r.accepted;
+                a.out.extend_from_slice(&r.emitted);
+                if a.out.len() >= a.max_new {
+                    a.out.truncate(a.max_new);
+                    self.finish(a);
+                } else {
+                    let j = self.decode_job(slot);
+                    self.batcher.push(j);
+                    self.slots[slot] = Some(a);
+                }
+            }
+            Err(e) => {
+                let _ = a.reply.send(format!("ERR {e}"));
+            }
+        }
+    }
+
+    /// Execute this iteration's prefill-chunk jobs.  The device halves
+    /// (input + adapter submodels) run per session, then same-bucket
+    /// chunks upload through **one** batched middle call
+    /// ([`Engine::cloud_middle_batch`]).  Returns the prefill rows
+    /// processed and the in-cloud ms spent in the batched calls.
+    fn run_prefill_jobs(&mut self, jobs: Vec<Job>) -> (usize, f64) {
+        let h = self.engine.spec().hidden;
+        let mut executed = 0usize;
+        // Device half: run each chunk up to the upload boundary.
+        let mut staged: Vec<StagedPrefill<'e>> = Vec::new();
+        for job in jobs {
+            let Some(mut a) = self.slots[job.req].take() else {
+                continue; // session already finished/failed (stale job)
+            };
+            match a.sess.prefill_chunk_begin(job.tokens) {
+                Ok(hidden) => staged.push(StagedPrefill { slot: job.req, a, payload: hidden }),
+                Err(e) => {
+                    let _ = a.reply.send(format!("ERR {e}"));
+                }
+            }
+        }
+        // Group by the chunk's token bucket.
+        let mut groups: BTreeMap<usize, Vec<StagedPrefill<'e>>> = BTreeMap::new();
+        for sp in staged {
+            match self.engine.reg.bucket_for(sp.payload.len() / h) {
+                Ok(b) => groups.entry(b).or_default().push(sp),
+                Err(e) => {
+                    let _ = sp.a.reply.send(format!("ERR {e}"));
+                }
+            }
+        }
+        // Cloud half: one batched middle call per group, with the shared
+        // per-lane fallback and accounting.
+        let mut cloud_ms = 0.0f64;
+        for (_bucket, mut group) in groups {
+            let hiddens: Vec<Vec<f32>> =
+                group.iter_mut().map(|sp| std::mem::take(&mut sp.payload)).collect();
+            let survived =
+                self.middle_with_fallback(group, hiddens, &mut executed, &mut cloud_ms);
+            for (sp, deep) in survived {
+                self.complete_prefill(sp.slot, sp.a, &deep);
+            }
+        }
+        (executed, cloud_ms)
+    }
+
+    /// The middle stage both job kinds share: one batched
+    /// [`Engine::cloud_middle_batch`] call for a same-bucket job group,
+    /// degrading to per-lane serial calls on group failure so one
+    /// poisoned lane cannot take out its co-batched sessions (state-safe:
+    /// a failed batched call mutated no lane's stream).  Central home of
+    /// the monitor accounting: delay and rows are counted only for calls
+    /// that actually ran — a matched (μ̂, η̂) observation pair for g^t —
+    /// and one occupancy sample is pushed per executed group (or per lane
+    /// in the fallback).  Returns the surviving (item, deep-rows) lanes;
+    /// failed lanes get their ERR reply here.
+    fn middle_with_fallback<P>(
+        &mut self,
+        mut group: Vec<Staged<'e, P>>,
+        uploads: Vec<Vec<f32>>,
+        executed: &mut usize,
+        cloud_ms: &mut f64,
+    ) -> Vec<(Staged<'e, P>, Vec<f32>)> {
+        let h = self.engine.spec().hidden;
+        let (result, call_ms) = {
+            let mut streams: Vec<&mut CloudStream> =
+                group.iter_mut().map(|t| t.stream()).collect();
+            let refs: Vec<&[f32]> = uploads.iter().map(|u| u.as_slice()).collect();
+            let t0 = Instant::now();
+            let r = self.engine.cloud_middle_batch(&mut streams, &refs);
+            (r, t0.elapsed().as_secs_f64() * 1e3)
+        };
+        match result {
+            Ok(deeps) => {
+                *cloud_ms += call_ms;
+                *executed += deeps.iter().map(|d| d.len() / h).sum::<usize>();
+                self.stats.batch_occupancy.push(deeps.len() as f64);
+                group.into_iter().zip(deeps).collect()
+            }
+            Err(e) => {
+                // A 1-lane "fallback" would re-issue the byte-identical
+                // batch-of-1 call: fail the lane instead of retrying and
+                // counting a spurious degradation.
+                if group.len() <= 1 {
+                    for item in group {
+                        let _ = item.reply().send(format!("ERR {e}"));
+                    }
+                    return Vec::new();
+                }
+                // Degradation must be observable: a backend that rejects
+                // every batched call leaves the server answering correctly
+                // at serial throughput, and this log + the STATS
+                // `fallbacks` counter are the only signals.
+                eprintln!(
+                    "batched cloud call failed ({e}); degrading {}-lane group to serial",
+                    group.len()
+                );
+                self.stats.fallbacks += 1;
+                let mut lanes = Vec::new();
+                for (mut item, upload) in group.into_iter().zip(uploads) {
+                    let t0 = Instant::now();
+                    match self.engine.cloud_middle(item.stream(), &upload) {
+                        Ok(deep) => {
+                            *cloud_ms += t0.elapsed().as_secs_f64() * 1e3;
+                            *executed += deep.len() / h;
+                            self.stats.batch_occupancy.push(1.0);
+                            lanes.push((item, deep));
+                        }
+                        Err(e) => {
+                            let _ = item.reply().send(format!("ERR {e}"));
+                        }
+                    }
+                }
+                lanes
+            }
+        }
+    }
+
+    /// Finish one session's prefill chunk given its verified deep rows:
+    /// first-token bookkeeping, next-chunk planning, requeue or
+    /// completion.
+    fn complete_prefill(&mut self, slot: usize, mut a: Active<'e>, deep: &[f32]) {
+        match a.sess.prefill_chunk_finish(deep) {
+            Ok(Some(t1)) => {
+                a.first_token = Some(Instant::now());
+                a.out.push(t1);
+                if a.out.len() >= a.max_new {
+                    self.finish(a);
+                } else {
+                    let j = self.decode_job(slot);
+                    self.batcher.push(j);
+                    self.slots[slot] = Some(a);
+                }
+            }
+            Ok(None) => {
+                let chunk = self.plan_chunk(a.sess.prefill_remaining());
+                self.batcher.push(Job {
+                    req: slot,
+                    kind: JobKind::PrefillChunk,
+                    tokens: chunk,
+                    tag: 0,
+                });
+                self.slots[slot] = Some(a);
+            }
+            Err(e) => {
+                let _ = a.reply.send(format!("ERR {e}"));
             }
         }
     }
 
     /// Record metrics and send the protocol reply (slot already vacated by
-    /// the `take()` in [`Scheduler::run_job`]).
+    /// the `take()` in the job runners).
     fn finish(&mut self, a: Active<'e>) {
         let now = Instant::now();
         let first = a.first_token.unwrap_or(now);
@@ -393,6 +670,134 @@ mod tests {
         assert_eq!(sched.stats.finished, 5);
         assert_eq!(sched.stats.queue_wait_ms.count(), 5);
         assert_eq!(sched.stats.ttft_ms.count(), 5);
+    }
+
+    #[test]
+    fn concurrent_decode_rounds_execute_as_one_batched_call() {
+        // η = 1.0 stops drafting after one proposal, so every session's
+        // verify round uploads exactly 2 rows (bucket 4): with 3 sessions
+        // decoding, an iteration's cloud side is exactly one batched
+        // middle call and one batched head call.  Occupancy accounting
+        // separates the paths: a single `run` adds (1 execution, 1 item),
+        // a 3-wide `run_batch` adds (1 execution, 3 items) — so the
+        // iteration's item delta exceeds its execution delta by 2·(3−1)=4,
+        // where the old sequential loop gave exactly 0.
+        let engine = Engine::synthetic();
+        let spec = SpecDecConfig { eta: 1.0, ..SpecDecConfig::default() };
+        let cfg = ServeConfig { max_sessions: 3, ..ServeConfig::default() };
+        let mut sched = Scheduler::new(&engine, spec, cfg);
+        let mut rxs = Vec::new();
+        for i in 0..3u32 {
+            let (r, rx) = req(vec![i + 1, 40, 7], 12);
+            sched.submit(r);
+            rxs.push(rx);
+        }
+        // Iteration 1: all three prefills complete (3-token prompts).
+        assert!(sched.step() > 0);
+        let (dq, _) = sched.job_depths();
+        assert_eq!(dq, 3, "all sessions should be decoding after prefill");
+
+        let before = engine.reg.stats();
+        assert!(sched.step() > 0);
+        let after = engine.reg.stats();
+        let d_exec = after.executions - before.executions;
+        let d_occ = after.batch_occupancy - before.batch_occupancy;
+        assert_eq!(
+            d_occ - d_exec,
+            4,
+            "expected one 3-wide middle call and one 3-wide head call"
+        );
+
+        drain(&mut sched);
+        for rx in &rxs {
+            assert!(rx.recv().unwrap().starts_with("OK "));
+        }
+        assert!(sched.stats.batch_occupancy.mean() > 1.0, "nothing batched");
+    }
+
+    #[test]
+    fn draft_length_follows_config_not_hardcode() {
+        // Regression: the decode path hard-coded λ = 4 where
+        // SpecDecConfig::max_draft governs every other draft-length use
+        // (decode_job's token estimate, draft_live's cap).  With
+        // max_draft = 2 the scheduler and the serial path must agree and
+        // no round may propose more than 2 tokens.
+        let engine = Engine::synthetic();
+        let spec = SpecDecConfig { max_draft: 2, ..SpecDecConfig::default() };
+
+        let mut s = crate::specdec::Session::new(&engine, spec.clone()).unwrap();
+        s.prefill(&[5, 9, 2, 14], &[4]).unwrap();
+        for _ in 0..6 {
+            let r = s.hat_round_capped(true, spec.max_draft, usize::MAX).unwrap();
+            assert!(r.proposed.len() <= 2, "proposed {} > max_draft 2", r.proposed.len());
+        }
+
+        let serial = generate(&engine, &[7, 3, 200, 41], 10, &spec).unwrap().reply_line();
+        let mut sched = Scheduler::new(&engine, spec, ServeConfig::default());
+        let (r, rx) = req(vec![7, 3, 200, 41], 10);
+        sched.submit(r);
+        drain(&mut sched);
+        assert_eq!(rx.recv().unwrap(), serial, "max_draft=2 streams diverged");
+    }
+
+    #[test]
+    fn lambda_is_observable_in_draft_work() {
+        // Greedy losslessness makes token streams λ-invariant, so the
+        // byte-identity assertions above cannot catch a reintroduced
+        // hard-coded λ.  This one can: with η = 0 the Eq. 5 stop rule
+        // never fires, so every parallel-draft branch drafts exactly λ
+        // proposals — generate()'s backend execution count must equal an
+        // explicit λ = max_draft replica of its loop (the old hard-coded
+        // λ = 4 drafts deeper branches and fails the comparison).
+        let spec = SpecDecConfig { eta: 0.0, max_draft: 2, ..SpecDecConfig::default() };
+        let prompt = [5u32, 9, 2, 14];
+        let e1 = Engine::synthetic();
+        let g = generate(&e1, &prompt, 8, &spec).unwrap();
+
+        let e2 = Engine::synthetic();
+        let mut s = crate::specdec::Session::new(&e2, spec.clone()).unwrap();
+        let mut serve = ServeConfig::default();
+        clamp_chunk_bounds(&mut serve, &e2);
+        let x = eq3_chunk(&serve, 0.0);
+        let chunks = crate::specdec::chunk_sizes(prompt.len(), x);
+        let t1 = s.prefill(&prompt, &chunks).unwrap();
+        let mut out = vec![t1];
+        while out.len() < 8 {
+            let budget = (8 - out.len()).saturating_sub(1).max(1);
+            let r = s.hat_round_capped(true, spec.max_draft, budget).unwrap();
+            out.extend_from_slice(&r.emitted);
+        }
+        out.truncate(8);
+        assert_eq!(g.tokens, out, "replica loop diverged from generate()");
+        assert_eq!(
+            e1.reg.stats().executions,
+            e2.reg.stats().executions,
+            "generate() drafted with a different λ than max_draft"
+        );
+    }
+
+    #[test]
+    fn learned_predictor_feeds_chunk_planning() {
+        // After iterations execute, the state monitor has (tokens → delay)
+        // observations and the Eq. 3 optimizer runs on the learned curve.
+        let engine = Engine::synthetic();
+        let mut sched =
+            Scheduler::new(&engine, SpecDecConfig::default(), ServeConfig::default());
+        assert!(!sched.predictor_learned(), "no observations before any iteration");
+        let (r, rx) = req((0u32..40).map(|i| (i * 3 + 1) % 256).collect(), 6);
+        sched.submit(r);
+        drain(&mut sched);
+        assert!(rx.recv().unwrap().starts_with("OK "));
+        assert!(sched.predictor_learned(), "iterations observed, g^t must be learned");
+
+        // learned_g = false keeps the optimizer on the static curve.
+        let cfg = ServeConfig { learned_g: false, ..ServeConfig::default() };
+        let mut sched = Scheduler::new(&engine, SpecDecConfig::default(), cfg);
+        let (r, rx) = req(vec![1, 2, 3, 4], 4);
+        sched.submit(r);
+        drain(&mut sched);
+        assert!(rx.recv().unwrap().starts_with("OK "));
+        assert!(!sched.predictor_learned(), "static mode must report g_learned=0");
     }
 
     #[test]

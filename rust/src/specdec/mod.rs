@@ -65,6 +65,23 @@ struct PrefillState {
     off: usize,
     /// Deep hidden of the last processed row (head input once complete).
     last_deep: Vec<f32>,
+    /// Rows of the chunk staged by [`Session::prefill_chunk_begin`] whose
+    /// verified deep rows [`Session::prefill_chunk_finish`] still awaits.
+    staged: Option<usize>,
+}
+
+/// A verify round staged between [`Session::verify_begin`] and
+/// [`Session::verify_finish`] — the device-side halves of a HAT round,
+/// split out so the serve scheduler can batch the cloud-side middle+head
+/// calls across sessions.
+struct PendingVerify {
+    proposed: Vec<TokenId>,
+    /// k+1 shallow hidden rows to upload.
+    shallow: Vec<f32>,
+    draft_steps: usize,
+    pd_hit: bool,
+    /// Parallel-drafting branches speculated during the verification wait.
+    branches: Vec<PreDraft>,
 }
 
 /// One request's end-to-end inference session over the real engine.
@@ -83,6 +100,8 @@ pub struct Session<'e> {
     n_prompt: usize,
     /// Staged chunked prefill, if one is in flight.
     prefill: Option<PrefillState>,
+    /// Staged verify round, if one is in flight.
+    verify: Option<PendingVerify>,
     /// First undrafted token (the d_0 of the next round).
     pending: Option<TokenId>,
     /// Deep hidden of the last verified row (Medusa state).
@@ -106,6 +125,7 @@ impl<'e> Session<'e> {
             ctx: Vec::new(),
             n_prompt: 0,
             prefill: None,
+            verify: None,
             pending: None,
             last_deep: Vec::new(),
             corr_candidates: Vec::new(),
@@ -122,8 +142,12 @@ impl<'e> Session<'e> {
         assert!(self.ctx.is_empty(), "prefill on a used session");
         assert!(self.prefill.is_none(), "prefill already staged");
         assert!(!prompt.is_empty());
-        self.prefill =
-            Some(PrefillState { prompt: prompt.to_vec(), off: 0, last_deep: Vec::new() });
+        self.prefill = Some(PrefillState {
+            prompt: prompt.to_vec(),
+            off: 0,
+            last_deep: Vec::new(),
+            staged: None,
+        });
     }
 
     /// Prompt tokens not yet prefilled (0 when no prefill is staged).
@@ -137,27 +161,104 @@ impl<'e> Session<'e> {
     /// virtual-time overlap is the simulator's job).  Returns
     /// `Some(first_token)` when the last chunk completes (the head runs on
     /// that chunk's final row), `None` while prompt tokens remain.
+    ///
+    /// Batch-of-1 wrapper over the [`Session::prefill_chunk_begin`] /
+    /// [`Session::prefill_chunk_finish`] halves the serve scheduler uses
+    /// to batch the cloud-side middle call across sessions.
     pub fn prefill_step(&mut self, max_tokens: usize) -> Result<Option<TokenId>> {
+        let hidden = self.prefill_chunk_begin(max_tokens)?;
+        let result = self
+            .engine
+            .cloud_middle(&mut self.cloud, &hidden)
+            .and_then(|deep| self.prefill_chunk_finish(&deep));
+        match result {
+            Ok(r) => Ok(r),
+            Err(e) => {
+                // Abandon the staged chunk and roll every write head back
+                // to the committed prefix (the cloud head too — it
+                // advances when the middle succeeds but the final head
+                // fails in prefill_chunk_finish), so the session stays
+                // usable (the chunk can be re-driven from scratch)
+                // instead of panicking "already staged" on the next call.
+                if let Some(st) = self.prefill.as_mut() {
+                    st.staged = None;
+                }
+                self.dev.spos.rollback();
+                self.dev.apos.rollback();
+                self.cloud.pos.rollback();
+                Err(e)
+            }
+        }
+    }
+
+    /// Device half of one prefill chunk: input + adapter submodels over
+    /// the next up-to-`max_tokens` prompt tokens.  Returns the shallow
+    /// hidden rows [c, H] to upload; complete the chunk by passing the
+    /// verified deep rows to [`Session::prefill_chunk_finish`].
+    pub fn prefill_chunk_begin(&mut self, max_tokens: usize) -> Result<Vec<f32>> {
         assert!(max_tokens > 0, "empty prefill chunk");
         let mut st = self.prefill.take().expect("call prefill_begin first");
+        assert!(st.staged.is_none(), "prefill chunk already staged");
         let c = max_tokens.min(st.prompt.len() - st.off);
-        let h = self.engine.spec().hidden;
         let tokens = &st.prompt[st.off..st.off + c];
-        let hidden = self.engine.device_input(&mut self.dev, tokens)?;
-        self.engine.adapter_prefill(&mut self.dev, &hidden)?;
-        let deep = self.engine.cloud_middle(&mut self.cloud, &hidden)?;
+        let staged = self.engine.device_input(&mut self.dev, tokens).and_then(|hidden| {
+            self.engine.adapter_prefill(&mut self.dev, &hidden)?;
+            Ok(hidden)
+        });
+        match staged {
+            Ok(hidden) => {
+                st.staged = Some(c);
+                self.prefill = Some(st);
+                Ok(hidden)
+            }
+            Err(e) => {
+                // Restore the staged prompt and roll the device write
+                // heads back, so the chunk stays re-drivable instead of
+                // the prefill state vanishing with the error.
+                self.prefill = Some(st);
+                self.dev.spos.rollback();
+                self.dev.apos.rollback();
+                Err(e)
+            }
+        }
+    }
+
+    /// Cloud-download half of one prefill chunk: commits the chunk's KV
+    /// rows given its verified deep hidden rows [c, H] (from
+    /// [`Engine::cloud_middle`] or a batched
+    /// [`Engine::cloud_middle_batch`] lane).  Returns `Some(first_token)`
+    /// when the prompt is fully prefilled, `None` otherwise.
+    pub fn prefill_chunk_finish(&mut self, deep: &[f32]) -> Result<Option<TokenId>> {
+        let mut st = self.prefill.take().expect("call prefill_begin first");
+        let c = st.staged.take().expect("no prefill chunk staged");
+        let h = self.engine.spec().hidden;
         st.last_deep = deep[(c - 1) * h..c * h].to_vec();
+        // Final chunk: run the (fallible) head *before* committing
+        // anything, so a head failure leaves the chunk staged and the
+        // session re-drivable instead of half-completed.
+        let last = st.off + c == st.prompt.len();
+        let logits = if last {
+            match self.engine.head(&st.last_deep) {
+                Ok(l) => Some(l),
+                Err(e) => {
+                    st.staged = Some(c);
+                    self.prefill = Some(st);
+                    return Err(e);
+                }
+            }
+        } else {
+            None
+        };
         st.off += c;
         self.dev.spos.commit(c);
         self.dev.apos.commit(c);
         self.cloud.pos.commit(c);
-        if st.off < st.prompt.len() {
+        let Some(logits) = logits else {
             self.prefill = Some(st);
             return Ok(None);
-        }
+        };
         self.n_prompt = st.prompt.len();
         self.ctx.extend_from_slice(&st.prompt);
-        let logits = self.engine.head(&st.last_deep)?;
         let t1 = Engine::argmax(&logits);
         self.ctx.push(t1);
         self.pending = Some(t1);
@@ -211,12 +312,53 @@ impl<'e> Session<'e> {
     /// device draft steps and KV writes on tokens that would only be
     /// truncated away: a round with k proposals emits at most k+1 tokens,
     /// so `draft_budget = remaining - 1` makes the last round exact.
+    ///
+    /// Batch-of-1 wrapper over the [`Session::verify_begin`] /
+    /// [`Session::verify_finish`] halves the serve scheduler uses to batch
+    /// the cloud-side verification (middle + head) across sessions.
     pub fn hat_round_capped(
         &mut self,
         parallel_draft: bool,
         lambda: usize,
         draft_budget: usize,
     ) -> Result<RoundResult> {
+        self.verify_begin(parallel_draft, lambda, draft_budget)?;
+        let shallow = self.take_verify_shallow();
+        let verified = self
+            .engine
+            .verify_batch(&mut [&mut self.cloud], &[&shallow])
+            .map(|mut outs| outs.swap_remove(0));
+        match verified {
+            Ok((deep, logits)) => self.verify_finish(&deep, &logits),
+            Err(e) => {
+                // Abandon the staged round and roll the speculative device
+                // KV tail back to the committed prefix (verify_batch's
+                // error contract already restored the cloud stream), so
+                // the session stays usable — a fresh round can be drafted
+                // — instead of panicking "already staged" on the next
+                // call.
+                self.verify = None;
+                self.dev.spos.rollback();
+                self.dev.apos.rollback();
+                Err(e)
+            }
+        }
+    }
+
+    /// Device half of a HAT decode round: threshold drafting (or adoption
+    /// of a parallel-drafted branch) capped at `draft_budget` proposals,
+    /// plus the next round's parallel-drafting branches.  Stages the k+1
+    /// shallow hidden rows for upload ([`Session::verify_shallow`]) and
+    /// returns their count — the verify job's token size, which the serve
+    /// scheduler buckets on before issuing one batched cloud call for the
+    /// whole group.
+    pub fn verify_begin(
+        &mut self,
+        parallel_draft: bool,
+        lambda: usize,
+        draft_budget: usize,
+    ) -> Result<usize> {
+        assert!(self.verify.is_none(), "verify round already staged");
         let d0 = self.pending.expect("call prefill first");
         let h = self.engine.spec().hidden;
         let max_k = self.cfg.max_draft.min(draft_budget).max(1);
@@ -268,10 +410,35 @@ impl<'e> Session<'e> {
             }
         }
 
-        // --- verification --------------------------------------------------
-        let deep = self.engine.cloud_middle(&mut self.cloud, &shallow)?;
-        let logits = self.engine.head(&deep)?;
+        self.verify = Some(PendingVerify { proposed, shallow, draft_steps, pd_hit, branches });
+        Ok(k + 1)
+    }
+
+    /// The shallow hidden rows staged by [`Session::verify_begin`]
+    /// ([k+1, H] row-major) — the round's upload.
+    pub fn verify_shallow(&self) -> &[f32] {
+        &self.verify.as_ref().expect("no verify round staged").shallow
+    }
+
+    /// Move the staged upload out of the session.  The rows are consumed
+    /// by the cloud call and never read again after upload, so the serve
+    /// scheduler takes them instead of copying ([k+1, H] per session per
+    /// round is hot-path traffic); [`Session::verify_finish`] is
+    /// unaffected.
+    pub fn take_verify_shallow(&mut self) -> Vec<f32> {
+        std::mem::take(&mut self.verify.as_mut().expect("no verify round staged").shallow)
+    }
+
+    /// Cloud-download half of a HAT decode round: acceptance against the
+    /// verified logits [k+1, V], KV commit/rollback, and parallel-draft
+    /// branch adoption.  `deep` is the middle submodel's output for the
+    /// staged upload ([k+1, H]), `logits` the head's output on it.
+    pub fn verify_finish(&mut self, deep: &[f32], logits: &[f32]) -> Result<RoundResult> {
+        let pv = self.verify.take().expect("no verify round staged");
+        let h = self.engine.spec().hidden;
         let v = self.engine.spec().vocab;
+        let proposed = pv.proposed;
+        let k = proposed.len();
         let mut accepted = 0;
         while accepted < k {
             let row = &logits[accepted * v..(accepted + 1) * v];
@@ -300,7 +467,8 @@ impl<'e> Session<'e> {
         self.cloud.pos.rollback();
 
         // Adopt a branch whose assumed (token, position) both match.
-        self.prebuilt = branches
+        self.prebuilt = pv
+            .branches
             .into_iter()
             .find(|pb| pb.base == next_d0 && pb.assumed_rows == committed_rows);
 
@@ -310,9 +478,9 @@ impl<'e> Session<'e> {
             proposed,
             accepted,
             emitted,
-            draft_steps,
+            draft_steps: pv.draft_steps,
             verify_tokens: k + 1,
-            pd_hit,
+            pd_hit: pv.pd_hit,
         })
     }
 
@@ -551,6 +719,63 @@ mod tests {
         let uncapped = gen(&mut |_| usize::MAX);
         let capped = gen(&mut |len| (12 - len).saturating_sub(1).max(1));
         assert_eq!(uncapped, capped);
+    }
+
+    #[test]
+    fn split_verify_round_matches_wrapper() {
+        // Driving the verify_begin/verify_shallow/verify_finish halves by
+        // hand (what the serve scheduler does, with the cloud calls
+        // batched) must reproduce hat_round_capped exactly.
+        let engine = Engine::synthetic();
+        let cfg = SpecDecConfig::default();
+        let prompt = [7u32, 3, 200, 41, 5];
+
+        let mut a = Session::new(&engine, cfg.clone()).unwrap();
+        let mut b = Session::new(&engine, cfg.clone()).unwrap();
+        a.prefill(&prompt, &[prompt.len()]).unwrap();
+        b.prefill(&prompt, &[prompt.len()]).unwrap();
+
+        for _ in 0..4 {
+            let ra = a.hat_round_capped(true, 4, usize::MAX).unwrap();
+
+            let rows = b.verify_begin(true, 4, usize::MAX).unwrap();
+            let shallow = b.verify_shallow().to_vec();
+            assert_eq!(shallow.len(), rows * engine.spec().hidden);
+            let deep = engine.cloud_middle(&mut b.cloud, &shallow).unwrap();
+            let logits = engine.head(&deep).unwrap();
+            let rb = b.verify_finish(&deep, &logits).unwrap();
+
+            assert_eq!(ra.proposed, rb.proposed);
+            assert_eq!(ra.emitted, rb.emitted);
+            assert_eq!(ra.accepted, rb.accepted);
+            assert_eq!(ra.pd_hit, rb.pd_hit);
+        }
+        assert_eq!(a.ctx, b.ctx);
+    }
+
+    #[test]
+    fn split_prefill_chunk_matches_wrapper() {
+        let engine = Engine::synthetic();
+        let cfg = SpecDecConfig::default();
+        let prompt: Vec<TokenId> = (0u32..23).map(|i| (i * 5 + 2) % 256).collect();
+
+        let mut a = Session::new(&engine, cfg.clone()).unwrap();
+        a.prefill_begin(&prompt);
+        let mut first_a = None;
+        while a.prefill_remaining() > 0 {
+            first_a = a.prefill_step(8).unwrap();
+        }
+
+        let mut b = Session::new(&engine, cfg).unwrap();
+        b.prefill_begin(&prompt);
+        let mut first_b = None;
+        while b.prefill_remaining() > 0 {
+            let hidden = b.prefill_chunk_begin(8).unwrap();
+            let deep = engine.cloud_middle(&mut b.cloud, &hidden).unwrap();
+            first_b = b.prefill_chunk_finish(&deep).unwrap();
+        }
+        assert_eq!(first_a, first_b);
+        assert_eq!(a.ctx, b.ctx);
     }
 
     #[test]

@@ -8,9 +8,12 @@
 //! The headline assertions are bit-identity: two same-seed runs of any
 //! layer must produce identical token streams and identical metrics.
 
+use hat::backend::reference::ReferenceBackend;
+use hat::backend::{ExecBackend, RuntimeStats, Tensor};
 use hat::config::{Dataset, ExperimentConfig, Framework, SpecDecConfig};
 use hat::engine::Engine;
 use hat::frameworks::run_experiment;
+use hat::runtime::Manifest;
 use hat::specdec::profile::SdProfile;
 use hat::specdec::{chunk_sizes, Session};
 use hat::workload::PromptPool;
@@ -34,6 +37,199 @@ fn run_hat_session(e: &Engine, p: &[u32], chunk: usize, pd: bool, n: usize) -> V
         assert_eq!(r.verify_tokens, r.proposed.len() + 1);
     }
     s.ctx.clone()
+}
+
+/// A reference backend stripped of its `run_batch` override: delegates
+/// everything, so batch calls fall back to the trait's loop-over-`run`
+/// default — the path the PJRT backend takes.
+struct LoopBackend(ReferenceBackend);
+
+impl ExecBackend for LoopBackend {
+    fn name(&self) -> &'static str {
+        "loop-reference"
+    }
+    fn manifest(&self) -> &Manifest {
+        self.0.manifest()
+    }
+    fn load_weights(&mut self) -> anyhow::Result<()> {
+        self.0.load_weights()
+    }
+    fn compile(&self, name: &str) -> anyhow::Result<()> {
+        self.0.compile(name)
+    }
+    fn run(&self, name: &str, inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        self.0.run(name, inputs)
+    }
+    fn weight(&self, name: &str) -> Option<Tensor> {
+        self.0.weight(name)
+    }
+    fn stats(&self) -> RuntimeStats {
+        self.0.stats()
+    }
+    // No run_batch override: the default loop impl applies.
+}
+
+/// Reference backend with switchable fault injection by artifact-kind
+/// prefix — exercises the error-recovery contracts (staged-round
+/// abandonment, KV write-head rollback) that only failing cloud calls can
+/// reach.
+struct FlakyBackend {
+    inner: ReferenceBackend,
+    fail_cloud: std::rc::Rc<std::cell::Cell<bool>>,
+    fail_head: std::rc::Rc<std::cell::Cell<bool>>,
+}
+
+impl FlakyBackend {
+    fn check(&self, name: &str) -> anyhow::Result<()> {
+        if self.fail_cloud.get() && name.starts_with("cloud_middle") {
+            anyhow::bail!("injected cloud_middle failure");
+        }
+        if self.fail_head.get() && name.starts_with("device_head") {
+            anyhow::bail!("injected device_head failure");
+        }
+        Ok(())
+    }
+}
+
+impl ExecBackend for FlakyBackend {
+    fn name(&self) -> &'static str {
+        "flaky-reference"
+    }
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+    fn load_weights(&mut self) -> anyhow::Result<()> {
+        self.inner.load_weights()
+    }
+    fn compile(&self, name: &str) -> anyhow::Result<()> {
+        self.inner.compile(name)
+    }
+    fn run(&self, name: &str, inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        self.check(name)?;
+        self.inner.run(name, inputs)
+    }
+    fn run_batch(&self, name: &str, inputs: &[Vec<&Tensor>]) -> anyhow::Result<Vec<Vec<Tensor>>> {
+        self.check(name)?;
+        self.inner.run_batch(name, inputs)
+    }
+    fn weight(&self, name: &str) -> Option<Tensor> {
+        self.inner.weight(name)
+    }
+    fn stats(&self) -> hat::backend::RuntimeStats {
+        self.inner.stats()
+    }
+}
+
+#[test]
+fn failed_rounds_roll_back_and_the_session_recovers() {
+    // A round that dies at the middle stage (nothing mutated) or at the
+    // head stage (middle already advanced the cloud stream — verify_batch
+    // must roll it back) leaves the session re-drivable, and the recovered
+    // stream is bit-identical to an uninterrupted run.
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    let fail_cloud = Rc::new(Cell::new(false));
+    let fail_head = Rc::new(Cell::new(false));
+    let flaky = FlakyBackend {
+        inner: ReferenceBackend::synthetic(42),
+        fail_cloud: fail_cloud.clone(),
+        fail_head: fail_head.clone(),
+    };
+    let engine =
+        Engine { reg: hat::runtime::ArtifactRegistry::with_backend(Box::new(flaky)).unwrap() };
+
+    let cfg = SpecDecConfig::default();
+    let prompt = [5u32, 9, 2, 14];
+
+    // Uninterrupted reference run (same seed → same model).
+    let clean_engine = Engine::synthetic();
+    let mut clean = Session::new(&clean_engine, cfg.clone()).unwrap();
+    clean.prefill(&prompt, &[prompt.len()]).unwrap();
+    let mut expect = Vec::new();
+    for _ in 0..4 {
+        expect.extend(clean.hat_round(true, cfg.max_draft).unwrap().emitted);
+    }
+
+    let mut s = Session::new(&engine, cfg.clone()).unwrap();
+    s.prefill(&prompt, &[prompt.len()]).unwrap();
+    // Round dies at the middle stage.
+    fail_cloud.set(true);
+    assert!(s.hat_round(true, cfg.max_draft).is_err());
+    fail_cloud.set(false);
+    // Round dies at the head stage, after the middle advanced the stream.
+    fail_head.set(true);
+    assert!(s.hat_round(true, cfg.max_draft).is_err());
+    fail_head.set(false);
+    // Fully recovered: the stream continues exactly as if nothing failed.
+    let mut got = Vec::new();
+    for _ in 0..4 {
+        got.extend(s.hat_round(true, cfg.max_draft).unwrap().emitted);
+    }
+    assert_eq!(got, expect, "recovered session diverged after failed rounds");
+
+    // The prefill wrapper's recovery paths: a chunk that dies at the
+    // middle stage, and a *final* chunk whose head call dies (the chunk
+    // commits nothing and re-drives from scratch), both recover to a
+    // stream identical to a clean prefill.
+    let mut p = Session::new(&engine, cfg.clone()).unwrap();
+    p.prefill_begin(&prompt);
+    fail_cloud.set(true);
+    assert!(p.prefill_step(2).is_err());
+    fail_cloud.set(false);
+    assert_eq!(p.prefill_remaining(), prompt.len(), "failed chunk must not consume tokens");
+    assert!(p.prefill_step(2).unwrap().is_none());
+    fail_head.set(true);
+    assert!(p.prefill_step(2).is_err(), "final chunk's head must fail");
+    fail_head.set(false);
+    assert_eq!(p.prefill_remaining(), 2, "failed final chunk must not consume tokens");
+    let first = p.prefill_step(2).unwrap();
+    let mut q = Session::new(&clean_engine, cfg).unwrap();
+    let t1 = q.prefill(&prompt, &[2, 2]).unwrap();
+    assert_eq!(first, Some(t1), "recovered prefill diverged");
+}
+
+#[test]
+fn run_batch_default_loop_matches_vectorized_reference() {
+    // The run_batch contract: the default loop implementation and the
+    // reference backend's vectorized pass must produce bit-identical
+    // outputs for every item — only their stats accounting differs.
+    let vectorized = ReferenceBackend::synthetic(42);
+    let looped = LoopBackend(ReferenceBackend::synthetic(42));
+    let m = vectorized.manifest().model.clone();
+    let h = m.hidden;
+
+    // Three lanes of cloud_middle work with distinct KV states/positions.
+    let kvs: Vec<Tensor> = (0..3)
+        .map(|lane| {
+            let mut kv = hat::backend::zeros_tensor(&m.middle_kv_dims());
+            for d in 0..h {
+                kv.data[d] = 0.1 * lane as f32;
+            }
+            kv
+        })
+        .collect();
+    let hiddens: Vec<Tensor> = (0..3)
+        .map(|lane| {
+            let data: Vec<f32> =
+                (0..4 * h).map(|i| ((i + lane) as f32 * 0.03).sin()).collect();
+            Tensor::new(vec![4, h], data).unwrap()
+        })
+        .collect();
+    let poss: Vec<Tensor> =
+        (0..3).map(|lane| hat::backend::pos_tensor(lane + 1)).collect();
+    let items: Vec<Vec<&Tensor>> =
+        (0..3).map(|i| vec![&hiddens[i], &kvs[i], &poss[i]]).collect();
+
+    let a = vectorized.run_batch("cloud_middle_4", &items).unwrap();
+    let b = looped.run_batch("cloud_middle_4", &items).unwrap();
+    assert_eq!(a, b, "vectorized and loop run_batch disagree");
+
+    // Accounting: one execution with occupancy 3 vs three with 1 each.
+    let sv = vectorized.stats();
+    let sl = looped.stats();
+    assert_eq!((sv.executions, sv.batch_occupancy), (1, 3));
+    assert_eq!((sl.executions, sl.batch_occupancy), (3, 3));
 }
 
 #[test]

@@ -8,8 +8,11 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::time::Instant;
 
+use hat::backend::reference::ReferenceBackend;
+use hat::backend::{ExecBackend, RuntimeStats, Tensor};
 use hat::config::{ServeConfig, SpecDecConfig};
 use hat::engine::Engine;
+use hat::runtime::{ArtifactRegistry, Manifest};
 use hat::server::scheduler::{Request, Scheduler};
 use hat::server::{generate, serve_listener};
 use hat::util::proptest::{cases, forall};
@@ -82,6 +85,9 @@ fn concurrent_tcp_clients_match_serial_runs() {
         "tbt_ms=",
         "accept=",
         "chunk_mean=",
+        "batch_mean=",
+        "fallbacks=0",
+        "g_learned=1",
         "queued=0",
         "live=0",
     ] {
@@ -89,6 +95,152 @@ fn concurrent_tcp_clients_match_serial_runs() {
     }
     writeln!(stream, "QUIT").unwrap();
     server.join().unwrap();
+}
+
+/// Batched-vs-sequential byte-identity: the scheduler executes same-bucket
+/// verify rounds and prefill chunks of concurrent sessions as *one*
+/// `run_batch` engine call per group, and every session's stream must
+/// still match a serial single-session `generate()` run exactly.  The
+/// backend's occupancy counters prove the batching actually happened: a
+/// single `run` adds (1 execution, 1 item) while an n-wide `run_batch`
+/// adds (1 execution, n items), so mean occupancy > 1 requires grouped
+/// calls.
+#[test]
+fn batched_execution_is_byte_identical_to_sequential() {
+    let serial_engine = Engine::synthetic();
+    let spec = SpecDecConfig::default();
+    let reqs: Vec<(Vec<u32>, usize)> = vec![
+        ((0u32..40).map(|i| (i * 3 + 1) % 256).collect(), 14),
+        ((0u32..75).map(|i| (i * 5 + 2) % 256).collect(), 11),
+        ((0u32..33).map(|i| (i * 7 + 5) % 256).collect(), 16),
+        ((0u32..52).map(|i| (i * 11 + 3) % 256).collect(), 9),
+    ];
+    let expected: Vec<String> = reqs
+        .iter()
+        .map(|(p, m)| generate(&serial_engine, p, *m, &spec).unwrap().reply_line())
+        .collect();
+
+    let engine = Engine::synthetic();
+    let cfg = ServeConfig { max_sessions: 4, ..ServeConfig::default() };
+    let mut sched = Scheduler::new(&engine, spec, cfg);
+    let mut rxs = Vec::new();
+    for (p, m) in &reqs {
+        let (tx, rx) = mpsc::channel();
+        sched.submit(Request {
+            prompt: p.clone(),
+            max_new: *m,
+            reply: tx,
+            enqueued: Instant::now(),
+        });
+        rxs.push(rx);
+    }
+    let mut guard = 0;
+    while sched.has_work() {
+        assert!(sched.step() > 0, "scheduler idle with pending work");
+        guard += 1;
+        assert!(guard < 20_000, "scheduler failed to drain");
+    }
+    for (i, (rx, want)) in rxs.iter().zip(&expected).enumerate() {
+        let got = rx.recv().unwrap();
+        assert_eq!(&got, want, "session {i}: batched stream diverged from serial");
+    }
+    // All four prompts are ≥ 16 tokens, so iteration 1 carries four
+    // same-bucket prefill chunks — at least that group ran 4-wide.
+    let stats = engine.reg.stats();
+    assert!(
+        stats.mean_batch_occupancy() > 1.0,
+        "no batched engine calls observed (occupancy {:.3} over {} executions)",
+        stats.mean_batch_occupancy(),
+        stats.executions
+    );
+    assert!(
+        sched.stats.batch_occupancy.mean() > 1.0,
+        "scheduler never issued a multi-session group"
+    );
+}
+
+/// Reference backend that rejects every multi-lane `run_batch` call —
+/// forces the scheduler's per-lane serial fallback paths.
+struct BatchRejectBackend(ReferenceBackend);
+
+impl ExecBackend for BatchRejectBackend {
+    fn name(&self) -> &'static str {
+        "batch-reject-reference"
+    }
+    fn manifest(&self) -> &Manifest {
+        self.0.manifest()
+    }
+    fn load_weights(&mut self) -> anyhow::Result<()> {
+        self.0.load_weights()
+    }
+    fn compile(&self, name: &str) -> anyhow::Result<()> {
+        self.0.compile(name)
+    }
+    fn run(&self, name: &str, inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        self.0.run(name, inputs)
+    }
+    fn run_batch(&self, name: &str, inputs: &[Vec<&Tensor>]) -> anyhow::Result<Vec<Vec<Tensor>>> {
+        if inputs.len() > 1 {
+            anyhow::bail!("injected: this backend rejects multi-lane batches");
+        }
+        self.0.run_batch(name, inputs)
+    }
+    fn weight(&self, name: &str) -> Option<Tensor> {
+        self.0.weight(name)
+    }
+    fn stats(&self) -> RuntimeStats {
+        self.0.stats()
+    }
+}
+
+/// One poisoned batched call must not take out co-batched sessions: on a
+/// backend that rejects every multi-lane `run_batch`, the scheduler
+/// degrades each group to per-lane serial calls, every request still
+/// completes with the exact serial stream, and the degradation is
+/// observable through `ServeStats::fallbacks`.
+#[test]
+fn scheduler_degrades_to_serial_when_batched_calls_fail() {
+    let backend = BatchRejectBackend(ReferenceBackend::synthetic(42));
+    let engine = Engine { reg: ArtifactRegistry::with_backend(Box::new(backend)).unwrap() };
+    let spec = SpecDecConfig::default();
+    let reqs: Vec<(Vec<u32>, usize)> = vec![
+        ((0u32..30).map(|i| (i * 3 + 1) % 256).collect(), 10),
+        ((0u32..45).map(|i| (i * 5 + 2) % 256).collect(), 8),
+        ((0u32..24).map(|i| (i * 7 + 5) % 256).collect(), 12),
+    ];
+    let clean = Engine::synthetic();
+    let expected: Vec<String> = reqs
+        .iter()
+        .map(|(p, m)| generate(&clean, p, *m, &spec).unwrap().reply_line())
+        .collect();
+
+    let cfg = ServeConfig { max_sessions: 3, ..ServeConfig::default() };
+    let mut sched = Scheduler::new(&engine, spec, cfg);
+    let mut rxs = Vec::new();
+    for (p, m) in &reqs {
+        let (tx, rx) = mpsc::channel();
+        sched.submit(Request {
+            prompt: p.clone(),
+            max_new: *m,
+            reply: tx,
+            enqueued: Instant::now(),
+        });
+        rxs.push(rx);
+    }
+    let mut guard = 0;
+    while sched.has_work() {
+        assert!(sched.step() > 0, "scheduler idle with pending work");
+        guard += 1;
+        assert!(guard < 20_000, "scheduler failed to drain");
+    }
+    for (i, (rx, want)) in rxs.iter().zip(&expected).enumerate() {
+        assert_eq!(&rx.recv().unwrap(), want, "session {i} diverged under fallback");
+    }
+    assert!(sched.stats.fallbacks > 0, "no batched call failed — fallback not exercised");
+    assert!(
+        sched.stats.batch_occupancy.mean() <= 1.0 + 1e-9,
+        "rejected batches must degrade to 1-lane calls"
+    );
 }
 
 /// The scheduler never starves a session: every admitted request finishes
