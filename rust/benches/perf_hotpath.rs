@@ -14,7 +14,7 @@ use hat::config::{Dataset, ExperimentConfig, Framework, GModel, ServeConfig, Spe
 use hat::engine::Engine;
 use hat::frameworks::run_experiment;
 use hat::server::generate;
-use hat::server::scheduler::{Request, Scheduler};
+use hat::server::scheduler::{ReplyHandle, Request, Scheduler};
 use hat::sim::{EventQueue, SimTime};
 use hat::specdec::profile::SdProfile;
 use hat::util::json::{obj, Value};
@@ -78,7 +78,7 @@ fn main() {
         let mut acc = 0u64;
         for i in 0..10_000usize {
             let kind = if i % 3 == 0 { JobKind::PrefillChunk } else { JobKind::Decode };
-            b.push(Job { req: i, kind, tokens: 1 + i % 300, tag: 0 });
+            b.push(Job { req: i, kind, tokens: 1 + i % 300, epoch: 0 });
             if i % 8 == 0 {
                 acc += b.form_batch(2048).len() as u64;
             }
@@ -169,12 +169,13 @@ fn main() {
     let mut sched = Scheduler::new(&batch_engine, spec, cfg);
     let t0 = Instant::now();
     let mut rxs = Vec::new();
-    for (p, m) in &reqs {
+    for (i, (p, m)) in reqs.iter().enumerate() {
         let (tx, rx) = mpsc::channel();
         sched.submit(Request {
+            id: (i + 1) as u64,
             prompt: p.clone(),
             max_new: *m,
-            reply: tx,
+            reply: ReplyHandle::new(tx),
             enqueued: Instant::now(),
         });
         rxs.push(rx);

@@ -1,0 +1,160 @@
+//! §Churn — disconnect-storm benchmark for the serve scheduler's
+//! session-lifecycle subsystem (EXPERIMENTS.md §Perf).
+//!
+//! Workload: `N_DEAD` long generations whose clients vanish right after
+//! their sessions take slots, plus `N_LIVE` short live requests queued
+//! behind them, on a 2-slot scheduler.  Run twice over identical
+//! requests:
+//!
+//! - **reaping on** — the disconnects are noticed (reply handles marked
+//!   dead, cancels forwarded), exactly what `server::handle_conn`'s reply
+//!   wait does: slots are reclaimed at the next iteration boundary;
+//! - **reaping off** — the pre-lifecycle behaviour: abandoned
+//!   generations run to completion into dead channels while live clients
+//!   wait for a slot.
+//!
+//! Reported: scheduler iterations and wall ms until every live request
+//! completes, mean live-client completion latency, and the ON-mode
+//! lifecycle counters.  Writes `BENCH_churn.json`.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use hat::config::{ServeConfig, SpecDecConfig};
+use hat::engine::Engine;
+use hat::server::scheduler::{ReplyHandle, Request, Scheduler};
+use hat::util::json::{obj, Value};
+use hat::util::report::{section, write_json};
+
+const N_DEAD: usize = 2;
+const N_LIVE: usize = 3;
+const DEAD_MAX_NEW: usize = 200;
+
+struct ChurnRun {
+    iterations: usize,
+    wall_ms: f64,
+    live_mean_ms: f64,
+    cancelled: u64,
+    reaped: u64,
+    stale_dropped: u64,
+}
+
+fn run(reap: bool) -> ChurnRun {
+    let engine = Engine::synthetic();
+    let cfg = ServeConfig { max_sessions: 2, ..ServeConfig::default() };
+    let mut sched = Scheduler::new(&engine, SpecDecConfig::default(), cfg);
+
+    // The storm: long generations that take both slots, clients gone.
+    let mut dead = Vec::new();
+    for i in 0..N_DEAD {
+        let (tx, rx) = mpsc::channel();
+        let reply = ReplyHandle::new(tx);
+        let prompt: Vec<u32> = (0u32..80).map(|j| (j * 3 + i as u32 + 1) % 256).collect();
+        sched.submit(Request {
+            id: (i + 1) as u64,
+            prompt,
+            max_new: DEAD_MAX_NEW,
+            reply: reply.clone(),
+            enqueued: Instant::now(),
+        });
+        drop(rx); // client disconnects immediately after submitting
+        dead.push(((i + 1) as u64, reply));
+    }
+    let mut iterations = 0usize;
+    sched.step(); // the storm is admitted into both slots
+    iterations += 1;
+    assert_eq!(sched.live_sessions(), N_DEAD, "storm must hold all slots");
+
+    // Live clients queue behind it.
+    let t0 = Instant::now();
+    let mut live: Vec<(mpsc::Receiver<String>, Instant, Option<f64>)> = Vec::new();
+    for i in 0..N_LIVE {
+        let (tx, rx) = mpsc::channel();
+        let prompt: Vec<u32> = (0u32..12).map(|j| (j * 5 + i as u32 + 2) % 256).collect();
+        sched.submit(Request {
+            id: (100 + i) as u64,
+            prompt,
+            max_new: 8,
+            reply: ReplyHandle::new(tx),
+            enqueued: Instant::now(),
+        });
+        live.push((rx, Instant::now(), None));
+    }
+
+    if reap {
+        // What each dead client's connection thread would do on EOF.
+        for (id, reply) in &dead {
+            reply.mark_dead();
+            assert!(sched.cancel(*id), "slot holder must cancel");
+        }
+    }
+
+    while live.iter().any(|(_, _, done)| done.is_none()) {
+        assert!(sched.step() > 0, "scheduler idle with live work pending");
+        iterations += 1;
+        assert!(iterations < 100_000, "churn bench failed to drain");
+        for (rx, submitted, done) in live.iter_mut() {
+            if done.is_none() {
+                if let Ok(line) = rx.try_recv() {
+                    assert!(line.starts_with("OK "), "live request failed: {line}");
+                    *done = Some(submitted.elapsed().as_secs_f64() * 1e3);
+                }
+            }
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let live_mean_ms =
+        live.iter().map(|(_, _, d)| d.unwrap()).sum::<f64>() / N_LIVE as f64;
+    ChurnRun {
+        iterations,
+        wall_ms,
+        live_mean_ms,
+        cancelled: sched.stats.cancelled,
+        reaped: sched.stats.reaped,
+        stale_dropped: sched.stats.stale_dropped,
+    }
+}
+
+fn main() {
+    section("Churn: disconnect storm — reaping on vs off");
+    let on = run(true);
+    let off = run(false);
+    println!(
+        "reap on:  {:>5} iterations, {:>8.1} ms wall, live mean {:>7.1} ms \
+         (cancelled={} stale_dropped={})",
+        on.iterations, on.wall_ms, on.live_mean_ms, on.cancelled, on.stale_dropped
+    );
+    println!(
+        "reap off: {:>5} iterations, {:>8.1} ms wall, live mean {:>7.1} ms",
+        off.iterations, off.wall_ms, off.live_mean_ms
+    );
+    // The CI smoke run leans on these: a lifecycle regression that stops
+    // reclaiming slots makes the ON run as slow as OFF.
+    assert_eq!(on.cancelled, N_DEAD as u64, "reaping on must cancel the storm");
+    assert!(
+        on.iterations < off.iterations,
+        "reaping must finish live work in fewer iterations ({} vs {})",
+        on.iterations,
+        off.iterations
+    );
+    let speedup = off.iterations as f64 / on.iterations.max(1) as f64;
+    println!("slot-reclamation speedup: {speedup:.2}x fewer iterations to serve live clients");
+
+    let out = obj(vec![
+        ("n_dead", Value::Num(N_DEAD as f64)),
+        ("n_live", Value::Num(N_LIVE as f64)),
+        ("dead_max_new", Value::Num(DEAD_MAX_NEW as f64)),
+        ("reap_on_iterations", Value::Num(on.iterations as f64)),
+        ("reap_on_wall_ms", Value::Num(on.wall_ms)),
+        ("reap_on_live_mean_ms", Value::Num(on.live_mean_ms)),
+        ("reap_on_cancelled", Value::Num(on.cancelled as f64)),
+        ("reap_on_reaped", Value::Num(on.reaped as f64)),
+        ("reap_on_stale_dropped", Value::Num(on.stale_dropped as f64)),
+        ("reap_off_iterations", Value::Num(off.iterations as f64)),
+        ("reap_off_wall_ms", Value::Num(off.wall_ms)),
+        ("reap_off_live_mean_ms", Value::Num(off.live_mean_ms)),
+        ("iteration_speedup", Value::Num(speedup)),
+    ]);
+    let p = write_json("BENCH_churn", &out);
+    println!("wrote {}", p.display());
+}

@@ -5,9 +5,11 @@
 //! hat simulate [--framework F] [--dataset D] [--rate R] [--pipeline P]
 //!              [--requests N] [--seed S] [--config FILE]
 //! hat serve    [--addr HOST:PORT] [--config FILE] [--max-sessions N]
-//!              [--prefill-budget T] [--max-conns N]
+//!              [--prefill-budget T] [--policy fifo|sjf] [--deadline-ms T]
+//!              [--max-conns N]
 //!              real TCP serving: continuous-batching scheduler over the
-//!              engine (N concurrent sessions, T prefill tokens/iteration)
+//!              engine (N concurrent sessions, T prefill tokens/iteration,
+//!              slot admission policy + per-request deadline)
 //! hat profile  [--rounds N]             measure SD round shapes
 //! hat inspect                           print manifest / artifact summary
 //! ```

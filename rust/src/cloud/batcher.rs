@@ -23,8 +23,15 @@ pub struct Job {
     pub kind: JobKind,
     /// Tokens this job contributes to the batch.
     pub tokens: usize,
-    /// Opaque tag the simulator uses to route the completion.
-    pub tag: u64,
+    /// Admission epoch of the session this job drives.  `req` is a *slot*
+    /// index, and slots are reused: once cancellation can free a slot
+    /// while jobs for it are still queued, a stale job would otherwise
+    /// drive whatever session is admitted into the slot next.  Consumers
+    /// that reuse request slots must stamp each admission with a fresh
+    /// epoch and drop popped jobs whose epoch disagrees with the slot's
+    /// current occupant (the serve scheduler does; the fleet simulator
+    /// never reuses ids and passes 0).
+    pub epoch: u64,
 }
 
 #[derive(Debug, Default)]
@@ -95,6 +102,18 @@ impl Batcher {
     pub fn batch_tokens(batch: &[Job]) -> usize {
         batch.iter().map(|j| j.tokens).sum()
     }
+
+    /// Remove every queued job for one request slot, returning how many
+    /// were dropped.  Used when a session is torn down (cancel, deadline
+    /// expiry) so its queued work never pollutes a later batch; the epoch
+    /// stamp on [`Job`] is the backstop for staleness this sweep cannot
+    /// see (jobs already popped into a formed batch).
+    pub fn remove_session(&mut self, req: usize) -> usize {
+        let before = self.decode_q.len() + self.prefill_q.len();
+        self.decode_q.retain(|j| j.req != req);
+        self.prefill_q.retain(|j| j.req != req);
+        before - (self.decode_q.len() + self.prefill_q.len())
+    }
 }
 
 #[cfg(test)]
@@ -103,7 +122,22 @@ mod tests {
     use crate::util::proptest::{cases, forall, vec_usize};
 
     fn job(req: usize, kind: JobKind, tokens: usize) -> Job {
-        Job { req, kind, tokens, tag: 0 }
+        Job { req, kind, tokens, epoch: 0 }
+    }
+
+    #[test]
+    fn remove_session_drops_only_that_slot() {
+        let mut b = Batcher::new();
+        b.push(job(0, JobKind::PrefillChunk, 64));
+        b.push(job(1, JobKind::Decode, 3));
+        b.push(job(0, JobKind::Decode, 2));
+        b.push(job(2, JobKind::PrefillChunk, 32));
+        assert_eq!(b.remove_session(0), 2);
+        assert_eq!(b.remove_session(0), 0, "removal is idempotent");
+        assert_eq!(b.pending(), 2);
+        let batch = b.form_batch(256);
+        assert!(batch.iter().all(|j| j.req != 0), "slot 0 job survived removal");
+        assert_eq!(batch.len(), 2);
     }
 
     #[test]

@@ -164,6 +164,36 @@ impl Default for SpecDecConfig {
     }
 }
 
+/// Slot-admission policy of the serve scheduler: the order in which
+/// waiting requests take freed session slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitPolicy {
+    /// Arrival order (the original behaviour).
+    Fifo,
+    /// Shortest-prompt-first, bounded by aging: once the *oldest* waiting
+    /// request has waited `ServeConfig::sjf_aging_ms`, it is admitted
+    /// next regardless of length, so long prompts cannot starve behind a
+    /// stream of short ones.
+    Sjf,
+}
+
+impl AdmitPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmitPolicy::Fifo => "fifo",
+            AdmitPolicy::Sjf => "sjf",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AdmitPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Some(AdmitPolicy::Fifo),
+            "sjf" => Some(AdmitPolicy::Sjf),
+            _ => None,
+        }
+    }
+}
+
 /// Real-serving configuration (`hat serve`): the continuous-batching
 /// scheduler that interleaves live sessions at chunk/round granularity
 /// (server::scheduler).  The Eq. 3 chunk optimizer needs a wire model and
@@ -196,6 +226,17 @@ pub struct ServeConfig {
     /// curve g^t(·) (Eq. 2 EWMA over observed iteration delays), falling
     /// back to the static `g` until observations arrive.
     pub learned_g: bool,
+    /// Slot-admission policy (`[serve] policy = "fifo" | "sjf"`).
+    pub policy: AdmitPolicy,
+    /// Aging bound (ms) for the `sjf` policy: the oldest waiting request
+    /// is admitted FIFO once it has waited this long, so shortest-first
+    /// cannot starve long prompts.  0 degenerates sjf to pure FIFO.
+    pub sjf_aging_ms: u64,
+    /// Per-request wall-clock deadline (ms, measured from arrival) after
+    /// which the scheduler cancels the session with an `ERR deadline`
+    /// reply — waiting or live, the request is torn down at the next
+    /// iteration boundary.  0 disables deadlines.
+    pub deadline_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -213,6 +254,9 @@ impl Default for ServeConfig {
             up_bytes_per_ms: 7000.0,
             g: GModel::vicuna7b(),
             learned_g: true,
+            policy: AdmitPolicy::Fifo,
+            sjf_aging_ms: 1000,
+            deadline_ms: 0,
         }
     }
 }
@@ -457,6 +501,12 @@ mod tests {
         for f in Framework::all() {
             assert_eq!(Framework::parse(f.name()), Some(f));
         }
+        for p in [AdmitPolicy::Fifo, AdmitPolicy::Sjf] {
+            assert_eq!(AdmitPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(AdmitPolicy::parse("lifo"), None);
+        assert_eq!(ServeConfig::default().policy, AdmitPolicy::Fifo);
+        assert_eq!(ServeConfig::default().deadline_ms, 0, "deadlines default off");
     }
 
     #[test]

@@ -147,6 +147,13 @@ pub fn build(map: &BTreeMap<String, Scalar>) -> Result<ExperimentConfig, String>
             "serve.alpha" => cfg.serve.alpha = num()?,
             "serve.pipeline_len" => cfg.serve.pipeline_len = us()?,
             "serve.learned_g" => cfg.serve.learned_g = b()?,
+            "serve.policy" => {
+                let s = v.as_str().ok_or("serve.policy must be a string")?;
+                cfg.serve.policy = super::AdmitPolicy::parse(s)
+                    .ok_or_else(|| format!("unknown serve.policy {s:?} (fifo|sjf)"))?;
+            }
+            "serve.sjf_aging_ms" => cfg.serve.sjf_aging_ms = us()? as u64,
+            "serve.deadline_ms" => cfg.serve.deadline_ms = us()? as u64,
             "strategies.sd" => cfg.strategies.sd = b()?,
             "strategies.pc" => cfg.strategies.pc = b()?,
             "strategies.pd" => cfg.strategies.pd = b()?,
@@ -221,6 +228,22 @@ mod tests {
         );
         let m = parse("[serve]\nmax_sessions = 0\n").unwrap();
         assert!(build(&m).unwrap_err().contains("serve.max_sessions"));
+    }
+
+    #[test]
+    fn serve_lifecycle_keys_overlay() {
+        let m = parse(
+            "[serve]\npolicy = \"sjf\"\nsjf_aging_ms = 250\ndeadline_ms = 4000\n",
+        )
+        .unwrap();
+        let cfg = build(&m).unwrap();
+        assert_eq!(cfg.serve.policy, crate::config::AdmitPolicy::Sjf);
+        assert_eq!(cfg.serve.sjf_aging_ms, 250);
+        assert_eq!(cfg.serve.deadline_ms, 4000);
+        let m = parse("[serve]\npolicy = \"lifo\"\n").unwrap();
+        assert!(build(&m).unwrap_err().contains("serve.policy"));
+        let m = parse("[serve]\npolicy = 3\n").unwrap();
+        assert!(build(&m).unwrap_err().contains("string"));
     }
 
     #[test]

@@ -215,13 +215,13 @@ impl FleetSim {
                             // prompt into fixed-size chunks processed over
                             // multiple steps.
                             for piece in chunk_sizes(tokens, sc) {
-                                batcher.push(Job { req: r, kind, tokens: piece, tag: 0 });
+                                batcher.push(Job { req: r, kind, tokens: piece, epoch: 0 });
                             }
                             // chunks bookkeeping: treat server pieces as
                             // the chunk count for completion tracking.
                             reqs[r].chunks = chunk_sizes(tokens, sc);
                         }
-                        _ => batcher.push(Job { req: r, kind, tokens, tag: 0 }),
+                        _ => batcher.push(Job { req: r, kind, tokens, epoch: 0 }),
                     }
                     if !try_scheduled {
                         try_scheduled = true;

@@ -223,6 +223,31 @@ pub struct ServeStats {
     /// groups and the server is quietly running at serial throughput —
     /// `fallbacks` in the STATS reply.
     pub fallbacks: u64,
+    /// Requests cancelled mid-flight (client disconnect noticed by the
+    /// connection thread, or an explicit `CANCEL`) — waiting or live,
+    /// torn down without a result.
+    pub cancelled: u64,
+    /// Requests that failed with an `ERR` reply: scheduler job-runner
+    /// failures, failed session construction at admission, and
+    /// submit-time validation rejections.  Without this, `finished`
+    /// alone cannot reconcile submissions against
+    /// `finished + queued + live`.
+    pub failed: u64,
+    /// Requests reaped without a reply because their client was already
+    /// gone: waiting-queue entries whose reply channel died before they
+    /// took a slot, plus everything torn down when the worker's command
+    /// channel disconnects (no connections left).
+    pub reaped: u64,
+    /// Requests cancelled because their wall-clock deadline
+    /// (`serve.deadline_ms`, measured from arrival) passed — the client
+    /// got `ERR deadline`.
+    pub deadline_expired: u64,
+    /// Stale batcher jobs dropped by the slot-epoch identity check: the
+    /// job's admission epoch disagreed with the slot's current occupant
+    /// (the slot was freed by a cancel/expiry and re-admitted before the
+    /// job was popped).  Job-level, not request-level, so it is not part
+    /// of the request reconciliation and stays off the STATS wire line.
+    pub stale_dropped: u64,
 }
 
 impl ServeStats {
@@ -260,7 +285,8 @@ impl ServeStats {
     pub fn stats_fields(&self) -> String {
         format!(
             "requests={} iterations={} queue_wait_ms={:.1} ttft_ms={:.1} tbt_ms={:.1} \
-             rounds={} accept={:.3} chunk_mean={:.1} batch_mean={:.2} fallbacks={}",
+             rounds={} accept={:.3} chunk_mean={:.1} batch_mean={:.2} fallbacks={} \
+             cancelled={} failed={} reaped={} deadline_expired={}",
             self.finished,
             self.iterations,
             self.queue_wait_ms.mean(),
@@ -270,7 +296,11 @@ impl ServeStats {
             self.accept_rate(),
             self.chunk_sizes.mean(),
             self.batch_occupancy.mean(),
-            self.fallbacks
+            self.fallbacks,
+            self.cancelled,
+            self.failed,
+            self.reaped,
+            self.deadline_expired,
         )
     }
 }
@@ -397,6 +427,10 @@ mod tests {
         assert_eq!(s.tbt_ms.count(), 1, "1-token requests have no TBT");
         assert!((s.accept_rate() - 6.0 / 15.0).abs() < 1e-12);
         s.batch_occupancy.push(3.0);
+        s.cancelled = 2;
+        s.failed = 1;
+        s.reaped = 3;
+        s.deadline_expired = 4;
         let f = s.stats_fields();
         for key in [
             "requests=2",
@@ -405,6 +439,10 @@ mod tests {
             "queue_wait_ms=3.0",
             "batch_mean=3.00",
             "fallbacks=0",
+            "cancelled=2",
+            "failed=1",
+            "reaped=3",
+            "deadline_expired=4",
         ] {
             assert!(f.contains(key), "missing {key} in {f}");
         }

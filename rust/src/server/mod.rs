@@ -7,11 +7,16 @@
 //! ```text
 //! C: GENERATE <max_new_tokens> <tok> <tok> ...\n
 //! S: OK <tok> <tok> ... | rounds=<n> accept=<rate>\n
+//! C: CANCEL\n            (only meaningful while a GENERATE is in flight)
+//! S: -                   (no reply of its own: the pending GENERATE
+//!                         replies `ERR cancelled`; a CANCEL with nothing
+//!                         in flight replies `ERR nothing in flight`)
 //! C: STATS\n
 //! S: OK executions=<n> exec_ms=<t> compiles=<n> compile_ms=<t>
 //!       requests=<n> iterations=<n> queue_wait_ms=<t> ttft_ms=<t>
 //!       tbt_ms=<t> rounds=<n> accept=<rate> chunk_mean=<x>
-//!       batch_mean=<x> fallbacks=<n> g_learned=<0|1>
+//!       batch_mean=<x> fallbacks=<n> cancelled=<n> failed=<n>
+//!       reaped=<n> deadline_expired=<n> g_learned=<0|1>
 //!       queued=<n> live=<n> decode_q=<n> prefill_q=<n>\n
 //!                                                 (one line on the wire)
 //! C: QUIT\n
@@ -24,14 +29,21 @@
 //! counters followed by the scheduler aggregates: finished request count,
 //! scheduler iterations, mean queue wait / TTFT / TBT (wall-clock ms),
 //! total SD rounds, the aggregate acceptance rate, the mean Eq. 3 chunk
-//! size, `batch_mean` — the mean session count per batched engine-call
-//! group the scheduler issued (1.0 means nothing batched, higher means
-//! verify rounds / prefill chunks of concurrent sessions actually
-//! executed as one `run_batch` call) — `fallbacks` — batched cloud calls
-//! that failed and degraded to per-lane serial execution — `g_learned` —
-//! 1 when the Eq. 3 optimizer is driven by the learned state-monitor
-//! delay curve, 0 while it still falls back to the static `GModel`
-//! calibration — and the current queue depth / live session count.
+//! size (of *executed* chunks, post-clamp), `batch_mean` — the mean
+//! session count per batched engine-call group the scheduler issued (1.0
+//! means nothing batched, higher means verify rounds / prefill chunks of
+//! concurrent sessions actually executed as one `run_batch` call) —
+//! `fallbacks` — batched cloud calls that failed and degraded to
+//! per-lane serial execution — the session-lifecycle counters —
+//! `cancelled` (client disconnects noticed mid-generation plus explicit
+//! CANCELs), `failed` (`ERR` replies from the job runners and
+//! submit-time rejections), `reaped` (requests dropped without a reply
+//! because their client was
+//! already gone), `deadline_expired` (`serve.deadline_ms` cancellations)
+//! — `g_learned` — 1 when the Eq. 3 optimizer is driven by the learned
+//! state-monitor delay curve, 0 while it still falls back to the static
+//! `GModel` calibration — and the current queue depth / live session
+//! count.
 //!
 //! Concurrency model: the engine is not thread-safe (one backend client),
 //! so a single worker thread owns it and connections are multiplexed
@@ -42,25 +54,36 @@
 //! admitted under a `--prefill-budget` token budget per iteration and
 //! chunk sizes from the Eq. 3 optimizer.  Greedy-decoding losslessness
 //! makes the interleaving invisible in each connection's output.
+//!
+//! Session lifecycle: while a GENERATE is in flight its connection thread
+//! keeps watching the socket ([`handle_conn`]'s reply wait).  A client
+//! that disconnects mid-generation — or pipelines a `CANCEL` line — has
+//! its request cancelled at the scheduler's next iteration boundary: the
+//! slot is freed and the session's KV dropped instead of the old
+//! behaviour of running the abandoned generation to completion into a
+//! dead channel while live clients queued for the slot.
 
 pub mod scheduler;
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::cli::Flags;
-use crate::config::{ServeConfig, SpecDecConfig};
+use crate::config::{AdmitPolicy, ServeConfig, SpecDecConfig};
 use crate::engine::Engine;
 use crate::specdec::{chunk_sizes, Session};
 
-use scheduler::{Request, Scheduler};
+use scheduler::{ReplyHandle, Request, Scheduler};
 
 /// A parsed request.
 #[derive(Debug, PartialEq)]
 pub enum Command {
     Generate { max_new: usize, prompt: Vec<u32> },
+    Cancel,
     Stats,
     Quit,
 }
@@ -97,6 +120,7 @@ pub fn parse_line(line: &str, max_new_cap: usize) -> Result<Command, String> {
             validate_request(&prompt, max_new, max_new_cap)?;
             Ok(Command::Generate { max_new, prompt })
         }
+        Some("CANCEL") => Ok(Command::Cancel),
         Some("STATS") => Ok(Command::Stats),
         Some("QUIT") => Ok(Command::Quit),
         Some(other) => Err(format!("unknown command {other}")),
@@ -177,15 +201,27 @@ pub fn generate(
 }
 
 enum WorkerMsg {
-    Gen { max_new: usize, prompt: Vec<u32>, reply: mpsc::Sender<String> },
+    Gen(Request),
+    /// Cancel the GENERATE with this [`Request::id`]: the connection
+    /// thread observed its client disconnect mid-generation, or the
+    /// client sent an explicit `CANCEL`.
+    Cancel { id: u64 },
     Stats { reply: mpsc::Sender<String> },
 }
 
 /// The engine-owning worker: a continuous-batching scheduler loop.  New
 /// commands are drained between iterations (blocking only when fully
-/// idle); GENERATE replies are sent by the scheduler when each request
-/// finishes, so concurrent connections interleave at chunk/round
-/// granularity instead of head-of-line blocking.
+/// idle), so cancels land at iteration boundaries; GENERATE replies are
+/// sent by the scheduler when each request finishes, so concurrent
+/// connections interleave at chunk/round granularity instead of
+/// head-of-line blocking.
+///
+/// Exit: when the command channel disconnects, the listener and every
+/// connection thread (each held a `Sender` clone) are gone, so every
+/// in-flight reply channel is provably dead — the worker reaps the
+/// remaining work and returns promptly instead of the old drain that ran
+/// abandoned generations to completion and only then noticed via a
+/// `recv()` error (spinning a `try_recv` per iteration on the way).
 fn worker_loop(
     engine: Engine,
     spec_cfg: SpecDecConfig,
@@ -193,26 +229,33 @@ fn worker_loop(
     rx: mpsc::Receiver<WorkerMsg>,
 ) {
     let mut sched = Scheduler::new(&engine, spec_cfg, serve_cfg);
+    let mut connected = true;
     loop {
         loop {
+            // `connected` is always true here: both setters below yield
+            // None, breaking this loop into the reap-and-return exit.
             let msg = if sched.has_work() {
                 match rx.try_recv() {
                     Ok(m) => Some(m),
                     Err(mpsc::TryRecvError::Empty) => None,
-                    // Connections are gone but admitted work remains:
-                    // finish it (replies go nowhere) and exit via the
-                    // idle recv() error below.
-                    Err(mpsc::TryRecvError::Disconnected) => None,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        connected = false;
+                        None
+                    }
                 }
             } else {
                 match rx.recv() {
                     Ok(m) => Some(m),
-                    Err(_) => return,
+                    Err(_) => {
+                        connected = false;
+                        None
+                    }
                 }
             };
             match msg {
-                Some(WorkerMsg::Gen { max_new, prompt, reply }) => {
-                    sched.submit(Request { prompt, max_new, reply, enqueued: Instant::now() });
+                Some(WorkerMsg::Gen(req)) => sched.submit(req),
+                Some(WorkerMsg::Cancel { id }) => {
+                    sched.cancel(id);
                 }
                 Some(WorkerMsg::Stats { reply }) => {
                     let s = engine.reg.stats();
@@ -233,8 +276,98 @@ fn worker_loop(
                 None => break,
             }
         }
+        if !connected {
+            sched.reap_all();
+            return;
+        }
         sched.step();
     }
+}
+
+/// Monotonic GENERATE identity for targeted cancellation — the
+/// connection thread needs the id before the worker ever sees the
+/// request, so it cannot be scheduler-assigned.
+static NEXT_REQ_ID: AtomicU64 = AtomicU64::new(1);
+
+/// How often a connection's reply wait polls its socket for
+/// disconnect / pipelined CANCEL.
+const REPLY_POLL: Duration = Duration::from_millis(10);
+
+/// Wait for an in-flight generation's reply while watching the
+/// connection.  A client that disconnects mid-generation (reader EOF or
+/// error) is the whole point of this loop: its reply handle is marked
+/// dead and a cancel forwarded to the worker, so the scheduler frees the
+/// slot instead of running the abandoned generation to completion.  A
+/// pipelined `CANCEL` line is the explicit form of the same thing (the
+/// pending GENERATE then replies `ERR cancelled`); other pipelined lines
+/// are queued for the main loop.  Returns false when the client is gone.
+#[allow(clippy::too_many_arguments)]
+fn await_reply(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    pending: &mut VecDeque<String>,
+    partial: &mut String,
+    rrx: &mpsc::Receiver<String>,
+    reply: &ReplyHandle,
+    tx: &mpsc::Sender<WorkerMsg>,
+    id: u64,
+) -> std::io::Result<bool> {
+    // The *socket* read is the blocking poll (bounded by REPLY_POLL) and
+    // the reply check is non-blocking: an already-closed connection or an
+    // already-pipelined CANCEL is then acted on immediately on entry,
+    // before the generation can make progress — not after a reply-wait
+    // timeout it might win.  `partial` is the caller's buffer: a command
+    // prefix read here but not yet newline-terminated when the reply
+    // arrives must survive into the main loop's next read, not be
+    // dropped.
+    stream.set_read_timeout(Some(REPLY_POLL))?;
+    let alive = loop {
+        match rrx.try_recv() {
+            Ok(result) => {
+                writeln!(stream, "{result}")?;
+                break true;
+            }
+            Err(mpsc::TryRecvError::Disconnected) => {
+                writeln!(stream, "ERR worker gone")?;
+                break true;
+            }
+            Err(mpsc::TryRecvError::Empty) => {}
+        }
+        // Poll the socket.  On timeout, bytes read so far stay appended
+        // to `partial` (the protocol is ASCII, so no partial-UTF-8 loss)
+        // and the next poll continues the line.
+        match reader.read_line(partial) {
+            Ok(0) => {
+                reply.mark_dead();
+                let _ = tx.send(WorkerMsg::Cancel { id });
+                break false;
+            }
+            Ok(_) => {
+                if partial.ends_with('\n') {
+                    let line = std::mem::take(partial);
+                    if line.trim() == "CANCEL" {
+                        let _ = tx.send(WorkerMsg::Cancel { id });
+                    } else {
+                        pending.push_back(line);
+                    }
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(_) => {
+                reply.mark_dead();
+                let _ = tx.send(WorkerMsg::Cancel { id });
+                break false;
+            }
+        }
+    };
+    stream.set_read_timeout(None)?;
+    Ok(alive)
 }
 
 fn handle_conn(
@@ -244,13 +377,24 @@ fn handle_conn(
 ) -> std::io::Result<()> {
     let peer = stream.peer_addr()?;
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
+    // Lines the client pipelined while a generation was in flight, and
+    // the prefix of a line whose tail had not arrived when the last
+    // reply wait ended.
+    let mut pending: VecDeque<String> = VecDeque::new();
+    let mut partial = String::new();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(());
-        }
-        let cmd = match parse_line(line.trim(), max_new_cap) {
+        let next = match pending.pop_front() {
+            Some(l) => l,
+            None => {
+                // Blocking read; continues any partial line left over
+                // from a reply wait instead of dropping those bytes.
+                if reader.read_line(&mut partial)? == 0 {
+                    return Ok(());
+                }
+                std::mem::take(&mut partial)
+            }
+        };
+        let cmd = match parse_line(next.trim(), max_new_cap) {
             Ok(c) => c,
             Err(e) => {
                 writeln!(stream, "ERR {e}")?;
@@ -262,15 +406,40 @@ fn handle_conn(
                 writeln!(stream, "OK bye")?;
                 return Ok(());
             }
+            Command::Cancel => {
+                // Reached only with no generation in flight (in-flight
+                // CANCELs are consumed by await_reply).
+                writeln!(stream, "ERR nothing in flight")?;
+            }
             Command::Stats => {
                 let (rtx, rrx) = mpsc::channel();
                 let _ = tx.send(WorkerMsg::Stats { reply: rtx });
                 writeln!(stream, "{}", rrx.recv().unwrap_or_else(|_| "ERR worker gone".into()))?;
             }
             Command::Generate { max_new, prompt } => {
+                let id = NEXT_REQ_ID.fetch_add(1, Ordering::Relaxed);
                 let (rtx, rrx) = mpsc::channel();
-                let _ = tx.send(WorkerMsg::Gen { max_new, prompt, reply: rtx });
-                writeln!(stream, "{}", rrx.recv().unwrap_or_else(|_| "ERR worker gone".into()))?;
+                let reply = ReplyHandle::new(rtx);
+                let _ = tx.send(WorkerMsg::Gen(Request {
+                    id,
+                    prompt,
+                    max_new,
+                    reply: reply.clone(),
+                    enqueued: Instant::now(),
+                }));
+                let alive = await_reply(
+                    &mut stream,
+                    &mut reader,
+                    &mut pending,
+                    &mut partial,
+                    &rrx,
+                    &reply,
+                    tx,
+                    id,
+                )?;
+                if !alive {
+                    return Ok(()); // client disconnected mid-generation
+                }
             }
         }
         let _ = peer; // keep for logging hooks
@@ -330,13 +499,14 @@ pub fn serve_listener(
 }
 
 /// `hat serve --addr 127.0.0.1:7071 [--config FILE] [--max-sessions N]
-/// [--prefill-budget T] [--max-conns N]`
+/// [--prefill-budget T] [--policy fifo|sjf] [--deadline-ms T]
+/// [--max-conns N]`
 ///
 /// `--config` reuses the experiment-config format: its `[specdec]` section
 /// (eta, max_draft, top_k, max_new_tokens) and `[serve]` section
 /// (max_sessions, prefill_budget, min_chunk, max_chunk, alpha,
-/// pipeline_len) govern serving; `--max-sessions` / `--prefill-budget`
-/// override the file.
+/// pipeline_len, policy, sjf_aging_ms, deadline_ms) govern serving; the
+/// flags override the file.
 pub fn cmd_serve(f: &Flags) -> Result<(), String> {
     let addr = f.get("addr").unwrap_or("127.0.0.1:7071").to_string();
     let (spec_cfg, mut serve_cfg) = match f.get("config") {
@@ -357,6 +527,13 @@ pub fn cmd_serve(f: &Flags) -> Result<(), String> {
             return Err("--prefill-budget must be > 0".into());
         }
         serve_cfg.prefill_budget = t;
+    }
+    if let Some(p) = f.get("policy") {
+        serve_cfg.policy =
+            AdmitPolicy::parse(p).ok_or(format!("--policy: unknown policy {p:?} (fifo|sjf)"))?;
+    }
+    if let Some(t) = f.get_usize("deadline-ms")? {
+        serve_cfg.deadline_ms = t as u64;
     }
     let max_conns = f.get_usize("max-conns")?.unwrap_or(usize::MAX);
 
@@ -381,9 +558,10 @@ mod tests {
     }
 
     #[test]
-    fn parses_stats_and_quit() {
+    fn parses_stats_quit_and_cancel() {
         assert_eq!(parse_line("STATS", CAP).unwrap(), Command::Stats);
         assert_eq!(parse_line("QUIT", CAP).unwrap(), Command::Quit);
+        assert_eq!(parse_line("CANCEL", CAP).unwrap(), Command::Cancel);
     }
 
     #[test]
@@ -424,9 +602,10 @@ mod tests {
             Scheduler::new(&engine, SpecDecConfig::default(), ServeConfig::default());
         let (tx, rx) = mpsc::channel();
         sched.submit(Request {
+            id: 1,
             prompt: vec![1],
             max_new: 600,
-            reply: tx,
+            reply: ReplyHandle::new(tx),
             enqueued: Instant::now(),
         });
         assert_eq!(rx.recv().unwrap(), format!("ERR {parse_err}"));
@@ -435,13 +614,48 @@ mod tests {
         assert_eq!(parse_err, "empty prompt");
         let (tx, rx) = mpsc::channel();
         sched.submit(Request {
+            id: 2,
             prompt: vec![],
             max_new: 4,
-            reply: tx,
+            reply: ReplyHandle::new(tx),
             enqueued: Instant::now(),
         });
         assert_eq!(rx.recv().unwrap(), format!("ERR {parse_err}"));
         assert!(!sched.has_work(), "rejected requests must not occupy the queue");
+    }
+
+    #[test]
+    fn worker_exits_promptly_after_last_connection_closes() {
+        // Regression for the worker's shutdown path: with the command
+        // channel disconnected, the old loop finished all admitted work
+        // first (spinning a try_recv per iteration) and only exited via a
+        // recv() error once idle — an abandoned long generation kept the
+        // thread alive arbitrarily.  Every reply channel is provably dead
+        // at that point, so the worker must reap and return promptly.
+        let (tx, rx) = mpsc::channel();
+        let (done_tx, done_rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            // The engine's backend client is !Send: build it in the
+            // owning thread, exactly like serve_listener does.
+            let engine = Engine::synthetic();
+            worker_loop(engine, SpecDecConfig::default(), ServeConfig::default(), rx);
+            let _ = done_tx.send(());
+        });
+        // A long generation whose client vanishes immediately.
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(WorkerMsg::Gen(Request {
+            id: 1,
+            prompt: (0u32..64).map(|i| (i * 7 + 3) % 256).collect(),
+            max_new: 200,
+            reply: ReplyHandle::new(rtx),
+            enqueued: Instant::now(),
+        }))
+        .unwrap();
+        drop(rrx);
+        drop(tx);
+        done_rx
+            .recv_timeout(Duration::from_secs(20))
+            .expect("worker did not exit after the last connection closed");
     }
 
     #[test]

@@ -25,14 +25,28 @@
 //! static [`GModel`](crate::config::GModel) until observations arrive)
 //! and the Eq. 1 moving average μ^t of observed batch sizes — not a
 //! hard-coded constant.
+//!
+//! Session lifecycle: a request can leave the scheduler five ways —
+//! finished (`OK …`), failed mid-flight (`ERR <cause>`), cancelled
+//! (client disconnect noticed by its connection thread, or an explicit
+//! `CANCEL` verb → `ERR cancelled`), deadline-expired
+//! (`serve.deadline_ms` → `ERR deadline`), or reaped without a reply
+//! (the client was already gone).  Teardown is always at an iteration
+//! boundary: the slot is freed, the session (KV) dropped, and any still-
+//! queued [`Batcher`] job for the slot is left to die on the slot-epoch
+//! identity check — every admission gets a fresh epoch, every job is
+//! stamped with its session's epoch, and the job runners drop jobs whose
+//! epoch disagrees with the slot's current occupant, so a stale job can
+//! never drive a session admitted after it was queued.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::cloud::state_monitor::StateMonitor;
 use crate::cloud::{optimal_chunk, Batcher, Job, JobKind};
-use crate::config::{ServeConfig, SpecDecConfig};
+use crate::config::{AdmitPolicy, ServeConfig, SpecDecConfig};
 use crate::engine::Engine;
 use crate::metrics::ServeStats;
 use crate::model::{CloudStream, TokenId};
@@ -40,26 +54,76 @@ use crate::specdec::Session;
 
 use super::Generation;
 
+/// Reply channel for one request, with an observable liveness flag.
+///
+/// `std::sync::mpsc` offers no way to ask whether a receiver is still
+/// alive without sending into it, so the connection thread that owns the
+/// receiver marks its handle dead when it observes the client disconnect
+/// (reader EOF in [`super::handle_conn`]'s reply wait) — that is what
+/// lets [`Scheduler::admit`] prune queued work for dead clients *before*
+/// it ever takes a slot.  A failed send records deadness too, covering
+/// receivers dropped without a mark.
+#[derive(Clone)]
+pub struct ReplyHandle {
+    tx: mpsc::Sender<String>,
+    dead: Arc<AtomicBool>,
+}
+
+impl ReplyHandle {
+    pub fn new(tx: mpsc::Sender<String>) -> ReplyHandle {
+        ReplyHandle { tx, dead: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// Send a reply line; a failed send (receiver gone) marks the handle
+    /// dead so later liveness checks prune without retrying.
+    pub fn send(&self, line: String) {
+        if self.tx.send(line).is_err() {
+            self.dead.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Has the client been observed gone?
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Relaxed)
+    }
+
+    /// Mark the client gone (connection thread saw EOF/error, or a test
+    /// simulating a disconnect).
+    pub fn mark_dead(&self) {
+        self.dead.store(true, Ordering::Relaxed);
+    }
+}
+
 /// One GENERATE request submitted to the scheduler.
 pub struct Request {
+    /// Caller-assigned identity for targeted cancellation
+    /// ([`Scheduler::cancel`]).  The TCP front-end draws these from one
+    /// server-wide counter; ids must be unique among in-flight requests.
+    pub id: u64,
     pub prompt: Vec<TokenId>,
     pub max_new: usize,
     /// Where the protocol reply line is sent when the request finishes
-    /// (or fails).
-    pub reply: mpsc::Sender<String>,
-    /// Arrival time (queue-wait and TTFT are measured from here).
+    /// (or fails / is cancelled).
+    pub reply: ReplyHandle,
+    /// Arrival time (queue-wait, TTFT and the deadline are measured from
+    /// here).
     pub enqueued: Instant,
 }
 
 /// A request occupying a scheduler slot, with its live session.
 struct Active<'e> {
+    id: u64,
+    /// Admission epoch stamped into this session's batcher jobs: slot
+    /// indices are reused, so a popped job is only valid for the slot's
+    /// occupant if the epochs agree.
+    epoch: u64,
     sess: Session<'e>,
     max_new: usize,
     out: Vec<TokenId>,
     rounds: usize,
     proposed: usize,
     accepted: usize,
-    reply: mpsc::Sender<String>,
+    reply: ReplyHandle,
     enqueued: Instant,
     admitted: Instant,
     first_token: Option<Instant>,
@@ -79,7 +143,7 @@ impl<'e, P> Staged<'e, P> {
     fn stream(&mut self) -> &mut CloudStream {
         &mut self.a.sess.cloud
     }
-    fn reply(&self) -> &mpsc::Sender<String> {
+    fn reply(&self) -> &ReplyHandle {
         &self.a.reply
     }
 }
@@ -100,6 +164,9 @@ pub struct Scheduler<'e> {
     slots: Vec<Option<Active<'e>>>,
     /// Admission queue beyond `max_sessions`.
     waiting: VecDeque<Request>,
+    /// Monotonic admission counter: every session admitted into a slot
+    /// gets the next epoch, stamped into its jobs (slot-reuse identity).
+    next_epoch: u64,
     /// State monitor (§3.2): μ^t (Eq. 1) over executed batch token sizes
     /// and the learned delay curve g^t(·) (Eq. 2) over observed iteration
     /// wall times, feeding the Eq. 3 chunk optimizer.
@@ -156,6 +223,7 @@ impl<'e> Scheduler<'e> {
             batcher: Batcher::new(),
             slots,
             waiting: VecDeque::new(),
+            next_epoch: 1,
             monitor,
             stats: ServeStats::new(),
         }
@@ -169,17 +237,63 @@ impl<'e> Scheduler<'e> {
         if let Err(e) =
             super::validate_request(&req.prompt, req.max_new, self.spec_cfg.max_new_tokens)
         {
-            let _ = req.reply.send(format!("ERR {e}"));
+            self.fail(&req.reply, e);
             return;
         }
         let max_ctx = self.engine.spec().max_seq;
         if req.prompt.len() + req.max_new + self.spec_cfg.max_draft + 2 > max_ctx {
-            let _ = req
-                .reply
-                .send(format!("ERR prompt+generation exceeds model max_seq {max_ctx}"));
+            self.fail(&req.reply, format!("prompt+generation exceeds model max_seq {max_ctx}"));
             return;
         }
         self.waiting.push_back(req);
+    }
+
+    /// Cancel a request by id.  A waiting request is removed from the
+    /// queue; a live one is torn down — slot freed, session (KV cache)
+    /// dropped, any staged mid-round state aborted.  Its queued batcher
+    /// job is deliberately *not* swept here: cancellation is the churn
+    /// hot path, so teardown stays O(sessions), and the job — now
+    /// carrying a dead admission's epoch — is dropped the moment a job
+    /// runner pops it ([`Scheduler::take_for_job`]).  Either way the
+    /// reply channel gets `ERR cancelled` — a no-op when the client is
+    /// already gone.  Returns false when the id is unknown, i.e. the
+    /// request already finished (the race is benign: cancelling a
+    /// finished request does nothing).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(i) = self.waiting.iter().position(|r| r.id == id) {
+            let r = self.waiting.remove(i).expect("position came from this queue");
+            r.reply.send("ERR cancelled".into());
+            self.stats.cancelled += 1;
+            return true;
+        }
+        for slot in self.slots.iter_mut() {
+            if slot.as_ref().is_some_and(|a| a.id == id) {
+                let mut a = slot.take().expect("checked occupied");
+                a.sess.abort_staged();
+                a.reply.send("ERR cancelled".into());
+                self.stats.cancelled += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Tear down every waiting and live request without sending replies.
+    /// The worker calls this when its command channel disconnects: every
+    /// connection thread held a `Sender` clone, so none are left and
+    /// every reply channel is provably dead — finishing the remaining
+    /// work would only burn compute into dead channels.  Counted as
+    /// `reaped`.
+    pub fn reap_all(&mut self) {
+        self.stats.reaped += self.waiting.len() as u64;
+        self.waiting.clear();
+        for i in 0..self.slots.len() {
+            if let Some(mut a) = self.slots[i].take() {
+                a.sess.abort_staged();
+                self.batcher.remove_session(i);
+                self.stats.reaped += 1;
+            }
+        }
     }
 
     /// Anything queued or live?
@@ -210,6 +324,7 @@ impl<'e> Scheduler<'e> {
     /// and on at least the head prefill chunk, so no admitted request can
     /// starve.
     pub fn step(&mut self) -> usize {
+        self.expire_deadlines();
         self.admit();
         let batch = self.batcher.form_batch(self.cfg.prefill_budget);
         if batch.is_empty() {
@@ -235,23 +350,89 @@ impl<'e> Scheduler<'e> {
         n
     }
 
+    /// Cancel live sessions whose wall-clock deadline (measured from
+    /// arrival) has passed: `ERR deadline` reply, slot freed, queued
+    /// jobs removed.  Waiting requests are expired in [`Scheduler::admit`]
+    /// before they can take a slot.
+    fn expire_deadlines(&mut self) {
+        if self.cfg.deadline_ms == 0 {
+            return;
+        }
+        for i in 0..self.slots.len() {
+            let expired = self.slots[i]
+                .as_ref()
+                .is_some_and(|a| a.enqueued.elapsed().as_millis() as u64 >= self.cfg.deadline_ms);
+            if expired {
+                let mut a = self.slots[i].take().expect("checked occupied");
+                a.sess.abort_staged();
+                self.batcher.remove_session(i);
+                a.reply.send("ERR deadline".into());
+                self.stats.deadline_expired += 1;
+            }
+        }
+    }
+
+    /// Pick the next waiting request under the configured admission
+    /// policy.  FIFO pops the oldest; SJF picks the shortest prompt,
+    /// bounded by aging — once the *oldest* waiter has waited
+    /// `sjf_aging_ms`, it goes first regardless of length.
+    fn next_admission(&mut self) -> Option<Request> {
+        match self.cfg.policy {
+            AdmitPolicy::Fifo => self.waiting.pop_front(),
+            AdmitPolicy::Sjf => {
+                let aged = self.waiting.front().is_some_and(|r| {
+                    r.enqueued.elapsed().as_millis() as u64 >= self.cfg.sjf_aging_ms
+                });
+                if aged {
+                    return self.waiting.pop_front();
+                }
+                let i = (0..self.waiting.len()).min_by_key(|&i| self.waiting[i].prompt.len())?;
+                self.waiting.remove(i)
+            }
+        }
+    }
+
     /// Move waiting requests into free slots and queue their first
-    /// prefill chunk.
+    /// prefill chunk.  Before anything takes a slot, the queue is swept:
+    /// entries whose reply channel is already dead are reaped silently
+    /// (their client disconnected while they waited), and entries past
+    /// the deadline are expired — a dead or doomed request must never
+    /// cost a slot or a token of cloud compute.
     fn admit(&mut self) {
+        let before = self.waiting.len();
+        self.waiting.retain(|r| !r.reply.is_dead());
+        self.stats.reaped += (before - self.waiting.len()) as u64;
+        if self.cfg.deadline_ms > 0 {
+            let deadline = self.cfg.deadline_ms;
+            let mut kept = VecDeque::with_capacity(self.waiting.len());
+            for r in self.waiting.drain(..) {
+                if r.enqueued.elapsed().as_millis() as u64 >= deadline {
+                    r.reply.send("ERR deadline".into());
+                    self.stats.deadline_expired += 1;
+                } else {
+                    kept.push_back(r);
+                }
+            }
+            self.waiting = kept;
+        }
         while !self.waiting.is_empty() {
             let Some(i) = self.slots.iter().position(|s| s.is_none()) else { break };
-            let req = self.waiting.pop_front().expect("checked non-empty");
+            let Some(req) = self.next_admission() else { break };
             match Session::new(self.engine, self.spec_cfg.clone()) {
                 Ok(mut sess) => {
                     sess.prefill_begin(&req.prompt);
+                    let epoch = self.next_epoch;
+                    self.next_epoch += 1;
                     let chunk = self.plan_chunk(sess.prefill_remaining());
                     self.batcher.push(Job {
                         req: i,
                         kind: JobKind::PrefillChunk,
                         tokens: chunk,
-                        tag: 0,
+                        epoch,
                     });
                     self.slots[i] = Some(Active {
+                        id: req.id,
+                        epoch,
                         sess,
                         max_new: req.max_new,
                         out: Vec::new(),
@@ -265,10 +446,20 @@ impl<'e> Scheduler<'e> {
                     });
                 }
                 Err(e) => {
-                    let _ = req.reply.send(format!("ERR {e}"));
+                    self.fail(&req.reply, &e);
                 }
             }
         }
+    }
+
+    /// Send a failure reply and count it (`failed` in STATS) — every
+    /// `ERR` path that isn't a cancel/deadline/reap routes through here,
+    /// submit-time rejections included, so submissions reconcile against
+    /// `finished + failed + cancelled + deadline_expired + reaped +
+    /// queued + live`.
+    fn fail(&mut self, reply: &ReplyHandle, e: impl std::fmt::Display) {
+        reply.send(format!("ERR {e}"));
+        self.stats.failed += 1;
     }
 
     /// Eq. 3 chunk size for a session's next prefill chunk, clamped to the
@@ -284,8 +475,13 @@ impl<'e> Scheduler<'e> {
         } else {
             eq3_chunk(&self.cfg, mu)
         };
+        // Record the *executed* chunk size, after the clamp to the prompt
+        // tokens actually remaining: recording the raw Eq. 3 plan made
+        // STATS `chunk_mean` overstate chunk sizes whenever the prompt
+        // tail was shorter than the plan.
+        let x = x.min(remaining).max(1);
         self.stats.chunk_sizes.push(x as f64);
-        x.min(remaining).max(1)
+        x
     }
 
     /// Whether the Eq. 3 optimizer is currently driven by *learned* delay
@@ -295,12 +491,28 @@ impl<'e> Scheduler<'e> {
         self.cfg.learned_g && self.monitor.g.predict(1.0).is_some()
     }
 
-    /// The next verify-round job for a slot.  Decode `tokens` is
-    /// informational only (the batcher admits every decode job regardless
-    /// and μ^t averages *executed* sizes): one convention, the worst-case
-    /// upload of max_draft proposals plus the bonus row.
-    fn decode_job(&self, req: usize) -> Job {
-        Job { req, kind: JobKind::Decode, tokens: self.spec_cfg.max_draft + 1, tag: 0 }
+    /// The next verify-round job for a slot, stamped with the session's
+    /// admission epoch.  Decode `tokens` is informational only (the
+    /// batcher admits every decode job regardless and μ^t averages
+    /// *executed* sizes): one convention, the worst-case upload of
+    /// max_draft proposals plus the bonus row.
+    fn decode_job(&self, req: usize, epoch: u64) -> Job {
+        Job { req, kind: JobKind::Decode, tokens: self.spec_cfg.max_draft + 1, epoch }
+    }
+
+    /// Take the slot's occupant for a popped job, dropping the job if it
+    /// is stale: the slot is empty (its session finished or failed
+    /// earlier in this batch) or holds a *different* admission (the slot
+    /// was freed by a cancel/expiry and reused) — driving the new
+    /// session with an old job is exactly the slot-reuse hazard the
+    /// epoch stamp closes.
+    fn take_for_job(&mut self, job: &Job) -> Option<Active<'e>> {
+        let live = self.slots[job.req].as_ref().is_some_and(|a| a.epoch == job.epoch);
+        if !live {
+            self.stats.stale_dropped += 1;
+            return None;
+        }
+        self.slots[job.req].take()
     }
 
     /// Execute this iteration's decode/verify jobs.  The device halves
@@ -319,15 +531,15 @@ impl<'e> Scheduler<'e> {
         // decide the bucket it batches under.
         let mut staged: Vec<StagedVerify<'e>> = Vec::new();
         for job in jobs {
-            let Some(mut a) = self.slots[job.req].take() else {
-                continue; // session already finished/failed (stale job)
+            let Some(mut a) = self.take_for_job(&job) else {
+                continue; // stale job (session finished/failed/cancelled)
             };
             let remaining = a.max_new - a.out.len();
             let budget = remaining.saturating_sub(1).max(1);
             match a.sess.verify_begin(true, self.spec_cfg.max_draft, budget) {
                 Ok(rows) => staged.push(StagedVerify { slot: job.req, a, payload: rows }),
                 Err(e) => {
-                    let _ = a.reply.send(format!("ERR {e}"));
+                    self.fail(&a.reply, &e);
                 }
             }
         }
@@ -337,7 +549,7 @@ impl<'e> Scheduler<'e> {
             match self.engine.reg.bucket_for(sv.payload) {
                 Ok(b) => groups.entry(b).or_default().push(sv),
                 Err(e) => {
-                    let _ = sv.a.reply.send(format!("ERR {e}"));
+                    self.fail(&sv.a.reply, &e);
                 }
             }
         }
@@ -372,7 +584,7 @@ impl<'e> Scheduler<'e> {
                         // Retrying a 1-lane batch re-issues the identical
                         // call: fail the lane instead.
                         for (sv, _) in lanes {
-                            let _ = sv.a.reply.send(format!("ERR {e}"));
+                            self.fail(&sv.a.reply, &e);
                         }
                     } else {
                         eprintln!(
@@ -388,7 +600,7 @@ impl<'e> Scheduler<'e> {
                                     self.complete_verify(sv.slot, sv.a, &deep, &l);
                                 }
                                 Err(e) => {
-                                    let _ = sv.a.reply.send(format!("ERR {e}"));
+                                    self.fail(&sv.a.reply, &e);
                                 }
                             }
                         }
@@ -412,13 +624,13 @@ impl<'e> Scheduler<'e> {
                     a.out.truncate(a.max_new);
                     self.finish(a);
                 } else {
-                    let j = self.decode_job(slot);
+                    let j = self.decode_job(slot, a.epoch);
                     self.batcher.push(j);
                     self.slots[slot] = Some(a);
                 }
             }
             Err(e) => {
-                let _ = a.reply.send(format!("ERR {e}"));
+                self.fail(&a.reply, &e);
             }
         }
     }
@@ -434,13 +646,13 @@ impl<'e> Scheduler<'e> {
         // Device half: run each chunk up to the upload boundary.
         let mut staged: Vec<StagedPrefill<'e>> = Vec::new();
         for job in jobs {
-            let Some(mut a) = self.slots[job.req].take() else {
-                continue; // session already finished/failed (stale job)
+            let Some(mut a) = self.take_for_job(&job) else {
+                continue; // stale job (session finished/failed/cancelled)
             };
             match a.sess.prefill_chunk_begin(job.tokens) {
                 Ok(hidden) => staged.push(StagedPrefill { slot: job.req, a, payload: hidden }),
                 Err(e) => {
-                    let _ = a.reply.send(format!("ERR {e}"));
+                    self.fail(&a.reply, &e);
                 }
             }
         }
@@ -450,7 +662,7 @@ impl<'e> Scheduler<'e> {
             match self.engine.reg.bucket_for(sp.payload.len() / h) {
                 Ok(b) => groups.entry(b).or_default().push(sp),
                 Err(e) => {
-                    let _ = sp.a.reply.send(format!("ERR {e}"));
+                    self.fail(&sp.a.reply, &e);
                 }
             }
         }
@@ -508,7 +720,8 @@ impl<'e> Scheduler<'e> {
                 // counting a spurious degradation.
                 if group.len() <= 1 {
                     for item in group {
-                        let _ = item.reply().send(format!("ERR {e}"));
+                        item.reply().send(format!("ERR {e}"));
+                        self.stats.failed += 1;
                     }
                     return Vec::new();
                 }
@@ -532,7 +745,8 @@ impl<'e> Scheduler<'e> {
                             lanes.push((item, deep));
                         }
                         Err(e) => {
-                            let _ = item.reply().send(format!("ERR {e}"));
+                            item.reply().send(format!("ERR {e}"));
+                            self.stats.failed += 1;
                         }
                     }
                 }
@@ -552,7 +766,7 @@ impl<'e> Scheduler<'e> {
                 if a.out.len() >= a.max_new {
                     self.finish(a);
                 } else {
-                    let j = self.decode_job(slot);
+                    let j = self.decode_job(slot, a.epoch);
                     self.batcher.push(j);
                     self.slots[slot] = Some(a);
                 }
@@ -563,12 +777,12 @@ impl<'e> Scheduler<'e> {
                     req: slot,
                     kind: JobKind::PrefillChunk,
                     tokens: chunk,
-                    tag: 0,
+                    epoch: a.epoch,
                 });
                 self.slots[slot] = Some(a);
             }
             Err(e) => {
-                let _ = a.reply.send(format!("ERR {e}"));
+                self.fail(&a.reply, &e);
             }
         }
     }
@@ -592,7 +806,7 @@ impl<'e> Scheduler<'e> {
             proposed: a.proposed,
             accepted: a.accepted,
         };
-        let _ = a.reply.send(gen.reply_line());
+        a.reply.send(gen.reply_line());
     }
 }
 
@@ -600,10 +814,38 @@ impl<'e> Scheduler<'e> {
 mod tests {
     use super::*;
     use crate::server::generate;
+    use std::sync::atomic::AtomicU64;
+
+    static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
     fn req(prompt: Vec<TokenId>, max_new: usize) -> (Request, mpsc::Receiver<String>) {
         let (tx, rx) = mpsc::channel();
-        (Request { prompt, max_new, reply: tx, enqueued: Instant::now() }, rx)
+        (
+            Request {
+                id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+                prompt,
+                max_new,
+                reply: ReplyHandle::new(tx),
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    /// Like [`req`] but every request replies into one shared channel, so
+    /// the receive order *is* the completion order.
+    fn req_shared(
+        tx: &mpsc::Sender<String>,
+        prompt: Vec<TokenId>,
+        max_new: usize,
+    ) -> Request {
+        Request {
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            prompt,
+            max_new,
+            reply: ReplyHandle::new(tx.clone()),
+            enqueued: Instant::now(),
+        }
     }
 
     fn drain(sched: &mut Scheduler<'_>) -> usize {
@@ -813,5 +1055,162 @@ mod tests {
         let (r, rx) = req(vec![], 4);
         sched.submit(r);
         assert!(rx.recv().unwrap().starts_with("ERR "));
+    }
+
+    #[test]
+    fn chunk_stats_record_executed_not_planned_sizes() {
+        // Regression: plan_chunk recorded the Eq. 3 plan *before* the
+        // clamp to the remaining prompt tokens, so `chunk_mean`
+        // overstated executed chunks whenever the prompt tail was shorter
+        // than the plan.  A 3-token prompt under min_chunk = 16 executes
+        // exactly one 3-token chunk; the recorded mean must say 3.
+        let engine = Engine::synthetic();
+        let cfg = ServeConfig { min_chunk: 16, ..ServeConfig::default() };
+        assert!(cfg.min_chunk > 3, "premise: plan cannot go below min_chunk");
+        let mut sched = Scheduler::new(&engine, SpecDecConfig::default(), cfg);
+        let (r, rx) = req(vec![5, 9, 2], 4);
+        sched.submit(r);
+        drain(&mut sched);
+        assert!(rx.recv().unwrap().starts_with("OK "));
+        assert_eq!(sched.stats.chunk_sizes.count(), 1, "one prompt, one chunk");
+        assert!(
+            (sched.stats.chunk_sizes.mean() - 3.0).abs() < 1e-9,
+            "chunk_mean must report the executed (clamped) size, got {}",
+            sched.stats.chunk_sizes.mean()
+        );
+    }
+
+    #[test]
+    fn cancel_frees_slots_and_epoch_drops_the_stale_job() {
+        let engine = Engine::synthetic();
+        let spec = SpecDecConfig::default();
+        let cfg = ServeConfig { max_sessions: 1, ..ServeConfig::default() };
+        let mut sched = Scheduler::new(&engine, spec.clone(), cfg);
+
+        let (a, rx_a) = req((0u32..40).map(|i| (i * 3 + 1) % 256).collect(), 32);
+        let a_id = a.id;
+        let (b, rx_b) = req(vec![1, 2, 3], 4);
+        let b_id = b.id;
+        sched.submit(a);
+        sched.submit(b);
+        assert!(sched.step() > 0, "first iteration admits and prefills");
+        assert_eq!(sched.live_sessions(), 1);
+        assert_eq!(sched.queued(), 1);
+
+        // Cancel the waiting request: removed before it ever takes a slot.
+        assert!(sched.cancel(b_id));
+        assert_eq!(rx_b.try_recv().unwrap(), "ERR cancelled");
+        assert_eq!(sched.queued(), 0);
+
+        // Cancel the live session: the slot frees immediately (KV cache
+        // dropped with the session); its queued batcher job stays behind
+        // carrying the dead epoch.
+        assert!(sched.cancel(a_id));
+        assert_eq!(rx_a.try_recv().unwrap(), "ERR cancelled");
+        assert_eq!(sched.live_sessions(), 0);
+        assert_eq!(sched.stats.cancelled, 2);
+        assert!(!sched.cancel(a_id), "cancelling a gone id is a no-op");
+
+        // A fresh request reuses slot 0; the stale job must be dropped by
+        // the epoch check — not drive the new session — and the stream
+        // must match a serial run exactly.
+        let want = generate(&engine, &[9, 7, 5], 6, &spec).unwrap().reply_line();
+        let (c, rx_c) = req(vec![9, 7, 5], 6);
+        sched.submit(c);
+        drain(&mut sched);
+        assert_eq!(rx_c.recv().unwrap(), want, "stale job corrupted the reused slot");
+        assert!(
+            sched.stats.stale_dropped >= 1,
+            "the cancelled session's queued job was never epoch-dropped"
+        );
+        assert_eq!(sched.stats.finished, 1);
+    }
+
+    #[test]
+    fn deadline_expires_live_and_waiting_requests() {
+        let engine = Engine::synthetic();
+        let cfg = ServeConfig { max_sessions: 1, deadline_ms: 5, ..ServeConfig::default() };
+        let mut sched = Scheduler::new(&engine, SpecDecConfig::default(), cfg);
+
+        // Live expiry: admit, then let the deadline pass between
+        // iterations — the next step boundary tears the session down.
+        let (a, rx_a) = req((0u32..40).map(|i| (i * 3 + 1) % 256).collect(), 64);
+        sched.submit(a);
+        assert!(sched.step() > 0);
+        assert_eq!(sched.live_sessions(), 1);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        sched.step();
+        assert_eq!(rx_a.try_recv().unwrap(), "ERR deadline");
+        assert_eq!(sched.live_sessions(), 0);
+
+        // Waiting expiry: a request whose deadline passes in the queue is
+        // expired before it can take the (free) slot.
+        let (b, rx_b) = req(vec![1, 2, 3], 4);
+        sched.submit(b);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        sched.step();
+        assert_eq!(rx_b.try_recv().unwrap(), "ERR deadline");
+        assert_eq!(sched.stats.deadline_expired, 2);
+        assert!(!sched.has_work());
+    }
+
+    fn completion_token_counts(
+        sched: &mut Scheduler<'_>,
+        rx: &mpsc::Receiver<String>,
+        n: usize,
+    ) -> Vec<usize> {
+        drain(sched);
+        (0..n)
+            .map(|_| {
+                let line = rx.try_recv().expect("missing completion");
+                let body = line.strip_prefix("OK ").expect("request failed");
+                body.split(" | ").next().unwrap().split_whitespace().count()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sjf_admits_shortest_prompt_first_with_aging_bound() {
+        // One slot; three waiting requests with distinct prompt lengths
+        // and distinct max_new (the reply's token count identifies the
+        // request).  Shared reply channel: receive order = finish order.
+        let engine = Engine::synthetic();
+        fn submit_all(sched: &mut Scheduler<'_>, tx: &mpsc::Sender<String>) {
+            sched.submit(req_shared(tx, (0u32..60).map(|i| (i * 3 + 1) % 256).collect(), 3));
+            sched.submit(req_shared(tx, (0u32..30).map(|i| (i * 5 + 2) % 256).collect(), 4));
+            sched.submit(req_shared(tx, vec![7, 3, 200, 41, 5, 9, 2, 14], 5));
+        }
+
+        // Pure SJF (aging bound far away): shortest prompt first.
+        let cfg = ServeConfig {
+            max_sessions: 1,
+            policy: AdmitPolicy::Sjf,
+            sjf_aging_ms: 600_000,
+            ..ServeConfig::default()
+        };
+        let mut sched = Scheduler::new(&engine, SpecDecConfig::default(), cfg);
+        let (tx, rx) = mpsc::channel();
+        submit_all(&mut sched, &tx);
+        assert_eq!(completion_token_counts(&mut sched, &rx, 3), vec![5, 4, 3]);
+
+        // Aging bound 0: every oldest waiter is instantly "aged", so SJF
+        // degenerates to FIFO — the starvation bound in its purest form.
+        let cfg = ServeConfig {
+            max_sessions: 1,
+            policy: AdmitPolicy::Sjf,
+            sjf_aging_ms: 0,
+            ..ServeConfig::default()
+        };
+        let mut sched = Scheduler::new(&engine, SpecDecConfig::default(), cfg);
+        let (tx, rx) = mpsc::channel();
+        submit_all(&mut sched, &tx);
+        assert_eq!(completion_token_counts(&mut sched, &rx, 3), vec![3, 4, 5]);
+
+        // FIFO control: arrival order.
+        let cfg = ServeConfig { max_sessions: 1, ..ServeConfig::default() };
+        let mut sched = Scheduler::new(&engine, SpecDecConfig::default(), cfg);
+        let (tx, rx) = mpsc::channel();
+        submit_all(&mut sched, &tx);
+        assert_eq!(completion_token_counts(&mut sched, &rx, 3), vec![3, 4, 5]);
     }
 }

@@ -568,6 +568,28 @@ impl<'e> Session<'e> {
         })
     }
 
+    /// Tear down any mid-round staged state — an in-flight prefill chunk
+    /// ([`Session::prefill_chunk_begin`] awaiting its finish) or a staged
+    /// verify round ([`Session::verify_begin`] awaiting verification) —
+    /// rolling every KV write head back to the committed prefix.  The
+    /// serve scheduler calls this when a session is cancelled, so the
+    /// teardown is clean no matter where the step machine stopped; the
+    /// session stays re-drivable (the abandoned chunk/round can simply be
+    /// issued afresh) and greedy losslessness keeps the emitted stream
+    /// unchanged.  Returns whether anything was staged.
+    pub fn abort_staged(&mut self) -> bool {
+        let mut any = self.verify.take().is_some();
+        if let Some(st) = self.prefill.as_mut() {
+            any |= st.staged.take().is_some();
+        }
+        if any {
+            self.dev.spos.rollback();
+            self.dev.apos.rollback();
+            self.cloud.pos.rollback();
+        }
+        any
+    }
+
     /// U-shape decode step: one token per device-cloud interaction.
     pub fn ushape_step(&mut self) -> Result<TokenId> {
         let d0 = self.pending.expect("call prefill first");
@@ -776,6 +798,48 @@ mod tests {
         }
         assert_eq!(first_a, first_b);
         assert_eq!(a.ctx, b.ctx);
+    }
+
+    #[test]
+    fn abort_staged_leaves_session_redrivable_and_lossless() {
+        // Cancellation can land with a prefill chunk or a verify round
+        // staged between its device half and its cloud half; abort must
+        // roll the write heads back so the session can be dropped *or*
+        // re-driven — and re-driving must not change the greedy stream.
+        let engine = Engine::synthetic();
+        let cfg = SpecDecConfig::default();
+        let prompt: Vec<TokenId> = (0u32..23).map(|i| (i * 5 + 2) % 256).collect();
+
+        // Reference: the same session driven with no aborts.
+        let mut a = Session::new(&engine, cfg.clone()).unwrap();
+        a.prefill(&prompt, &[prompt.len()]).unwrap();
+        for _ in 0..4 {
+            a.hat_round(true, 4).unwrap();
+        }
+
+        let mut b = Session::new(&engine, cfg).unwrap();
+        assert!(!b.abort_staged(), "nothing staged on a fresh session");
+        b.prefill_begin(&prompt);
+        let _upload = b.prefill_chunk_begin(8).unwrap();
+        assert!(b.abort_staged(), "a staged prefill chunk was live");
+        assert!(!b.abort_staged(), "abort is idempotent");
+        assert_eq!(b.prefill_remaining(), prompt.len(), "aborted chunk not re-owed");
+        while b.prefill_remaining() > 0 {
+            b.prefill_step(8).unwrap();
+        }
+        b.hat_round(true, 4).unwrap();
+        b.verify_begin(true, 4, usize::MAX).unwrap();
+        assert!(b.abort_staged(), "a staged verify round was live");
+        for _ in 0..3 {
+            b.hat_round(true, 4).unwrap();
+        }
+
+        // Both contexts are prefixes of the same greedy stream (round
+        // boundaries may differ: the aborted round's parallel-draft
+        // branch is gone, so b redrafts live).
+        let n = a.ctx.len().min(b.ctx.len());
+        assert!(n > prompt.len() + 4, "sessions made no decode progress");
+        assert_eq!(a.ctx[..n], b.ctx[..n], "abort changed the greedy stream");
     }
 
     #[test]

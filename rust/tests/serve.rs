@@ -5,21 +5,39 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use hat::backend::reference::ReferenceBackend;
 use hat::backend::{ExecBackend, RuntimeStats, Tensor};
 use hat::config::{ServeConfig, SpecDecConfig};
 use hat::engine::Engine;
 use hat::runtime::{ArtifactRegistry, Manifest};
-use hat::server::scheduler::{Request, Scheduler};
+use hat::server::scheduler::{ReplyHandle, Request, Scheduler};
 use hat::server::{generate, serve_listener};
 use hat::util::proptest::{cases, forall};
 use hat::util::rng::Rng;
 
 fn prompt_of(rng: &mut Rng, len: usize, vocab: usize) -> Vec<u32> {
     (0..len).map(|_| rng.below(vocab) as u32).collect()
+}
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A request with a fresh id and its own reply channel.
+fn request(prompt: Vec<u32>, max_new: usize) -> (Request, mpsc::Receiver<String>) {
+    let (tx, rx) = mpsc::channel();
+    (
+        Request {
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            prompt,
+            max_new,
+            reply: ReplyHandle::new(tx),
+            enqueued: Instant::now(),
+        },
+        rx,
+    )
 }
 
 /// N TCP clients with interleaved GENERATEs get byte-identical token
@@ -87,6 +105,10 @@ fn concurrent_tcp_clients_match_serial_runs() {
         "chunk_mean=",
         "batch_mean=",
         "fallbacks=0",
+        "cancelled=0",
+        "failed=0",
+        "reaped=0",
+        "deadline_expired=0",
         "g_learned=1",
         "queued=0",
         "live=0",
@@ -125,13 +147,8 @@ fn batched_execution_is_byte_identical_to_sequential() {
     let mut sched = Scheduler::new(&engine, spec, cfg);
     let mut rxs = Vec::new();
     for (p, m) in &reqs {
-        let (tx, rx) = mpsc::channel();
-        sched.submit(Request {
-            prompt: p.clone(),
-            max_new: *m,
-            reply: tx,
-            enqueued: Instant::now(),
-        });
+        let (r, rx) = request(p.clone(), *m);
+        sched.submit(r);
         rxs.push(rx);
     }
     let mut guard = 0;
@@ -218,13 +235,8 @@ fn scheduler_degrades_to_serial_when_batched_calls_fail() {
     let mut sched = Scheduler::new(&engine, spec, cfg);
     let mut rxs = Vec::new();
     for (p, m) in &reqs {
-        let (tx, rx) = mpsc::channel();
-        sched.submit(Request {
-            prompt: p.clone(),
-            max_new: *m,
-            reply: tx,
-            enqueued: Instant::now(),
-        });
+        let (r, rx) = request(p.clone(), *m);
+        sched.submit(r);
         rxs.push(rx);
     }
     let mut guard = 0;
@@ -267,13 +279,8 @@ fn prop_scheduler_never_starves_a_session() {
             // Worst case: one iteration per 1-token prefill chunk, one per
             // 1-token decode round, plus admission slack.
             job_bound += plen + max_new + 2;
-            let (tx, rx) = mpsc::channel();
-            sched.submit(Request {
-                prompt: prompt_of(rng, plen, vocab),
-                max_new,
-                reply: tx,
-                enqueued: Instant::now(),
-            });
+            let (r, rx) = request(prompt_of(rng, plen, vocab), max_new);
+            sched.submit(r);
             rxs.push((rx, max_new));
         }
         let mut iters = 0usize;
@@ -314,13 +321,8 @@ fn scheduler_runs_are_reproducible() {
         let mut rng = Rng::new(5);
         let mut rxs = Vec::new();
         for i in 0..5usize {
-            let (tx, rx) = mpsc::channel();
-            sched.submit(Request {
-                prompt: prompt_of(&mut rng, 10 + 9 * i, vocab),
-                max_new: 4 + 3 * i,
-                reply: tx,
-                enqueued: Instant::now(),
-            });
+            let (r, rx) = request(prompt_of(&mut rng, 10 + 9 * i, vocab), 4 + 3 * i);
+            sched.submit(r);
             rxs.push(rx);
         }
         let mut guard = 0;
@@ -332,4 +334,267 @@ fn scheduler_runs_are_reproducible() {
         rxs.iter().map(|rx| rx.try_recv().unwrap()).collect::<Vec<String>>()
     };
     assert_eq!(run(), run());
+}
+
+/// Acceptance: a disconnect storm must not deny service to live clients.
+/// With `max_sessions = 2`, two long generations whose clients vanish
+/// mid-flight hold both slots (plus two more abandoned in the waiting
+/// queue); after the disconnects are noticed, the slots are reclaimed —
+/// well before the abandoned generations would have finished — and three
+/// live short requests all complete with streams byte-identical to
+/// serial `generate()`.
+#[test]
+fn disconnect_storm_reclaims_slots_for_live_clients() {
+    let engine = Engine::synthetic();
+    let spec = SpecDecConfig::default();
+    let cfg = ServeConfig { max_sessions: 2, ..ServeConfig::default() };
+    let mut sched = Scheduler::new(&engine, spec.clone(), cfg);
+
+    const DEAD_MAX_NEW: usize = 400;
+    // Two abandoned long generations take both slots.
+    let mut slot_holders = Vec::new();
+    for i in 0..2u32 {
+        let prompt: Vec<u32> = (0u32..60).map(|j| (j * 3 + i + 1) % 256).collect();
+        let (r, rx) = request(prompt, DEAD_MAX_NEW);
+        let (id, reply) = (r.id, r.reply.clone());
+        sched.submit(r);
+        drop(rx); // the client is gone
+        slot_holders.push((id, reply));
+    }
+    assert!(sched.step() > 0);
+    assert_eq!(sched.live_sessions(), 2, "the storm must hold both slots");
+
+    // Two more die while still waiting for a slot.
+    for i in 0..2u32 {
+        let (r, rx) = request(vec![i + 1, 40, 7, 9], DEAD_MAX_NEW);
+        let reply = r.reply.clone();
+        sched.submit(r);
+        drop(rx);
+        reply.mark_dead(); // their conn threads saw EOF before admission
+    }
+
+    // Three live clients queue behind the storm.
+    let live_reqs: Vec<(Vec<u32>, usize)> = vec![
+        (vec![5, 9, 2, 14], 5),
+        (vec![7, 3, 200, 41], 6),
+        (vec![11, 13, 17, 19, 23], 4),
+    ];
+    let expected: Vec<String> = live_reqs
+        .iter()
+        .map(|(p, m)| generate(&engine, p, *m, &spec).unwrap().reply_line())
+        .collect();
+    let mut live_rxs = Vec::new();
+    for (p, m) in &live_reqs {
+        let (r, rx) = request(p.clone(), *m);
+        sched.submit(r);
+        live_rxs.push(rx);
+    }
+
+    // The slot-holders' connection threads notice the disconnects and
+    // forward cancels (what handle_conn's reply wait does).
+    for (id, reply) in &slot_holders {
+        reply.mark_dead();
+        assert!(sched.cancel(*id), "slot holder was live and must cancel");
+    }
+
+    let mut iters = 0usize;
+    while sched.has_work() {
+        assert!(sched.step() > 0, "scheduler idle with pending work");
+        iters += 1;
+        assert!(iters < 10_000, "scheduler failed to drain");
+    }
+
+    for (i, (rx, want)) in live_rxs.iter().zip(&expected).enumerate() {
+        let got = rx.recv().unwrap();
+        assert_eq!(&got, want, "live client {i} diverged under the storm");
+    }
+    assert_eq!(sched.stats.cancelled, 2, "both slot holders cancelled");
+    assert_eq!(sched.stats.reaped, 2, "both dead waiters reaped before admission");
+    assert_eq!(sched.stats.finished, live_reqs.len());
+    // Slot reclamation must beat the abandoned generations: each would
+    // have needed at least DEAD_MAX_NEW / (max_draft + 1) more decode
+    // iterations, so finishing the live work sooner than that proves the
+    // slots were reclaimed rather than waited out.
+    let abandoned_rounds = DEAD_MAX_NEW / (spec.max_draft + 1);
+    assert!(
+        iters < abandoned_rounds,
+        "live work took {iters} iterations — slots were not reclaimed \
+         (one abandoned generation alone needs ≥ {abandoned_rounds})"
+    );
+}
+
+/// Property: randomly interleave submits, cancels, and scheduler steps.
+/// No job may ever drive a session admitted after the job was queued —
+/// the slot-reuse hazard the epoch stamp closes.  The hazard is fully
+/// observable: a stale decode job reaching a fresh prefilling session
+/// panics the step machine, and any cross-session drive corrupts a
+/// stream — so no-panic plus byte-identity of every surviving reply *is*
+/// the assertion.  Cancelled requests must reply `ERR cancelled`, once.
+#[test]
+fn prop_slot_epoch_identity_under_cancellation_churn() {
+    let engine = Engine::synthetic();
+    let spec = SpecDecConfig::default();
+    let vocab = engine.spec().vocab;
+    let mut total_stale = 0u64;
+    forall(cases(10), |rng| {
+        let cfg = ServeConfig {
+            max_sessions: rng.range_usize(1, 3),
+            prefill_budget: rng.range_usize(32, 256),
+            ..ServeConfig::default()
+        };
+        let mut sched = Scheduler::new(&engine, spec.clone(), cfg);
+        // (id, prompt, max_new, rx, cancelled)
+        let mut items: Vec<(u64, Vec<u32>, usize, mpsc::Receiver<String>, bool)> = Vec::new();
+
+        // Deterministic seed of the hazard in every case: the first
+        // request is admitted (fresh scheduler, free slot), stepped so it
+        // has a queued follow-up job, then cancelled while live — the
+        // queued job now carries a dead admission's epoch and must be
+        // dropped when a later batch pops it.
+        let prompt = prompt_of(rng, 30, vocab);
+        let (r0, rx0) = request(prompt.clone(), 16);
+        let id0 = r0.id;
+        sched.submit(r0);
+        sched.step();
+        if sched.live_sessions() != 1 {
+            return Err("seed request was not admitted by the first step".into());
+        }
+        if !sched.cancel(id0) {
+            return Err("live seed request refused cancellation".into());
+        }
+        items.push((id0, prompt, 16, rx0, true));
+
+        for _ in 0..rng.range_usize(3, 8) {
+            let prompt = prompt_of(rng, rng.range_usize(4, 40), vocab);
+            let max_new = rng.range_usize(2, 16);
+            let (r, rx) = request(prompt.clone(), max_new);
+            let id = r.id;
+            sched.submit(r);
+            items.push((id, prompt, max_new, rx, false));
+            for _ in 0..rng.range_usize(0, 3) {
+                sched.step();
+            }
+            if rng.bool(0.5) {
+                let k = rng.below(items.len());
+                let (id, _, _, _, cancelled) = &mut items[k];
+                if !*cancelled && sched.cancel(*id) {
+                    *cancelled = true;
+                }
+            }
+        }
+        let mut guard = 0usize;
+        while sched.has_work() {
+            if sched.step() == 0 {
+                return Err("scheduler idle with admitted work".into());
+            }
+            guard += 1;
+            if guard > 20_000 {
+                return Err("scheduler failed to drain".into());
+            }
+        }
+        total_stale += sched.stats.stale_dropped;
+        for (id, prompt, max_new, rx, cancelled) in &items {
+            let line = rx.try_recv().map_err(|_| format!("request {id} got no reply"))?;
+            if *cancelled {
+                if line != "ERR cancelled" {
+                    return Err(format!("cancelled request {id} replied {line:?}"));
+                }
+                if let Ok(extra) = rx.try_recv() {
+                    return Err(format!("cancelled request {id} got a second reply {extra:?}"));
+                }
+            } else {
+                let want = generate(&engine, prompt, *max_new, &spec)
+                    .map_err(|e| e.to_string())?
+                    .reply_line();
+                if line != want {
+                    return Err(format!(
+                        "surviving request {id} diverged under churn: {line:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+    assert!(
+        total_stale >= 10,
+        "every case seeds one live cancel, so every case must drop at \
+         least one stale job (saw {total_stale} across 10 cases)"
+    );
+}
+
+/// TCP-level disconnect reaping: a client that drops its connection
+/// mid-generation is noticed by its connection thread and the scheduler
+/// cancels the session — observable through the STATS `cancelled`
+/// counter from a second connection.
+#[test]
+fn tcp_disconnect_mid_generation_is_cancelled() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve_listener(listener, SpecDecConfig::default(), ServeConfig::default(), 2).unwrap();
+    });
+
+    // Client 1: start a long generation, then vanish without reading.
+    {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let prompt: Vec<String> = (0u32..80).map(|i| ((i * 7 + 3) % 256).to_string()).collect();
+        writeln!(stream, "GENERATE 400 {}", prompt.join(" ")).unwrap();
+        stream.flush().unwrap();
+        // Dropping the stream closes the socket: the conn thread's reply
+        // wait sees EOF and forwards the cancel.
+    }
+
+    // Client 2: poll STATS until the cancellation lands.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut last = String::new();
+    loop {
+        assert!(
+            Instant::now() < deadline,
+            "disconnect never cancelled the session; last STATS: {last}"
+        );
+        writeln!(stream, "STATS").unwrap();
+        last.clear();
+        reader.read_line(&mut last).unwrap();
+        assert!(last.starts_with("OK "), "bad STATS reply: {last}");
+        if last.contains("cancelled=1") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    writeln!(stream, "QUIT").unwrap();
+    server.join().unwrap();
+}
+
+/// The explicit CANCEL verb: pipelined after a long GENERATE, the
+/// pending reply arrives as `ERR cancelled` and the connection stays
+/// usable for further commands.
+#[test]
+fn tcp_cancel_verb_aborts_inflight_generation() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve_listener(listener, SpecDecConfig::default(), ServeConfig::default(), 1).unwrap();
+    });
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let prompt: Vec<String> = (0u32..80).map(|i| ((i * 5 + 2) % 256).to_string()).collect();
+    writeln!(stream, "GENERATE 400 {}", prompt.join(" ")).unwrap();
+    writeln!(stream, "CANCEL").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "ERR cancelled", "GENERATE must reply cancelled");
+    // The connection is still live after a cancel.
+    writeln!(stream, "STATS").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "bad STATS after cancel: {line}");
+    assert!(line.contains("cancelled=1"), "STATS missing the cancel: {line}");
+    writeln!(stream, "QUIT").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "OK bye");
+    server.join().unwrap();
 }
