@@ -6,10 +6,13 @@
 //!              [--requests N] [--seed S] [--config FILE]
 //! hat serve    [--addr HOST:PORT] [--config FILE] [--max-sessions N]
 //!              [--prefill-budget T] [--policy fifo|sjf] [--deadline-ms T]
-//!              [--max-conns N]
+//!              [--max-conns N] [--temperature X] [--top-k-sample N]
+//!              [--top-p X] [--rep-penalty X] [--seed N]
+//!              [--verify-mode coupled|rejection]
 //!              real TCP serving: continuous-batching scheduler over the
 //!              engine (N concurrent sessions, T prefill tokens/iteration,
-//!              slot admission policy + per-request deadline)
+//!              slot admission policy + per-request deadline; temperature 0
+//!              is greedy, > 0 samples seeded and position-keyed)
 //! hat profile  [--rounds N]             measure SD round shapes
 //! hat inspect                           print manifest / artifact summary
 //! ```

@@ -152,6 +152,21 @@ pub struct SpecDecConfig {
     /// front-end (`server::parse_line`) — configurable instead of the old
     /// hard-coded 512.
     pub max_new_tokens: usize,
+    /// Sampling temperature; 0 (the default) keeps the greedy argmax
+    /// paths bit-identical to the pre-sampling code.
+    pub temperature: f64,
+    /// Sampling top-k (0 = disabled).  Distinct from `top_k`, which is
+    /// the §3.5 parallel-drafting candidate fan-out.
+    pub top_k_sample: usize,
+    /// Nucleus (top-p) sampling mass in (0, 1]; 1 = disabled.
+    pub top_p: f64,
+    /// Repetition penalty on already-generated tokens (> 0; 1 = off).
+    pub rep_penalty: f64,
+    /// Session sampling seed: every stochastic draw is derived from
+    /// `(seed, context position)`, so same-seed runs are bit-identical.
+    pub seed: u64,
+    /// How stochastic rounds verify draft tokens (`SampleVerify`).
+    pub verify_mode: SampleVerify,
 }
 
 impl Default for SpecDecConfig {
@@ -160,7 +175,56 @@ impl Default for SpecDecConfig {
         // model's top-probabilities sit lower (PCFG branching), so the
         // equivalent operating point — measured by sweeping η against
         // accept length (EXPERIMENTS.md §Table 4) — is ≈ 0.35.
-        SpecDecConfig { eta: 0.35, max_draft: 8, top_k: 2, max_new_tokens: 512 }
+        SpecDecConfig {
+            eta: 0.35,
+            max_draft: 8,
+            top_k: 2,
+            max_new_tokens: 512,
+            temperature: 0.0,
+            top_k_sample: 0,
+            top_p: 1.0,
+            rep_penalty: 1.0,
+            seed: 0,
+            verify_mode: SampleVerify::Coupled,
+        }
+    }
+}
+
+/// Draft-verification discipline for stochastic (temperature > 0)
+/// speculative decoding.  Both are lossless; they differ in *which*
+/// equivalence is exact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SampleVerify {
+    /// Common-random-number coupling: one uniform per position drives
+    /// both the draft proposal (inverse-CDF of the draft distribution q)
+    /// and the committed token (inverse-CDF of the target distribution
+    /// p); a proposal is accepted iff the two coincide.  The committed
+    /// stream is *token-identical* to direct seeded sampling from the
+    /// target model — the executable losslessness oracle — and is
+    /// invariant to round boundaries, draft budgets and chunking.
+    Coupled,
+    /// Canonical stochastic speculative sampling: accept draft token d
+    /// when r <= p(d)/q(d), else resample from norm(max(p - q, 0)).
+    /// Preserves the target *distribution* at every position (checked by
+    /// the chi-squared/KS harness) but the realized stream depends on
+    /// round shape, so only distribution-level oracles apply.
+    Rejection,
+}
+
+impl SampleVerify {
+    pub fn name(self) -> &'static str {
+        match self {
+            SampleVerify::Coupled => "coupled",
+            SampleVerify::Rejection => "rejection",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SampleVerify> {
+        match s.to_ascii_lowercase().as_str() {
+            "coupled" => Some(SampleVerify::Coupled),
+            "rejection" => Some(SampleVerify::Rejection),
+            _ => None,
+        }
     }
 }
 
@@ -420,6 +484,15 @@ impl ExperimentConfig {
         if self.specdec.max_new_tokens == 0 {
             errs.push("specdec.max_new_tokens must be > 0".into());
         }
+        if self.specdec.temperature < 0.0 {
+            errs.push("specdec.temperature must be >= 0".into());
+        }
+        if !(self.specdec.top_p > 0.0 && self.specdec.top_p <= 1.0) {
+            errs.push("specdec.top_p must be in (0,1]".into());
+        }
+        if self.specdec.rep_penalty <= 0.0 {
+            errs.push("specdec.rep_penalty must be > 0".into());
+        }
         if self.min_chunk == 0 || self.min_chunk > self.max_chunk {
             errs.push("chunk bounds invalid".into());
         }
@@ -482,6 +555,19 @@ mod tests {
     }
 
     #[test]
+    fn validation_catches_bad_sampling_values() {
+        let mut c = ExperimentConfig::preset(Framework::Hat, Dataset::SpecBench);
+        c.specdec.temperature = -0.5;
+        c.specdec.top_p = 0.0;
+        c.specdec.rep_penalty = 0.0;
+        let errs = c.validate().unwrap_err();
+        assert_eq!(errs.len(), 3, "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("temperature")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("top_p")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("rep_penalty")), "{errs:?}");
+    }
+
+    #[test]
     fn framework_strategies_match_baseline_definitions() {
         let hat = Strategies::for_framework(Framework::Hat, Dataset::SpecBench);
         assert!(hat.sd && hat.pc && hat.pd);
@@ -507,6 +593,14 @@ mod tests {
         assert_eq!(AdmitPolicy::parse("lifo"), None);
         assert_eq!(ServeConfig::default().policy, AdmitPolicy::Fifo);
         assert_eq!(ServeConfig::default().deadline_ms, 0, "deadlines default off");
+        for m in [SampleVerify::Coupled, SampleVerify::Rejection] {
+            assert_eq!(SampleVerify::parse(m.name()), Some(m));
+        }
+        assert_eq!(SampleVerify::parse("argmax"), None);
+        let sd = SpecDecConfig::default();
+        assert_eq!(sd.verify_mode, SampleVerify::Coupled);
+        assert_eq!(sd.temperature, 0.0, "sampling defaults off (greedy)");
+        assert_eq!((sd.top_k_sample, sd.top_p, sd.rep_penalty, sd.seed), (0, 1.0, 1.0, 0));
     }
 
     #[test]

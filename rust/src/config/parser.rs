@@ -140,6 +140,16 @@ pub fn build(map: &BTreeMap<String, Scalar>) -> Result<ExperimentConfig, String>
             "specdec.max_draft" => cfg.specdec.max_draft = us()?,
             "specdec.top_k" => cfg.specdec.top_k = us()?,
             "specdec.max_new_tokens" => cfg.specdec.max_new_tokens = us()?,
+            "specdec.temperature" => cfg.specdec.temperature = num()?,
+            "specdec.top_k_sample" => cfg.specdec.top_k_sample = us()?,
+            "specdec.top_p" => cfg.specdec.top_p = num()?,
+            "specdec.rep_penalty" => cfg.specdec.rep_penalty = num()?,
+            "specdec.seed" => cfg.specdec.seed = us()? as u64,
+            "specdec.verify_mode" => {
+                let s = v.as_str().ok_or("specdec.verify_mode must be a string")?;
+                cfg.specdec.verify_mode = super::SampleVerify::parse(s)
+                    .ok_or_else(|| format!("unknown specdec.verify_mode {s:?} (coupled|rejection)"))?;
+            }
             "serve.max_sessions" => cfg.serve.max_sessions = us()?,
             "serve.prefill_budget" => cfg.serve.prefill_budget = us()?,
             "serve.min_chunk" => cfg.serve.min_chunk = us()?,
@@ -256,5 +266,26 @@ mod tests {
     fn invalid_values_fail_validation() {
         let m = parse("[specdec]\neta = 2.0\n").unwrap();
         assert!(build(&m).is_err());
+        let m = parse("[specdec]\ntop_p = 0.0\n").unwrap();
+        assert!(build(&m).unwrap_err().contains("top_p"));
+        let m = parse("[specdec]\ntemperature = -1\n").unwrap();
+        assert!(build(&m).unwrap_err().contains("temperature"));
+    }
+
+    #[test]
+    fn sampling_keys_overlay() {
+        let m = parse(
+            "[specdec]\ntemperature = 0.8\ntop_k_sample = 40\ntop_p = 0.95\nrep_penalty = 1.1\nseed = 99\nverify_mode = \"rejection\"\n",
+        )
+        .unwrap();
+        let cfg = build(&m).unwrap();
+        assert_eq!(cfg.specdec.temperature, 0.8);
+        assert_eq!(cfg.specdec.top_k_sample, 40);
+        assert_eq!(cfg.specdec.top_p, 0.95);
+        assert_eq!(cfg.specdec.rep_penalty, 1.1);
+        assert_eq!(cfg.specdec.seed, 99);
+        assert_eq!(cfg.specdec.verify_mode, crate::config::SampleVerify::Rejection);
+        let m = parse("[specdec]\nverify_mode = \"argmax\"\n").unwrap();
+        assert!(build(&m).unwrap_err().contains("verify_mode"));
     }
 }

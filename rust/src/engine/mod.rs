@@ -274,8 +274,28 @@ impl Engine {
 
     /// Softmax probability of the argmax token (the Eq. 5 stop signal).
     pub fn top_prob(logits: &[f32]) -> f32 {
-        let m = logits.iter().cloned().fold(f32::MIN, f32::max);
-        let sum: f32 = logits.iter().map(|&x| (x - m).exp()).sum();
+        Self::prob_of_argmax(logits)
+    }
+
+    /// Softmax probability of the argmax token, computed safely: the max
+    /// logit is subtracted before exponentiating (a raw `exp` overflows
+    /// to inf for logits ≳ 88 and the ratio collapses to NaN), and NaN
+    /// entries are excluded from both the max and the sum instead of
+    /// poisoning the row.  Degenerate rows (empty / all-NaN) yield 0.
+    pub fn prob_of_argmax(logits: &[f32]) -> f32 {
+        let m = logits
+            .iter()
+            .cloned()
+            .filter(|x| !x.is_nan())
+            .fold(f32::NEG_INFINITY, f32::max);
+        if !m.is_finite() {
+            return 0.0;
+        }
+        let sum: f32 = logits
+            .iter()
+            .filter(|x| !x.is_nan())
+            .map(|&x| (x - m).exp())
+            .sum();
         1.0 / sum
     }
 
@@ -322,6 +342,27 @@ mod tests {
         assert!((Engine::top_prob(&l) - 1.0 / exp).abs() < 1e-6);
         // uniform logits → 1/n
         assert!((Engine::top_prob(&[0.0; 4]) - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prob_of_argmax_survives_large_magnitude_and_nan_rows() {
+        // Regression: exponentiating without the max shift overflows for
+        // logits beyond ~88, turning the probability into inf/inf = NaN.
+        let huge = [3000.0f32, 2990.0, -3000.0];
+        let p = Engine::prob_of_argmax(&huge);
+        assert!(p.is_finite(), "overflowed: {p}");
+        // Shift-invariance: the same gaps at small magnitude agree.
+        let small = [10.0f32, 0.0, -5990.0];
+        assert!((p - Engine::prob_of_argmax(&small)).abs() < 1e-6);
+        // A NaN entry must not poison the whole row...
+        let poisoned = [1.0f32, f32::NAN, 3.0];
+        let q = Engine::prob_of_argmax(&poisoned);
+        assert!(q.is_finite() && q > 0.5, "NaN poisoned the row: {q}");
+        // ...and fully degenerate rows degrade to 0, not NaN.
+        assert_eq!(Engine::prob_of_argmax(&[f32::NAN; 3]), 0.0);
+        assert_eq!(Engine::prob_of_argmax(&[]), 0.0);
+        // top_prob is the same computation (Eq. 5 callers see the fix).
+        assert_eq!(Engine::top_prob(&huge), p);
     }
 
     #[test]

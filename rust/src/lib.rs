@@ -38,6 +38,7 @@ pub mod metrics;
 pub mod model;
 pub mod net;
 pub mod runtime;
+pub mod sampler;
 pub mod server;
 pub mod sim;
 pub mod specdec;

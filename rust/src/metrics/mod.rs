@@ -248,6 +248,16 @@ pub struct ServeStats {
     /// job was popped).  Job-level, not request-level, so it is not part
     /// of the request reconciliation and stays off the STATS wire line.
     pub stale_dropped: u64,
+    /// Per-round acceptance histogram: `accept_hist[a]` counts verify
+    /// rounds that accepted exactly `a` proposals — `accept_hist` in the
+    /// STATS reply (comma-joined counts, `-` while empty).  Where
+    /// `accept` gives the aggregate rate, this shows the shape: greedy
+    /// vs stochastic verification move mass between the `a = k` bin and
+    /// the early-rejection bins.
+    pub accept_hist: Vec<u64>,
+    /// The `[specdec] seed` the scheduler's sessions sample with — `seed`
+    /// in the STATS reply, so clients can reproduce a stochastic run.
+    pub sampler_seed: u64,
 }
 
 impl ServeStats {
@@ -276,6 +286,15 @@ impl ServeStats {
         self.accepted += accepted;
     }
 
+    /// Record one completed verify round's acceptance count (growing the
+    /// histogram as deeper rounds appear).
+    pub fn record_round(&mut self, accepted: usize) {
+        if self.accept_hist.len() <= accepted {
+            self.accept_hist.resize(accepted + 1, 0);
+        }
+        self.accept_hist[accepted] += 1;
+    }
+
     /// Aggregate acceptance rate over all finished requests' rounds.
     pub fn accept_rate(&self) -> f64 {
         accept_rate(self.accepted, self.proposed)
@@ -283,10 +302,15 @@ impl ServeStats {
 
     /// Scheduler fields of the `STATS` reply line.
     pub fn stats_fields(&self) -> String {
+        let hist = if self.accept_hist.is_empty() {
+            "-".to_string()
+        } else {
+            self.accept_hist.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",")
+        };
         format!(
             "requests={} iterations={} queue_wait_ms={:.1} ttft_ms={:.1} tbt_ms={:.1} \
-             rounds={} accept={:.3} chunk_mean={:.1} batch_mean={:.2} fallbacks={} \
-             cancelled={} failed={} reaped={} deadline_expired={}",
+             rounds={} accept={:.3} accept_hist={} seed={} chunk_mean={:.1} batch_mean={:.2} \
+             fallbacks={} cancelled={} failed={} reaped={} deadline_expired={}",
             self.finished,
             self.iterations,
             self.queue_wait_ms.mean(),
@@ -294,6 +318,8 @@ impl ServeStats {
             self.tbt_ms.mean(),
             self.rounds,
             self.accept_rate(),
+            hist,
+            self.sampler_seed,
             self.chunk_sizes.mean(),
             self.batch_occupancy.mean(),
             self.fallbacks,
@@ -431,11 +457,20 @@ mod tests {
         s.failed = 1;
         s.reaped = 3;
         s.deadline_expired = 4;
+        assert!(s.stats_fields().contains("accept_hist=- "), "empty histogram renders as -");
+        s.record_round(2);
+        s.record_round(0);
+        s.record_round(2);
+        s.record_round(4);
+        assert_eq!(s.accept_hist, vec![1, 0, 2, 0, 1]);
+        s.sampler_seed = 7;
         let f = s.stats_fields();
         for key in [
             "requests=2",
             "rounds=5",
             "accept=0.400",
+            "accept_hist=1,0,2,0,1",
+            "seed=7",
             "queue_wait_ms=3.0",
             "batch_mean=3.00",
             "fallbacks=0",

@@ -1,0 +1,409 @@
+//! Stochastic token sampling for (speculative) decoding: temperature,
+//! top-k, top-p and repetition penalty over max-subtracted softmax
+//! probabilities, driven by a **position-keyed** seeded RNG.
+//!
+//! Determinism contract: every random draw is addressed by the absolute
+//! context position of the token being decided, via
+//! `Rng::new(seed).substream(position)`.  A draw therefore depends only
+//! on `(seed, position, draw index)` — never on how many times or in
+//! what order the sampler was consulted — so scheduler interleaving,
+//! re-drafted rounds after an abort, and pre-drafted (PD) branches all
+//! reproduce the exact stream of a serial run.  Three draws are budgeted
+//! per position:
+//!
+//! | draw | used for |
+//! |------|----------|
+//! | 0 (`u_at`)  | inverse-CDF sample from a processed distribution |
+//! | 1 (`r_at`)  | rejection-mode accept test `r <= p(d)/q(d)`      |
+//! | 2 (`v_at`)  | rejection-mode residual resample                 |
+//!
+//! `temperature <= 0` means greedy: callers short-circuit to
+//! `Engine::argmax` and no draws are consumed, keeping the greedy paths
+//! bit-identical to the pre-sampling code.
+
+use crate::config::SpecDecConfig;
+use crate::model::TokenId;
+use crate::util::rng::Rng;
+
+/// Processed-probability sampler.  `Clone`-cheap and stateless between
+/// calls: all randomness is re-derived from `(seed, position)`.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    /// Softmax temperature; `<= 0` selects greedy argmax decoding.
+    pub temperature: f64,
+    /// Keep only the `top_k` most probable tokens (0 = disabled).
+    pub top_k: usize,
+    /// Nucleus mass: keep the minimal prefix of descending-probability
+    /// tokens whose cumulative mass reaches `top_p` (1.0 = disabled).
+    pub top_p: f64,
+    /// CTRL-style repetition penalty on already-generated tokens
+    /// (1.0 = disabled; must be > 0).
+    pub rep_penalty: f64,
+    /// Session seed keying every positional substream.
+    pub seed: u64,
+}
+
+impl Sampler {
+    pub fn from_cfg(cfg: &SpecDecConfig) -> Sampler {
+        Sampler {
+            temperature: cfg.temperature,
+            top_k: cfg.top_k_sample,
+            top_p: cfg.top_p,
+            rep_penalty: cfg.rep_penalty,
+            seed: cfg.seed,
+        }
+    }
+
+    /// Greedy mode: the sampler is inert and callers use argmax.
+    pub fn greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    fn rng_at(&self, pos: usize) -> Rng {
+        Rng::new(self.seed).substream(pos as u64)
+    }
+
+    /// Draw 0 at `pos`: the inverse-CDF uniform.
+    pub fn u_at(&self, pos: usize) -> f64 {
+        self.rng_at(pos).f64()
+    }
+
+    /// Draw 1 at `pos`: the rejection-test uniform.
+    pub fn r_at(&self, pos: usize) -> f64 {
+        let mut r = self.rng_at(pos);
+        r.f64();
+        r.f64()
+    }
+
+    /// Draw 2 at `pos`: the residual-resample uniform.
+    pub fn v_at(&self, pos: usize) -> f64 {
+        let mut r = self.rng_at(pos);
+        r.f64();
+        r.f64();
+        r.f64()
+    }
+
+    /// NaN-tolerant argmax (ties -> lowest index), the greedy fallback
+    /// when processing degenerates (e.g. every logit masked or NaN).
+    fn argmax(logits: &[f32]) -> TokenId {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &x) in logits.iter().enumerate() {
+            if !x.is_nan() && x > best_v {
+                best = i;
+                best_v = x;
+            }
+        }
+        best as TokenId
+    }
+
+    /// Processed probability distribution over the vocabulary:
+    /// repetition penalty -> temperature -> max-subtracted softmax ->
+    /// top-k mask -> top-p mask -> renormalize.  Always sums to 1; if
+    /// the pipeline degenerates (all-NaN row, zero mass) it falls back
+    /// to a point mass on the argmax so sampling stays total.
+    pub fn dist(&self, logits: &[f32], rep_ctx: &[TokenId]) -> Vec<f64> {
+        let v = logits.len();
+        let mut z: Vec<f64> = logits.iter().map(|&x| x as f64).collect();
+
+        // Repetition penalty (CTRL): shrink already-generated tokens
+        // toward improbability on the *logit* scale, before softmax.
+        if self.rep_penalty != 1.0 {
+            let mut seen = vec![false; v];
+            for &t in rep_ctx {
+                if (t as usize) < v {
+                    seen[t as usize] = true;
+                }
+            }
+            for (zi, hit) in z.iter_mut().zip(&seen) {
+                if *hit {
+                    if *zi > 0.0 {
+                        *zi /= self.rep_penalty;
+                    } else {
+                        *zi *= self.rep_penalty;
+                    }
+                }
+            }
+        }
+
+        let t = self.temperature.max(1e-9);
+        for zi in z.iter_mut() {
+            *zi /= t;
+        }
+
+        // Max-subtracted softmax: without the shift, |logit/T| beyond
+        // ~709 overflows exp() and the row collapses to NaN.
+        let m = z.iter().cloned().filter(|x| !x.is_nan()).fold(f64::NEG_INFINITY, f64::max);
+        let mut p: Vec<f64> = if m.is_finite() {
+            z.iter().map(|&x| if x.is_nan() { 0.0 } else { (x - m).exp() }).collect()
+        } else {
+            vec![0.0; v]
+        };
+
+        // Top-k / top-p operate on the descending-probability order
+        // (ties broken by lowest index, so masking is deterministic).
+        let mut order: Vec<usize> = (0..v).collect();
+        order.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap().then(a.cmp(&b)));
+        if self.top_k > 0 && self.top_k < v {
+            for &i in &order[self.top_k..] {
+                p[i] = 0.0;
+            }
+        }
+        if self.top_p < 1.0 {
+            let total: f64 = p.iter().sum();
+            if total > 0.0 {
+                let mut cum = 0.0;
+                let mut cut = order.len();
+                for (rank, &i) in order.iter().enumerate() {
+                    cum += p[i] / total;
+                    if cum >= self.top_p {
+                        cut = rank + 1; // keep at least one token
+                        break;
+                    }
+                }
+                for &i in &order[cut..] {
+                    p[i] = 0.0;
+                }
+            }
+        }
+
+        let total: f64 = p.iter().sum();
+        if total > 0.0 && total.is_finite() {
+            for pi in p.iter_mut() {
+                *pi /= total;
+            }
+        } else {
+            p.iter_mut().for_each(|pi| *pi = 0.0);
+            p[Self::argmax(logits) as usize] = 1.0;
+        }
+        p
+    }
+
+    /// Inverse-CDF pick from a normalized distribution.
+    pub fn pick(dist: &[f64], u: f64) -> TokenId {
+        let mut cum = 0.0;
+        let mut last_support = 0usize;
+        for (i, &pi) in dist.iter().enumerate() {
+            if pi <= 0.0 {
+                continue;
+            }
+            last_support = i;
+            cum += pi;
+            if u < cum {
+                return i as TokenId;
+            }
+        }
+        // Rounding left u >= cum: highest-index support token.
+        last_support as TokenId
+    }
+
+    /// Sample the token at absolute context position `pos` from a
+    /// processed `logits` row (greedy mode falls through to argmax and
+    /// consumes no draws).
+    pub fn sample_at(&self, logits: &[f32], rep_ctx: &[TokenId], pos: usize) -> TokenId {
+        if self.greedy() {
+            return Self::argmax(logits);
+        }
+        Self::pick(&self.dist(logits, rep_ctx), self.u_at(pos))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{cases, forall};
+
+    fn sampler(t: f64, k: usize, p: f64, rp: f64) -> Sampler {
+        Sampler { temperature: t, top_k: k, top_p: p, rep_penalty: rp, seed: 7 }
+    }
+
+    #[test]
+    fn draws_are_position_keyed_and_order_independent() {
+        let s = sampler(1.0, 0, 1.0, 1.0);
+        // Re-querying any draw in any order reproduces the same value.
+        let (u5, r5, v5) = (s.u_at(5), s.r_at(5), s.v_at(5));
+        assert_eq!(s.v_at(5), v5);
+        assert_eq!(s.u_at(5), u5);
+        assert_eq!(s.r_at(5), r5);
+        assert_ne!(s.u_at(5), s.u_at(6), "positions must have independent streams");
+        assert_ne!((u5, r5), (r5, v5), "draw indices must differ");
+    }
+
+    #[test]
+    fn greedy_mode_is_argmax() {
+        let s = sampler(0.0, 0, 1.0, 1.0);
+        assert!(s.greedy());
+        let logits = [0.1f32, 2.0, -1.0, 1.9];
+        for pos in 0..32 {
+            assert_eq!(s.sample_at(&logits, &[], pos), 1);
+        }
+    }
+
+    #[test]
+    fn dist_is_normalized_and_softmax_is_overflow_safe() {
+        let s = sampler(0.7, 0, 1.0, 1.0);
+        // |logits| ~ 1e4 would overflow exp() without the max shift.
+        let logits = [30_000.0f32, 29_999.0, -30_000.0];
+        let d = s.dist(&logits, &[]);
+        assert!(d.iter().all(|p| p.is_finite()));
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(d[0] > d[1] && d[1] > d[2]);
+    }
+
+    #[test]
+    fn top_k_and_top_p_restrict_support() {
+        let logits = [2.0f32, 1.0, 0.5, 0.0, -1.0];
+        let dk = sampler(1.0, 2, 1.0, 1.0).dist(&logits, &[]);
+        assert_eq!(dk.iter().filter(|&&p| p > 0.0).count(), 2);
+        assert!(dk[0] > 0.0 && dk[1] > 0.0);
+        let dp = sampler(1.0, 0, 0.5, 1.0).dist(&logits, &[]);
+        // Minimal prefix: the top token alone carries ~0.56 of the mass,
+        // so nucleus 0.5 keeps exactly that one token.
+        assert!((dp[0] - 1.0).abs() < 1e-9);
+        assert_eq!(dp.iter().skip(1).filter(|&&p| p > 0.0).count(), 0);
+    }
+
+    #[test]
+    fn rep_penalty_demotes_context_tokens() {
+        let logits = [1.0f32, 1.0, 1.0];
+        let base = sampler(1.0, 0, 1.0, 1.0).dist(&logits, &[0]);
+        let pen = sampler(1.0, 0, 1.0, 1.3).dist(&logits, &[0]);
+        assert!(pen[0] < base[0], "penalized token must lose mass");
+        assert!((pen.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pick_is_inverse_cdf() {
+        let d = [0.25f64, 0.0, 0.5, 0.25];
+        assert_eq!(Sampler::pick(&d, 0.0), 0);
+        assert_eq!(Sampler::pick(&d, 0.249), 0);
+        assert_eq!(Sampler::pick(&d, 0.26), 2);
+        assert_eq!(Sampler::pick(&d, 0.74), 2);
+        assert_eq!(Sampler::pick(&d, 0.76), 3);
+        assert_eq!(Sampler::pick(&d, 0.999_999), 3);
+    }
+
+    #[test]
+    fn prop_dist_support_and_mass_invariants() {
+        forall(cases(200), |rng| {
+            let v = rng.range_usize(2, 24);
+            let logits: Vec<f32> =
+                (0..v).map(|_| rng.range_f64(-6.0, 6.0) as f32).collect();
+            let k = rng.range_usize(0, v);
+            let top_p = rng.range_f64(0.05, 1.0);
+            let s = Sampler {
+                temperature: rng.range_f64(0.05, 2.5),
+                top_k: k,
+                top_p,
+                rep_penalty: rng.range_f64(0.5, 2.0),
+                seed: rng.next_u64(),
+            };
+            let ctx: Vec<TokenId> =
+                (0..rng.range_usize(0, 6)).map(|_| rng.below(v) as TokenId).collect();
+            let d = s.dist(&logits, &ctx);
+            let sum: f64 = d.iter().sum();
+            if (sum - 1.0).abs() > 1e-9 {
+                return Err(format!("mass {sum} != 1"));
+            }
+            let support = d.iter().filter(|&&p| p > 0.0).count();
+            if support == 0 {
+                return Err("empty support".into());
+            }
+            if k > 0 && support > k {
+                return Err(format!("top-k={k} but support {support}"));
+            }
+            // The sampled token always lies in the support.
+            let t = Sampler::pick(&d, rng.f64()) as usize;
+            if d[t] <= 0.0 {
+                return Err(format!("picked token {t} outside support"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_top_p_keeps_minimal_prefix_of_sorted_probs() {
+        forall(cases(150), |rng| {
+            let v = rng.range_usize(3, 16);
+            let logits: Vec<f32> =
+                (0..v).map(|_| rng.range_f64(-3.0, 3.0) as f32).collect();
+            let top_p = rng.range_f64(0.1, 0.95);
+            let s = sampler(1.0, 0, top_p, 1.0);
+            let full = sampler(1.0, 0, 1.0, 1.0).dist(&logits, &[]);
+            let d = s.dist(&logits, &[]);
+            // Support is exactly a prefix of the descending-prob order.
+            let mut order: Vec<usize> = (0..v).collect();
+            order.sort_by(|&a, &b| full[b].partial_cmp(&full[a]).unwrap().then(a.cmp(&b)));
+            let support: Vec<bool> = d.iter().map(|&p| p > 0.0).collect();
+            let n_kept = support.iter().filter(|&&b| b).count();
+            for (rank, &i) in order.iter().enumerate() {
+                if support[i] != (rank < n_kept) {
+                    return Err(format!("support is not the top-{n_kept} prefix"));
+                }
+            }
+            // Minimality: kept mass reaches p, kept-minus-last does not.
+            let kept: f64 = order[..n_kept].iter().map(|&i| full[i]).sum();
+            if kept + 1e-12 < top_p {
+                return Err(format!("kept mass {kept} < top_p {top_p}"));
+            }
+            if n_kept > 1 {
+                let prev: f64 = order[..n_kept - 1].iter().map(|&i| full[i]).sum();
+                if prev >= top_p {
+                    return Err(format!("prefix {n_kept} not minimal ({prev} >= {top_p})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_temperature_to_zero_converges_to_argmax() {
+        forall(cases(100), |rng| {
+            let v = rng.range_usize(2, 16);
+            let mut logits: Vec<f32> =
+                (0..v).map(|_| rng.range_f64(-4.0, 4.0) as f32).collect();
+            let best = rng.below(v);
+            logits[best] = 6.0; // unique max with a clear gap
+            let s = sampler(1e-3, 0, 1.0, 1.0);
+            let d = s.dist(&logits, &[]);
+            if d[best] < 0.999_999 {
+                return Err(format!("T->0 mass on argmax only {}", d[best]));
+            }
+            let got = s.sample_at(&logits, &[], rng.below(1000));
+            if got as usize != best {
+                return Err(format!("T->0 sampled {got}, argmax {best}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_rep_penalty_never_resurrects_a_masked_token() {
+        // A token outside the top-k support stays at probability zero
+        // for every repetition context: the penalty reshapes logits
+        // *before* masking, it can never un-mask.
+        forall(cases(150), |rng| {
+            let v = rng.range_usize(4, 16);
+            let logits: Vec<f32> =
+                (0..v).map(|_| rng.range_f64(-3.0, 3.0) as f32).collect();
+            let k = rng.range_usize(1, v - 1);
+            let s = Sampler {
+                temperature: rng.range_f64(0.2, 2.0),
+                top_k: k,
+                top_p: rng.range_f64(0.2, 1.0),
+                rep_penalty: rng.range_f64(1.0, 2.0),
+                seed: 1,
+            };
+            let ctx: Vec<TokenId> =
+                (0..rng.range_usize(1, 8)).map(|_| rng.below(v) as TokenId).collect();
+            let d = s.dist(&logits, &ctx);
+            if d.iter().filter(|&&p| p > 0.0).count() > k {
+                return Err("masked token resurrected past top-k".into());
+            }
+            if (d.iter().sum::<f64>() - 1.0).abs() > 1e-9 {
+                return Err("mass != 1 under penalty+mask".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -14,10 +14,10 @@
 //! C: STATS\n
 //! S: OK executions=<n> exec_ms=<t> compiles=<n> compile_ms=<t>
 //!       requests=<n> iterations=<n> queue_wait_ms=<t> ttft_ms=<t>
-//!       tbt_ms=<t> rounds=<n> accept=<rate> chunk_mean=<x>
-//!       batch_mean=<x> fallbacks=<n> cancelled=<n> failed=<n>
-//!       reaped=<n> deadline_expired=<n> g_learned=<0|1>
-//!       queued=<n> live=<n> decode_q=<n> prefill_q=<n>\n
+//!       tbt_ms=<t> rounds=<n> accept=<rate> accept_hist=<c0,c1,...|->
+//!       seed=<n> chunk_mean=<x> batch_mean=<x> fallbacks=<n>
+//!       cancelled=<n> failed=<n> reaped=<n> deadline_expired=<n>
+//!       g_learned=<0|1> queued=<n> live=<n> decode_q=<n> prefill_q=<n>\n
 //!                                                 (one line on the wire)
 //! C: QUIT\n
 //! S: OK bye\n
@@ -28,7 +28,11 @@
 //! final truncation to max_new_tokens).  STATS carries the backend runtime
 //! counters followed by the scheduler aggregates: finished request count,
 //! scheduler iterations, mean queue wait / TTFT / TBT (wall-clock ms),
-//! total SD rounds, the aggregate acceptance rate, the mean Eq. 3 chunk
+//! total SD rounds, the aggregate acceptance rate, `accept_hist` — the
+//! per-round acceptance histogram (`accept_hist[a]` counts verify rounds
+//! that accepted exactly `a` proposals; comma-joined, `-` while no round
+//! has finished) — `seed` — the `[specdec] seed` the scheduler's sessions
+//! sample with — the mean Eq. 3 chunk
 //! size (of *executed* chunks, post-clamp), `batch_mean` — the mean
 //! session count per batched engine-call group the scheduler issued (1.0
 //! means nothing batched, higher means verify rounds / prefill chunks of
@@ -52,8 +56,12 @@
 //! [`scheduler::Scheduler`]: up to `--max-sessions` live sessions
 //! interleave at prefill-chunk / verify-round granularity, with prefill
 //! admitted under a `--prefill-budget` token budget per iteration and
-//! chunk sizes from the Eq. 3 optimizer.  Greedy-decoding losslessness
-//! makes the interleaving invisible in each connection's output.
+//! chunk sizes from the Eq. 3 optimizer.  Losslessness makes the
+//! interleaving invisible in each connection's output: bit-for-bit under
+//! greedy decoding (`temperature = 0`, the default), and token-identical
+//! to a serial seeded run under stochastic sampling, because every
+//! session's draws are keyed by `(seed, context position)` rather than by
+//! call order.
 //!
 //! Session lifecycle: while a GENERATE is in flight its connection thread
 //! keeps watching the socket ([`handle_conn`]'s reply wait).  A client
@@ -500,16 +508,20 @@ pub fn serve_listener(
 
 /// `hat serve --addr 127.0.0.1:7071 [--config FILE] [--max-sessions N]
 /// [--prefill-budget T] [--policy fifo|sjf] [--deadline-ms T]
-/// [--max-conns N]`
+/// [--max-conns N] [--temperature X] [--top-k-sample N] [--top-p X]
+/// [--rep-penalty X] [--seed N] [--verify-mode coupled|rejection]`
 ///
 /// `--config` reuses the experiment-config format: its `[specdec]` section
-/// (eta, max_draft, top_k, max_new_tokens) and `[serve]` section
-/// (max_sessions, prefill_budget, min_chunk, max_chunk, alpha,
-/// pipeline_len, policy, sjf_aging_ms, deadline_ms) govern serving; the
-/// flags override the file.
+/// (eta, max_draft, top_k, max_new_tokens, plus the sampling keys
+/// temperature, top_k_sample, top_p, rep_penalty, seed, verify_mode) and
+/// `[serve]` section (max_sessions, prefill_budget, min_chunk, max_chunk,
+/// alpha, pipeline_len, policy, sjf_aging_ms, deadline_ms) govern serving;
+/// the flags override the file.  `--temperature 0` (the default) is greedy
+/// decoding; with a positive temperature every session samples with the
+/// shared `--seed`, position-keyed per session.
 pub fn cmd_serve(f: &Flags) -> Result<(), String> {
     let addr = f.get("addr").unwrap_or("127.0.0.1:7071").to_string();
-    let (spec_cfg, mut serve_cfg) = match f.get("config") {
+    let (mut spec_cfg, mut serve_cfg) = match f.get("config") {
         Some(path) => {
             let cfg = crate::config::parser::load_file(path)?;
             (cfg.specdec, cfg.serve)
@@ -534,6 +546,34 @@ pub fn cmd_serve(f: &Flags) -> Result<(), String> {
     }
     if let Some(t) = f.get_usize("deadline-ms")? {
         serve_cfg.deadline_ms = t as u64;
+    }
+    if let Some(t) = f.get_f64("temperature")? {
+        if t < 0.0 {
+            return Err("--temperature must be >= 0".into());
+        }
+        spec_cfg.temperature = t;
+    }
+    if let Some(k) = f.get_usize("top-k-sample")? {
+        spec_cfg.top_k_sample = k;
+    }
+    if let Some(p) = f.get_f64("top-p")? {
+        if !(p > 0.0 && p <= 1.0) {
+            return Err("--top-p must be in (0,1]".into());
+        }
+        spec_cfg.top_p = p;
+    }
+    if let Some(r) = f.get_f64("rep-penalty")? {
+        if r <= 0.0 {
+            return Err("--rep-penalty must be > 0".into());
+        }
+        spec_cfg.rep_penalty = r;
+    }
+    if let Some(s) = f.get_usize("seed")? {
+        spec_cfg.seed = s as u64;
+    }
+    if let Some(m) = f.get("verify-mode") {
+        spec_cfg.verify_mode = crate::config::SampleVerify::parse(m)
+            .ok_or(format!("--verify-mode: unknown mode {m:?} (coupled|rejection)"))?;
     }
     let max_conns = f.get_usize("max-conns")?.unwrap_or(usize::MAX);
 

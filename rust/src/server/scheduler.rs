@@ -216,6 +216,8 @@ impl<'e> Scheduler<'e> {
             cfg.prefill_budget + cfg.max_sessions.max(1) * (spec_cfg.max_draft + 1);
         let monitor = StateMonitor::new(cfg.alpha, 0, g_max_tokens);
         let slots = (0..cfg.max_sessions.max(1)).map(|_| None).collect();
+        let mut stats = ServeStats::new();
+        stats.sampler_seed = spec_cfg.seed;
         Scheduler {
             engine,
             spec_cfg,
@@ -225,7 +227,7 @@ impl<'e> Scheduler<'e> {
             waiting: VecDeque::new(),
             next_epoch: 1,
             monitor,
-            stats: ServeStats::new(),
+            stats,
         }
     }
 
@@ -619,6 +621,7 @@ impl<'e> Scheduler<'e> {
                 a.rounds += 1;
                 a.proposed += r.proposed.len();
                 a.accepted += r.accepted;
+                self.stats.record_round(r.accepted);
                 a.out.extend_from_slice(&r.emitted);
                 if a.out.len() >= a.max_new {
                     a.out.truncate(a.max_new);

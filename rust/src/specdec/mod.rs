@@ -7,9 +7,17 @@
 //! the U-Medusa head-drafting round, so all four frameworks share one
 //! session abstraction.
 //!
-//! Greedy-decoding losslessness (tested in tests/golden.rs): the emitted
-//! token stream equals full-model autoregressive greedy decoding,
-//! regardless of draft quality.
+//! Losslessness (tested in tests/golden.rs and tests/sampling_stats.rs):
+//! under greedy decoding (temperature 0, the default) the emitted token
+//! stream equals full-model autoregressive greedy decoding, regardless
+//! of draft quality.  With temperature > 0 the same guarantee holds in
+//! seeded form — the committed stream is token-identical to direct
+//! seeded sampling from the target model under `SampleVerify::Coupled`
+//! (common-random-number verification), and distribution-identical at
+//! every position under `SampleVerify::Rejection` (canonical stochastic
+//! speculative sampling).  All draws are keyed by `(seed, context
+//! position)`, so round shape, scheduler interleaving and aborted
+//! rounds never reorder them.
 //!
 //! Timing is *not* this module's concern — the fleet simulator replays
 //! round shapes against the calibrated testbed models; this module is what
@@ -20,9 +28,10 @@ pub mod profile;
 use anyhow::Result;
 
 use crate::backend::Tensor;
-use crate::config::SpecDecConfig;
+use crate::config::{SampleVerify, SpecDecConfig};
 use crate::engine::Engine;
 use crate::model::{CloudStream, DeviceStream, TokenId};
+use crate::sampler::Sampler;
 
 /// Outcome of one decode round (one device-cloud interaction).
 #[derive(Debug, Clone)]
@@ -52,6 +61,9 @@ struct PreDraft {
     proposed: Vec<TokenId>,
     /// Shallow hiddens of the tokens the branch processed.
     shallow: Vec<f32>,
+    /// Draft distributions each proposal was sampled from (empty under
+    /// greedy decoding; needed for `SampleVerify::Rejection`).
+    q_dists: Vec<Vec<f64>>,
     skv: Tensor,
     akv: Tensor,
     steps: usize,
@@ -80,6 +92,9 @@ struct PendingVerify {
     shallow: Vec<f32>,
     draft_steps: usize,
     pd_hit: bool,
+    /// Draft distributions each proposal was sampled from (empty under
+    /// greedy decoding; consumed by `SampleVerify::Rejection`).
+    q_dists: Vec<Vec<f64>>,
     /// Parallel-drafting branches speculated during the verification wait.
     branches: Vec<PreDraft>,
 }
@@ -113,11 +128,15 @@ pub struct Session<'e> {
     /// draft token).
     bonus_candidates: Vec<TokenId>,
     prebuilt: Option<PreDraft>,
+    /// Seeded sampler; all stochastic draws are keyed by context position
+    /// so they are invariant to round shape and scheduler interleaving.
+    sampler: Sampler,
     cfg: SpecDecConfig,
 }
 
 impl<'e> Session<'e> {
     pub fn new(engine: &'e Engine, cfg: SpecDecConfig) -> Result<Session<'e>> {
+        let sampler = Sampler::from_cfg(&cfg);
         Ok(Session {
             engine,
             dev: DeviceStream::new(engine.spec())?,
@@ -131,8 +150,31 @@ impl<'e> Session<'e> {
             corr_candidates: Vec::new(),
             bonus_candidates: Vec::new(),
             prebuilt: None,
+            sampler,
             cfg,
         })
+    }
+
+    /// Generated-token context for the repetition penalty: committed
+    /// tokens past the prompt plus `extra` in-round tokens assumed
+    /// committed.  A deterministic function of the committed stream, so
+    /// penalty state never needs separate bookkeeping (and survives
+    /// cancellation / re-drafting for free).
+    fn rep_ctx(&self, extra: &[TokenId]) -> Vec<TokenId> {
+        let start = self.n_prompt.min(self.ctx.len());
+        let mut out = self.ctx[start..].to_vec();
+        out.extend_from_slice(extra);
+        out
+    }
+
+    /// The target model's seeded sample at absolute context position
+    /// `pos`: inverse-CDF of the processed distribution of `row` under
+    /// that position's coupling uniform.  Every committed token is
+    /// exactly this — the invariant that makes coupled speculative
+    /// verification token-identical to direct seeded sampling.
+    fn p_sample_row(&self, row: &[f32], extra_ctx: &[TokenId], pos: usize) -> TokenId {
+        let dist = self.sampler.dist(row, &self.rep_ctx(extra_ctx));
+        Sampler::pick(&dist, self.sampler.u_at(pos))
     }
 
     /// Stage a prompt for resumable chunked prefill without processing
@@ -259,7 +301,12 @@ impl<'e> Session<'e> {
         };
         self.n_prompt = st.prompt.len();
         self.ctx.extend_from_slice(&st.prompt);
-        let t1 = Engine::argmax(&logits);
+        let t1 = if self.sampler.greedy() {
+            Engine::argmax(&logits)
+        } else {
+            // First generated token: position n_prompt, empty rep context.
+            self.p_sample_row(&logits, &[], self.ctx.len())
+        };
         self.ctx.push(t1);
         self.pending = Some(t1);
         self.last_deep = st.last_deep;
@@ -364,7 +411,7 @@ impl<'e> Session<'e> {
         let max_k = self.cfg.max_draft.min(draft_budget).max(1);
 
         // --- drafting stage (or adopt a parallel-drafting branch) ---------
-        let (proposed, shallow, draft_steps, pd_hit) = match self.prebuilt.take() {
+        let (proposed, shallow, draft_steps, pd_hit, q_dists) = match self.prebuilt.take() {
             Some(pb) if pb.base == d0 && !pb.proposed.is_empty() => {
                 self.dev.skv = pb.skv;
                 self.dev.akv = pb.akv;
@@ -376,6 +423,7 @@ impl<'e> Session<'e> {
                 self.bonus_candidates.clear();
                 let mut proposed = pb.proposed;
                 let mut shallow = pb.shallow;
+                let mut q_dists = pb.q_dists;
                 if proposed.len() > max_k {
                     // A branch drafted past this round's budget: verify only
                     // the first max_k proposals (shallow row i belongs to
@@ -384,12 +432,13 @@ impl<'e> Session<'e> {
                     // round like any rejected speculation).
                     proposed.truncate(max_k);
                     shallow.truncate((max_k + 1) * h);
+                    q_dists.truncate(max_k);
                 }
-                (proposed, shallow, 0usize, true)
+                (proposed, shallow, 0usize, true, q_dists)
             }
             _ => {
-                let (p, s, n) = self.draft_live(d0, max_k)?;
-                (p, s, n, false)
+                let (p, s, n, q) = self.draft_live(d0, max_k)?;
+                (p, s, n, false, q)
             }
         };
         let k = proposed.len();
@@ -403,14 +452,21 @@ impl<'e> Session<'e> {
         if parallel_draft && lambda > 0 {
             let base_pos = self.dev.spos.committed; // p
             for &c in self.corr_candidates.clone().iter().take(self.cfg.top_k) {
-                branches.push(self.draft_branch(c, k, base_pos + k, lambda)?);
+                // Correction case: rows 0..k-1 emitted as d_1..d_{k-1}, c.
+                let mut em: Vec<TokenId> = proposed[..k - 1].to_vec();
+                em.push(c);
+                branches.push(self.draft_branch(c, k, base_pos + k, lambda, &em)?);
             }
             for &b in self.bonus_candidates.clone().iter().take(self.cfg.top_k) {
-                branches.push(self.draft_branch(b, k + 1, base_pos + k + 1, lambda)?);
+                // Bonus case: all k proposals emitted, then b.
+                let mut em: Vec<TokenId> = proposed.clone();
+                em.push(b);
+                branches.push(self.draft_branch(b, k + 1, base_pos + k + 1, lambda, &em)?);
             }
         }
 
-        self.verify = Some(PendingVerify { proposed, shallow, draft_steps, pd_hit, branches });
+        self.verify =
+            Some(PendingVerify { proposed, shallow, draft_steps, pd_hit, q_dists, branches });
         Ok(k + 1)
     }
 
@@ -439,21 +495,92 @@ impl<'e> Session<'e> {
         let v = self.engine.spec().vocab;
         let proposed = pv.proposed;
         let k = proposed.len();
-        let mut accepted = 0;
-        while accepted < k {
-            let row = &logits[accepted * v..(accepted + 1) * v];
-            if Engine::argmax(row) == proposed[accepted] {
-                accepted += 1;
-            } else {
-                break;
+        // Absolute context position of the first proposal (ctx currently
+        // ends with this round's d_0).
+        let base = self.ctx.len();
+        let (accepted, next_d0) = if self.sampler.greedy() {
+            let mut a = 0;
+            while a < k && Engine::argmax(&logits[a * v..(a + 1) * v]) == proposed[a] {
+                a += 1;
             }
-        }
+            // Correction (a<k) or bonus (a==k) — either way the LLM's own
+            // output at row `a` is the next token.
+            (a, Engine::argmax(&logits[a * v..(a + 1) * v]))
+        } else {
+            match self.cfg.verify_mode {
+                SampleVerify::Coupled => {
+                    // Common-random-number verification: accept while the
+                    // target's coupled sample reproduces the proposal.  The
+                    // first disagreement *is* the correction, and full
+                    // acceptance samples the bonus the same way — so the
+                    // committed token at base+i is always the target's
+                    // seeded sample there, making the stream token-identical
+                    // to direct seeded sampling.
+                    let mut a = 0;
+                    let mut next = None;
+                    while a < k {
+                        let t = self.p_sample_row(
+                            &logits[a * v..(a + 1) * v],
+                            &proposed[..a],
+                            base + a,
+                        );
+                        if t == proposed[a] {
+                            a += 1;
+                        } else {
+                            next = Some(t);
+                            break;
+                        }
+                    }
+                    let next = next.unwrap_or_else(|| {
+                        self.p_sample_row(&logits[a * v..(a + 1) * v], &proposed[..a], base + a)
+                    });
+                    (a, next)
+                }
+                SampleVerify::Rejection => {
+                    // Canonical stochastic speculative sampling: accept d
+                    // with probability min(1, p(d)/q(d)); on rejection,
+                    // resample from the residual norm(max(p-q, 0)).
+                    // Distribution-preserving at every position.
+                    debug_assert_eq!(pv.q_dists.len(), k, "rejection verify needs draft q-dists");
+                    let mut a = 0;
+                    let mut next = None;
+                    while a < k {
+                        let p = self
+                            .sampler
+                            .dist(&logits[a * v..(a + 1) * v], &self.rep_ctx(&proposed[..a]));
+                        let q = &pv.q_dists[a];
+                        let d = proposed[a] as usize;
+                        if self.sampler.r_at(base + a) * q[d] <= p[d] {
+                            a += 1;
+                            continue;
+                        }
+                        let mut res: Vec<f64> =
+                            p.iter().zip(q).map(|(&pi, &qi)| (pi - qi).max(0.0)).collect();
+                        let mass: f64 = res.iter().sum();
+                        let tok = if mass > 0.0 {
+                            for x in res.iter_mut() {
+                                *x /= mass;
+                            }
+                            Sampler::pick(&res, self.sampler.v_at(base + a))
+                        } else {
+                            // p <= q everywhere on p's support means p == q:
+                            // any p-sample preserves the distribution.
+                            Sampler::pick(&p, self.sampler.v_at(base + a))
+                        };
+                        next = Some(tok);
+                        break;
+                    }
+                    let next = next.unwrap_or_else(|| {
+                        // Full acceptance: bonus token sampled from the
+                        // target at the bonus row.
+                        self.p_sample_row(&logits[k * v..(k + 1) * v], &proposed, base + k)
+                    });
+                    (a, next)
+                }
+            }
+        };
 
         let mut emitted: Vec<TokenId> = proposed[..accepted].to_vec();
-        // Correction (a<k) or bonus (a==k) — either way the LLM's own
-        // output at row `accepted` is the next token.
-        let row = &logits[accepted * v..(accepted + 1) * v];
-        let next_d0 = Engine::argmax(row);
         emitted.push(next_d0);
         let committed_rows = accepted + 1;
         self.last_deep = deep[(committed_rows - 1) * h..committed_rows * h].to_vec();
@@ -486,17 +613,38 @@ impl<'e> Session<'e> {
 
     /// Threshold drafting on the live device stream: proposes up to `max`
     /// tokens (Eq. 5 stop rule), then processes the last proposal too.
-    /// Returns (proposals, k+1 shallow hidden rows, steps = k+1).
-    fn draft_live(&mut self, d0: TokenId, max: usize) -> Result<(Vec<TokenId>, Vec<f32>, usize)> {
+    /// Returns (proposals, k+1 shallow hidden rows, steps = k+1, draft
+    /// sampling distributions — empty under greedy decoding).
+    ///
+    /// With sampling active, proposal i is drawn from the *processed*
+    /// draft distribution with the coupling uniform of the position it
+    /// would commit to; the Eq. 5 stop rule stays on the raw top
+    /// probability (a drafting-length heuristic, not a sampling rule).
+    #[allow(clippy::type_complexity)]
+    fn draft_live(
+        &mut self,
+        d0: TokenId,
+        max: usize,
+    ) -> Result<(Vec<TokenId>, Vec<f32>, usize, Vec<Vec<f64>>)> {
         let mut proposed = Vec::new();
         let mut shallow = Vec::new();
+        let mut q_dists: Vec<Vec<f64>> = Vec::new();
         let mut cur = d0;
+        // Proposal i commits (if accepted) at this absolute position + i.
+        let base = self.ctx.len();
         self.corr_candidates.clear();
         self.bonus_candidates.clear();
         for _ in 0..max {
             let out = self.engine.draft_step(&mut self.dev, cur)?;
             shallow.extend_from_slice(&out.shallow);
-            let next = Engine::argmax(&out.logits);
+            let next = if self.sampler.greedy() {
+                Engine::argmax(&out.logits)
+            } else {
+                let q = self.sampler.dist(&out.logits, &self.rep_ctx(&proposed));
+                let t = Sampler::pick(&q, self.sampler.u_at(base + proposed.len()));
+                q_dists.push(q);
+                t
+            };
             let prob = Engine::top_prob(&out.logits);
             proposed.push(next);
             self.corr_candidates = Engine::top_k(&out.logits, self.cfg.top_k.max(1));
@@ -513,17 +661,22 @@ impl<'e> Session<'e> {
         shallow.extend_from_slice(&out.shallow);
         self.bonus_candidates = Engine::top_k(&out.logits, self.cfg.top_k.max(1));
         let steps = proposed.len() + 1;
-        Ok((proposed, shallow, steps))
+        Ok((proposed, shallow, steps, q_dists))
     }
 
     /// Draft a candidate branch on cloned device KVs: `base` assumed at
-    /// absolute position `write_pos` (commit depth `assumed_rows`).
+    /// absolute position `write_pos` (commit depth `assumed_rows`), with
+    /// `assumed_emitted` the in-round tokens the branch assumes committed
+    /// (d_1..d_a plus `base`) — needed so sampled branch proposals use the
+    /// exact rep-penalty context and positions the adopting round will
+    /// have, keeping PD hits bit-identical to live redrafting.
     fn draft_branch(
         &self,
         base: TokenId,
         assumed_rows: usize,
         write_pos: usize,
         lambda: usize,
+        assumed_emitted: &[TokenId],
     ) -> Result<PreDraft> {
         let mut spos = self.dev.spos;
         let mut apos = self.dev.apos;
@@ -539,11 +692,23 @@ impl<'e> Session<'e> {
         };
         let mut proposed = Vec::new();
         let mut shallow = Vec::new();
+        let mut q_dists: Vec<Vec<f64>> = Vec::new();
         let mut cur = base;
+        // If adopted, branch proposal i commits at this position + i.
+        let base_ctx = self.ctx.len() + assumed_rows;
         for _ in 0..lambda {
             let out = self.engine.draft_step(&mut dev, cur)?;
             shallow.extend_from_slice(&out.shallow);
-            let next = Engine::argmax(&out.logits);
+            let next = if self.sampler.greedy() {
+                Engine::argmax(&out.logits)
+            } else {
+                let mut rep: Vec<TokenId> = assumed_emitted.to_vec();
+                rep.extend_from_slice(&proposed);
+                let q = self.sampler.dist(&out.logits, &self.rep_ctx(&rep));
+                let t = Sampler::pick(&q, self.sampler.u_at(base_ctx + proposed.len()));
+                q_dists.push(q);
+                t
+            };
             let prob = Engine::top_prob(&out.logits);
             proposed.push(next);
             cur = next;
@@ -562,6 +727,7 @@ impl<'e> Session<'e> {
             assumed_rows,
             proposed,
             shallow,
+            q_dists,
             skv: dev.skv,
             akv: dev.akv,
             steps,
@@ -596,7 +762,11 @@ impl<'e> Session<'e> {
         let hidden = self.engine.device_input(&mut self.dev, &[d0])?;
         let deep = self.engine.cloud_middle(&mut self.cloud, &hidden)?;
         let logits = self.engine.head(&deep)?;
-        let next = Engine::argmax(&logits);
+        let next = if self.sampler.greedy() {
+            Engine::argmax(&logits)
+        } else {
+            self.p_sample_row(&logits, &[], self.ctx.len())
+        };
         self.dev.spos.commit(1);
         self.cloud.pos.commit(1);
         self.last_deep = deep;
@@ -627,18 +797,33 @@ impl<'e> Session<'e> {
         let logits = self.engine.head(&deep)?;
 
         let k = proposed.len();
+        let base = self.ctx.len();
+        let greedy = self.sampler.greedy();
+        // The heads always draft greedily, but with sampling active the
+        // acceptance couples to the target's seeded sample (in both verify
+        // modes — head proposals carry no q-distribution, so rejection
+        // sampling does not apply), keeping the stochastic stream
+        // token-identical to direct seeded sampling.
+        let target = |row: &[f32], prefix: &[TokenId], pos: usize| {
+            if greedy { Engine::argmax(row) } else { self.p_sample_row(row, prefix, pos) }
+        };
         let mut accepted = 0;
+        let mut correction = None;
         while accepted < k {
             let row = &logits[accepted * v..(accepted + 1) * v];
-            if Engine::argmax(row) == proposed[accepted] {
+            let t = target(row, &proposed[..accepted], base + accepted);
+            if t == proposed[accepted] {
                 accepted += 1;
             } else {
+                correction = Some(t);
                 break;
             }
         }
+        let next_d0 = correction.unwrap_or_else(|| {
+            let row = &logits[accepted * v..(accepted + 1) * v];
+            target(row, &proposed[..accepted], base + accepted)
+        });
         let mut emitted: Vec<TokenId> = proposed[..accepted].to_vec();
-        let row = &logits[accepted * v..(accepted + 1) * v];
-        let next_d0 = Engine::argmax(row);
         emitted.push(next_d0);
         let committed_rows = accepted + 1;
         self.last_deep = deep[(committed_rows - 1) * h..committed_rows * h].to_vec();
@@ -840,6 +1025,126 @@ mod tests {
         let n = a.ctx.len().min(b.ctx.len());
         assert!(n > prompt.len() + 4, "sessions made no decode progress");
         assert_eq!(a.ctx[..n], b.ctx[..n], "abort changed the greedy stream");
+    }
+
+    #[test]
+    fn stochastic_coupled_hat_matches_direct_seeded_sampling() {
+        // The coupled-verification losslessness oracle at module level:
+        // with temperature > 0 the speculative stream is token-identical
+        // to direct (u-shape) seeded sampling from the target model.
+        let engine = Engine::synthetic();
+        let cfg = SpecDecConfig {
+            temperature: 0.9,
+            top_p: 0.95,
+            rep_penalty: 1.1,
+            seed: 1234,
+            ..SpecDecConfig::default()
+        };
+        let prompt = [7u32, 3, 200, 41, 5];
+
+        let mut direct = Session::new(&engine, cfg.clone()).unwrap();
+        let t1 = direct.prefill(&prompt, &[prompt.len()]).unwrap();
+        let mut want = vec![t1];
+        for _ in 0..20 {
+            want.push(direct.ushape_step().unwrap());
+        }
+
+        let mut spec = Session::new(&engine, cfg).unwrap();
+        let t1b = spec.prefill(&prompt, &[prompt.len()]).unwrap();
+        assert_eq!(t1b, t1);
+        let mut got = vec![t1b];
+        while got.len() < want.len() {
+            got.extend(spec.hat_round(true, 4).unwrap().emitted);
+        }
+        got.truncate(want.len());
+        assert_eq!(got, want, "coupled speculative sampling diverged from direct sampling");
+    }
+
+    #[test]
+    fn rejection_mode_rounds_are_deterministic_and_budget_safe() {
+        // Rejection sampling is distribution- (not token-) identical to
+        // direct sampling, but it must still be bit-reproducible under a
+        // fixed seed and respect the round invariants.
+        let engine = Engine::synthetic();
+        let cfg = SpecDecConfig {
+            temperature: 0.8,
+            verify_mode: SampleVerify::Rejection,
+            seed: 42,
+            ..SpecDecConfig::default()
+        };
+        let prompt = [5u32, 9, 2, 14];
+        let run = || {
+            let mut s = Session::new(&engine, cfg.clone()).unwrap();
+            let t1 = s.prefill(&prompt, &[prompt.len()]).unwrap();
+            let mut out = vec![t1];
+            for _ in 0..6 {
+                let r = s.hat_round(true, 4).unwrap();
+                assert_eq!(r.emitted.len(), r.accepted + 1);
+                out.extend_from_slice(&r.emitted);
+            }
+            out
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "same-seed rejection sampling must be bit-identical");
+        assert!(a.iter().all(|&t| (t as usize) < engine.spec().vocab));
+    }
+
+    #[test]
+    fn stochastic_stream_is_invariant_to_round_shape_and_aborts() {
+        // Position-keyed draws: capping budgets and aborting staged rounds
+        // must not change the coupled stochastic stream, exactly as for
+        // the greedy stream.
+        let engine = Engine::synthetic();
+        let cfg = SpecDecConfig { temperature: 1.0, top_p: 0.9, seed: 7, ..SpecDecConfig::default() };
+        let prompt = [11u32, 42, 250, 8];
+
+        let gen = |budget: &mut dyn FnMut(usize) -> usize, abort_at: Option<usize>| {
+            let mut s = Session::new(&engine, cfg.clone()).unwrap();
+            let t1 = s.prefill(&prompt, &[prompt.len()]).unwrap();
+            let mut out = vec![t1];
+            let mut round = 0;
+            while out.len() < 16 {
+                if Some(round) == abort_at {
+                    s.verify_begin(true, 4, usize::MAX).unwrap();
+                    s.abort_staged();
+                }
+                let r = s.hat_round_capped(true, 4, budget(out.len())).unwrap();
+                out.extend_from_slice(&r.emitted);
+                round += 1;
+            }
+            out.truncate(16);
+            out
+        };
+        let uncapped = gen(&mut |_| usize::MAX, None);
+        let capped = gen(&mut |len| (16 - len).saturating_sub(1).max(1), None);
+        let aborted = gen(&mut |_| usize::MAX, Some(2));
+        assert_eq!(uncapped, capped, "draft budget changed the sampled stream");
+        assert_eq!(uncapped, aborted, "aborting a staged round changed the sampled stream");
+    }
+
+    #[test]
+    fn stochastic_medusa_and_ushape_agree() {
+        // U-Medusa acceptance couples to the same position-keyed target
+        // samples, so its stream equals direct seeded sampling too.
+        let engine = Engine::synthetic();
+        let cfg = SpecDecConfig { temperature: 0.7, top_k_sample: 40, seed: 99, ..SpecDecConfig::default() };
+        let prompt = [3u32, 77, 130, 9, 21];
+
+        let mut direct = Session::new(&engine, cfg.clone()).unwrap();
+        let t1 = direct.prefill(&prompt, &[prompt.len()]).unwrap();
+        let mut want = vec![t1];
+        for _ in 0..14 {
+            want.push(direct.ushape_step().unwrap());
+        }
+
+        let mut med = Session::new(&engine, cfg).unwrap();
+        med.prefill(&prompt, &[prompt.len()]).unwrap();
+        let mut got = vec![t1];
+        while got.len() < want.len() {
+            got.extend(med.medusa_round().unwrap().emitted);
+        }
+        got.truncate(want.len());
+        assert_eq!(got, want, "medusa sampled stream diverged from direct sampling");
     }
 
     #[test]

@@ -112,6 +112,88 @@ pub fn quantile(sample: &[f64], q: f64) -> f64 {
     percentile_sorted(&s, q * 100.0)
 }
 
+/// Upper-tail standard-normal z for α = 0.01 (used with
+/// [`chi2_critical`] for the distribution-identity tests).
+pub const Z_ALPHA_01: f64 = 2.326_347_9;
+
+/// Two-sample KS scale constant c(α) for α = 0.01 (used with
+/// [`ks_critical`]).
+pub const KS_C_ALPHA_01: f64 = 1.628;
+
+/// Two-sample Pearson chi-squared statistic over aligned count
+/// histograms (bin i of `a` and `b` counts the same outcome).  Returns
+/// `(statistic, degrees of freedom)`; empty bins (zero in both samples)
+/// are skipped and don't contribute a degree of freedom.  Under H0
+/// ("both histograms draw from one distribution") the statistic is
+/// asymptotically chi-squared with `bins - 1` dof.
+pub fn chi2_two_sample(a: &[u64], b: &[u64]) -> (f64, usize) {
+    assert_eq!(a.len(), b.len(), "histograms must share bins");
+    let n1: u64 = a.iter().sum();
+    let n2: u64 = b.iter().sum();
+    assert!(n1 > 0 && n2 > 0, "empty sample");
+    let k1 = (n2 as f64 / n1 as f64).sqrt();
+    let k2 = (n1 as f64 / n2 as f64).sqrt();
+    let mut stat = 0.0;
+    let mut bins = 0usize;
+    for (&x, &y) in a.iter().zip(b) {
+        let t = x + y;
+        if t == 0 {
+            continue;
+        }
+        bins += 1;
+        let d = k1 * x as f64 - k2 * y as f64;
+        stat += d * d / t as f64;
+    }
+    (stat, bins.saturating_sub(1))
+}
+
+/// Upper-tail chi-squared critical value via the Wilson–Hilferty cube
+/// approximation: `chi2_{1-α}(k) ≈ k·(1 - 2/9k + z_{1-α}·sqrt(2/9k))³`
+/// — accurate to a few percent for k ≥ 3, which is all the equivalence
+/// harness needs (a slightly loose critical value only makes the test
+/// marginally more permissive).
+pub fn chi2_critical(dof: usize, z: f64) -> f64 {
+    assert!(dof > 0, "chi2 needs >= 1 dof");
+    let k = dof as f64;
+    let c = 1.0 - 2.0 / (9.0 * k) + z * (2.0 / (9.0 * k)).sqrt();
+    k * c.powi(3)
+}
+
+/// Two-sample Kolmogorov–Smirnov statistic: sup |F_a - F_b| over the
+/// empirical CDFs.  For discrete data (token ids) the usual critical
+/// values are conservative, which is the safe direction for an
+/// equivalence check.
+pub fn ks_two_sample(a: &[f64], b: &[f64]) -> f64 {
+    assert!(!a.is_empty() && !b.is_empty(), "empty sample");
+    let mut x = a.to_vec();
+    let mut y = b.to_vec();
+    x.sort_by(|p, q| p.partial_cmp(q).unwrap());
+    y.sort_by(|p, q| p.partial_cmp(q).unwrap());
+    let (n, m) = (x.len(), y.len());
+    let (mut i, mut j, mut d) = (0usize, 0usize, 0.0f64);
+    while i < n && j < m {
+        let v = x[i].min(y[j]);
+        while i < n && x[i] <= v {
+            i += 1;
+        }
+        while j < m && y[j] <= v {
+            j += 1;
+        }
+        let gap = (i as f64 / n as f64 - j as f64 / m as f64).abs();
+        if gap > d {
+            d = gap;
+        }
+    }
+    d
+}
+
+/// KS rejection threshold `c(α)·sqrt((n+m)/(n·m))`; reject H0 when the
+/// statistic exceeds it.
+pub fn ks_critical(n: usize, m: usize, c_alpha: f64) -> f64 {
+    assert!(n > 0 && m > 0);
+    c_alpha * ((n + m) as f64 / (n as f64 * m as f64)).sqrt()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,5 +247,60 @@ mod tests {
     fn quantile_median() {
         let sample = [10.0, 20.0, 30.0];
         assert!((quantile(&sample, 0.5) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chi2_accepts_same_distribution_and_rejects_different() {
+        use crate::util::rng::Rng;
+        let draw = |seed: u64, w: &[f64], n: usize| -> Vec<u64> {
+            let mut rng = Rng::new(seed);
+            let mut h = vec![0u64; w.len()];
+            let total: f64 = w.iter().sum();
+            for _ in 0..n {
+                let mut u = rng.f64() * total;
+                for (i, &wi) in w.iter().enumerate() {
+                    u -= wi;
+                    if u < 0.0 {
+                        h[i] += 1;
+                        break;
+                    }
+                }
+            }
+            h
+        };
+        let w = [1.0, 2.0, 4.0, 2.0, 1.0];
+        let a = draw(1, &w, 5000);
+        let b = draw(2, &w, 5000);
+        let (stat, dof) = chi2_two_sample(&a, &b);
+        assert!(stat < chi2_critical(dof, Z_ALPHA_01), "same dist rejected: {stat} (dof {dof})");
+        let c = draw(3, &[4.0, 2.0, 1.0, 2.0, 4.0], 5000);
+        let (stat, dof) = chi2_two_sample(&a, &c);
+        assert!(stat > chi2_critical(dof, Z_ALPHA_01), "different dists accepted: {stat}");
+    }
+
+    #[test]
+    fn chi2_critical_matches_tables() {
+        // chi2_{0.99}: k=5 → 15.086, k=10 → 23.209, k=50 → 76.154.
+        assert!((chi2_critical(5, Z_ALPHA_01) - 15.086).abs() < 0.15);
+        assert!((chi2_critical(10, Z_ALPHA_01) - 23.209).abs() < 0.15);
+        assert!((chi2_critical(50, Z_ALPHA_01) - 76.154).abs() < 0.3);
+    }
+
+    #[test]
+    fn ks_accepts_same_distribution_and_rejects_shifted() {
+        use crate::util::rng::Rng;
+        let sample = |seed: u64, shift: f64| -> Vec<f64> {
+            let mut rng = Rng::new(seed);
+            (0..2000).map(|_| rng.f64() + shift).collect()
+        };
+        let a = sample(1, 0.0);
+        let b = sample(2, 0.0);
+        let d = ks_two_sample(&a, &b);
+        assert!(d < ks_critical(a.len(), b.len(), KS_C_ALPHA_01), "same dist rejected: {d}");
+        let c = sample(3, 0.2);
+        let d = ks_two_sample(&a, &c);
+        assert!(d > ks_critical(a.len(), c.len(), KS_C_ALPHA_01), "shifted accepted: {d}");
+        // Exactly identical samples → D = 0.
+        assert_eq!(ks_two_sample(&a, &a), 0.0);
     }
 }

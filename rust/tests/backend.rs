@@ -259,6 +259,35 @@ fn hat_output_is_invariant_to_prefill_chunking() {
 }
 
 #[test]
+fn temperature_zero_ignores_all_other_sampling_knobs() {
+    // temperature = 0 short-circuits the sampler to the original argmax
+    // path before any knob is consulted, so a config with aggressive
+    // top-k / top-p / repetition-penalty / seed settings must still be
+    // bit-identical to the all-defaults greedy stream.
+    let p = prompt(36, 13);
+    let run = |cfg: SpecDecConfig| -> Vec<u32> {
+        let e = Engine::synthetic();
+        let mut s = Session::new(&e, cfg).unwrap();
+        s.prefill(&p, &chunk_sizes(p.len(), 12)).unwrap();
+        while s.generated() < 20 {
+            s.hat_round(true, 4).unwrap();
+        }
+        s.ctx.clone()
+    };
+    let greedy = run(SpecDecConfig::default());
+    let knobbed = run(SpecDecConfig {
+        temperature: 0.0,
+        top_k_sample: 5,
+        top_p: 0.5,
+        rep_penalty: 1.4,
+        seed: 999,
+        ..SpecDecConfig::default()
+    });
+    let n = p.len() + 20;
+    assert_eq!(&greedy[..n], &knobbed[..n], "sampling knobs leaked into the greedy path");
+}
+
+#[test]
 fn ushape_and_medusa_rounds_run_on_reference_backend() {
     let e = Engine::synthetic();
     let p = prompt(32, 3);

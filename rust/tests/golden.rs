@@ -10,6 +10,12 @@
 //! - speculative decoding (HAT rounds), U-shape decode and U-Medusa rounds
 //!   are all *lossless* under greedy decoding;
 //! - KV rollback of rejected draft tokens never corrupts the stream.
+//!
+//! Every session here uses `SpecDecConfig::default()` — temperature 0 —
+//! so the stochastic-sampling machinery is provably inert on this path
+//! (`Sampler::greedy()` short-circuits to the original argmax code).
+//! The seeded-sampling losslessness oracles live in
+//! tests/sampling_stats.rs against the reference backend.
 
 use std::path::PathBuf;
 

@@ -142,6 +142,9 @@ fn failure_injection_bad_configs_are_rejected() {
         "workload.rate = 0\n",
         "[cloud]\npipeline_len = 0\n",
         "[specdec]\neta = 1.5\n",
+        "[specdec]\ntemperature = -1\n",
+        "[specdec]\ntop_p = 0\n",
+        "[specdec]\nrep_penalty = 0\n",
         "[workload]\nmin_prompt = 100\nmax_prompt = 10\n",
         "unknown_key = 1\n",
     ] {

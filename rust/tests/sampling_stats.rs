@@ -1,0 +1,285 @@
+//! Statistical and seeded-identity oracles for stochastic speculative
+//! sampling on the reference backend.
+//!
+//! Two kinds of losslessness are certified:
+//!
+//! 1. **Token identity** (`SampleVerify::Coupled`, the default): for a
+//!    grid of ≥ 100 `(seed, prompt, temperature, top_p)` cases, the
+//!    speculative HAT stream is token-identical to direct (u-shape)
+//!    seeded sampling from the target model.
+//! 2. **Distribution identity** (`SampleVerify::Rejection`): the
+//!    marginal next-token distribution of speculative sampling matches
+//!    direct sampling — two-sample chi-squared and Kolmogorov–Smirnov
+//!    tests at α = 0.01 over seeded draws.  Smoke-sized versions run in
+//!    tier-1; the ≥ 10k-draw versions are `#[ignore]` and run in the
+//!    dedicated CI statistical-equivalence job with `--release`.
+//!
+//! All seeds are fixed, so every verdict here is deterministic.
+
+use hat::config::{SampleVerify, SpecDecConfig};
+use hat::engine::Engine;
+use hat::specdec::Session;
+use hat::util::proptest::{cases, forall};
+use hat::util::stats::{
+    chi2_critical, chi2_two_sample, ks_critical, ks_two_sample, KS_C_ALPHA_01, Z_ALPHA_01,
+};
+
+/// Direct seeded sampling: prefill + `n` u-shape steps (one target-model
+/// token per step).  The reference stream speculative decoding must match.
+fn direct_stream(engine: &Engine, cfg: &SpecDecConfig, prompt: &[u32], n: usize) -> Vec<u32> {
+    let mut s = Session::new(engine, cfg.clone()).unwrap();
+    let t1 = s.prefill(prompt, &[prompt.len()]).unwrap();
+    let mut out = vec![t1];
+    for _ in 1..n {
+        out.push(s.ushape_step().unwrap());
+    }
+    out
+}
+
+/// Speculative seeded sampling: prefill + HAT rounds (parallel drafting
+/// on) until `n` tokens, truncated to `n`.
+fn speculative_stream(engine: &Engine, cfg: &SpecDecConfig, prompt: &[u32], n: usize) -> Vec<u32> {
+    let mut s = Session::new(engine, cfg.clone()).unwrap();
+    let t1 = s.prefill(prompt, &[prompt.len()]).unwrap();
+    let mut out = vec![t1];
+    while out.len() < n {
+        let budget = (n - out.len()).saturating_sub(1).max(1);
+        out.extend(s.hat_round_capped(true, 4, budget).unwrap().emitted);
+    }
+    out.truncate(n);
+    out
+}
+
+#[test]
+fn coupled_speculative_is_token_identical_over_a_100_case_grid() {
+    let engine = Engine::synthetic();
+    let prompts: [&[u32]; 2] = [&[7, 3, 200, 41, 5], &[1, 99, 250, 12, 63, 17, 88]];
+    let mut n_cases = 0;
+    for seed in [11u64, 29, 47, 83, 131] {
+        for (pi, prompt) in prompts.iter().enumerate() {
+            for &temperature in &[0.3, 0.7, 1.0, 1.4] {
+                for &top_p in &[1.0, 0.9, 0.7] {
+                    let cfg = SpecDecConfig {
+                        temperature,
+                        top_p,
+                        rep_penalty: 1.1,
+                        seed,
+                        ..SpecDecConfig::default()
+                    };
+                    let want = direct_stream(&engine, &cfg, prompt, 12);
+                    let got = speculative_stream(&engine, &cfg, prompt, 12);
+                    assert_eq!(
+                        got, want,
+                        "coupled sampling diverged: seed={seed} prompt#{pi} T={temperature} top_p={top_p}"
+                    );
+                    n_cases += 1;
+                }
+            }
+        }
+    }
+    assert!(n_cases >= 100, "oracle grid too small: {n_cases}");
+}
+
+#[test]
+fn temperature_zero_degenerates_to_greedy_argmax() {
+    // temperature = 0 with any other sampling knobs set must reproduce
+    // the default (greedy) stream bit-for-bit — no draws are consumed.
+    let engine = Engine::synthetic();
+    let prompt = [5u32, 9, 2, 14, 77];
+    let greedy = SpecDecConfig::default();
+    let zero = SpecDecConfig {
+        temperature: 0.0,
+        top_k_sample: 5,
+        top_p: 0.5,
+        rep_penalty: 1.4,
+        seed: 999,
+        ..SpecDecConfig::default()
+    };
+    assert_eq!(
+        speculative_stream(&engine, &zero, &prompt, 16),
+        speculative_stream(&engine, &greedy, &prompt, 16),
+    );
+    assert_eq!(
+        direct_stream(&engine, &zero, &prompt, 16),
+        direct_stream(&engine, &greedy, &prompt, 16),
+    );
+}
+
+/// One (speculative, direct) pair of next-token draws for `seed`: the
+/// first *stochastically emitted* token after an identical seeded prefix.
+/// Both sessions share the seed, so their contexts match exactly and the
+/// two draws target the same per-seed distribution p — making the
+/// mixtures over seeds identical under H0.
+fn marginal_pair(engine: &Engine, base: &SpecDecConfig, seed: u64) -> (u32, u32) {
+    let cfg = SpecDecConfig { seed, ..base.clone() };
+    let prompt = [3u32, 17, 121];
+    let mut spec = Session::new(engine, cfg.clone()).unwrap();
+    spec.prefill(&prompt, &[prompt.len()]).unwrap();
+    let spec_tok = spec.hat_round(true, 4).unwrap().emitted[0];
+    let mut direct = Session::new(engine, cfg).unwrap();
+    direct.prefill(&prompt, &[prompt.len()]).unwrap();
+    let direct_tok = direct.ushape_step().unwrap();
+    (spec_tok, direct_tok)
+}
+
+/// Chi-squared + KS equivalence of the speculative vs direct marginals
+/// over `n` seeded draws, with token ids folded into `bins` histogram
+/// bins (marginal identity implies identity of any fixed binning; coarse
+/// bins keep expected counts high enough for the chi-squared
+/// approximation at smoke sample sizes).
+fn assert_marginals_match(mode: SampleVerify, n: u64, bins: usize, seed0: u64) {
+    let engine = Engine::synthetic();
+    let vocab = engine.spec().vocab;
+    let base = SpecDecConfig {
+        temperature: 0.8,
+        top_p: 0.95,
+        verify_mode: mode,
+        ..SpecDecConfig::default()
+    };
+    let mut spec_hist = vec![0u64; bins];
+    let mut direct_hist = vec![0u64; bins];
+    let mut spec_ids = Vec::new();
+    let mut direct_ids = Vec::new();
+    for i in 0..n {
+        let (s, d) = marginal_pair(&engine, &base, seed0 + i);
+        assert!((s as usize) < vocab && (d as usize) < vocab);
+        spec_hist[s as usize * bins / vocab] += 1;
+        direct_hist[d as usize * bins / vocab] += 1;
+        spec_ids.push(s as f64);
+        direct_ids.push(d as f64);
+    }
+    let (stat, dof) = chi2_two_sample(&spec_hist, &direct_hist);
+    let crit = chi2_critical(dof.max(1), Z_ALPHA_01);
+    assert!(
+        stat < crit,
+        "chi2 rejects speculative==direct at alpha=0.01: stat={stat:.2} crit={crit:.2} dof={dof}"
+    );
+    let d = ks_two_sample(&spec_ids, &direct_ids);
+    let kcrit = ks_critical(spec_ids.len(), direct_ids.len(), KS_C_ALPHA_01);
+    assert!(d < kcrit, "KS rejects speculative==direct at alpha=0.01: D={d:.4} crit={kcrit:.4}");
+}
+
+#[test]
+fn rejection_marginal_matches_direct_sampling_smoke() {
+    assert_marginals_match(SampleVerify::Rejection, 500, 16, 10_000);
+}
+
+#[test]
+fn coupled_marginal_matches_direct_sampling_smoke() {
+    // Coupled mode is token-identical per seed, so its marginal test is
+    // a tautology — kept as a harness sanity check (stat ~ 0).
+    assert_marginals_match(SampleVerify::Coupled, 300, 16, 20_000);
+}
+
+#[test]
+#[ignore = "10k-draw statistical job: run with --release (CI stat-equiv job)"]
+fn rejection_marginal_matches_direct_sampling_10k() {
+    assert_marginals_match(SampleVerify::Rejection, 10_000, 256, 1);
+}
+
+#[test]
+#[ignore = "10k-draw statistical job: run with --release (CI stat-equiv job)"]
+fn rejection_marginal_matches_direct_sampling_10k_sharper_nucleus() {
+    let engine = Engine::synthetic();
+    let vocab = engine.spec().vocab;
+    let base = SpecDecConfig {
+        temperature: 1.2,
+        top_p: 0.8,
+        top_k_sample: 32,
+        rep_penalty: 1.2,
+        verify_mode: SampleVerify::Rejection,
+        ..SpecDecConfig::default()
+    };
+    let mut spec_hist = vec![0u64; vocab];
+    let mut direct_hist = vec![0u64; vocab];
+    for i in 0..10_000u64 {
+        let (s, d) = marginal_pair(&engine, &base, 500_000 + i);
+        spec_hist[s as usize] += 1;
+        direct_hist[d as usize] += 1;
+    }
+    let (stat, dof) = chi2_two_sample(&spec_hist, &direct_hist);
+    let crit = chi2_critical(dof.max(1), Z_ALPHA_01);
+    assert!(stat < crit, "chi2 rejects: stat={stat:.2} crit={crit:.2} dof={dof}");
+}
+
+#[test]
+#[ignore = "large coupled grid: run with --release (CI stat-equiv job)"]
+fn coupled_token_identity_holds_across_many_seeds() {
+    // Deeper streams and many more seeds than the tier-1 grid.
+    let engine = Engine::synthetic();
+    let prompt = [9u32, 1, 77, 130];
+    for seed in 0..200u64 {
+        let cfg = SpecDecConfig {
+            temperature: 1.0,
+            top_p: 0.9,
+            rep_penalty: 1.15,
+            seed,
+            ..SpecDecConfig::default()
+        };
+        let want = direct_stream(&engine, &cfg, &prompt, 40);
+        let got = speculative_stream(&engine, &cfg, &prompt, 40);
+        assert_eq!(got, want, "seed {seed} diverged");
+    }
+}
+
+#[test]
+fn prop_pick_frequencies_match_the_distribution() {
+    // The inverse-CDF sampler itself: empirical frequencies of 4000
+    // uniform-driven picks from a random 8-bin distribution agree with
+    // expected counts (chi-squared against the exact expectation).
+    use hat::util::rng::Rng;
+    forall(cases(20), |rng| {
+        let k = rng.range_usize(3, 8);
+        let w: Vec<f64> = (0..k).map(|_| rng.range_f64(0.2, 2.0)).collect();
+        let total: f64 = w.iter().sum();
+        let dist: Vec<f64> = w.iter().map(|x| x / total).collect();
+        let n = 4000u64;
+        let mut got = vec![0u64; k];
+        let mut draws = Rng::new(rng.next_u64());
+        for _ in 0..n {
+            got[hat::sampler::Sampler::pick(&dist, draws.f64()) as usize] += 1;
+        }
+        // One-sample chi-squared against the exact expected counts.
+        let mut stat = 0.0;
+        for i in 0..k {
+            let e = dist[i] * n as f64;
+            stat += (got[i] as f64 - e).powi(2) / e;
+        }
+        let crit = chi2_critical(k - 1, Z_ALPHA_01);
+        if stat >= crit {
+            return Err(format!("pick frequencies off: stat={stat:.2} crit={crit:.2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rejection_round_output_is_in_processed_support() {
+    // Every emitted token of a rejection-mode round lies in the vocab and
+    // rounds always emit accepted+1 tokens (residual fallback included).
+    let engine = Engine::synthetic();
+    forall(cases(30), |rng| {
+        let cfg = SpecDecConfig {
+            temperature: rng.range_f64(0.3, 1.5),
+            top_p: rng.range_f64(0.5, 1.0),
+            top_k_sample: rng.range_usize(0, 64),
+            rep_penalty: rng.range_f64(1.0, 1.5),
+            seed: rng.next_u64(),
+            verify_mode: SampleVerify::Rejection,
+            ..SpecDecConfig::default()
+        };
+        let prompt: Vec<u32> = (0..rng.range_usize(2, 8)).map(|_| rng.below(256) as u32).collect();
+        let mut s = Session::new(&engine, cfg).unwrap();
+        s.prefill(&prompt, &[prompt.len()]).unwrap();
+        for _ in 0..3 {
+            let r = s.hat_round(true, 4).unwrap();
+            if r.emitted.len() != r.accepted + 1 {
+                return Err(format!("round emitted {} != accepted+1", r.emitted.len()));
+            }
+            if r.emitted.iter().any(|&t| (t as usize) >= engine.spec().vocab) {
+                return Err("token outside vocab".into());
+            }
+        }
+        Ok(())
+    });
+}

@@ -11,7 +11,7 @@ use std::time::{Duration, Instant};
 
 use hat::backend::reference::ReferenceBackend;
 use hat::backend::{ExecBackend, RuntimeStats, Tensor};
-use hat::config::{ServeConfig, SpecDecConfig};
+use hat::config::{SampleVerify, ServeConfig, SpecDecConfig};
 use hat::engine::Engine;
 use hat::runtime::{ArtifactRegistry, Manifest};
 use hat::server::scheduler::{ReplyHandle, Request, Scheduler};
@@ -102,6 +102,8 @@ fn concurrent_tcp_clients_match_serial_runs() {
         "ttft_ms=",
         "tbt_ms=",
         "accept=",
+        "accept_hist=",
+        "seed=0",
         "chunk_mean=",
         "batch_mean=",
         "fallbacks=0",
@@ -520,6 +522,151 @@ fn prop_slot_epoch_identity_under_cancellation_churn() {
         "every case seeds one live cancel, so every case must drop at \
          least one stale job (saw {total_stale} across 10 cases)"
     );
+}
+
+/// Seeded stochastic sessions are token-identical across scheduler
+/// interleavings: with temperature > 0, each concurrently-scheduled
+/// session's reply must still equal a serial seeded `generate()` run —
+/// in the coupled mode *and* in the rejection mode (the scheduler's
+/// per-round draft budget formula matches `generate()`'s, so round
+/// shapes — and hence rejection-mode draws — line up too).  This proves
+/// the sampler RNG is per-session position-keyed, not per-iteration.
+#[test]
+fn stochastic_sessions_are_token_identical_across_interleavings() {
+    let engine = Engine::synthetic();
+    let vocab = engine.spec().vocab;
+    for mode in [SampleVerify::Coupled, SampleVerify::Rejection] {
+        let spec = SpecDecConfig {
+            temperature: 0.8,
+            top_p: 0.95,
+            rep_penalty: 1.1,
+            seed: 77,
+            verify_mode: mode,
+            ..SpecDecConfig::default()
+        };
+        let mut rng = Rng::new(21);
+        let reqs: Vec<(Vec<u32>, usize)> = (0..4)
+            .map(|i| (prompt_of(&mut rng, 12 + 11 * i, vocab), 6 + 4 * i))
+            .collect();
+        let expected: Vec<String> = reqs
+            .iter()
+            .map(|(p, m)| generate(&engine, p, *m, &spec).unwrap().reply_line())
+            .collect();
+
+        let cfg = ServeConfig { max_sessions: 4, ..ServeConfig::default() };
+        let mut sched = Scheduler::new(&engine, spec, cfg);
+        let mut rxs = Vec::new();
+        for (p, m) in &reqs {
+            let (r, rx) = request(p.clone(), *m);
+            sched.submit(r);
+            rxs.push(rx);
+        }
+        let mut guard = 0;
+        while sched.has_work() {
+            assert!(sched.step() > 0, "scheduler idle with pending work");
+            guard += 1;
+            assert!(guard < 20_000, "scheduler failed to drain");
+        }
+        for (i, (rx, want)) in rxs.iter().zip(&expected).enumerate() {
+            let got = rx.recv().unwrap();
+            assert_eq!(&got, want, "session {i} ({mode:?}): interleaved stochastic stream diverged");
+        }
+        assert_eq!(sched.stats.sampler_seed, 77, "STATS seed must mirror the config");
+        assert_eq!(
+            sched.stats.accept_hist.iter().sum::<u64>() as usize,
+            sched.stats.rounds,
+            "every verify round must land in the acceptance histogram"
+        );
+    }
+}
+
+/// PR 5's cancellation-churn oracle, under stochastic sampling: randomly
+/// interleaved submits, cancels, and steps with temperature > 0 — every
+/// surviving reply must equal the serial seeded `generate()` run, and
+/// cancelled requests reply `ERR cancelled` exactly once.  Cancel/reap
+/// churn frees and re-admits slots, so passing proves sampler state is
+/// per-session (position-keyed), surviving slot reuse and epoch churn.
+#[test]
+fn prop_stochastic_survivors_match_serial_under_cancellation_churn() {
+    let engine = Engine::synthetic();
+    let spec = SpecDecConfig {
+        temperature: 1.0,
+        top_p: 0.9,
+        rep_penalty: 1.2,
+        seed: 5,
+        ..SpecDecConfig::default()
+    };
+    let vocab = engine.spec().vocab;
+    forall(cases(6), |rng| {
+        let cfg = ServeConfig {
+            max_sessions: rng.range_usize(1, 3),
+            prefill_budget: rng.range_usize(32, 256),
+            ..ServeConfig::default()
+        };
+        let mut sched = Scheduler::new(&engine, spec.clone(), cfg);
+        let mut items: Vec<(u64, Vec<u32>, usize, mpsc::Receiver<String>, bool)> = Vec::new();
+
+        // Seed the slot-reuse hazard: admit, step, cancel while live.
+        let prompt = prompt_of(rng, 30, vocab);
+        let (r0, rx0) = request(prompt.clone(), 16);
+        let id0 = r0.id;
+        sched.submit(r0);
+        sched.step();
+        if sched.live_sessions() != 1 {
+            return Err("seed request was not admitted by the first step".into());
+        }
+        if !sched.cancel(id0) {
+            return Err("live seed request refused cancellation".into());
+        }
+        items.push((id0, prompt, 16, rx0, true));
+
+        for _ in 0..rng.range_usize(3, 6) {
+            let prompt = prompt_of(rng, rng.range_usize(4, 40), vocab);
+            let max_new = rng.range_usize(2, 16);
+            let (r, rx) = request(prompt.clone(), max_new);
+            let id = r.id;
+            sched.submit(r);
+            items.push((id, prompt, max_new, rx, false));
+            for _ in 0..rng.range_usize(0, 3) {
+                sched.step();
+            }
+            if rng.bool(0.5) {
+                let k = rng.below(items.len());
+                let (id, _, _, _, cancelled) = &mut items[k];
+                if !*cancelled && sched.cancel(*id) {
+                    *cancelled = true;
+                }
+            }
+        }
+        let mut guard = 0usize;
+        while sched.has_work() {
+            if sched.step() == 0 {
+                return Err("scheduler idle with admitted work".into());
+            }
+            guard += 1;
+            if guard > 20_000 {
+                return Err("scheduler failed to drain".into());
+            }
+        }
+        for (id, prompt, max_new, rx, cancelled) in &items {
+            let line = rx.try_recv().map_err(|_| format!("request {id} got no reply"))?;
+            if *cancelled {
+                if line != "ERR cancelled" {
+                    return Err(format!("cancelled request {id} replied {line:?}"));
+                }
+            } else {
+                let want = generate(&engine, prompt, *max_new, &spec)
+                    .map_err(|e| e.to_string())?
+                    .reply_line();
+                if line != want {
+                    return Err(format!(
+                        "surviving stochastic request {id} diverged under churn: {line:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 /// TCP-level disconnect reaping: a client that drops its connection
