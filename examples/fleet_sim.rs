@@ -42,11 +42,11 @@ fn main() -> anyhow::Result<()> {
     let gen_len = 32;
     let mut latencies = Vec::new();
     let mut tokens_out = 0usize;
-    let t_all = std::time::Instant::now();
+    let t_all = hat::util::clock::now();
     for i in 0..n_requests {
         let plen = 48 + (i * 37) % 128;
         let prompt = pool.sample(plen, &mut rng);
-        let t0 = std::time::Instant::now();
+        let t0 = hat::util::clock::now();
         let gen = generate(&engine, &prompt, gen_len, &SpecDecConfig::default())?;
         let dt = t0.elapsed().as_secs_f64();
         latencies.push(dt * 1e3);

@@ -16,7 +16,7 @@ use hat::workload::PromptPool;
 
 fn main() -> anyhow::Result<()> {
     let dir = ArtifactRegistry::default_dir();
-    let t0 = std::time::Instant::now();
+    let t0 = hat::util::clock::now();
     let engine = Engine::load_default()?;
     println!(
         "loaded {} backend ({} artifacts, {} LLM params, Λ {} params) in {:.1}s",
@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
     // Dynamic chunking would ask the cloud's Eq. 3 optimizer; standalone we
     // chunk at 32 (what the optimizer picks for a mid-load cloud).
     let chunks = chunk_sizes(prompt.len(), 32);
-    let t0 = std::time::Instant::now();
+    let t0 = hat::util::clock::now();
     let first = session.prefill(&prompt, &chunks)?;
     println!(
         "prefill: {} chunks -> first token {first} in {:.0} ms (real CPU time)",
@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
     let mut generated = vec![first];
     let mut rounds = 0;
     let mut pd_hits = 0;
-    let t0 = std::time::Instant::now();
+    let t0 = hat::util::clock::now();
     while generated.len() < 48 {
         let r = session.hat_round(true, 4)?;
         generated.extend_from_slice(&r.emitted);

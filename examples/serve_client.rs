@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
             up = true;
             break;
         }
-        std::thread::sleep(std::time::Duration::from_millis(100));
+        hat::util::clock::sleep(std::time::Duration::from_millis(100));
     }
     anyhow::ensure!(up, "server at {addr} never came up");
     println!("connected to {addr}");

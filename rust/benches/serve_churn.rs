@@ -17,6 +17,10 @@
 //! completes, mean live-client completion latency, and the ON-mode
 //! lifecycle counters.  Writes `BENCH_churn.json`.
 
+// Benches measure real wall time: the util::clock choke point is for the
+// runtime, not for measurement harnesses.
+#![allow(clippy::disallowed_methods)]
+
 use std::sync::mpsc;
 use std::time::Instant;
 

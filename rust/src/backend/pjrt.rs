@@ -68,7 +68,7 @@ impl PjrtBackend {
             .artifact(name)
             .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
         let path = self.dir.join(&spec.file);
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::clock::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -173,7 +173,7 @@ impl ExecBackend for PjrtBackend {
             .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
         validate_inputs(spec, inputs)?;
         let exe = self.executable(name)?;
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::clock::now();
 
         // Mixed-input execute: weights are device-resident buffers, dynamic
         // inputs are staged from host literals per call.

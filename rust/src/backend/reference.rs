@@ -378,7 +378,7 @@ impl ExecBackend for ReferenceBackend {
             .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
         validate_inputs(spec, inputs)?;
         self.compile(name)?;
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::clock::now();
         let outs = self.execute_spec(spec, inputs)?;
         {
             let mut s = self.stats.borrow_mut();
@@ -406,7 +406,7 @@ impl ExecBackend for ReferenceBackend {
             validate_inputs(spec, item)?;
         }
         self.compile(name)?;
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::clock::now();
         let outs: Vec<Vec<Tensor>> = inputs
             .iter()
             .map(|item| self.execute_spec(spec, item))

@@ -83,15 +83,14 @@ impl Batcher {
         while let Some(j) = self.decode_q.pop_front() {
             batch.push(j);
         }
-        while let Some(j) = self.prefill_q.front() {
-            if prefill_tokens == 0 || prefill_tokens + j.tokens <= max_prefill_tokens {
-                let j = self.prefill_q.pop_front().unwrap();
-                prefill_tokens += j.tokens;
-                batch.push(j);
-                if prefill_tokens >= max_prefill_tokens {
-                    break;
-                }
-            } else {
+        while let Some(head) = self.prefill_q.front() {
+            if prefill_tokens > 0 && prefill_tokens + head.tokens > max_prefill_tokens {
+                break;
+            }
+            let Some(j) = self.prefill_q.pop_front() else { break };
+            prefill_tokens += j.tokens;
+            batch.push(j);
+            if prefill_tokens >= max_prefill_tokens {
                 break;
             }
         }

@@ -469,8 +469,17 @@ impl ExperimentConfig {
         if self.workload.n_devices == 0 {
             errs.push("workload.n_devices must be > 0".into());
         }
+        if self.workload.n_requests == 0 {
+            errs.push("workload.n_requests must be > 0".into());
+        }
+        if self.workload.max_new_tokens == 0 {
+            errs.push("workload.max_new_tokens must be > 0".into());
+        }
         if self.cloud.pipeline_len == 0 {
             errs.push("cloud.pipeline_len must be > 0".into());
+        }
+        if self.cloud.max_batch_tokens == 0 {
+            errs.push("cloud.max_batch_tokens must be > 0".into());
         }
         if !(0.0..=1.0).contains(&self.cloud.alpha) {
             errs.push("cloud.alpha must be in [0,1]".into());

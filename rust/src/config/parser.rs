@@ -123,7 +123,9 @@ pub fn build(map: &BTreeMap<String, Scalar>) -> Result<ExperimentConfig, String>
         let us = || v.as_usize().ok_or_else(|| format!("{k} must be a number"));
         let b = || v.as_bool().ok_or_else(|| format!("{k} must be a bool"));
         match k.as_str() {
+            // hatlint: allow(drift-config-validate) enums: Dataset/Framework::parse reject unknowns above
             "dataset" | "framework" => {}
+            // hatlint: allow(drift-config-validate) any u64 is a valid seed
             "seed" => cfg.seed = us()? as u64,
             "min_chunk" => cfg.min_chunk = us()?,
             "max_chunk" => cfg.max_chunk = us()?,
@@ -138,13 +140,17 @@ pub fn build(map: &BTreeMap<String, Scalar>) -> Result<ExperimentConfig, String>
             "cloud.alpha" => cfg.cloud.alpha = num()?,
             "specdec.eta" => cfg.specdec.eta = num()?,
             "specdec.max_draft" => cfg.specdec.max_draft = us()?,
+            // hatlint: allow(drift-config-validate) 0 disables the draft top-k filter
             "specdec.top_k" => cfg.specdec.top_k = us()?,
             "specdec.max_new_tokens" => cfg.specdec.max_new_tokens = us()?,
             "specdec.temperature" => cfg.specdec.temperature = num()?,
+            // hatlint: allow(drift-config-validate) 0 disables top-k sampling truncation
             "specdec.top_k_sample" => cfg.specdec.top_k_sample = us()?,
             "specdec.top_p" => cfg.specdec.top_p = num()?,
             "specdec.rep_penalty" => cfg.specdec.rep_penalty = num()?,
+            // hatlint: allow(drift-config-validate) any u64 is a valid seed
             "specdec.seed" => cfg.specdec.seed = us()? as u64,
+            // hatlint: allow(drift-config-validate) enum: SampleVerify::parse rejects unknowns here
             "specdec.verify_mode" => {
                 let s = v.as_str().ok_or("specdec.verify_mode must be a string")?;
                 cfg.specdec.verify_mode = super::SampleVerify::parse(s)
@@ -156,16 +162,23 @@ pub fn build(map: &BTreeMap<String, Scalar>) -> Result<ExperimentConfig, String>
             "serve.max_chunk" => cfg.serve.max_chunk = us()?,
             "serve.alpha" => cfg.serve.alpha = num()?,
             "serve.pipeline_len" => cfg.serve.pipeline_len = us()?,
+            // hatlint: allow(drift-config-validate) bool toggle, both values valid
             "serve.learned_g" => cfg.serve.learned_g = b()?,
+            // hatlint: allow(drift-config-validate) enum: AdmitPolicy::parse rejects unknowns here
             "serve.policy" => {
                 let s = v.as_str().ok_or("serve.policy must be a string")?;
                 cfg.serve.policy = super::AdmitPolicy::parse(s)
                     .ok_or_else(|| format!("unknown serve.policy {s:?} (fifo|sjf)"))?;
             }
+            // hatlint: allow(drift-config-validate) 0 means every oldest waiter is instantly aged (FIFO)
             "serve.sjf_aging_ms" => cfg.serve.sjf_aging_ms = us()? as u64,
+            // hatlint: allow(drift-config-validate) 0 disables deadlines
             "serve.deadline_ms" => cfg.serve.deadline_ms = us()? as u64,
+            // hatlint: allow(drift-config-validate) bool toggle, both values valid
             "strategies.sd" => cfg.strategies.sd = b()?,
+            // hatlint: allow(drift-config-validate) bool toggle, both values valid
             "strategies.pc" => cfg.strategies.pc = b()?,
+            // hatlint: allow(drift-config-validate) bool toggle, both values valid
             "strategies.pd" => cfg.strategies.pd = b()?,
             _ => return Err(format!("unknown config key '{k}'")),
         }

@@ -78,7 +78,9 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::util::clock;
 
 use crate::cli::Flags;
 use crate::config::{AdmitPolicy, ServeConfig, SpecDecConfig};
@@ -433,7 +435,7 @@ fn handle_conn(
                     prompt,
                     max_new,
                     reply: reply.clone(),
-                    enqueued: Instant::now(),
+                    enqueued: clock::now(),
                 }));
                 let alive = await_reply(
                     &mut stream,
@@ -646,7 +648,7 @@ mod tests {
             prompt: vec![1],
             max_new: 600,
             reply: ReplyHandle::new(tx),
-            enqueued: Instant::now(),
+            enqueued: clock::now(),
         });
         assert_eq!(rx.recv().unwrap(), format!("ERR {parse_err}"));
 
@@ -658,7 +660,7 @@ mod tests {
             prompt: vec![],
             max_new: 4,
             reply: ReplyHandle::new(tx),
-            enqueued: Instant::now(),
+            enqueued: clock::now(),
         });
         assert_eq!(rx.recv().unwrap(), format!("ERR {parse_err}"));
         assert!(!sched.has_work(), "rejected requests must not occupy the queue");
@@ -688,7 +690,7 @@ mod tests {
             prompt: (0u32..64).map(|i| (i * 7 + 3) % 256).collect(),
             max_new: 200,
             reply: ReplyHandle::new(rtx),
-            enqueued: Instant::now(),
+            enqueued: clock::now(),
         }))
         .unwrap();
         drop(rrx);

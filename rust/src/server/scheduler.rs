@@ -51,8 +51,32 @@ use crate::engine::Engine;
 use crate::metrics::ServeStats;
 use crate::model::{CloudStream, TokenId};
 use crate::specdec::Session;
+use crate::util::clock;
 
 use super::Generation;
+
+/// Panic firewall for the serve hot path: run a session/engine call and
+/// convert a panic (backend bug, slipped assert) into an `Err`, so the
+/// existing per-lane failure machinery — ERR reply, serial fallback,
+/// rollback — contains it.  The worker thread owns *every* live session;
+/// an uncaught panic here would not fail one lane, it would take down all
+/// of them and the listener's command channel with it.  State safety
+/// matches the `Err` contract of each wrapped call: the batched engine
+/// calls mutate no lane before success, and `verify_batch`-style rollback
+/// runs in the caller's error arm either way.
+fn catch<T>(what: &str, f: impl FnOnce() -> anyhow::Result<T>) -> anyhow::Result<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "opaque panic payload".to_string());
+            Err(anyhow::anyhow!("panic in {what}: {msg}"))
+        }
+    }
+}
 
 /// Reply channel for one request, with an observable liveness flag.
 ///
@@ -263,17 +287,19 @@ impl<'e> Scheduler<'e> {
     /// finished request does nothing).
     pub fn cancel(&mut self, id: u64) -> bool {
         if let Some(i) = self.waiting.iter().position(|r| r.id == id) {
-            let r = self.waiting.remove(i).expect("position came from this queue");
-            r.reply.send("ERR cancelled".into());
-            self.stats.cancelled += 1;
+            if let Some(r) = self.waiting.remove(i) {
+                r.reply.send("ERR cancelled".into());
+                self.stats.cancelled += 1;
+            }
             return true;
         }
         for slot in self.slots.iter_mut() {
             if slot.as_ref().is_some_and(|a| a.id == id) {
-                let mut a = slot.take().expect("checked occupied");
-                a.sess.abort_staged();
-                a.reply.send("ERR cancelled".into());
-                self.stats.cancelled += 1;
+                if let Some(mut a) = slot.take() {
+                    a.sess.abort_staged();
+                    a.reply.send("ERR cancelled".into());
+                    self.stats.cancelled += 1;
+                }
                 return true;
             }
         }
@@ -365,11 +391,12 @@ impl<'e> Scheduler<'e> {
                 .as_ref()
                 .is_some_and(|a| a.enqueued.elapsed().as_millis() as u64 >= self.cfg.deadline_ms);
             if expired {
-                let mut a = self.slots[i].take().expect("checked occupied");
-                a.sess.abort_staged();
-                self.batcher.remove_session(i);
-                a.reply.send("ERR deadline".into());
-                self.stats.deadline_expired += 1;
+                if let Some(mut a) = self.slots[i].take() {
+                    a.sess.abort_staged();
+                    self.batcher.remove_session(i);
+                    a.reply.send("ERR deadline".into());
+                    self.stats.deadline_expired += 1;
+                }
             }
         }
     }
@@ -422,7 +449,10 @@ impl<'e> Scheduler<'e> {
             let Some(req) = self.next_admission() else { break };
             match Session::new(self.engine, self.spec_cfg.clone()) {
                 Ok(mut sess) => {
-                    sess.prefill_begin(&req.prompt);
+                    if let Err(e) = catch("prefill_begin", || sess.prefill_begin(&req.prompt)) {
+                        self.fail(&req.reply, &e);
+                        continue;
+                    }
                     let epoch = self.next_epoch;
                     self.next_epoch += 1;
                     let chunk = self.plan_chunk(sess.prefill_remaining());
@@ -443,7 +473,7 @@ impl<'e> Scheduler<'e> {
                         accepted: 0,
                         reply: req.reply,
                         enqueued: req.enqueued,
-                        admitted: Instant::now(),
+                        admitted: clock::now(),
                         first_token: None,
                     });
                 }
@@ -538,7 +568,8 @@ impl<'e> Scheduler<'e> {
             };
             let remaining = a.max_new - a.out.len();
             let budget = remaining.saturating_sub(1).max(1);
-            match a.sess.verify_begin(true, self.spec_cfg.max_draft, budget) {
+            let max_draft = self.spec_cfg.max_draft;
+            match catch("verify_begin", || a.sess.verify_begin(true, max_draft, budget)) {
                 Ok(rows) => staged.push(StagedVerify { slot: job.req, a, payload: rows }),
                 Err(e) => {
                     self.fail(&a.reply, &e);
@@ -570,8 +601,8 @@ impl<'e> Scheduler<'e> {
             // Head stage (stateless).
             let (heads, head_ms) = {
                 let refs: Vec<&[f32]> = lanes.iter().map(|(_, d)| d.as_slice()).collect();
-                let t0 = Instant::now();
-                let r = self.engine.head_batch(&refs);
+                let t0 = clock::now();
+                let r = catch("batched head call", || self.engine.head_batch(&refs));
                 (r, t0.elapsed().as_secs_f64() * 1e3)
             };
             match heads {
@@ -595,8 +626,8 @@ impl<'e> Scheduler<'e> {
                         );
                         self.stats.fallbacks += 1;
                         for (sv, deep) in lanes {
-                            let t0 = Instant::now();
-                            match self.engine.head(&deep) {
+                            let t0 = clock::now();
+                            match catch("serial head call", || self.engine.head(&deep)) {
                                 Ok(l) => {
                                     cloud_ms += t0.elapsed().as_secs_f64() * 1e3;
                                     self.complete_verify(sv.slot, sv.a, &deep, &l);
@@ -616,7 +647,7 @@ impl<'e> Scheduler<'e> {
     /// Finish one session's verify round given its verified (deep, logits)
     /// lane: acceptance bookkeeping, requeue or completion.
     fn complete_verify(&mut self, slot: usize, mut a: Active<'e>, deep: &[f32], logits: &[f32]) {
-        match a.sess.verify_finish(deep, logits) {
+        match catch("verify_finish", || a.sess.verify_finish(deep, logits)) {
             Ok(r) => {
                 a.rounds += 1;
                 a.proposed += r.proposed.len();
@@ -652,7 +683,7 @@ impl<'e> Scheduler<'e> {
             let Some(mut a) = self.take_for_job(&job) else {
                 continue; // stale job (session finished/failed/cancelled)
             };
-            match a.sess.prefill_chunk_begin(job.tokens) {
+            match catch("prefill_chunk_begin", || a.sess.prefill_chunk_begin(job.tokens)) {
                 Ok(hidden) => staged.push(StagedPrefill { slot: job.req, a, payload: hidden }),
                 Err(e) => {
                     self.fail(&a.reply, &e);
@@ -706,8 +737,9 @@ impl<'e> Scheduler<'e> {
             let mut streams: Vec<&mut CloudStream> =
                 group.iter_mut().map(|t| t.stream()).collect();
             let refs: Vec<&[f32]> = uploads.iter().map(|u| u.as_slice()).collect();
-            let t0 = Instant::now();
-            let r = self.engine.cloud_middle_batch(&mut streams, &refs);
+            let t0 = clock::now();
+            let r =
+                catch("batched cloud call", || self.engine.cloud_middle_batch(&mut streams, &refs));
             (r, t0.elapsed().as_secs_f64() * 1e3)
         };
         match result {
@@ -739,8 +771,10 @@ impl<'e> Scheduler<'e> {
                 self.stats.fallbacks += 1;
                 let mut lanes = Vec::new();
                 for (mut item, upload) in group.into_iter().zip(uploads) {
-                    let t0 = Instant::now();
-                    match self.engine.cloud_middle(item.stream(), &upload) {
+                    let t0 = clock::now();
+                    match catch("serial cloud call", || {
+                        self.engine.cloud_middle(item.stream(), &upload)
+                    }) {
                         Ok(deep) => {
                             *cloud_ms += t0.elapsed().as_secs_f64() * 1e3;
                             *executed += deep.len() / h;
@@ -762,9 +796,9 @@ impl<'e> Scheduler<'e> {
     /// first-token bookkeeping, next-chunk planning, requeue or
     /// completion.
     fn complete_prefill(&mut self, slot: usize, mut a: Active<'e>, deep: &[f32]) {
-        match a.sess.prefill_chunk_finish(deep) {
+        match catch("prefill_chunk_finish", || a.sess.prefill_chunk_finish(deep)) {
             Ok(Some(t1)) => {
-                a.first_token = Some(Instant::now());
+                a.first_token = Some(clock::now());
                 a.out.push(t1);
                 if a.out.len() >= a.max_new {
                     self.finish(a);
@@ -793,7 +827,7 @@ impl<'e> Scheduler<'e> {
     /// Record metrics and send the protocol reply (slot already vacated by
     /// the `take()` in the job runners).
     fn finish(&mut self, a: Active<'e>) {
-        let now = Instant::now();
+        let now = clock::now();
         let first = a.first_token.unwrap_or(now);
         let queue_wait = (a.admitted - a.enqueued).as_secs_f64() * 1e3;
         let ttft = (first - a.enqueued).as_secs_f64() * 1e3;
@@ -829,7 +863,7 @@ mod tests {
                 prompt,
                 max_new,
                 reply: ReplyHandle::new(tx),
-                enqueued: Instant::now(),
+                enqueued: clock::now(),
             },
             rx,
         )
@@ -847,7 +881,7 @@ mod tests {
             prompt,
             max_new,
             reply: ReplyHandle::new(tx.clone()),
-            enqueued: Instant::now(),
+            enqueued: clock::now(),
         }
     }
 
@@ -1141,7 +1175,7 @@ mod tests {
         sched.submit(a);
         assert!(sched.step() > 0);
         assert_eq!(sched.live_sessions(), 1);
-        std::thread::sleep(std::time::Duration::from_millis(10));
+        clock::sleep(std::time::Duration::from_millis(10));
         sched.step();
         assert_eq!(rx_a.try_recv().unwrap(), "ERR deadline");
         assert_eq!(sched.live_sessions(), 0);
@@ -1150,7 +1184,7 @@ mod tests {
         // expired before it can take the (free) slot.
         let (b, rx_b) = req(vec![1, 2, 3], 4);
         sched.submit(b);
-        std::thread::sleep(std::time::Duration::from_millis(10));
+        clock::sleep(std::time::Duration::from_millis(10));
         sched.step();
         assert_eq!(rx_b.try_recv().unwrap(), "ERR deadline");
         assert_eq!(sched.stats.deadline_expired, 2);

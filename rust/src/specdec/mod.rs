@@ -25,7 +25,7 @@
 
 pub mod profile;
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::backend::Tensor;
 use crate::config::{SampleVerify, SpecDecConfig};
@@ -180,16 +180,21 @@ impl<'e> Session<'e> {
     /// Stage a prompt for resumable chunked prefill without processing
     /// anything yet.  Drive it with [`Session::prefill_step`]; the serve
     /// scheduler calls that once per batcher-admitted prefill chunk.
-    pub fn prefill_begin(&mut self, prompt: &[TokenId]) {
-        assert!(self.ctx.is_empty(), "prefill on a used session");
-        assert!(self.prefill.is_none(), "prefill already staged");
-        assert!(!prompt.is_empty());
+    ///
+    /// Misuse (re-prefill of a used session, double staging, empty prompt)
+    /// is an `Err`, not a panic: the serve worker owns many sessions, so a
+    /// protocol bug in one lane must fail that lane, not the process.
+    pub fn prefill_begin(&mut self, prompt: &[TokenId]) -> Result<()> {
+        ensure!(self.ctx.is_empty(), "prefill on a used session");
+        ensure!(self.prefill.is_none(), "prefill already staged");
+        ensure!(!prompt.is_empty(), "empty prompt");
         self.prefill = Some(PrefillState {
             prompt: prompt.to_vec(),
             off: 0,
             last_deep: Vec::new(),
             staged: None,
         });
+        Ok(())
     }
 
     /// Prompt tokens not yet prefilled (0 when no prefill is staged).
@@ -238,9 +243,17 @@ impl<'e> Session<'e> {
     /// hidden rows [c, H] to upload; complete the chunk by passing the
     /// verified deep rows to [`Session::prefill_chunk_finish`].
     pub fn prefill_chunk_begin(&mut self, max_tokens: usize) -> Result<Vec<f32>> {
-        assert!(max_tokens > 0, "empty prefill chunk");
-        let mut st = self.prefill.take().expect("call prefill_begin first");
-        assert!(st.staged.is_none(), "prefill chunk already staged");
+        ensure!(max_tokens > 0, "empty prefill chunk");
+        let mut st = match self.prefill.take() {
+            Some(st) => st,
+            None => bail!("no prefill staged (call prefill_begin first)"),
+        };
+        if st.staged.is_some() {
+            // Put the state back before erroring: the staged chunk is
+            // still completable (or abortable) by the caller.
+            self.prefill = Some(st);
+            bail!("prefill chunk already staged");
+        }
         let c = max_tokens.min(st.prompt.len() - st.off);
         let tokens = &st.prompt[st.off..st.off + c];
         let staged = self.engine.device_input(&mut self.dev, tokens).and_then(|hidden| {
@@ -271,9 +284,26 @@ impl<'e> Session<'e> {
     /// [`Engine::cloud_middle_batch`] lane).  Returns `Some(first_token)`
     /// when the prompt is fully prefilled, `None` otherwise.
     pub fn prefill_chunk_finish(&mut self, deep: &[f32]) -> Result<Option<TokenId>> {
-        let mut st = self.prefill.take().expect("call prefill_begin first");
-        let c = st.staged.take().expect("no prefill chunk staged");
+        let mut st = match self.prefill.take() {
+            Some(st) => st,
+            None => bail!("no prefill staged (call prefill_begin first)"),
+        };
+        let c = match st.staged.take() {
+            Some(c) => c,
+            None => {
+                self.prefill = Some(st);
+                bail!("no prefill chunk staged (call prefill_chunk_begin first)");
+            }
+        };
         let h = self.engine.spec().hidden;
+        if deep.len() < c * h {
+            // A short deep buffer is a backend bug; leave the chunk staged
+            // (re-drivable / abortable) instead of slicing out of bounds.
+            let got = deep.len();
+            st.staged = Some(c);
+            self.prefill = Some(st);
+            bail!("prefill deep rows too short: got {got} floats, need {c}x{h}");
+        }
         st.last_deep = deep[(c - 1) * h..c * h].to_vec();
         // Final chunk: run the (fallible) head *before* committing
         // anything, so a head failure leaves the chunk staged and the
@@ -318,14 +348,19 @@ impl<'e> Session<'e> {
     /// resumable [`Session::prefill_begin`] / [`Session::prefill_step`]
     /// machine — the emitted stream is chunk-size-invariant either way.
     pub fn prefill(&mut self, prompt: &[TokenId], chunks: &[usize]) -> Result<TokenId> {
-        assert_eq!(chunks.iter().sum::<usize>(), prompt.len(), "chunks must cover prompt");
-        self.prefill_begin(prompt);
+        ensure!(
+            chunks.iter().sum::<usize>() == prompt.len(),
+            "chunks must cover prompt: {} tokens vs {} chunked",
+            prompt.len(),
+            chunks.iter().sum::<usize>()
+        );
+        self.prefill_begin(prompt)?;
         let mut first = None;
         for &c in chunks {
-            assert!(c > 0, "empty chunk");
+            ensure!(c > 0, "empty chunk");
             first = self.prefill_step(c)?;
         }
-        Ok(first.expect("chunks cover a non-empty prompt"))
+        first.ok_or_else(|| anyhow!("chunks cover a non-empty prompt"))
     }
 
     /// Tokens generated so far (beyond the prompt, including the first).
@@ -405,8 +440,11 @@ impl<'e> Session<'e> {
         lambda: usize,
         draft_budget: usize,
     ) -> Result<usize> {
-        assert!(self.verify.is_none(), "verify round already staged");
-        let d0 = self.pending.expect("call prefill first");
+        ensure!(self.verify.is_none(), "verify round already staged");
+        let d0 = match self.pending {
+            Some(d0) => d0,
+            None => bail!("no pending token (call prefill first)"),
+        };
         let h = self.engine.spec().hidden;
         let max_k = self.cfg.max_draft.min(draft_budget).max(1);
 
@@ -471,9 +509,11 @@ impl<'e> Session<'e> {
     }
 
     /// The shallow hidden rows staged by [`Session::verify_begin`]
-    /// ([k+1, H] row-major) — the round's upload.
+    /// ([k+1, H] row-major) — the round's upload.  Empty when no round is
+    /// staged (the caller drives the step machine; an empty upload fails
+    /// downstream with an Err instead of panicking the worker here).
     pub fn verify_shallow(&self) -> &[f32] {
-        &self.verify.as_ref().expect("no verify round staged").shallow
+        self.verify.as_ref().map_or(&[], |pv| &pv.shallow)
     }
 
     /// Move the staged upload out of the session.  The rows are consumed
@@ -482,7 +522,7 @@ impl<'e> Session<'e> {
     /// round is hot-path traffic); [`Session::verify_finish`] is
     /// unaffected.
     pub fn take_verify_shallow(&mut self) -> Vec<f32> {
-        std::mem::take(&mut self.verify.as_mut().expect("no verify round staged").shallow)
+        self.verify.as_mut().map(|pv| std::mem::take(&mut pv.shallow)).unwrap_or_default()
     }
 
     /// Cloud-download half of a HAT decode round: acceptance against the
@@ -490,9 +530,34 @@ impl<'e> Session<'e> {
     /// branch adoption.  `deep` is the middle submodel's output for the
     /// staged upload ([k+1, H]), `logits` the head's output on it.
     pub fn verify_finish(&mut self, deep: &[f32], logits: &[f32]) -> Result<RoundResult> {
-        let pv = self.verify.take().expect("no verify round staged");
         let h = self.engine.spec().hidden;
         let v = self.engine.spec().vocab;
+        // Shape-check the verified buffers *before* consuming the staged
+        // round: on a short backend buffer the round stays staged (the
+        // caller can abort_staged and re-drive) and nothing is sliced out
+        // of bounds.
+        {
+            let staged_k = match self.verify.as_ref() {
+                Some(pv) => pv.proposed.len(),
+                None => bail!("no verify round staged"),
+            };
+            ensure!(
+                logits.len() >= (staged_k + 1) * v,
+                "verify logits too short: got {}, need {}x{v}",
+                logits.len(),
+                staged_k + 1
+            );
+            ensure!(
+                deep.len() >= (staged_k + 1) * h,
+                "verify deep rows too short: got {}, need {}x{h}",
+                deep.len(),
+                staged_k + 1
+            );
+        }
+        let pv = match self.verify.take() {
+            Some(pv) => pv,
+            None => bail!("no verify round staged"),
+        };
         let proposed = pv.proposed;
         let k = proposed.len();
         // Absolute context position of the first proposal (ctx currently
@@ -758,7 +823,10 @@ impl<'e> Session<'e> {
 
     /// U-shape decode step: one token per device-cloud interaction.
     pub fn ushape_step(&mut self) -> Result<TokenId> {
-        let d0 = self.pending.expect("call prefill first");
+        let d0 = match self.pending {
+            Some(d0) => d0,
+            None => bail!("no pending token (call prefill first)"),
+        };
         let hidden = self.engine.device_input(&mut self.dev, &[d0])?;
         let deep = self.engine.cloud_middle(&mut self.cloud, &hidden)?;
         let logits = self.engine.head(&deep)?;
@@ -779,7 +847,10 @@ impl<'e> Session<'e> {
     /// last verified row propose n_medusa tokens; verification uploads the
     /// hidden states of [d_0, m_1..m_{n-1}] like a HAT round (no adapter).
     pub fn medusa_round(&mut self) -> Result<RoundResult> {
-        let d0 = self.pending.expect("call prefill first");
+        let d0 = match self.pending {
+            Some(d0) => d0,
+            None => bail!("no pending token (call prefill first)"),
+        };
         let n = self.engine.spec().n_medusa;
         let h = self.engine.spec().hidden;
         let v = self.engine.spec().vocab;
@@ -797,6 +868,18 @@ impl<'e> Session<'e> {
         let logits = self.engine.head(&deep)?;
 
         let k = proposed.len();
+        ensure!(
+            logits.len() >= (k + 1) * v,
+            "medusa verify logits too short: got {}, need {}x{v}",
+            logits.len(),
+            k + 1
+        );
+        ensure!(
+            deep.len() >= (k + 1) * h,
+            "medusa verify deep rows too short: got {}, need {}x{h}",
+            deep.len(),
+            k + 1
+        );
         let base = self.ctx.len();
         let greedy = self.sampler.greedy();
         // The heads always draft greedily, but with sampling active the
@@ -841,6 +924,7 @@ impl<'e> Session<'e> {
 
 /// Even chunking helper: split `n` into chunks of at most `size`.
 pub fn chunk_sizes(n: usize, size: usize) -> Vec<usize> {
+    // hatlint: allow(panic-path) size = 0 is a caller bug; every chunk planner clamps to >= 1
     assert!(size > 0);
     let mut out = Vec::new();
     let mut left = n;
@@ -866,7 +950,7 @@ mod tests {
         let t_a = a.prefill(&prompt, &[prompt.len()]).unwrap();
 
         let mut b = Session::new(&engine, cfg.clone()).unwrap();
-        b.prefill_begin(&prompt);
+        b.prefill_begin(&prompt).unwrap();
         assert_eq!(b.prefill_remaining(), prompt.len());
         let mut last = None;
         let mut guard = 0;
@@ -967,14 +1051,14 @@ mod tests {
         let prompt: Vec<TokenId> = (0u32..23).map(|i| (i * 5 + 2) % 256).collect();
 
         let mut a = Session::new(&engine, cfg.clone()).unwrap();
-        a.prefill_begin(&prompt);
+        a.prefill_begin(&prompt).unwrap();
         let mut first_a = None;
         while a.prefill_remaining() > 0 {
             first_a = a.prefill_step(8).unwrap();
         }
 
         let mut b = Session::new(&engine, cfg).unwrap();
-        b.prefill_begin(&prompt);
+        b.prefill_begin(&prompt).unwrap();
         let mut first_b = None;
         while b.prefill_remaining() > 0 {
             let hidden = b.prefill_chunk_begin(8).unwrap();
@@ -1004,7 +1088,7 @@ mod tests {
 
         let mut b = Session::new(&engine, cfg).unwrap();
         assert!(!b.abort_staged(), "nothing staged on a fresh session");
-        b.prefill_begin(&prompt);
+        b.prefill_begin(&prompt).unwrap();
         let _upload = b.prefill_chunk_begin(8).unwrap();
         assert!(b.abort_staged(), "a staged prefill chunk was live");
         assert!(!b.abort_staged(), "abort is idempotent");

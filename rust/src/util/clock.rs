@@ -1,0 +1,22 @@
+//! Time choke point: the only sanctioned callers of `Instant::now` and
+//! `thread::sleep` in the tree.
+//!
+//! `clippy.toml` bans the raw `std` calls (`disallowed-methods`) so every
+//! time read and every blocking sleep routes through here — one place to
+//! audit for wall-clock coupling, and one seam to hook if timing ever
+//! needs to be virtualized (benches opt out file-by-file: they exist to
+//! measure real wall time).
+
+use std::time::{Duration, Instant};
+
+/// Read the monotonic clock.
+#[allow(clippy::disallowed_methods)] // the one sanctioned Instant::now call
+pub fn now() -> Instant {
+    Instant::now()
+}
+
+/// Block the current thread for `d`.
+#[allow(clippy::disallowed_methods)] // the one sanctioned thread::sleep call
+pub fn sleep(d: Duration) {
+    std::thread::sleep(d);
+}

@@ -2,6 +2,7 @@
 //! serde / proptest): deterministic PRNG, statistics, JSON, and a
 //! property-testing mini-framework.
 
+pub mod clock;
 pub mod json;
 pub mod proptest;
 pub mod report;

@@ -173,7 +173,7 @@ fn failed_rounds_roll_back_and_the_session_recovers() {
     // commits nothing and re-drives from scratch), both recover to a
     // stream identical to a clean prefill.
     let mut p = Session::new(&engine, cfg.clone()).unwrap();
-    p.prefill_begin(&prompt);
+    p.prefill_begin(&prompt).unwrap();
     fail_cloud.set(true);
     assert!(p.prefill_step(2).is_err());
     fail_cloud.set(false);

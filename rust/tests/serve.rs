@@ -3,11 +3,12 @@
 //! starve an admitted session, and the TCP front-end must serve
 //! interleaved clients.
 
+use std::cell::Cell;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use hat::backend::reference::ReferenceBackend;
 use hat::backend::{ExecBackend, RuntimeStats, Tensor};
@@ -16,6 +17,7 @@ use hat::engine::Engine;
 use hat::runtime::{ArtifactRegistry, Manifest};
 use hat::server::scheduler::{ReplyHandle, Request, Scheduler};
 use hat::server::{generate, serve_listener};
+use hat::util::clock;
 use hat::util::proptest::{cases, forall};
 use hat::util::rng::Rng;
 
@@ -34,7 +36,7 @@ fn request(prompt: Vec<u32>, max_new: usize) -> (Request, mpsc::Receiver<String>
             prompt,
             max_new,
             reply: ReplyHandle::new(tx),
-            enqueued: Instant::now(),
+            enqueued: clock::now(),
         },
         rx,
     )
@@ -694,11 +696,11 @@ fn tcp_disconnect_mid_generation_is_cancelled() {
     // Client 2: poll STATS until the cancellation lands.
     let mut stream = TcpStream::connect(addr).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
-    let deadline = Instant::now() + Duration::from_secs(30);
+    let deadline = clock::now() + Duration::from_secs(30);
     let mut last = String::new();
     loop {
         assert!(
-            Instant::now() < deadline,
+            clock::now() < deadline,
             "disconnect never cancelled the session; last STATS: {last}"
         );
         writeln!(stream, "STATS").unwrap();
@@ -708,7 +710,7 @@ fn tcp_disconnect_mid_generation_is_cancelled() {
         if last.contains("cancelled=1") {
             break;
         }
-        std::thread::sleep(Duration::from_millis(20));
+        clock::sleep(Duration::from_millis(20));
     }
     writeln!(stream, "QUIT").unwrap();
     server.join().unwrap();
@@ -744,4 +746,177 @@ fn tcp_cancel_verb_aborts_inflight_generation() {
     reader.read_line(&mut line).unwrap();
     assert_eq!(line.trim_end(), "OK bye");
     server.join().unwrap();
+}
+
+/// Reference backend that *panics* (not `Err`s) on every multi-lane
+/// `run_batch` — a simulated backend bug on the batched path.
+struct PanicBatchBackend(ReferenceBackend);
+
+impl ExecBackend for PanicBatchBackend {
+    fn name(&self) -> &'static str {
+        "panic-batch-reference"
+    }
+    fn manifest(&self) -> &Manifest {
+        self.0.manifest()
+    }
+    fn load_weights(&mut self) -> anyhow::Result<()> {
+        self.0.load_weights()
+    }
+    fn compile(&self, name: &str) -> anyhow::Result<()> {
+        self.0.compile(name)
+    }
+    fn run(&self, name: &str, inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        self.0.run(name, inputs)
+    }
+    fn run_batch(&self, name: &str, inputs: &[Vec<&Tensor>]) -> anyhow::Result<Vec<Vec<Tensor>>> {
+        if inputs.len() > 1 {
+            panic!("injected backend bug: multi-lane batch dies");
+        }
+        self.0.run_batch(name, inputs)
+    }
+    fn weight(&self, name: &str) -> Option<Tensor> {
+        self.0.weight(name)
+    }
+    fn stats(&self) -> RuntimeStats {
+        self.0.stats()
+    }
+}
+
+/// A backend that panics instead of failing cleanly must not take the
+/// scheduler down: the `catch_unwind` firewalls convert the panic into
+/// the same degradation path as a batched `Err` — per-lane serial
+/// fallback, every stream byte-identical to serial `generate()`, the
+/// degradation observable through `ServeStats::fallbacks`.
+#[test]
+fn panicking_batched_call_degrades_to_serial_not_a_crash() {
+    let backend = PanicBatchBackend(ReferenceBackend::synthetic(42));
+    let engine = Engine { reg: ArtifactRegistry::with_backend(Box::new(backend)).unwrap() };
+    let spec = SpecDecConfig::default();
+    let reqs: Vec<(Vec<u32>, usize)> = vec![
+        ((0u32..30).map(|i| (i * 3 + 1) % 256).collect(), 10),
+        ((0u32..45).map(|i| (i * 5 + 2) % 256).collect(), 8),
+        ((0u32..24).map(|i| (i * 7 + 5) % 256).collect(), 12),
+    ];
+    let clean = Engine::synthetic();
+    let expected: Vec<String> = reqs
+        .iter()
+        .map(|(p, m)| generate(&clean, p, *m, &spec).unwrap().reply_line())
+        .collect();
+
+    let cfg = ServeConfig { max_sessions: 3, ..ServeConfig::default() };
+    let mut sched = Scheduler::new(&engine, spec, cfg);
+    let mut rxs = Vec::new();
+    for (p, m) in &reqs {
+        let (r, rx) = request(p.clone(), *m);
+        sched.submit(r);
+        rxs.push(rx);
+    }
+    let mut guard = 0;
+    while sched.has_work() {
+        assert!(sched.step() > 0, "scheduler idle with pending work");
+        guard += 1;
+        assert!(guard < 20_000, "scheduler failed to drain");
+    }
+    for (i, (rx, want)) in rxs.iter().zip(&expected).enumerate() {
+        assert_eq!(&rx.recv().unwrap(), want, "session {i} diverged under panic fallback");
+    }
+    assert!(sched.stats.fallbacks > 0, "no batched call panicked — firewall not exercised");
+    assert_eq!(sched.stats.finished, reqs.len());
+    assert_eq!(sched.stats.failed, 0, "a panic leaked into a lane failure");
+}
+
+/// Reference backend whose *first* `device_head` execution panics, then
+/// behaves normally — a one-shot backend bug striking mid-session.
+struct PanicHeadOnceBackend {
+    inner: ReferenceBackend,
+    armed: Cell<bool>,
+}
+
+impl PanicHeadOnceBackend {
+    fn trip(&self, name: &str) {
+        if name.starts_with("device_head") && self.armed.replace(false) {
+            panic!("injected backend bug: first head execution dies");
+        }
+    }
+}
+
+impl ExecBackend for PanicHeadOnceBackend {
+    fn name(&self) -> &'static str {
+        "panic-head-once-reference"
+    }
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+    fn load_weights(&mut self) -> anyhow::Result<()> {
+        self.inner.load_weights()
+    }
+    fn compile(&self, name: &str) -> anyhow::Result<()> {
+        self.inner.compile(name)
+    }
+    fn run(&self, name: &str, inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        self.trip(name);
+        self.inner.run(name, inputs)
+    }
+    fn run_batch(&self, name: &str, inputs: &[Vec<&Tensor>]) -> anyhow::Result<Vec<Vec<Tensor>>> {
+        self.trip(name);
+        self.inner.run_batch(name, inputs)
+    }
+    fn weight(&self, name: &str) -> Option<Tensor> {
+        self.inner.weight(name)
+    }
+    fn stats(&self) -> RuntimeStats {
+        self.inner.stats()
+    }
+}
+
+/// A panic inside one lane's session call must fail *that lane alone*:
+/// the first session to complete prefill hits the injected head panic
+/// (the head runs inside its `prefill_chunk_finish`) and gets an `ERR`
+/// reply naming the panic, while both co-scheduled sessions finish with
+/// streams byte-identical to serial `generate()` on a clean engine.
+#[test]
+fn panicking_lane_fails_alone_and_survivors_match_serial() {
+    let backend = PanicHeadOnceBackend {
+        inner: ReferenceBackend::synthetic(42),
+        armed: Cell::new(true),
+    };
+    let engine = Engine { reg: ArtifactRegistry::with_backend(Box::new(backend)).unwrap() };
+    let spec = SpecDecConfig::default();
+    // Equal-length prompts: all three prefill chunks land in one bucket
+    // group, so lane order is submit order and the injected panic
+    // deterministically strikes request 0's final-chunk head call.
+    let reqs: Vec<(Vec<u32>, usize)> = (0..3u32)
+        .map(|i| ((0u32..10).map(|j| (j * 7 + i + 3) % 256).collect(), 8))
+        .collect();
+    let clean = Engine::synthetic();
+    let expected: Vec<String> = reqs
+        .iter()
+        .map(|(p, m)| generate(&clean, p, *m, &spec).unwrap().reply_line())
+        .collect();
+
+    let cfg = ServeConfig { max_sessions: 3, ..ServeConfig::default() };
+    let mut sched = Scheduler::new(&engine, spec, cfg);
+    let mut rxs = Vec::new();
+    for (p, m) in &reqs {
+        let (r, rx) = request(p.clone(), *m);
+        sched.submit(r);
+        rxs.push(rx);
+    }
+    let mut guard = 0;
+    while sched.has_work() {
+        assert!(sched.step() > 0, "scheduler idle with pending work");
+        guard += 1;
+        assert!(guard < 20_000, "scheduler failed to drain");
+    }
+    let replies: Vec<String> = rxs.iter().map(|rx| rx.recv().unwrap()).collect();
+    assert!(
+        replies[0].starts_with("ERR ") && replies[0].contains("panic"),
+        "the panicking lane must fail with a panic-naming ERR, got {:?}",
+        replies[0]
+    );
+    for i in 1..replies.len() {
+        assert_eq!(&replies[i], &expected[i], "surviving session {i} diverged");
+    }
+    assert_eq!(sched.stats.failed, 1, "exactly the panicking lane fails");
+    assert_eq!(sched.stats.finished, 2, "both survivors finish");
 }

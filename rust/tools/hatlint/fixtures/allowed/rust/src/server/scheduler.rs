@@ -1,0 +1,4 @@
+pub fn take(x: Option<u32>) -> u32 {
+    // hatlint: allow(panic-path) fixture: demonstrates the sanctioned escape hatch
+    x.unwrap()
+}

@@ -1,0 +1,2 @@
+// hatlint: allow(panic-path)
+pub fn noop() {}

@@ -1,0 +1,7 @@
+pub fn validate(cfg: &Cfg) -> Result<(), String> {
+    if cfg.alpha.beta == 0 {
+        return Err("alpha.beta must be > 0".to_string());
+    }
+    let _ = cfg.gamma;
+    Ok(())
+}

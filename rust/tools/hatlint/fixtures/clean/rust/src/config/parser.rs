@@ -1,0 +1,8 @@
+pub fn set(cfg: &mut Cfg, key: &str, v: &str) -> Result<(), String> {
+    match key {
+        "alpha.beta" => cfg.alpha.beta = parse(v)?,
+        "gamma" => cfg.gamma = parse(v)?,
+        _ => return Err(format!("unknown key {key}")),
+    }
+    Ok(())
+}

@@ -1,0 +1,5 @@
+//! Backend-agnostic: names no concrete backend type.
+
+pub fn plan(n: usize) -> usize {
+    n.max(1)
+}

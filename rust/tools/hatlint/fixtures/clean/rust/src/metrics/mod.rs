@@ -1,0 +1,3 @@
+pub fn stats_fields(finished: u64, failed: u64) -> String {
+    format!("finished={finished} failed={failed}")
+}

@@ -1,0 +1,10 @@
+//! Serve protocol.
+//!
+//! STATS reply: `STATS finished=<n> failed=<n>`.
+
+pub fn port_flag(args: &Args) -> u16 {
+    match args.get("port") {
+        Some(p) => p,
+        None => 4000,
+    }
+}

@@ -1,0 +1,21 @@
+//! Hot path: panic-free by construction.
+
+pub fn drain(q: &mut Vec<u32>) -> Result<u32, String> {
+    match q.pop() {
+        Some(v) => Ok(v),
+        None => Err("empty queue".to_string()),
+    }
+}
+
+pub fn invariant(len: usize) {
+    // hatlint: allow(panic-path) fixture: checked invariant, reason written out
+    assert!(len < 1024, "length runaway");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_modules_may_assert() {
+        super::drain(&mut vec![1]).unwrap();
+    }
+}

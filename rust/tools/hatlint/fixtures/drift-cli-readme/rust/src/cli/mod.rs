@@ -1,0 +1,6 @@
+pub fn parse(args: &Args) -> usize {
+    match args.get_usize("rounds") {
+        Some(n) => n,
+        None => 1,
+    }
+}

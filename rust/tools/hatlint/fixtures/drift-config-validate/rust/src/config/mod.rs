@@ -1,0 +1,3 @@
+pub fn validate(_cfg: &Cfg) -> Result<(), String> {
+    Ok(())
+}

@@ -1,0 +1,7 @@
+pub fn set(cfg: &mut Cfg, key: &str) -> Result<(), String> {
+    match key {
+        "alpha.beta" => cfg.alpha.beta = 1,
+        _ => return Err("unknown".to_string()),
+    }
+    Ok(())
+}

@@ -1,0 +1,3 @@
+pub fn stats_fields(finished: u64) -> String {
+    format!("finished={finished}")
+}

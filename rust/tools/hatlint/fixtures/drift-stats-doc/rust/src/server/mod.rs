@@ -1,0 +1,3 @@
+//! Serve protocol doc that forgot the stats line.
+
+pub fn noop() {}

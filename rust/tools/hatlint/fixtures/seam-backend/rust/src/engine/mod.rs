@@ -1,0 +1,3 @@
+pub fn make() {
+    let _b = FixtureBackend;
+}

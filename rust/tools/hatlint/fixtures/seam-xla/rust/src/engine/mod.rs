@@ -1,0 +1,3 @@
+pub fn make_client() {
+    let _c = xla::PjRtClient::cpu();
+}

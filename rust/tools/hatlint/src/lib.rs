@@ -1,0 +1,1095 @@
+//! hat-lint — machine-checked architecture invariants for the HAT repo.
+//!
+//! The repo's correctness story is dynamic (byte-identity and seeded
+//! distribution-identity oracles); this crate checks the *static* invariants
+//! those oracles rest on, with a hand-rolled token-level scanner (zero
+//! external deps, in keeping with workspace convention) over
+//! `rust/src/**/*.rs`, the workspace manifests, README.md and the serve
+//! protocol doc comment.
+//!
+//! Lint IDs:
+//!
+//! | id                      | invariant                                                  |
+//! |-------------------------|------------------------------------------------------------|
+//! | `seam-xla`              | `xla::` appears only in `backend/pjrt.rs`                  |
+//! | `seam-backend`          | `engine/`, `specdec/`, `server/` never name a concrete backend type |
+//! | `panic-path`            | no un-annotated `unwrap()`/`expect(`/`panic!`/`unreachable!`/`assert!` in the serve hot path (`server/`, `cloud/batcher.rs`, `specdec/mod.rs`) |
+//! | `lock-unwrap`           | no `.lock().unwrap()` / `.lock().expect(` anywhere in `rust/src` (poisoned-lock recovery required) |
+//! | `drift-config-readme`   | every key parsed in `config/parser.rs` is documented in README.md |
+//! | `drift-config-validate` | every key parsed in `config/parser.rs` is referenced by `validate()` |
+//! | `drift-stats-doc`       | every `stats_fields` entry appears in the serve protocol doc comment |
+//! | `drift-cli-readme`      | every CLI flag read in `cli/mod.rs` / `server/mod.rs` is documented in README.md |
+//! | `manifest-wildcard`     | no wildcard dependency versions in any Cargo.toml          |
+//! | `bad-allow`             | allow annotations carry the mandatory reason               |
+//!
+//! Suppression: `// hatlint: allow(<id>) <reason>` on the offending line or
+//! the line above (`# hatlint: allow(<id>) <reason>` in Cargo.toml).  The
+//! reason is mandatory — a bare `allow(<id>)` suppresses nothing and is
+//! itself reported as `bad-allow`.
+//!
+//! `#[cfg(test)]` module bodies are exempt from `panic-path` and
+//! `lock-unwrap` (tests are supposed to assert) and from `drift-cli-readme`
+//! flag extraction; the seam lints apply everywhere.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// All lint IDs, for `allow(...)` validation and docs.
+pub const LINT_IDS: &[&str] = &[
+    "seam-xla",
+    "seam-backend",
+    "panic-path",
+    "lock-unwrap",
+    "drift-config-readme",
+    "drift-config-validate",
+    "drift-stats-doc",
+    "drift-cli-readme",
+    "manifest-wildcard",
+    "bad-allow",
+];
+
+/// One lint violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-relative path (forward slashes).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub id: &'static str,
+    pub message: String,
+    /// The offending source line, trimmed.
+    pub snippet: String,
+}
+
+impl Finding {
+    /// Human diff-style rendering (`file:line: error[id]: message`).
+    pub fn render(&self) -> String {
+        let mut s = format!("{}:{}: error[{}]: {}\n", self.file, self.line, self.id, self.message);
+        if !self.snippet.is_empty() {
+            s.push_str(&format!("  |  {}\n", self.snippet));
+        }
+        s
+    }
+
+    /// Hand-rolled JSON object (the workspace has no serde).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"file\":{},\"line\":{},\"id\":{},\"message\":{},\"snippet\":{}}}",
+            json_str(&self.file),
+            self.line,
+            json_str(self.id),
+            json_str(&self.message),
+            json_str(&self.snippet)
+        )
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Token-level scanner
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    /// String literal *content* (escapes left verbatim).
+    Str(String),
+    Punct(char),
+}
+
+#[derive(Debug, Clone)]
+struct Token {
+    tok: Tok,
+    line: usize,
+    /// Inside a `#[cfg(test)] mod { .. }` body.
+    in_test: bool,
+}
+
+#[derive(Debug)]
+struct Allow {
+    line: usize,
+    id: String,
+    reason_ok: bool,
+}
+
+/// A scanned source file: token stream + allow annotations + raw lines.
+struct Scanned {
+    rel: String,
+    toks: Vec<Token>,
+    allows: Vec<Allow>,
+    lines: Vec<String>,
+}
+
+impl Scanned {
+    fn snippet(&self, line: usize) -> String {
+        self.lines.get(line.saturating_sub(1)).map(|l| l.trim().to_string()).unwrap_or_default()
+    }
+
+    /// Is a finding of `id` at `line` suppressed by an allow annotation on
+    /// the same line or the line above?
+    fn allowed(&self, id: &str, line: usize) -> bool {
+        self.allows
+            .iter()
+            .any(|a| a.reason_ok && a.id == id && (a.line == line || a.line + 1 == line))
+    }
+}
+
+/// Parse `hatlint: allow(<id>) <reason>` out of a comment body.
+fn parse_allow(comment: &str, line: usize) -> Option<Allow> {
+    let at = comment.find("hatlint:")?;
+    let rest = comment[at + "hatlint:".len()..].trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let id = rest[..close].trim().to_string();
+    let reason = rest[close + 1..].trim();
+    Some(Allow { line, id, reason_ok: !reason.is_empty() })
+}
+
+/// Tokenize Rust-ish source: comments stripped (but mined for allow
+/// annotations), string/char literals and lifetimes handled, `#[cfg(test)]
+/// mod` bodies flagged.
+fn scan_rust(rel: &str, src: &str) -> Scanned {
+    let chars: Vec<char> = src.chars().collect();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut allows: Vec<Allow> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let n = chars.len();
+
+    while i < n {
+        let c = chars[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < n && chars[i + 1] == '/' => {
+                let start = i + 2;
+                let mut j = start;
+                while j < n && chars[j] != '\n' {
+                    j += 1;
+                }
+                let body: String = chars[start..j].iter().collect();
+                if let Some(a) = parse_allow(&body, line) {
+                    allows.push(a);
+                }
+                i = j;
+            }
+            '/' if i + 1 < n && chars[i + 1] == '*' => {
+                // Nested block comments, tracking newlines.
+                let start_line = line;
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                let mut body = String::new();
+                while j < n && depth > 0 {
+                    if chars[j] == '\n' {
+                        line += 1;
+                    }
+                    if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                        depth += 1;
+                        j += 2;
+                    } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        body.push(chars[j]);
+                        j += 1;
+                    }
+                }
+                if let Some(a) = parse_allow(&body, start_line) {
+                    allows.push(a);
+                }
+                i = j;
+            }
+            '"' => {
+                let (s, j, nl) = read_string(&chars, i);
+                toks.push(Token { tok: Tok::Str(s), line, in_test: false });
+                line += nl;
+                i = j;
+            }
+            'r' | 'b' if starts_raw_or_byte_string(&chars, i) => {
+                let (s, j, nl) = read_raw_or_byte_string(&chars, i);
+                toks.push(Token { tok: Tok::Str(s), line, in_test: false });
+                line += nl;
+                i = j;
+            }
+            '\'' => {
+                // Lifetime (`'a`) vs char literal (`'a'`, `'\n'`).
+                let mut j = i + 1;
+                if j < n && (chars[j].is_alphabetic() || chars[j] == '_') && chars[j] != '\\' {
+                    let mut k = j;
+                    while k < n && (chars[k].is_alphanumeric() || chars[k] == '_') {
+                        k += 1;
+                    }
+                    if k < n && chars[k] == '\'' {
+                        // Single-char literal like 'a'.
+                        i = k + 1;
+                    } else {
+                        // Lifetime: skip the ident.
+                        i = k;
+                    }
+                } else {
+                    // Escaped or punctuation char literal.
+                    if j < n && chars[j] == '\\' {
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                    while j < n && chars[j] != '\'' {
+                        j += 1;
+                    }
+                    i = (j + 1).min(n);
+                }
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let mut j = i;
+                while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                    j += 1;
+                }
+                let id: String = chars[i..j].iter().collect();
+                toks.push(Token { tok: Tok::Ident(id), line, in_test: false });
+                i = j;
+            }
+            c if c.is_ascii_digit() => {
+                let mut j = i;
+                while j < n && (chars[j].is_ascii_alphanumeric() || chars[j] == '_') {
+                    j += 1;
+                }
+                // Fractional part — but never eat `..` (range syntax).
+                if j + 1 < n && chars[j] == '.' && chars[j + 1].is_ascii_digit() {
+                    j += 1;
+                    while j < n && (chars[j].is_ascii_alphanumeric() || chars[j] == '_') {
+                        j += 1;
+                    }
+                }
+                i = j;
+            }
+            c => {
+                toks.push(Token { tok: Tok::Punct(c), line, in_test: false });
+                i += 1;
+            }
+        }
+    }
+
+    mark_test_regions(&mut toks);
+    Scanned {
+        rel: rel.to_string(),
+        toks,
+        allows,
+        lines: src.lines().map(|l| l.to_string()).collect(),
+    }
+}
+
+fn starts_raw_or_byte_string(chars: &[char], i: usize) -> bool {
+    // r"  r#"  br"  b"  br#"
+    let n = chars.len();
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if j < n && chars[j] == 'r' {
+        j += 1;
+        while j < n && chars[j] == '#' {
+            j += 1;
+        }
+        return j < n && chars[j] == '"';
+    }
+    // b"..." (byte string, no r)
+    chars[i] == 'b' && j < n && chars[j] == '"'
+}
+
+fn read_string(chars: &[char], start: usize) -> (String, usize, usize) {
+    // Plain "..." with escapes; returns (content, next index, newlines seen).
+    let n = chars.len();
+    let mut j = start + 1;
+    let mut out = String::new();
+    let mut nl = 0usize;
+    while j < n {
+        match chars[j] {
+            '\\' if j + 1 < n => {
+                out.push(chars[j]);
+                out.push(chars[j + 1]);
+                if chars[j + 1] == '\n' {
+                    nl += 1;
+                }
+                j += 2;
+            }
+            '"' => return (out, j + 1, nl),
+            c => {
+                if c == '\n' {
+                    nl += 1;
+                }
+                out.push(c);
+                j += 1;
+            }
+        }
+    }
+    (out, n, nl)
+}
+
+fn read_raw_or_byte_string(chars: &[char], start: usize) -> (String, usize, usize) {
+    let n = chars.len();
+    let mut j = start;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if j < n && chars[j] != 'r' {
+        // b"..." — plain byte string.
+        let (s, k, nl) = read_string(chars, j);
+        return (s, k, nl);
+    }
+    j += 1; // past 'r'
+    let mut hashes = 0usize;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    j += 1; // past opening quote
+    let mut out = String::new();
+    let mut nl = 0usize;
+    while j < n {
+        if chars[j] == '"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < n && chars[k] == '#' && seen < hashes {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return (out, k, nl);
+            }
+        }
+        if chars[j] == '\n' {
+            nl += 1;
+        }
+        out.push(chars[j]);
+        j += 1;
+    }
+    (out, n, nl)
+}
+
+/// Mark tokens inside `#[cfg(test)] mod name { ... }` bodies.  (The repo
+/// convention is test *modules*; `#[cfg(test)]` on single items outside a
+/// module is not tracked.)
+fn mark_test_regions(toks: &mut [Token]) {
+    let is = |t: &Token, want: &Tok| -> bool { &t.tok == want };
+    let mut i = 0usize;
+    while i + 6 < toks.len() {
+        let hit = is(&toks[i], &Tok::Punct('#'))
+            && is(&toks[i + 1], &Tok::Punct('['))
+            && toks[i + 2].tok == Tok::Ident("cfg".into())
+            && is(&toks[i + 3], &Tok::Punct('('))
+            && toks[i + 4].tok == Tok::Ident("test".into())
+            && is(&toks[i + 5], &Tok::Punct(')'))
+            && is(&toks[i + 6], &Tok::Punct(']'));
+        if !hit {
+            i += 1;
+            continue;
+        }
+        // Find the opening brace of whatever item follows the attribute.
+        let mut j = i + 7;
+        while j < toks.len() && toks[j].tok != Tok::Punct('{') {
+            // `#[cfg(test)] use ...;` — no body, nothing to mark.
+            if toks[j].tok == Tok::Punct(';') {
+                break;
+            }
+            j += 1;
+        }
+        if j >= toks.len() || toks[j].tok != Tok::Punct('{') {
+            i = j;
+            continue;
+        }
+        let mut depth = 0isize;
+        let start = j;
+        while j < toks.len() {
+            match toks[j].tok {
+                Tok::Punct('{') => depth += 1,
+                Tok::Punct('}') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        for t in toks.iter_mut().take(j.min(toks.len() - 1) + 1).skip(start) {
+            t.in_test = true;
+        }
+        i = j + 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Repo model + lint driver
+// ---------------------------------------------------------------------------
+
+/// Locate the repo root: `start` or the nearest ancestor containing
+/// `rust/src`.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut cur = Some(start.to_path_buf());
+    while let Some(d) = cur {
+        if d.join("rust/src").is_dir() {
+            return Some(d);
+        }
+        cur = d.parent().map(|p| p.to_path_buf());
+    }
+    None
+}
+
+fn rust_src_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let src = root.join("rust/src");
+    if src.is_dir() {
+        collect_rs(&src, &mut out)?;
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_of(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/")
+}
+
+/// Run every lint pass over the repo at `root`.  Returns all un-suppressed
+/// findings, sorted by (file, line).  Files a pass depends on (e.g.
+/// `config/parser.rs` for the drift lints) are skipped gracefully when
+/// absent, so the fixtures can be minimal trees.
+pub fn run_lints(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut findings: Vec<Finding> = Vec::new();
+
+    let files = rust_src_files(root)?;
+    let mut scanned: Vec<Scanned> = Vec::new();
+    for p in &files {
+        let src = fs::read_to_string(p)?;
+        scanned.push(scan_rust(&rel_of(root, p), &src));
+    }
+
+    let readme = fs::read_to_string(root.join("README.md")).unwrap_or_default();
+
+    check_bad_allows(&scanned, &mut findings);
+    check_seam_xla(&scanned, &mut findings);
+    check_seam_backend(&scanned, &mut findings);
+    check_panic_path(&scanned, &mut findings);
+    check_lock_unwrap(&scanned, &mut findings);
+    check_config_drift(&scanned, &readme, &mut findings);
+    check_stats_doc_drift(&scanned, &mut findings);
+    check_cli_readme_drift(&scanned, &readme, &mut findings);
+    check_manifests(root, &mut findings)?;
+
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(findings)
+}
+
+fn push(
+    findings: &mut Vec<Finding>,
+    f: &Scanned,
+    line: usize,
+    id: &'static str,
+    message: String,
+) {
+    if f.allowed(id, line) {
+        return;
+    }
+    findings.push(Finding { file: f.rel.clone(), line, id, message, snippet: f.snippet(line) });
+}
+
+// -- bad-allow ---------------------------------------------------------------
+
+fn check_bad_allows(scanned: &[Scanned], findings: &mut Vec<Finding>) {
+    for f in scanned {
+        for a in &f.allows {
+            if !a.reason_ok {
+                findings.push(Finding {
+                    file: f.rel.clone(),
+                    line: a.line,
+                    id: "bad-allow",
+                    message: format!(
+                        "allow({}) without a reason — the reason is mandatory and the \
+                         annotation suppresses nothing",
+                        a.id
+                    ),
+                    snippet: f.snippet(a.line),
+                });
+            } else if !LINT_IDS.contains(&a.id.as_str()) {
+                findings.push(Finding {
+                    file: f.rel.clone(),
+                    line: a.line,
+                    id: "bad-allow",
+                    message: format!("allow({}) names an unknown lint id", a.id),
+                    snippet: f.snippet(a.line),
+                });
+            }
+        }
+    }
+}
+
+// -- seam lints --------------------------------------------------------------
+
+fn check_seam_xla(scanned: &[Scanned], findings: &mut Vec<Finding>) {
+    for f in scanned {
+        if f.rel == "rust/src/backend/pjrt.rs" {
+            continue;
+        }
+        for w in f.toks.windows(3) {
+            if w[0].tok == Tok::Ident("xla".into())
+                && w[1].tok == Tok::Punct(':')
+                && w[2].tok == Tok::Punct(':')
+            {
+                push(
+                    findings,
+                    f,
+                    w[0].line,
+                    "seam-xla",
+                    "`xla::` outside backend/pjrt.rs — the XLA binding seam is \
+                     backend/pjrt.rs only"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// Concrete backend type names: `struct *Backend` declared under
+/// `rust/src/backend/`.
+fn concrete_backend_names(scanned: &[Scanned]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for f in scanned {
+        if !f.rel.starts_with("rust/src/backend/") {
+            continue;
+        }
+        for w in f.toks.windows(2) {
+            if w[0].tok == Tok::Ident("struct".into()) {
+                if let Tok::Ident(name) = &w[1].tok {
+                    if name.ends_with("Backend") {
+                        names.insert(name.clone());
+                    }
+                }
+            }
+        }
+    }
+    names
+}
+
+fn check_seam_backend(scanned: &[Scanned], findings: &mut Vec<Finding>) {
+    let names = concrete_backend_names(scanned);
+    if names.is_empty() {
+        return;
+    }
+    let sealed = ["rust/src/engine/", "rust/src/specdec/", "rust/src/server/"];
+    for f in scanned {
+        if !sealed.iter().any(|p| f.rel.starts_with(p)) {
+            continue;
+        }
+        for t in &f.toks {
+            if let Tok::Ident(id) = &t.tok {
+                if names.contains(id) {
+                    push(
+                        findings,
+                        f,
+                        t.line,
+                        "seam-backend",
+                        format!(
+                            "concrete backend type `{id}` named above the ExecBackend seam \
+                             (engine/specdec/server must stay backend-agnostic)"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// -- panic-freedom -----------------------------------------------------------
+
+fn in_panic_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/server/")
+        || rel == "rust/src/cloud/batcher.rs"
+        || rel == "rust/src/specdec/mod.rs"
+}
+
+const PANIC_MACROS: &[&str] =
+    &["panic", "unreachable", "todo", "unimplemented", "assert", "assert_eq", "assert_ne"];
+
+fn check_panic_path(scanned: &[Scanned], findings: &mut Vec<Finding>) {
+    for f in scanned {
+        if !in_panic_scope(&f.rel) {
+            continue;
+        }
+        let toks = &f.toks;
+        for i in 0..toks.len() {
+            if toks[i].in_test {
+                continue;
+            }
+            if let Tok::Ident(id) = &toks[i].tok {
+                // Macros: `panic!`, `assert!`, ...
+                if PANIC_MACROS.contains(&id.as_str())
+                    && toks.get(i + 1).map(|t| &t.tok) == Some(&Tok::Punct('!'))
+                {
+                    push(
+                        findings,
+                        f,
+                        toks[i].line,
+                        "panic-path",
+                        format!(
+                            "`{id}!` in the serve hot path — degrade, don't crash \
+                             (return an Err and let the lane fail with an ERR reply)"
+                        ),
+                    );
+                }
+                // Methods: `.unwrap()`, `.expect(` — skip `.lock().unwrap()`,
+                // which the dedicated lock-unwrap lint owns.
+                if (id == "unwrap" || id == "expect")
+                    && i >= 1
+                    && toks[i - 1].tok == Tok::Punct('.')
+                    && toks.get(i + 1).map(|t| &t.tok) == Some(&Tok::Punct('('))
+                    && !is_lock_chain(toks, i)
+                {
+                    push(
+                        findings,
+                        f,
+                        toks[i].line,
+                        "panic-path",
+                        format!(
+                            "`.{id}(` in the serve hot path — propagate the error \
+                             (Result) instead of panicking the worker"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Is token `i` (an `unwrap`/`expect` ident) preceded by `.lock()`?
+fn is_lock_chain(toks: &[Token], i: usize) -> bool {
+    i >= 4
+        && toks[i - 1].tok == Tok::Punct('.')
+        && toks[i - 2].tok == Tok::Punct(')')
+        && toks[i - 3].tok == Tok::Punct('(')
+        && toks[i - 4].tok == Tok::Ident("lock".into())
+}
+
+fn check_lock_unwrap(scanned: &[Scanned], findings: &mut Vec<Finding>) {
+    for f in scanned {
+        let toks = &f.toks;
+        for i in 0..toks.len() {
+            if toks[i].in_test {
+                continue;
+            }
+            if let Tok::Ident(id) = &toks[i].tok {
+                if (id == "unwrap" || id == "expect") && is_lock_chain(toks, i) {
+                    push(
+                        findings,
+                        f,
+                        toks[i].line,
+                        "lock-unwrap",
+                        "`.lock().unwrap()` — a panicking lane poisons the lock and \
+                         cascades to every co-batched session; recover the guard or \
+                         tear the session down with an ERR"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// -- drift lints -------------------------------------------------------------
+
+fn find_scanned<'a>(scanned: &'a [Scanned], rel: &str) -> Option<&'a Scanned> {
+    scanned.iter().find(|f| f.rel == rel)
+}
+
+/// Keys parsed by `config/parser.rs`: string-literal match-arm patterns
+/// (`"a.b" =>` / `"a" | "b" =>`), with the literal's line for reporting.
+fn parser_keys(parser: &Scanned) -> Vec<(String, usize)> {
+    let mut keys = Vec::new();
+    let toks = &parser.toks;
+    for i in 0..toks.len() {
+        let Tok::Str(s) = &toks[i].tok else { continue };
+        if s.is_empty() || !s.chars().all(|c| c.is_ascii_lowercase() || c == '_' || c == '.') {
+            continue;
+        }
+        let next = toks.get(i + 1).map(|t| &t.tok);
+        let next2 = toks.get(i + 2).map(|t| &t.tok);
+        let arm = matches!(next, Some(Tok::Punct('|')))
+            || (matches!(next, Some(Tok::Punct('='))) && matches!(next2, Some(Tok::Punct('>'))));
+        if arm {
+            keys.push((s.clone(), toks[i].line));
+        }
+    }
+    keys
+}
+
+/// The token range of `fn <name>`'s body in `f`, as (start, end) indices.
+fn fn_body_range(f: &Scanned, name: &str) -> Option<(usize, usize)> {
+    let toks = &f.toks;
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if toks[i].tok == Tok::Ident("fn".into()) && toks[i + 1].tok == Tok::Ident(name.into()) {
+            let mut j = i + 2;
+            while j < toks.len() && toks[j].tok != Tok::Punct('{') {
+                j += 1;
+            }
+            let start = j;
+            let mut depth = 0isize;
+            while j < toks.len() {
+                match toks[j].tok {
+                    Tok::Punct('{') => depth += 1,
+                    Tok::Punct('}') => {
+                        depth -= 1;
+                        if depth == 0 {
+                            return Some((start, j));
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            return Some((start, toks.len()));
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Does the token range reference dotted key `a.b` (ident path `a . b`) or a
+/// string literal containing it?  Single-segment keys match a bare ident.
+fn range_mentions_key(toks: &[Token], key: &str) -> bool {
+    let parts: Vec<&str> = key.split('.').collect();
+    for i in 0..toks.len() {
+        if let Tok::Str(s) = &toks[i].tok {
+            if s.contains(key) {
+                return true;
+            }
+        }
+        if let Tok::Ident(id) = &toks[i].tok {
+            if id == parts[0] {
+                let mut ok = true;
+                let mut j = i;
+                for part in &parts[1..] {
+                    if toks.get(j + 1).map(|t| &t.tok) == Some(&Tok::Punct('.'))
+                        && toks.get(j + 2).map(|t| &t.tok) == Some(&Tok::Ident((*part).into()))
+                    {
+                        j += 2;
+                    } else {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+fn check_config_drift(scanned: &[Scanned], readme: &str, findings: &mut Vec<Finding>) {
+    let Some(parser) = find_scanned(scanned, "rust/src/config/parser.rs") else { return };
+    let keys = parser_keys(parser);
+
+    for (key, line) in &keys {
+        if !readme.contains(key) {
+            push(
+                findings,
+                parser,
+                *line,
+                "drift-config-readme",
+                format!("config key `{key}` is parsed but not documented in README.md"),
+            );
+        }
+    }
+
+    let Some(cfg) = find_scanned(scanned, "rust/src/config/mod.rs") else { return };
+    let Some((start, end)) = fn_body_range(cfg, "validate") else { return };
+    let body = &cfg.toks[start..=end.min(cfg.toks.len() - 1)];
+    for (key, line) in &keys {
+        if !range_mentions_key(body, key) {
+            push(
+                findings,
+                parser,
+                *line,
+                "drift-config-validate",
+                format!(
+                    "config key `{key}` is parsed but never referenced by validate() — \
+                     constrain it or annotate why no constraint applies"
+                ),
+            );
+        }
+    }
+}
+
+/// Field names (`name=`) from the format string(s) inside
+/// `metrics::stats_fields`.
+fn stats_field_names(metrics: &Scanned) -> Vec<(String, usize)> {
+    let Some((start, end)) = fn_body_range(metrics, "stats_fields") else { return Vec::new() };
+    let mut out = Vec::new();
+    for t in &metrics.toks[start..=end.min(metrics.toks.len() - 1)] {
+        if let Tok::Str(s) = &t.tok {
+            let chars: Vec<char> = s.chars().collect();
+            let mut i = 0usize;
+            while i < chars.len() {
+                if chars[i] == '=' && i + 1 < chars.len() && chars[i + 1] == '{' {
+                    let mut j = i;
+                    while j > 0 && (chars[j - 1].is_ascii_lowercase() || chars[j - 1] == '_') {
+                        j -= 1;
+                    }
+                    if j < i {
+                        out.push((chars[j..i].iter().collect(), t.line));
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// The leading `//!` doc-comment block of a file, concatenated.
+fn module_doc(f: &Scanned) -> String {
+    let mut doc = String::new();
+    for l in &f.lines {
+        let t = l.trim_start();
+        if let Some(rest) = t.strip_prefix("//!") {
+            doc.push_str(rest);
+            doc.push('\n');
+        } else if !t.is_empty() {
+            break;
+        }
+    }
+    doc
+}
+
+fn check_stats_doc_drift(scanned: &[Scanned], findings: &mut Vec<Finding>) {
+    let Some(metrics) = find_scanned(scanned, "rust/src/metrics/mod.rs") else { return };
+    let Some(server) = find_scanned(scanned, "rust/src/server/mod.rs") else { return };
+    let doc = module_doc(server);
+    for (field, line) in stats_field_names(metrics) {
+        if !doc.contains(&format!("{field}=")) {
+            push(
+                findings,
+                metrics,
+                line,
+                "drift-stats-doc",
+                format!(
+                    "STATS field `{field}=` is emitted by stats_fields() but missing \
+                     from the protocol doc comment (rust/src/server/mod.rs)"
+                ),
+            );
+        }
+    }
+}
+
+fn check_cli_readme_drift(scanned: &[Scanned], readme: &str, findings: &mut Vec<Finding>) {
+    let getters = ["get", "get_f64", "get_usize"];
+    for rel in ["rust/src/cli/mod.rs", "rust/src/server/mod.rs"] {
+        let Some(f) = find_scanned(scanned, rel) else { continue };
+        let toks = &f.toks;
+        for i in 0..toks.len() {
+            if toks[i].in_test {
+                continue;
+            }
+            let Tok::Ident(id) = &toks[i].tok else { continue };
+            if !getters.contains(&id.as_str())
+                || i == 0
+                || toks[i - 1].tok != Tok::Punct('.')
+                || toks.get(i + 1).map(|t| &t.tok) != Some(&Tok::Punct('('))
+            {
+                continue;
+            }
+            let Some(Tok::Str(flag)) = toks.get(i + 2).map(|t| &t.tok) else { continue };
+            if flag.is_empty()
+                || !flag.chars().all(|c| c.is_ascii_lowercase() || c == '-' || c == '_')
+            {
+                continue;
+            }
+            if !readme.contains(&format!("--{flag}")) {
+                push(
+                    findings,
+                    f,
+                    toks[i].line,
+                    "drift-cli-readme",
+                    format!("CLI flag `--{flag}` is read here but not documented in README.md"),
+                );
+            }
+        }
+    }
+}
+
+// -- manifest lints ----------------------------------------------------------
+
+fn manifest_paths(root: &Path) -> Vec<PathBuf> {
+    // Every Cargo.toml in the tree except target/ build output, hidden
+    // dirs, and hat-lint's own seeded-violation fixtures.
+    let mut out = Vec::new();
+    collect_manifests(root, &mut out);
+    out.sort();
+    out
+}
+
+fn collect_manifests(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        let name = entry.file_name().to_string_lossy().to_string();
+        if p.is_dir() {
+            if name == "target" || name == "fixtures" || name.starts_with('.') {
+                continue;
+            }
+            collect_manifests(&p, out);
+        } else if name == "Cargo.toml" {
+            out.push(p);
+        }
+    }
+}
+
+fn check_manifests(root: &Path, findings: &mut Vec<Finding>) -> io::Result<()> {
+    for p in manifest_paths(root) {
+        let rel = rel_of(root, &p);
+        let text = fs::read_to_string(&p)?;
+        let lines: Vec<&str> = text.lines().collect();
+        let mut in_deps = false;
+        let mut allows: Vec<Allow> = Vec::new();
+        for (idx, l) in lines.iter().enumerate() {
+            if let Some(at) = l.find('#') {
+                if let Some(a) = parse_allow(&l[at + 1..], idx + 1) {
+                    allows.push(a);
+                }
+            }
+        }
+        for (idx, l) in lines.iter().enumerate() {
+            let line = idx + 1;
+            let t = l.trim();
+            if t.starts_with('[') {
+                in_deps = t.contains("dependencies");
+                continue;
+            }
+            if !in_deps || t.starts_with('#') {
+                continue;
+            }
+            let code = t.split('#').next().unwrap_or("");
+            if code.contains("\"*\"") || code.contains("= \"*") {
+                let allowed = allows.iter().any(|a| {
+                    a.reason_ok
+                        && a.id == "manifest-wildcard"
+                        && (a.line == line || a.line + 1 == line)
+                });
+                if !allowed {
+                    findings.push(Finding {
+                        file: rel.clone(),
+                        line,
+                        id: "manifest-wildcard",
+                        message: "wildcard dependency version — pin the version the code \
+                                  was written against"
+                            .to_string(),
+                        snippet: t.to_string(),
+                    });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Scanned {
+        scan_rust("rust/src/server/x.rs", src)
+    }
+
+    #[test]
+    fn scanner_strips_comments_and_strings() {
+        let s = toks("// xla:: in a comment\nlet x = \"xla::\"; /* xla:: */ let y = 1;");
+        let idents: Vec<&str> = s
+            .toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Ident(i) => Some(i.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(idents, ["let", "x", "let", "y"]);
+    }
+
+    #[test]
+    fn scanner_handles_lifetimes_and_chars() {
+        let s = toks("fn f<'e>(x: &'e str) { let c = 'a'; let nl = '\\n'; }");
+        assert!(s.toks.iter().any(|t| t.tok == Tok::Ident("str".into())));
+        // The char literals must not swallow the rest of the file.
+        assert!(s.toks.iter().any(|t| t.tok == Tok::Ident("nl".into())));
+    }
+
+    #[test]
+    fn scanner_handles_raw_strings() {
+        let s = toks("let x = r#\"has \"quotes\" and xla:: inside\"#; let y = 2;");
+        assert!(s.toks.iter().any(|t| t.tok == Tok::Ident("y".into())));
+        assert!(s.toks.iter().any(|t| matches!(&t.tok, Tok::Str(v) if v.contains("xla::"))));
+    }
+
+    #[test]
+    fn allow_annotation_requires_reason() {
+        let s = toks("// hatlint: allow(panic-path) tested invariant\nx.unwrap();");
+        assert!(s.allowed("panic-path", 2));
+        let s = toks("// hatlint: allow(panic-path)\nx.unwrap();");
+        assert!(!s.allowed("panic-path", 2));
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn prod() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\n";
+        let s = toks(src);
+        let unwraps: Vec<bool> = s
+            .toks
+            .iter()
+            .filter(|t| t.tok == Tok::Ident("unwrap".into()))
+            .map(|t| t.in_test)
+            .collect();
+        assert_eq!(unwraps, [false, true]);
+    }
+
+    #[test]
+    fn number_scan_does_not_eat_ranges() {
+        let s = toks("for i in 0..k { a[i * 4..(i + 1) * 4].x(); }");
+        assert!(s.toks.iter().any(|t| t.tok == Tok::Ident("k".into())));
+        assert!(s.toks.iter().any(|t| t.tok == Tok::Ident("x".into())));
+    }
+}

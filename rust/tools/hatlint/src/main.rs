@@ -1,0 +1,87 @@
+//! hat-lint CLI.
+//!
+//! ```text
+//! cargo run -p hatlint              # lint the enclosing repo, human output
+//! cargo run -p hatlint -- --json    # machine-readable findings
+//! cargo run -p hatlint -- --root D  # lint an explicit tree (fixtures)
+//! ```
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage / IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("error: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                eprintln!("usage: hatlint [--root DIR] [--json]");
+                eprintln!("lints: {}", hatlint::LINT_IDS.join(", "));
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("error: unknown argument '{other}'");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let root = match root {
+        Some(r) => r,
+        None => {
+            let cwd = match std::env::current_dir() {
+                Ok(d) => d,
+                Err(e) => {
+                    eprintln!("error: cwd: {e}");
+                    return ExitCode::from(2);
+                }
+            };
+            match hatlint::find_root(&cwd) {
+                Some(r) => r,
+                None => {
+                    eprintln!("error: no repo root (dir containing rust/src) above {cwd:?}");
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    };
+
+    let findings = match hatlint::run_lints(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: scanning {root:?}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if json {
+        let objs: Vec<String> = findings.iter().map(|f| f.to_json()).collect();
+        println!("[{}]", objs.join(","));
+    } else {
+        for f in &findings {
+            print!("{}", f.render());
+        }
+        if findings.is_empty() {
+            println!("hat-lint: clean");
+        } else {
+            println!("hat-lint: {} violation(s)", findings.len());
+        }
+    }
+
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

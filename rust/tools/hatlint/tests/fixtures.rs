@@ -1,0 +1,85 @@
+//! Fixture-based regression suite for hat-lint.
+//!
+//! Every lint ID has a minimal repo-shaped tree under `fixtures/<id>/`
+//! seeding exactly that violation; the `clean/` tree walks every pass and
+//! must come back empty, and `allowed/` proves both suppression syntaxes
+//! (`// hatlint: allow(..)` in Rust, `# hatlint: allow(..)` in Cargo.toml).
+//! The fixture `.rs` files are data, not code — they are never compiled.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name)
+}
+
+fn lint(name: &str) -> Vec<hatlint::Finding> {
+    hatlint::run_lints(&fixture(name))
+        .unwrap_or_else(|e| panic!("scanning fixture {name}: {e}"))
+}
+
+fn rendered(findings: &[hatlint::Finding]) -> String {
+    findings.iter().map(|f| f.render()).collect()
+}
+
+#[test]
+fn clean_tree_passes() {
+    let findings = lint("clean");
+    assert!(
+        findings.is_empty(),
+        "clean fixture should have no findings:\n{}",
+        rendered(&findings)
+    );
+}
+
+#[test]
+fn allowed_suppressions_are_honored() {
+    let findings = lint("allowed");
+    assert!(
+        findings.is_empty(),
+        "allow annotations with reasons should suppress everything:\n{}",
+        rendered(&findings)
+    );
+}
+
+#[test]
+fn every_seeded_violation_is_caught() {
+    // One fixture per lint ID — iterating LINT_IDS keeps this test honest
+    // when a new lint is added without a fixture.
+    for &id in hatlint::LINT_IDS {
+        let findings = lint(id);
+        assert!(!findings.is_empty(), "fixture {id}: seeded violation not caught");
+        assert!(
+            findings.iter().all(|f| f.id == id),
+            "fixture {id}: unexpected extra findings:\n{}",
+            rendered(&findings)
+        );
+    }
+}
+
+#[test]
+fn binary_exit_codes_and_json_output() {
+    let exe = env!("CARGO_BIN_EXE_hatlint");
+
+    let clean = Command::new(exe).arg("--root").arg(fixture("clean")).output().unwrap();
+    assert!(
+        clean.status.success(),
+        "clean fixture must exit 0: {}",
+        String::from_utf8_lossy(&clean.stderr)
+    );
+    assert!(String::from_utf8_lossy(&clean.stdout).contains("hat-lint: clean"));
+
+    let bad = Command::new(exe)
+        .arg("--root")
+        .arg(fixture("panic-path"))
+        .arg("--json")
+        .output()
+        .unwrap();
+    assert_eq!(bad.status.code(), Some(1), "violations must exit 1");
+    let out = String::from_utf8_lossy(&bad.stdout);
+    assert!(out.trim_start().starts_with('['), "--json must emit an array: {out}");
+    assert!(out.contains("\"id\":\"panic-path\""), "--json must carry the lint id: {out}");
+
+    let usage = Command::new(exe).arg("--bogus").output().unwrap();
+    assert_eq!(usage.status.code(), Some(2), "unknown flags must exit 2");
+}

@@ -1,0 +1,26 @@
+//! Tier-1 self-check: hat-lint must run clean on the repo tree itself.
+//!
+//! This is the machine-checked form of the architecture invariants the
+//! byte-identity and distribution-identity oracles rest on: the XLA seam
+//! stays in backend/pjrt.rs, the serve hot path stays panic-free, and the
+//! config/stats/CLI surfaces stay in sync with their documentation.  A
+//! violation anywhere in `rust/src` fails this test with the same rendering
+//! the CLI prints.
+
+use std::path::Path;
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../../..")
+        .canonicalize()
+        .expect("repo root above rust/tools/hatlint");
+    assert!(root.join("rust/src").is_dir(), "unexpected repo layout at {root:?}");
+    let findings = hatlint::run_lints(&root).expect("scanning the repo tree");
+    assert!(
+        findings.is_empty(),
+        "hat-lint found {} violation(s) on the repo tree:\n{}",
+        findings.len(),
+        findings.iter().map(|f| f.render()).collect::<String>()
+    );
+}
