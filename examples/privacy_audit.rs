@@ -12,7 +12,6 @@
 //!    embeddings invert ~100%, post-layer-1 states far less.
 
 use hat::engine::Engine;
-use hat::model::DeviceStream;
 use hat::runtime::ArtifactRegistry;
 use hat::util::rng::Rng;
 use hat::workload::PromptPool;
@@ -37,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     let prompt = pool.sample(128, &mut rng);
 
     // What the device uploads in prefill: shallow hidden states.
-    let mut dev = DeviceStream::new(&spec)?;
+    let mut dev = engine.new_device_stream();
     let hidden = engine.device_input(&mut dev, &prompt)?;
     println!("=== payload inventory (prefill, {}-token prompt) ===", prompt.len());
     println!(

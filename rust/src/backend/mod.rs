@@ -38,6 +38,27 @@
 //! stacked batch and counts a *single* execution whose
 //! [`RuntimeStats::batch_occupancy`] grows by the item count — mean
 //! occupancy `batch_occupancy / executions` is the batching win.
+//!
+//! ## The paged KV contract (`run_paged` / `run_batch_paged`)
+//!
+//! KV storage lives in `kv::KvCache` block tables, not in per-call dense
+//! tensors.  [`ExecBackend::run_paged`] executes one artifact with
+//! `inputs` = the manifest's dynamic inputs *minus* KV tensors (KV
+//! entries are any `TensorSpec` whose name contains `"kv"` — see
+//! [`is_kv`]) and `kvs` = one cache per KV input, in spec order; KV
+//! *outputs* pair up with the KV inputs in order, are written through the
+//! cache tables, and are dropped from the returned list.  Lanes of
+//! [`ExecBackend::run_batch_paged`] are independent, exactly like
+//! `run_batch`.
+//!
+//! The default implementations are a *dense shim*: gather each cache to
+//! its dense tensor, call `run`/`run_batch`, and scatter back only the
+//! rows the artifact wrote (`[pos, pos + spec.t)`, clipped to `max_seq`)
+//! — never the whole tensor, which would sever copy-on-write sharing and
+//! void the prefix-sum checkpoints.  Backends that know nothing about
+//! paging (PJRT) therefore keep working unchanged; the reference backend
+//! overrides both to read/write blocks directly with checkpointed prefix
+//! sums (amortized O(block) per step instead of O(position)).
 
 pub mod reference;
 
@@ -46,7 +67,8 @@ pub mod pjrt;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::kv::KvCache;
+use crate::runtime::manifest::{ArtifactSpec, Manifest, TensorSpec};
 
 /// A plain host tensor: row-major f32 data plus dims.  Integer inputs
 /// (token ids, positions) are carried as exactly-representable f32 values
@@ -186,12 +208,232 @@ pub trait ExecBackend {
         inputs.iter().map(|item| self.run(name, item)).collect()
     }
 
+    /// Execute artifact `name` against paged KV caches: `inputs` carries
+    /// the non-KV dynamic inputs (manifest order with KV entries removed),
+    /// `kvs` one cache per KV input in spec order.  KV outputs are applied
+    /// to the caches and dropped from the returned list (see the module
+    /// docs for the full contract).  The default is the dense shim over
+    /// [`ExecBackend::run`]; paged-native backends override it.
+    fn run_paged(
+        &self,
+        name: &str,
+        inputs: &[&Tensor],
+        kvs: &mut [&mut KvCache],
+    ) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest()
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let dense: Vec<Tensor> =
+            kvs.iter().map(|c| c.gather_dense()).collect::<Result<_>>()?;
+        let full = splice_kv_inputs(spec, inputs, &dense)?;
+        let outs = self.run(name, &full)?;
+        scatter_kv_outputs(spec, inputs, outs, kvs)
+    }
+
+    /// Batched [`ExecBackend::run_paged`]: one lane per [`PagedItem`],
+    /// independent lanes, outputs at matching indices with KV entries
+    /// applied to each lane's caches and dropped.  The default is the
+    /// dense shim over [`ExecBackend::run_batch`].
+    fn run_batch_paged(
+        &self,
+        name: &str,
+        items: &mut [PagedItem<'_>],
+    ) -> Result<Vec<Vec<Tensor>>> {
+        if items.is_empty() {
+            return Ok(Vec::new());
+        }
+        let spec = self
+            .manifest()
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let dense: Vec<Vec<Tensor>> = items
+            .iter()
+            .map(|it| it.kvs.iter().map(|c| c.gather_dense()).collect::<Result<Vec<_>>>())
+            .collect::<Result<_>>()?;
+        let full: Vec<Vec<&Tensor>> = items
+            .iter()
+            .zip(&dense)
+            .map(|(it, ds)| splice_kv_inputs(spec, &it.inputs, ds))
+            .collect::<Result<_>>()?;
+        let outs = self.run_batch(name, &full)?;
+        drop(full);
+        items
+            .iter_mut()
+            .zip(outs)
+            .map(|(it, o)| scatter_kv_outputs(spec, &it.inputs, o, &mut it.kvs))
+            .collect()
+    }
+
     /// Host copy of a named weight, if the backend materializes it
     /// (used by the privacy audit's inversion attack).
     fn weight(&self, name: &str) -> Option<Tensor>;
 
     /// Snapshot of the compile/execute counters.
     fn stats(&self) -> RuntimeStats;
+}
+
+/// One lane of a [`ExecBackend::run_batch_paged`] call: the lane's non-KV
+/// dynamic inputs plus its KV caches (matching the artifact's KV inputs
+/// in spec order).
+pub struct PagedItem<'a> {
+    pub inputs: Vec<&'a Tensor>,
+    pub kvs: Vec<&'a mut KvCache>,
+}
+
+/// KV tensors are identified by spec name — the `"skv"`/`"akv"`/`"mkv"`
+/// manifest convention shared by both backends and the AOT compiler.
+pub fn is_kv(spec: &TensorSpec) -> bool {
+    spec.name.contains("kv")
+}
+
+/// Interleave the caller's non-KV inputs with freshly gathered dense KV
+/// tensors, restoring the artifact's full manifest input order.
+fn splice_kv_inputs<'t>(
+    spec: &ArtifactSpec,
+    inputs: &[&'t Tensor],
+    dense: &'t [Tensor],
+) -> Result<Vec<&'t Tensor>> {
+    let mut full = Vec::with_capacity(spec.inputs.len());
+    let (mut ki, mut ii) = (0usize, 0usize);
+    for ts in &spec.inputs {
+        if is_kv(ts) {
+            let d = dense.get(ki).ok_or_else(|| {
+                anyhow!("artifact {}: only {} KV caches supplied", spec.name, dense.len())
+            })?;
+            full.push(d);
+            ki += 1;
+        } else {
+            let t = inputs.get(ii).ok_or_else(|| {
+                anyhow!("artifact {}: non-KV input '{}' missing", spec.name, ts.name)
+            })?;
+            full.push(*t);
+            ii += 1;
+        }
+    }
+    if ki != dense.len() || ii != inputs.len() {
+        bail!(
+            "artifact {}: paged input arity mismatch (kv {}/{}, non-kv {}/{})",
+            spec.name,
+            ki,
+            dense.len(),
+            ii,
+            inputs.len()
+        );
+    }
+    Ok(full)
+}
+
+/// The absolute row the artifact writes from: its scalar `pos` input.
+fn paged_write_start(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<usize> {
+    let mut ii = 0usize;
+    for ts in &spec.inputs {
+        if is_kv(ts) {
+            continue;
+        }
+        if ts.name == "pos" {
+            let t = inputs
+                .get(ii)
+                .ok_or_else(|| anyhow!("artifact {}: 'pos' input missing", spec.name))?;
+            return Ok(t.scalar_value()?.round() as usize);
+        }
+        ii += 1;
+    }
+    bail!("artifact {} has KV outputs but no 'pos' input", spec.name)
+}
+
+/// Apply a dense run's KV output tensors back to the caches (only the
+/// rows the artifact wrote: `[pos, pos + t)`, clipped by the cache) and
+/// return the non-KV outputs in manifest order.
+fn scatter_kv_outputs(
+    spec: &ArtifactSpec,
+    inputs: &[&Tensor],
+    outs: Vec<Tensor>,
+    kvs: &mut [&mut KvCache],
+) -> Result<Vec<Tensor>> {
+    if outs.len() != spec.outputs.len() {
+        bail!(
+            "artifact {}: expected {} outputs, got {}",
+            spec.name,
+            spec.outputs.len(),
+            outs.len()
+        );
+    }
+    if !spec.outputs.iter().any(is_kv) {
+        return Ok(outs);
+    }
+    let start = paged_write_start(spec, inputs)?;
+    let mut kept = Vec::new();
+    let mut ki = 0usize;
+    for (t, ts) in outs.into_iter().zip(&spec.outputs) {
+        if is_kv(ts) {
+            let c = kvs.get_mut(ki).ok_or_else(|| {
+                anyhow!("artifact {}: KV output '{}' has no cache", spec.name, ts.name)
+            })?;
+            c.scatter_rows(&t.data, start, spec.t)?;
+            ki += 1;
+        } else {
+            kept.push(t);
+        }
+    }
+    Ok(kept)
+}
+
+/// Paged twin of [`validate_inputs`]: non-KV inputs must match the non-KV
+/// specs, and there must be exactly one cache (of matching dense size)
+/// per KV input.
+pub fn validate_inputs_paged(
+    spec: &ArtifactSpec,
+    inputs: &[&Tensor],
+    kvs: &[&mut KvCache],
+) -> Result<()> {
+    let (mut ki, mut ii) = (0usize, 0usize);
+    for is in &spec.inputs {
+        if is_kv(is) {
+            let c = kvs
+                .get(ki)
+                .ok_or_else(|| anyhow!("artifact {}: KV input '{}' has no cache", spec.name, is.name))?;
+            let want: usize = is.shape.iter().product();
+            let got: usize = c.dims().iter().product();
+            if want != got {
+                bail!(
+                    "artifact {} KV '{}': cache dims {:?} != spec shape {:?}",
+                    spec.name,
+                    is.name,
+                    c.dims(),
+                    is.shape
+                );
+            }
+            ki += 1;
+        } else {
+            let t = inputs.get(ii).ok_or_else(|| {
+                anyhow!("artifact {}: missing non-KV input '{}'", spec.name, is.name)
+            })?;
+            let want: usize = is.shape.iter().product();
+            if t.element_count() != want {
+                bail!(
+                    "artifact {} input '{}': expected shape {:?} ({} elems), got {:?}",
+                    spec.name,
+                    is.name,
+                    is.shape,
+                    want,
+                    t.dims
+                );
+            }
+            ii += 1;
+        }
+    }
+    if ii != inputs.len() || ki != kvs.len() {
+        bail!(
+            "artifact {}: paged arity mismatch (kv {}/{}, non-kv {}/{})",
+            spec.name,
+            ki,
+            kvs.len(),
+            ii,
+            inputs.len()
+        );
+    }
+    Ok(())
 }
 
 /// Shared arity/shape validation against the manifest spec.

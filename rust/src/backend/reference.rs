@@ -29,7 +29,10 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::{validate_inputs, ExecBackend, RuntimeStats, Tensor};
+use super::{
+    is_kv, validate_inputs, validate_inputs_paged, ExecBackend, PagedItem, RuntimeStats, Tensor,
+};
+use crate::kv::KvCache;
 use crate::runtime::manifest::{ArtifactSpec, Manifest, ModelSpec, TensorSpec, TrainMeta};
 
 // Hash-stream tags for the pseudo-weight families.
@@ -346,6 +349,123 @@ impl ReferenceBackend {
         }
         Ok(outs)
     }
+
+    /// Paged twin of [`Self::execute_spec`]: KV history is read through the
+    /// caches' checkpointed prefix sums and rows are written back through
+    /// the block tables (copy-on-write), so no dense KV tensor is ever
+    /// materialized.  Bit-identity with the dense path follows from the
+    /// prefix-sum contract in [`crate::kv`]: `KvCache::prefix_sum(p)`
+    /// reproduces `kv_prefix_sum(dense, p, h)` bit-for-bit, and
+    /// `write_row_accumulate` folds each new row into the running sum in
+    /// the same order the dense loop does — while decode steps drop from
+    /// O(position) to amortized O(block_tokens).
+    fn execute_paged(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[&Tensor],
+        kvs: &mut [&mut KvCache],
+    ) -> Result<Vec<Tensor>> {
+        let h = self.manifest.model.hidden;
+        let v = self.manifest.model.vocab;
+        let s_max = self.manifest.model.max_seq;
+        let b = spec.t;
+
+        let outs: Vec<Tensor> = match spec.kind.as_str() {
+            "device_input" => {
+                // inputs [tokens(b), pos], kvs [skv] -> [hidden(b,H)]
+                let tokens = &inputs[0].data;
+                let pos = Self::pos_of(inputs[1])?;
+                self.check_start(pos)?;
+                let skv = &mut *kvs[0];
+                let mut sum = skv.prefix_sum(pos);
+                let mut hidden = Vec::with_capacity(b * h);
+                for i in 0..b {
+                    let p = pos + i;
+                    if p >= s_max {
+                        hidden.resize((i + 1) * h, 0.0); // clipped padding row
+                        continue;
+                    }
+                    let tok = tokens[i].round() as u32;
+                    let s = self.shallow_core(tok, p, &Self::mean_of(&sum, p));
+                    skv.write_row_accumulate(p, &s, &mut sum)?;
+                    hidden.extend_from_slice(&s);
+                }
+                vec![Tensor::new(vec![b, h], hidden)?]
+            }
+            "adapter_prefill" => {
+                // inputs [hidden(b,H), pos], kvs [akv] -> []
+                let hidden = &inputs[0].data;
+                let pos = Self::pos_of(inputs[1])?;
+                self.check_start(pos)?;
+                let akv = &mut *kvs[0];
+                let mut sum = akv.prefix_sum(pos);
+                for i in 0..b {
+                    let p = pos + i;
+                    if p >= s_max {
+                        continue; // clipped padding row
+                    }
+                    let a = self.deep_core(&hidden[i * h..(i + 1) * h], &Self::mean_of(&sum, p));
+                    akv.write_row_accumulate(p, &a, &mut sum)?;
+                }
+                Vec::new()
+            }
+            "cloud_middle" => {
+                // inputs [hidden(b,H), pos], kvs [mkv] -> [deep(b,H)]
+                let hidden = &inputs[0].data;
+                let pos = Self::pos_of(inputs[1])?;
+                self.check_start(pos)?;
+                let mkv = &mut *kvs[0];
+                let mut sum = mkv.prefix_sum(pos);
+                let mut deep = Vec::with_capacity(b * h);
+                for i in 0..b {
+                    let p = pos + i;
+                    if p >= s_max {
+                        deep.resize((i + 1) * h, 0.0); // clipped padding row
+                        continue;
+                    }
+                    let m = self.deep_core(&hidden[i * h..(i + 1) * h], &Self::mean_of(&sum, p));
+                    mkv.write_row_accumulate(p, &m, &mut sum)?;
+                    deep.extend_from_slice(&m);
+                }
+                vec![Tensor::new(vec![b, h], deep)?]
+            }
+            "draft_step" => {
+                // inputs [token(1), pos], kvs [skv, akv] -> [logits(V), shallow(H)]
+                let tok = inputs[0].data[0].round() as u32;
+                let p = Self::pos_of(inputs[1])?;
+                self.check_pos(p, 1)?;
+                let (sk, ak) = kvs.split_at_mut(1);
+                let skv = &mut *sk[0];
+                let akv = &mut *ak[0];
+                let mut ssum = skv.prefix_sum(p);
+                let s = self.shallow_core(tok, p, &Self::mean_of(&ssum, p));
+                skv.write_row_accumulate(p, &s, &mut ssum)?;
+                let mut asum = akv.prefix_sum(p);
+                let a = self.deep_core(&s, &Self::mean_of(&asum, p));
+                akv.write_row_accumulate(p, &a, &mut asum)?;
+                // Draft deep ≈ verify deep + position-keyed perturbation.
+                let dn = &self.draft_noise[p * h..(p + 1) * h];
+                let draft_deep: Vec<f32> =
+                    (0..h).map(|d| a[d] + DRAFT_NOISE * dn[d]).collect();
+                let logits = self.head_row(&draft_deep, &self.head_w, v);
+                vec![Tensor::new(vec![v], logits)?, Tensor::new(vec![h], s)?]
+            }
+            // Artifacts with no KV tensors run the dense core unchanged.
+            "device_head" | "medusa_decode" => self.execute_spec(spec, inputs)?,
+            other => bail!("reference backend: unknown artifact kind '{other}'"),
+        };
+
+        let want = spec.outputs.iter().filter(|o| !is_kv(o)).count();
+        if outs.len() != want {
+            bail!(
+                "artifact {}: expected {} non-KV outputs, produced {}",
+                spec.name,
+                want,
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
 }
 
 impl ExecBackend for ReferenceBackend {
@@ -415,6 +535,66 @@ impl ExecBackend for ReferenceBackend {
             let mut s = self.stats.borrow_mut();
             s.executions += 1;
             s.batch_occupancy += inputs.len();
+            s.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        Ok(outs)
+    }
+
+    /// Paged-native execution: reads KV history through the caches'
+    /// checkpointed prefix sums instead of gathering a dense tensor —
+    /// same outputs as the dense shim, bit-for-bit, without the O(S·H)
+    /// gather/scatter per call.
+    fn run_paged(
+        &self,
+        name: &str,
+        inputs: &[&Tensor],
+        kvs: &mut [&mut KvCache],
+    ) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        validate_inputs_paged(spec, inputs, kvs)?;
+        self.compile(name)?;
+        let t0 = crate::util::clock::now();
+        let outs = self.execute_paged(spec, inputs, kvs)?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.batch_occupancy += 1;
+            s.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        Ok(outs)
+    }
+
+    /// Vectorized paged batch: mirrors [`ExecBackend::run_batch`]'s stats
+    /// contract — validated and timed once, one execution,
+    /// `batch_occupancy += items`.
+    fn run_batch_paged(
+        &self,
+        name: &str,
+        items: &mut [PagedItem<'_>],
+    ) -> Result<Vec<Vec<Tensor>>> {
+        if items.is_empty() {
+            return Ok(Vec::new());
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        for it in items.iter() {
+            validate_inputs_paged(spec, &it.inputs, &it.kvs)?;
+        }
+        self.compile(name)?;
+        let t0 = crate::util::clock::now();
+        let outs: Vec<Vec<Tensor>> = items
+            .iter_mut()
+            .map(|it| self.execute_paged(spec, &it.inputs, &mut it.kvs))
+            .collect::<Result<_>>()?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.batch_occupancy += outs.len();
             s.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
         }
         Ok(outs)
@@ -733,5 +913,205 @@ mod tests {
         let bad = zeros_tensor(&[3, 3]);
         assert!(be.run_batch("device_head_1", &[vec![&bad]]).is_err());
         assert!(be.run_batch("nonexistent", &[vec![&bad]]).is_err());
+    }
+
+    // -- paged KV path -----------------------------------------------------
+
+    use crate::config::KvConfig;
+    use crate::kv::{KvCache, KvPool};
+
+    fn paged_caches(be: &ReferenceBackend) -> (KvPool, KvCache, KvCache, KvCache) {
+        let m = be.manifest().model.clone();
+        let pool =
+            KvPool::new(&KvConfig { block_tokens: 8, kv_blocks: 512 }, m.hidden, m.max_seq)
+                .unwrap();
+        let skv = pool.new_cache(m.shallow_kv_dims(), m.max_seq);
+        let akv = pool.new_cache(m.adapter_kv_dims(), m.max_seq);
+        let mkv = pool.new_cache(m.middle_kv_dims(), m.max_seq);
+        (pool, skv, akv, mkv)
+    }
+
+    /// The satellite-1 equivalence oracle: the paged path (incremental
+    /// checkpointed prefix sums) must be bit-identical to the dense path
+    /// (O(p·h) recomputation) through prefill, decode *and* speculative
+    /// overwrite of a stale tail.
+    #[test]
+    fn paged_matches_dense_bitwise_through_prefill_decode_and_rollback() {
+        let be = backend();
+        let m = be.manifest().model.clone();
+        let (_pool, mut skv, mut akv, mut mkv) = paged_caches(&be);
+        let mut d_skv = zeros_tensor(&m.shallow_kv_dims());
+        let mut d_akv = zeros_tensor(&m.adapter_kv_dims());
+        let mut d_mkv = zeros_tensor(&m.middle_kv_dims());
+
+        // Prefill chunk of 16 tokens at position 0.
+        let toks: Vec<u32> = (0..16).map(|i| (i * 7 + 3) as u32).collect();
+        let tt = tokens_tensor(&toks, 16).unwrap();
+        let p0 = pos_tensor(0);
+        let dense = be.run("device_input_16", &[&tt, &d_skv, &p0]).unwrap();
+        let paged = be.run_paged("device_input_16", &[&tt, &p0], &mut [&mut skv]).unwrap();
+        assert_eq!(paged.len(), 1, "KV output is applied to the cache, not returned");
+        assert_eq!(paged[0], dense[0], "hidden rows");
+        d_skv = dense[1].clone();
+        assert_eq!(skv.gather_dense().unwrap(), d_skv, "skv after prefill");
+        let hidden = dense[0].clone();
+
+        let dense_a = be.run("adapter_prefill_16", &[&hidden, &d_akv, &p0]).unwrap();
+        let paged_a =
+            be.run_paged("adapter_prefill_16", &[&hidden, &p0], &mut [&mut akv]).unwrap();
+        assert!(paged_a.is_empty(), "adapter_prefill has only a KV output");
+        d_akv = dense_a[0].clone();
+        assert_eq!(akv.gather_dense().unwrap(), d_akv, "akv after prefill");
+
+        let dense_m = be.run("cloud_middle_16", &[&hidden, &d_mkv, &p0]).unwrap();
+        let paged_m = be.run_paged("cloud_middle_16", &[&hidden, &p0], &mut [&mut mkv]).unwrap();
+        assert_eq!(paged_m[0], dense_m[0], "deep rows");
+        d_mkv = dense_m[1].clone();
+        assert_eq!(mkv.gather_dense().unwrap(), d_mkv, "mkv after prefill");
+
+        // Decode: draft steps crossing a block boundary (bt=8, rows 16..25).
+        for p in 16..26 {
+            let t1 = tokens_tensor(&[(p * 11 % 256) as u32], 1).unwrap();
+            let pp = pos_tensor(p);
+            let dense_d = be.run("draft_step_1", &[&t1, &d_skv, &d_akv, &pp]).unwrap();
+            let paged_d = be
+                .run_paged("draft_step_1", &[&t1, &pp], &mut [&mut skv, &mut akv])
+                .unwrap();
+            assert_eq!(paged_d.len(), 2);
+            assert_eq!(paged_d[0], dense_d[0], "draft logits at {p}");
+            assert_eq!(paged_d[1], dense_d[3], "shallow row at {p}");
+            d_skv = dense_d[1].clone();
+            d_akv = dense_d[2].clone();
+        }
+        assert_eq!(skv.gather_dense().unwrap(), d_skv, "skv after decode");
+        assert_eq!(akv.gather_dense().unwrap(), d_akv, "akv after decode");
+
+        // Speculative rollback: a verify chunk overwrites the drafted tail
+        // (invalidates checkpoints past row 16, still bit-identical).
+        let vt = tokens_tensor(&[9, 8], 4).unwrap();
+        let vp = pos_tensor(16);
+        let dense_v = be.run("device_input_4", &[&vt, &d_skv, &vp]).unwrap();
+        let paged_v = be.run_paged("device_input_4", &[&vt, &vp], &mut [&mut skv]).unwrap();
+        assert_eq!(paged_v[0], dense_v[0], "verify hidden after overwrite");
+        assert_eq!(skv.gather_dense().unwrap(), dense_v[1], "skv after overwrite");
+    }
+
+    /// Wrapper that deliberately does NOT override the paged methods, so
+    /// the trait's dense-shim defaults run — they must agree bit-for-bit
+    /// with the paged-native path.
+    struct ShimOnly(ReferenceBackend);
+
+    impl ExecBackend for ShimOnly {
+        fn name(&self) -> &'static str {
+            "shim"
+        }
+        fn manifest(&self) -> &Manifest {
+            self.0.manifest()
+        }
+        fn load_weights(&mut self) -> Result<()> {
+            Ok(())
+        }
+        fn compile(&self, name: &str) -> Result<()> {
+            self.0.compile(name)
+        }
+        fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+            self.0.run(name, inputs)
+        }
+        fn weight(&self, name: &str) -> Option<Tensor> {
+            self.0.weight(name)
+        }
+        fn stats(&self) -> RuntimeStats {
+            self.0.stats()
+        }
+    }
+
+    #[test]
+    fn dense_shim_default_matches_paged_native_bitwise() {
+        let native = backend();
+        let shim = ShimOnly(backend());
+        let (_pn, mut n_skv, mut n_akv, _nm) = paged_caches(&native);
+        let (_ps, mut s_skv, mut s_akv, _sm) = paged_caches(&native);
+
+        let toks: Vec<u32> = (0..7).map(|i| (i * 13 + 1) as u32).collect();
+        let tt = tokens_tensor(&toks, 16).unwrap();
+        let p0 = pos_tensor(0);
+        let n1 = native.run_paged("device_input_16", &[&tt, &p0], &mut [&mut n_skv]).unwrap();
+        let s1 = shim.run_paged("device_input_16", &[&tt, &p0], &mut [&mut s_skv]).unwrap();
+        assert_eq!(n1, s1, "prefill hidden");
+
+        for p in 7..10 {
+            let t1 = tokens_tensor(&[(p * 3) as u32], 1).unwrap();
+            let pp = pos_tensor(p);
+            let n = native
+                .run_paged("draft_step_1", &[&t1, &pp], &mut [&mut n_skv, &mut n_akv])
+                .unwrap();
+            let s = shim
+                .run_paged("draft_step_1", &[&t1, &pp], &mut [&mut s_skv, &mut s_akv])
+                .unwrap();
+            assert_eq!(n, s, "draft outputs at {p}");
+        }
+        assert_eq!(
+            n_skv.gather_dense().unwrap(),
+            s_skv.gather_dense().unwrap(),
+            "skv state native vs shim"
+        );
+        assert_eq!(
+            n_akv.gather_dense().unwrap(),
+            s_akv.gather_dense().unwrap(),
+            "akv state native vs shim"
+        );
+    }
+
+    #[test]
+    fn run_batch_paged_matches_serial_and_counts_one_execution() {
+        let be = backend();
+        let m = be.manifest().model.clone();
+        let (pool, mut a, _akv, _mkv) = paged_caches(&be);
+        let mut b = pool.new_cache(m.shallow_kv_dims(), m.max_seq);
+        // Give lane B a different history (one row at position 0).
+        let seed_t = tokens_tensor(&[42], 1).unwrap();
+        be.run_paged("device_input_1", &[&seed_t, &pos_tensor(0)], &mut [&mut b]).unwrap();
+
+        // Serial oracle on copy-on-write forks of the same caches.
+        let (mut a2, mut b2) = (a.fork(), b.fork());
+        let ta = tokens_tensor(&[3, 5, 7], 4).unwrap();
+        let tb = tokens_tensor(&[9], 4).unwrap();
+        let (pa, pb) = (pos_tensor(0), pos_tensor(1));
+        let sa = be.run_paged("device_input_4", &[&ta, &pa], &mut [&mut a2]).unwrap();
+        let sb = be.run_paged("device_input_4", &[&tb, &pb], &mut [&mut b2]).unwrap();
+
+        let before = be.stats().executions;
+        let mut items = vec![
+            PagedItem { inputs: vec![&ta, &pa], kvs: vec![&mut a] },
+            PagedItem { inputs: vec![&tb, &pb], kvs: vec![&mut b] },
+        ];
+        let outs = be.run_batch_paged("device_input_4", &mut items).unwrap();
+        drop(items);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0], sa, "lane A diverged from serial paged run");
+        assert_eq!(outs[1], sb, "lane B diverged from serial paged run");
+        assert_eq!(a.gather_dense().unwrap(), a2.gather_dense().unwrap());
+        assert_eq!(b.gather_dense().unwrap(), b2.gather_dense().unwrap());
+        let s = be.stats();
+        assert_eq!(s.executions, before + 1, "a paged batch is one execution");
+        assert!(be.run_batch_paged("device_input_4", &mut []).unwrap().is_empty());
+    }
+
+    #[test]
+    fn run_paged_rejects_bad_arity() {
+        let be = backend();
+        let (_pool, mut skv, _akv, _mkv) = paged_caches(&be);
+        let tt = tokens_tensor(&[1], 1).unwrap();
+        let p0 = pos_tensor(0);
+        // Missing cache.
+        assert!(be.run_paged("device_input_1", &[&tt, &p0], &mut []).is_err());
+        // Missing non-KV input.
+        assert!(be.run_paged("device_input_1", &[&tt], &mut [&mut skv]).is_err());
+        // Dense KV tensor passed where the cache should be (extra input).
+        let dense = zeros_tensor(&be.manifest().model.shallow_kv_dims());
+        assert!(be
+            .run_paged("device_input_1", &[&tt, &dense, &p0], &mut [&mut skv])
+            .is_err());
+        assert!(be.run_paged("nonexistent", &[], &mut []).is_err());
     }
 }

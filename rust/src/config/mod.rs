@@ -258,6 +258,61 @@ impl AdmitPolicy {
     }
 }
 
+/// Preemption policy of the serve scheduler under slot pressure
+/// (`[serve] priority = "none" | "preempt"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PriorityMode {
+    /// Never preempt: waiting requests wait for a naturally freed slot.
+    None,
+    /// When every slot is busy and requests are waiting, pause the live
+    /// session with the least committed progress: its staged state is
+    /// aborted, its KV blocks are swapped out to the host freelist, and it
+    /// re-enters the wait queue to be swapped back in and resumed once a
+    /// slot frees — instead of being cancelled.  Byte-identity of the
+    /// resumed stream to serial `generate()` is preserved (the KV pages
+    /// are restored bit-for-bit).
+    Preempt,
+}
+
+impl PriorityMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            PriorityMode::None => "none",
+            PriorityMode::Preempt => "preempt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PriorityMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Some(PriorityMode::None),
+            "preempt" => Some(PriorityMode::Preempt),
+            _ => None,
+        }
+    }
+}
+
+/// Paged KV-cache configuration (`[kv]`): the block pool backing every
+/// stream's skv/akv/mkv caches (see the `kv` module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvConfig {
+    /// Rows (token positions) per block.  Must be a multiple of 8 — the
+    /// same alignment quantum the chunk optimizer rounds to, so sealed
+    /// block boundaries land on chunk-commit boundaries.
+    pub block_tokens: usize,
+    /// Total physical blocks in the pool, shared by all live sessions.
+    pub kv_blocks: usize,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        // 64-token blocks x 512 blocks = 32k pooled rows: comfortably
+        // covers the default 8-session serve scheduler on the synthetic
+        // model (3 caches x 10 blocks per session) and the workload
+        // presets' max-length session floor checked in validate().
+        KvConfig { block_tokens: 64, kv_blocks: 512 }
+    }
+}
+
 /// Real-serving configuration (`hat serve`): the continuous-batching
 /// scheduler that interleaves live sessions at chunk/round granularity
 /// (server::scheduler).  The Eq. 3 chunk optimizer needs a wire model and
@@ -301,6 +356,9 @@ pub struct ServeConfig {
     /// reply — waiting or live, the request is torn down at the next
     /// iteration boundary.  0 disables deadlines.
     pub deadline_ms: u64,
+    /// Preemption policy under slot pressure
+    /// (`[serve] priority = "none" | "preempt"`).
+    pub priority: PriorityMode,
 }
 
 impl Default for ServeConfig {
@@ -321,6 +379,7 @@ impl Default for ServeConfig {
             policy: AdmitPolicy::Fifo,
             sjf_aging_ms: 1000,
             deadline_ms: 0,
+            priority: PriorityMode::None,
         }
     }
 }
@@ -440,6 +499,8 @@ pub struct ExperimentConfig {
     pub specdec: SpecDecConfig,
     /// Real-serving scheduler settings (`hat serve`).
     pub serve: ServeConfig,
+    /// Paged KV block-pool settings (`[kv]`).
+    pub kv: KvConfig,
     /// Chunk-size bounds for the Eq. 3 optimizer.
     pub min_chunk: usize,
     pub max_chunk: usize,
@@ -455,6 +516,7 @@ impl ExperimentConfig {
             cloud: CloudConfig::preset(dataset, 4),
             specdec: SpecDecConfig::default(),
             serve: ServeConfig::default(),
+            kv: KvConfig::default(),
             min_chunk: 16,
             max_chunk: 512,
         }
@@ -523,6 +585,25 @@ impl ExperimentConfig {
         if self.workload.min_prompt > self.workload.max_prompt {
             errs.push("prompt bounds invalid".into());
         }
+        if self.kv.block_tokens < 8 || self.kv.block_tokens % 8 != 0 {
+            errs.push("kv.block_tokens must be a multiple of 8".into());
+        }
+        if self.kv.kv_blocks == 0 {
+            errs.push("kv.kv_blocks must be > 0".into());
+        } else if self.kv.block_tokens * self.kv.kv_blocks
+            < 3 * (self.workload.max_prompt + self.workload.max_new_tokens)
+        {
+            // One session needs three caches (skv/akv/mkv) of up to
+            // max_prompt + max_new_tokens rows each; a pool that cannot
+            // hold even one such session deadlocks admission.  (The
+            // manifest-aware per-cache check lives in kv::KvPool::new.)
+            errs.push(format!(
+                "kv pool too small: block_tokens x kv_blocks = {} rows cannot hold one \
+                 max-length session (3 x {} rows)",
+                self.kv.block_tokens * self.kv.kv_blocks,
+                self.workload.max_prompt + self.workload.max_new_tokens
+            ));
+        }
         if errs.is_empty() { Ok(()) } else { Err(errs) }
     }
 }
@@ -577,6 +658,24 @@ mod tests {
     }
 
     #[test]
+    fn validation_catches_bad_kv_values() {
+        let mut c = ExperimentConfig::preset(Framework::Hat, Dataset::SpecBench);
+        c.kv.block_tokens = 12; // not a multiple of 8
+        let errs = c.validate().unwrap_err();
+        assert!(errs.iter().any(|e| e.contains("block_tokens")), "{errs:?}");
+
+        let mut c = ExperimentConfig::preset(Framework::Hat, Dataset::SpecBench);
+        c.kv.kv_blocks = 0;
+        let errs = c.validate().unwrap_err();
+        assert!(errs.iter().any(|e| e.contains("kv.kv_blocks")), "{errs:?}");
+
+        let mut c = ExperimentConfig::preset(Framework::Hat, Dataset::SpecBench);
+        c.kv.kv_blocks = 4; // 64 x 4 rows << one max-length session
+        let errs = c.validate().unwrap_err();
+        assert!(errs.iter().any(|e| e.contains("kv pool too small")), "{errs:?}");
+    }
+
+    #[test]
     fn framework_strategies_match_baseline_definitions() {
         let hat = Strategies::for_framework(Framework::Hat, Dataset::SpecBench);
         assert!(hat.sd && hat.pc && hat.pd);
@@ -602,6 +701,12 @@ mod tests {
         assert_eq!(AdmitPolicy::parse("lifo"), None);
         assert_eq!(ServeConfig::default().policy, AdmitPolicy::Fifo);
         assert_eq!(ServeConfig::default().deadline_ms, 0, "deadlines default off");
+        for m in [PriorityMode::None, PriorityMode::Preempt] {
+            assert_eq!(PriorityMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(PriorityMode::parse("evict"), None);
+        assert_eq!(ServeConfig::default().priority, PriorityMode::None, "preemption defaults off");
+        assert_eq!(KvConfig::default(), KvConfig { block_tokens: 64, kv_blocks: 512 });
         for m in [SampleVerify::Coupled, SampleVerify::Rejection] {
             assert_eq!(SampleVerify::parse(m.name()), Some(m));
         }

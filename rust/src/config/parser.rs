@@ -174,6 +174,14 @@ pub fn build(map: &BTreeMap<String, Scalar>) -> Result<ExperimentConfig, String>
             "serve.sjf_aging_ms" => cfg.serve.sjf_aging_ms = us()? as u64,
             // hatlint: allow(drift-config-validate) 0 disables deadlines
             "serve.deadline_ms" => cfg.serve.deadline_ms = us()? as u64,
+            // hatlint: allow(drift-config-validate) enum: PriorityMode::parse rejects unknowns here
+            "serve.priority" => {
+                let s = v.as_str().ok_or("serve.priority must be a string")?;
+                cfg.serve.priority = super::PriorityMode::parse(s)
+                    .ok_or_else(|| format!("unknown serve.priority {s:?} (none|preempt)"))?;
+            }
+            "kv.block_tokens" => cfg.kv.block_tokens = us()?,
+            "kv.kv_blocks" => cfg.kv.kv_blocks = us()?,
             // hatlint: allow(drift-config-validate) bool toggle, both values valid
             "strategies.sd" => cfg.strategies.sd = b()?,
             // hatlint: allow(drift-config-validate) bool toggle, both values valid
@@ -267,6 +275,24 @@ mod tests {
         assert!(build(&m).unwrap_err().contains("serve.policy"));
         let m = parse("[serve]\npolicy = 3\n").unwrap();
         assert!(build(&m).unwrap_err().contains("string"));
+    }
+
+    #[test]
+    fn kv_and_priority_keys_overlay() {
+        let m = parse("[serve]\npriority = \"preempt\"\n[kv]\nblock_tokens = 32\nkv_blocks = 256\n")
+            .unwrap();
+        let cfg = build(&m).unwrap();
+        assert_eq!(cfg.serve.priority, crate::config::PriorityMode::Preempt);
+        assert_eq!(cfg.kv.block_tokens, 32);
+        assert_eq!(cfg.kv.kv_blocks, 256);
+        let m = parse("[serve]\npriority = \"kill\"\n").unwrap();
+        assert!(build(&m).unwrap_err().contains("serve.priority"));
+        let m = parse("[serve]\npriority = 1\n").unwrap();
+        assert!(build(&m).unwrap_err().contains("string"));
+        let m = parse("[kv]\nblock_tokens = 20\n").unwrap();
+        assert!(build(&m).unwrap_err().contains("kv.block_tokens"), "multiple-of-8 rule");
+        let m = parse("[kv]\nkv_blocks = 4\n").unwrap();
+        assert!(build(&m).unwrap_err().contains("kv pool too small"), "pool-coverage rule");
     }
 
     #[test]

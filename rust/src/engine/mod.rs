@@ -10,7 +10,9 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::backend::Tensor;
+use crate::backend::{PagedItem, Tensor};
+use crate::config::KvConfig;
+use crate::kv::KvPool;
 use crate::model::{CloudStream, DeviceStream, TokenId};
 use crate::runtime::{
     f32_tensor_padded, pos_tensor, tokens_tensor, ArtifactRegistry, Manifest, ModelSpec,
@@ -21,8 +23,14 @@ use crate::runtime::{
 /// executes both sides (the *timing* separation is the
 /// simulator's job, the *data-flow* separation is enforced by the artifact
 /// boundaries — see `examples/privacy_audit.rs`).
+///
+/// The engine owns the paged [`KvPool`] every stream's caches draw from
+/// (`[kv] block_tokens` / `kv_blocks`); KV tensors never surface above the
+/// backend seam — primitives thread block-table handles through
+/// `run_paged`/`run_batch_paged`.
 pub struct Engine {
     pub reg: ArtifactRegistry,
+    pool: KvPool,
 }
 
 /// Output of one draft-model step.
@@ -35,19 +43,51 @@ pub struct DraftStepOut {
 
 impl Engine {
     pub fn load(dir: &Path) -> Result<Engine> {
-        Ok(Engine { reg: ArtifactRegistry::load(dir)? })
+        Engine::with_registry(ArtifactRegistry::load(dir)?)
     }
 
     /// Load from the default artifact dir, falling back to the reference
     /// backend's synthetic model when no artifacts are built — the server
     /// and examples run end-to-end on a clean machine.
     pub fn load_default() -> Result<Engine> {
-        Ok(Engine { reg: ArtifactRegistry::load_or_synthetic(&ArtifactRegistry::default_dir())? })
+        Engine::with_registry(ArtifactRegistry::load_or_synthetic(
+            &ArtifactRegistry::default_dir(),
+        )?)
     }
 
     /// Engine over the synthetic reference model (no files needed).
     pub fn synthetic() -> Engine {
-        Engine { reg: ArtifactRegistry::synthetic() }
+        Engine::with_registry(ArtifactRegistry::synthetic())
+            .expect("default kv config covers the synthetic manifest")
+    }
+
+    /// Engine over an explicit registry with the default KV pool geometry
+    /// — the injection point for tests with fault-injecting backends.
+    pub fn with_registry(reg: ArtifactRegistry) -> Result<Engine> {
+        Engine::with_registry_kv(reg, &KvConfig::default())
+    }
+
+    /// Engine over an explicit registry and `[kv]` pool geometry.  Errors
+    /// when the pool cannot hold one max-length session (three caches).
+    pub fn with_registry_kv(reg: ArtifactRegistry, kv: &KvConfig) -> Result<Engine> {
+        let (hidden, max_seq) = (reg.model().hidden, reg.model().max_seq);
+        let pool = KvPool::new(kv, hidden, max_seq)?;
+        Ok(Engine { reg, pool })
+    }
+
+    /// The paged KV pool all of this engine's streams draw from.
+    pub fn kv_pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    /// Fresh device-side stream (shallow + adapter caches) on the pool.
+    pub fn new_device_stream(&self) -> DeviceStream {
+        DeviceStream::new(self.reg.model(), &self.pool)
+    }
+
+    /// Fresh cloud-side stream (middle cache) on the pool.
+    pub fn new_cloud_stream(&self) -> CloudStream {
+        CloudStream::new(self.reg.model(), &self.pool)
     }
 
     pub fn spec(&self) -> &ModelSpec {
@@ -62,14 +102,13 @@ impl Engine {
         let t = tokens.len();
         let b = self.reg.bucket_for(t)?;
         let name = Manifest::artifact_name("device_input", b);
-        let pos = st.spos.write_pos();
+        let pos = st.skv.write_pos();
         let toks = tokens_tensor(tokens, b)?;
         let posl = pos_tensor(pos);
-        let mut outs = self.reg.run(&name, &[&toks, &st.skv, &posl])?;
-        st.skv = outs.swap_remove(1);
+        let mut outs = self.reg.run_paged(&name, &[&toks, &posl], &mut [&mut st.skv])?;
         let mut hidden = outs.swap_remove(0).data;
         hidden.truncate(t * self.spec().hidden);
-        st.spos.wrote(t);
+        st.skv.wrote(t);
         Ok(hidden)
     }
 
@@ -79,30 +118,32 @@ impl Engine {
         let t = hidden.len() / h;
         let b = self.reg.bucket_for(t)?;
         let name = Manifest::artifact_name("adapter_prefill", b);
-        let pos = st.apos.write_pos();
+        let pos = st.akv.write_pos();
         let hid = f32_tensor_padded(hidden, h, b)?;
         let posl = pos_tensor(pos);
-        let mut outs = self.reg.run(&name, &[&hid, &st.akv, &posl])?;
-        st.akv = outs.swap_remove(0);
-        st.apos.wrote(t);
+        let outs = self.reg.run_paged(&name, &[&hid, &posl], &mut [&mut st.akv])?;
+        debug_assert!(outs.is_empty(), "adapter_prefill has only a KV output");
+        st.akv.wrote(t);
         Ok(())
     }
 
     /// One autoregressive draft-model step (w_S = H_L ∘ Λ ∘ w_L^m).
     /// Advances both shallow and adapter KV write positions by 1.
     pub fn draft_step(&self, st: &mut DeviceStream, token: TokenId) -> Result<DraftStepOut> {
-        debug_assert_eq!(st.spos.write_pos(), st.apos.write_pos());
-        let pos = st.spos.write_pos();
+        debug_assert_eq!(st.skv.write_pos(), st.akv.write_pos());
+        let pos = st.skv.write_pos();
         let toks = tokens_tensor(&[token], 1)?;
         let posl = pos_tensor(pos);
-        let mut outs = self.reg.run("draft_step_1", &[&toks, &st.skv, &st.akv, &posl])?;
+        let mut outs = self.reg.run_paged(
+            "draft_step_1",
+            &[&toks, &posl],
+            &mut [&mut st.skv, &mut st.akv],
+        )?;
         // Pop from the back so earlier indices stay stable (no copies).
-        let shallow = outs.swap_remove(3).data;
-        st.akv = outs.swap_remove(2);
-        st.skv = outs.swap_remove(1);
+        let shallow = outs.swap_remove(1).data;
         let logits = outs.swap_remove(0).data;
-        st.spos.wrote(1);
-        st.apos.wrote(1);
+        st.skv.wrote(1);
+        st.akv.wrote(1);
         Ok(DraftStepOut { logits, shallow })
     }
 
@@ -194,19 +235,23 @@ impl Engine {
             .map(|x| f32_tensor_padded(x, h, b))
             .collect::<Result<_>>()?;
         let poss: Vec<Tensor> =
-            sts.iter().map(|st| pos_tensor(st.pos.write_pos())).collect();
+            sts.iter().map(|st| pos_tensor(st.mkv.write_pos())).collect();
         let outs = {
-            let items: Vec<Vec<&Tensor>> = (0..sts.len())
-                .map(|i| vec![&hids[i], &sts[i].mkv, &poss[i]])
+            let mut items: Vec<PagedItem<'_>> = sts
+                .iter_mut()
+                .zip(hids.iter().zip(&poss))
+                .map(|(st, (hid, pos))| PagedItem {
+                    inputs: vec![hid, pos],
+                    kvs: vec![&mut st.mkv],
+                })
                 .collect();
-            self.reg.run_batch(&name, &items)?
+            self.reg.run_batch_paged(&name, &mut items)?
         };
         let mut deeps = Vec::with_capacity(sts.len());
         for (i, mut out) in outs.into_iter().enumerate() {
-            sts[i].mkv = out.swap_remove(1);
             let mut deep = out.swap_remove(0).data;
             deep.truncate(ts[i] * h);
-            sts[i].pos.wrote(ts[i]);
+            sts[i].mkv.wrote(ts[i]);
             deeps.push(deep);
         }
         Ok(deeps)
@@ -234,7 +279,7 @@ impl Engine {
             Ok(logits) => Ok(deeps.into_iter().zip(logits).collect()),
             Err(e) => {
                 for st in sts.iter_mut() {
-                    st.pos.rollback();
+                    st.mkv.rollback();
                 }
                 Err(e)
             }
@@ -369,19 +414,19 @@ mod tests {
     fn synthetic_engine_runs_device_and_cloud_primitives() {
         let e = Engine::synthetic();
         let spec = e.spec().clone();
-        let mut dev = DeviceStream::new(&spec).unwrap();
-        let mut cloud = CloudStream::new(&spec).unwrap();
+        let mut dev = e.new_device_stream();
+        let mut cloud = e.new_cloud_stream();
 
         let hidden = e.device_input(&mut dev, &[1, 2, 3]).unwrap();
         assert_eq!(hidden.len(), 3 * spec.hidden);
-        assert_eq!(dev.spos.write_pos(), 3);
+        assert_eq!(dev.skv.write_pos(), 3);
 
         e.adapter_prefill(&mut dev, &hidden).unwrap();
-        assert_eq!(dev.apos.write_pos(), 3);
+        assert_eq!(dev.akv.write_pos(), 3);
 
         let deep = e.cloud_middle(&mut cloud, &hidden).unwrap();
         assert_eq!(deep.len(), 3 * spec.hidden);
-        assert_eq!(cloud.pos.write_pos(), 3);
+        assert_eq!(cloud.mkv.write_pos(), 3);
 
         let logits = e.head(&deep[2 * spec.hidden..]).unwrap();
         assert_eq!(logits.len(), spec.vocab);
@@ -389,8 +434,8 @@ mod tests {
         let out = e.draft_step(&mut dev, 7).unwrap();
         assert_eq!(out.logits.len(), spec.vocab);
         assert_eq!(out.shallow.len(), spec.hidden);
-        assert_eq!(dev.spos.write_pos(), 4);
-        assert_eq!(dev.apos.write_pos(), 4);
+        assert_eq!(dev.spos().write_pos(), 4);
+        assert_eq!(dev.apos().write_pos(), 4);
 
         let heads = e.medusa(&deep[..spec.hidden]).unwrap();
         assert_eq!(heads.len(), spec.n_medusa);
@@ -403,27 +448,34 @@ mod tests {
         // same bucket, 4) in one batched call must produce exactly what
         // two independent single calls produce, including the KV updates.
         let e = Engine::synthetic();
-        let spec = e.spec().clone();
-        let mut d1 = DeviceStream::new(&spec).unwrap();
-        let mut d2 = DeviceStream::new(&spec).unwrap();
+        let mut d1 = e.new_device_stream();
+        let mut d2 = e.new_device_stream();
         let h1 = e.device_input(&mut d1, &[1, 2, 3]).unwrap();
         let h2 = e.device_input(&mut d2, &[9, 8]).unwrap();
 
-        let mut s1 = CloudStream::new(&spec).unwrap();
-        let mut s2 = CloudStream::new(&spec).unwrap();
+        let mut s1 = e.new_cloud_stream();
+        let mut s2 = e.new_cloud_stream();
         let deep1 = e.cloud_middle(&mut s1, &h1).unwrap();
         let deep2 = e.cloud_middle(&mut s2, &h2).unwrap();
 
-        let mut c1 = CloudStream::new(&spec).unwrap();
-        let mut c2 = CloudStream::new(&spec).unwrap();
+        let mut c1 = e.new_cloud_stream();
+        let mut c2 = e.new_cloud_stream();
         let mut sts = [&mut c1, &mut c2];
         let deeps = e.cloud_middle_batch(&mut sts, &[&h1, &h2]).unwrap();
         assert_eq!(deeps[0], deep1, "lane 0 diverged from single call");
         assert_eq!(deeps[1], deep2, "lane 1 diverged from single call");
-        assert_eq!(c1.pos.write_pos(), 3);
-        assert_eq!(c2.pos.write_pos(), 2);
-        assert_eq!(c1.mkv, s1.mkv, "lane 0 KV diverged");
-        assert_eq!(c2.mkv, s2.mkv, "lane 1 KV diverged");
+        assert_eq!(c1.mkv.write_pos(), 3);
+        assert_eq!(c2.mkv.write_pos(), 2);
+        assert_eq!(
+            c1.mkv.gather_dense().unwrap(),
+            s1.mkv.gather_dense().unwrap(),
+            "lane 0 KV diverged"
+        );
+        assert_eq!(
+            c2.mkv.gather_dense().unwrap(),
+            s2.mkv.gather_dense().unwrap(),
+            "lane 1 KV diverged"
+        );
     }
 
     #[test]
@@ -445,15 +497,14 @@ mod tests {
     #[test]
     fn verify_batch_is_middle_then_head() {
         let e = Engine::synthetic();
-        let spec = e.spec().clone();
-        let mut dev = DeviceStream::new(&spec).unwrap();
+        let mut dev = e.new_device_stream();
         let hidden = e.device_input(&mut dev, &[5, 6]).unwrap();
 
-        let mut serial = CloudStream::new(&spec).unwrap();
+        let mut serial = e.new_cloud_stream();
         let deep = e.cloud_middle(&mut serial, &hidden).unwrap();
         let logits = e.head(&deep).unwrap();
 
-        let mut batched = CloudStream::new(&spec).unwrap();
+        let mut batched = e.new_cloud_stream();
         let mut sts = [&mut batched];
         let outs = e.verify_batch(&mut sts, &[&hidden]).unwrap();
         assert_eq!(outs.len(), 1);
@@ -465,7 +516,7 @@ mod tests {
     fn synthetic_engine_is_deterministic() {
         let run = || {
             let e = Engine::synthetic();
-            let mut dev = DeviceStream::new(e.spec()).unwrap();
+            let mut dev = e.new_device_stream();
             let h = e.device_input(&mut dev, &[4, 4, 2, 9]).unwrap();
             let o = e.draft_step(&mut dev, 11).unwrap();
             (h, o.logits)

@@ -1,0 +1,862 @@
+//! Paged KV storage: fixed-size block pool, copy-on-write prefix sharing,
+//! and host-side swap for preemptible sessions.
+//!
+//! Dense per-session KV tensors (`max_seq × hidden` per submodel, alive for
+//! the whole session) cap `max_sessions` by worst-case sequence length.
+//! This module replaces them with a [`KvPool`] of fixed-size blocks
+//! (`[kv] block_tokens` rows each) and per-stream [`KvCache`] block tables:
+//!
+//! - **Lazy allocation** — a cache starts with an empty table; blocks are
+//!   taken from the pool on first write, so short sequences use few blocks.
+//! - **Copy-on-write sharing** — when a cache *commits* past a block
+//!   boundary the block is *sealed*: hashed over `(block index, contents)`
+//!   and deduplicated against resident sealed blocks, so sessions admitted
+//!   with an identical prompt prefix map the same physical blocks.  Sealing
+//!   happens *after* the rows are computed (write-then-dedup), so shared
+//!   prefixes are bit-identical by construction, not by trust in the hash
+//!   (candidates are verified bit-for-bit before merging).  Speculative
+//!   forks ([`KvCache::fork`]) share the unsealed tail refcounted; the
+//!   first divergent write triggers a private copy.
+//! - **Swap** — [`KvCache::swap_out`] moves a stream's blocks to a
+//!   host-side store and returns them to the pool freelist, so the
+//!   scheduler can pause a session under slot pressure instead of
+//!   cancelling it; [`KvCache::swap_in`] restores them (re-deduplicating
+//!   sealed blocks against residents) and fails cleanly when the pool is
+//!   full, leaving the host copy intact for a later retry.
+//!
+//! **Bit-identity contract.**  The reference model's row at position `p`
+//! depends on the *sequential* f32 sum of rows `0..p` (f32 addition is not
+//! associative, so the summation order is part of the contract).  A cache
+//! therefore keeps per-block-boundary checkpoints of that exact running
+//! sum (`psums[j]` = rows `0..(j+1)·block_tokens` accumulated left to
+//! right); [`KvCache::prefix_sum`] seeds from the deepest valid checkpoint
+//! and continues sequentially, which reproduces the dense recomputation
+//! bit-for-bit while making decode steps O(block_tokens) amortized instead
+//! of O(position).  Any write at position `p` invalidates checkpoints
+//! covering rows ≥ `p`; checkpoints survive swap because they describe the
+//! stream, not the physical blocks.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::Tensor;
+use crate::config::KvConfig;
+use crate::model::KvPos;
+
+/// One physical block: `block_tokens` rows of `row` f32s.
+struct Block {
+    data: Vec<f32>,
+    /// Reference count: how many cache tables map this block.
+    rc: u32,
+    /// Content hash once sealed (fully committed + dedup-registered);
+    /// sealed blocks are immutable — writes trigger copy-on-write.
+    hash: Option<u64>,
+}
+
+struct PoolInner {
+    block_tokens: usize,
+    row: usize,
+    blocks: Vec<Block>,
+    free: Vec<usize>,
+    /// Sealed-content registry: hash → block indices (bit-verified on use).
+    dedup: HashMap<u64, Vec<usize>>,
+    peak_in_use: usize,
+    swap_out_bytes: u64,
+    swap_in_bytes: u64,
+}
+
+impl PoolInner {
+    fn in_use(&self) -> usize {
+        self.blocks.len() - self.free.len()
+    }
+
+    fn alloc(&mut self) -> Result<usize> {
+        let idx = self.free.pop().ok_or_else(|| {
+            anyhow!(
+                "kv pool exhausted ({} blocks of {} tokens)",
+                self.blocks.len(),
+                self.block_tokens
+            )
+        })?;
+        let len = self.block_tokens * self.row;
+        let b = &mut self.blocks[idx];
+        b.data.clear();
+        b.data.resize(len, 0.0);
+        b.rc = 1;
+        b.hash = None;
+        let used = self.in_use();
+        self.peak_in_use = self.peak_in_use.max(used);
+        Ok(idx)
+    }
+
+    fn release(&mut self, idx: usize) {
+        debug_assert!(self.blocks[idx].rc > 0, "double release of kv block {idx}");
+        self.blocks[idx].rc -= 1;
+        if self.blocks[idx].rc == 0 {
+            if let Some(h) = self.blocks[idx].hash.take() {
+                if let Some(v) = self.dedup.get_mut(&h) {
+                    v.retain(|&i| i != idx);
+                    if v.is_empty() {
+                        self.dedup.remove(&h);
+                    }
+                }
+            }
+            self.free.push(idx);
+        }
+    }
+
+    /// Seal a fully-committed block: register its content hash, or merge
+    /// with a resident bit-identical sealed block.  Returns the index the
+    /// caller's table should map (possibly a shared sibling).
+    fn seal(&mut self, idx: usize, k: usize) -> usize {
+        if self.blocks[idx].hash.is_some() {
+            return idx; // already sealed (e.g. adopted via fork/swap-in)
+        }
+        let h = block_hash(k, &self.blocks[idx].data);
+        let hit = self.dedup.get(&h).and_then(|cands| {
+            cands
+                .iter()
+                .copied()
+                .find(|&c| c != idx && bits_eq(&self.blocks[c].data, &self.blocks[idx].data))
+        });
+        if let Some(c) = hit {
+            self.blocks[c].rc += 1;
+            self.release(idx);
+            return c;
+        }
+        self.blocks[idx].hash = Some(h);
+        self.dedup.entry(h).or_default().push(idx);
+        idx
+    }
+}
+
+/// FNV-1a over the block index and the row bits.  The index is mixed in so
+/// identical contents at *different* positions never alias (a prefix match
+/// must match positionally, mirroring chunk-granular prompt hashing).
+fn block_hash(k: usize, data: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ (k as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    for &x in data {
+        h ^= u64::from(x.to_bits());
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Bit-level equality (distinguishes -0.0/0.0 and NaN payloads — sharing
+/// must never change what a gather would read back).
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Pool-level occupancy and swap-traffic counters (see
+/// [`KvPool::stats`]; surfaced through `metrics::ServeStats`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvPoolStats {
+    pub total_blocks: usize,
+    pub blocks_in_use: usize,
+    /// Physical blocks mapped by more than one cache table.
+    pub shared_blocks: usize,
+    pub peak_in_use: usize,
+    pub swap_out_bytes: u64,
+    pub swap_in_bytes: u64,
+}
+
+/// Shared handle to a fixed-size block pool.  Cloning is cheap (`Arc`);
+/// all caches of one engine draw from the same pool.
+#[derive(Clone)]
+pub struct KvPool(Arc<Mutex<PoolInner>>);
+
+impl KvPool {
+    /// Pool of `cfg.kv_blocks` blocks of `cfg.block_tokens` rows of `row`
+    /// f32s.  `max_rows` is the longest stream the model can hold
+    /// (`max_seq`); the pool must cover at least one max-length session
+    /// across its three caches (skv/akv/mkv), or sizing is rejected here —
+    /// the manifest-aware complement of `config::validate()`'s
+    /// workload-level floor.
+    pub fn new(cfg: &KvConfig, row: usize, max_rows: usize) -> Result<KvPool> {
+        if cfg.block_tokens == 0 || row == 0 {
+            bail!("kv.block_tokens and row width must be > 0");
+        }
+        let per_cache = max_rows.div_ceil(cfg.block_tokens);
+        if 3 * per_cache > cfg.kv_blocks {
+            bail!(
+                "kv pool too small: kv_blocks = {} cannot hold one max-length session \
+                 (3 caches x {per_cache} blocks for {max_rows} rows of {} tokens)",
+                cfg.kv_blocks,
+                cfg.block_tokens
+            );
+        }
+        let blocks = (0..cfg.kv_blocks)
+            .map(|_| Block { data: Vec::new(), rc: 0, hash: None })
+            .collect();
+        let free = (0..cfg.kv_blocks).rev().collect();
+        Ok(KvPool(Arc::new(Mutex::new(PoolInner {
+            block_tokens: cfg.block_tokens,
+            row,
+            blocks,
+            free,
+            dedup: HashMap::new(),
+            peak_in_use: 0,
+            swap_out_bytes: 0,
+            swap_in_bytes: 0,
+        }))))
+    }
+
+    fn lock(&self) -> MutexGuard<'_, PoolInner> {
+        // A poisoned pool is still structurally sound (all mutations keep
+        // the freelist/refcount invariants at every await-free step).
+        self.0.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// New empty cache over `rows` logical rows, presenting `dims` to the
+    /// dense shim (`dims` must contain a leading `rows × row` region, the
+    /// layout contract of the KV tensors).
+    pub fn new_cache(&self, dims: Vec<usize>, rows: usize) -> KvCache {
+        let (bt, row) = {
+            let p = self.lock();
+            (p.block_tokens, p.row)
+        };
+        debug_assert!(dims.iter().product::<usize>() >= rows * row);
+        KvCache {
+            pool: self.clone(),
+            table: vec![None; rows.div_ceil(bt)],
+            dims,
+            rows,
+            row,
+            bt,
+            pos: KvPos::new(),
+            psums: Vec::new(),
+            sealed: 0,
+            swapped: None,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.lock().block_tokens
+    }
+
+    /// Bytes of one physical block.
+    pub fn block_bytes(&self) -> usize {
+        let p = self.lock();
+        p.block_tokens * p.row * 4
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        let p = self.lock();
+        KvPoolStats {
+            total_blocks: p.blocks.len(),
+            blocks_in_use: p.in_use(),
+            shared_blocks: p.blocks.iter().filter(|b| b.rc > 1).count(),
+            peak_in_use: p.peak_in_use,
+            swap_out_bytes: p.swap_out_bytes,
+            swap_in_bytes: p.swap_in_bytes,
+        }
+    }
+
+    /// True when every block is free, no refcount is stuck and the dedup
+    /// registry is empty — the zero-leak invariant the lifecycle property
+    /// tests assert after all sessions quiesce.
+    pub fn quiesced(&self) -> bool {
+        let p = self.lock();
+        p.free.len() == p.blocks.len()
+            && p.dedup.is_empty()
+            && p.blocks.iter().all(|b| b.rc == 0)
+    }
+}
+
+/// Host-side copy of one swapped-out block (contents + seal hash, so
+/// swap-in can re-deduplicate against resident siblings without rehashing).
+struct SwapBlock {
+    data: Vec<f32>,
+    hash: Option<u64>,
+}
+
+/// One stream's paged KV cache: a block table mapping logical row ranges
+/// to pool blocks, the stream's [`KvPos`] write/commit state machine, and
+/// the prefix-sum checkpoints that keep reference-model attention
+/// bit-identical to the dense recomputation.
+pub struct KvCache {
+    pool: KvPool,
+    /// Dense tensor dims presented to the shim (`gather_dense`).
+    dims: Vec<usize>,
+    /// Logical rows (`max_seq`).
+    rows: usize,
+    /// Row width (`hidden`).
+    row: usize,
+    /// Block size in rows (copied out of the pool to avoid locking for
+    /// arithmetic).
+    bt: usize,
+    table: Vec<Option<usize>>,
+    pos: KvPos,
+    /// `psums[j]` = the exact sequential f32 sum of rows `0..(j+1)·bt`.
+    psums: Vec<Vec<f32>>,
+    /// Blocks `0..sealed` have been sealed (dedup-registered) — strictly
+    /// below the committed head, so they are never written again.
+    sealed: usize,
+    /// Host-side store while preempted; `None` when resident.
+    swapped: Option<Vec<Option<SwapBlock>>>,
+}
+
+impl KvCache {
+    // -- position state machine (delegates to KvPos) -----------------------
+
+    pub fn pos(&self) -> KvPos {
+        self.pos
+    }
+
+    pub fn write_pos(&self) -> usize {
+        self.pos.write_pos()
+    }
+
+    pub fn committed(&self) -> usize {
+        self.pos.committed
+    }
+
+    pub fn wrote(&mut self, n: usize) {
+        self.pos.wrote(n);
+    }
+
+    /// Commit `n` tokens and seal every block that became fully committed:
+    /// sealed blocks are hashed and deduplicated against resident sealed
+    /// blocks of other caches (copy-on-write prefix sharing).
+    pub fn commit(&mut self, n: usize) {
+        self.pos.commit(n);
+        let full = (self.pos.committed / self.bt).min(self.table.len());
+        if full > self.sealed {
+            let mut pool = self.pool.lock();
+            for k in self.sealed..full {
+                if let Some(idx) = self.table[k] {
+                    self.table[k] = Some(pool.seal(idx, k));
+                }
+            }
+            self.sealed = full;
+        }
+    }
+
+    pub fn rollback(&mut self) {
+        self.pos.rollback();
+    }
+
+    pub fn seek(&mut self, p: usize) {
+        self.pos.seek(p);
+    }
+
+    // -- geometry ----------------------------------------------------------
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Physical blocks currently mapped by this cache's table.
+    pub fn resident_blocks(&self) -> usize {
+        self.table.iter().flatten().count()
+    }
+
+    pub fn is_swapped(&self) -> bool {
+        self.swapped.is_some()
+    }
+
+    // -- row access --------------------------------------------------------
+
+    /// The block backing row-group `k`, made privately writable: allocates
+    /// on first touch, copies on write when the block is shared (`rc > 1`)
+    /// or sealed (immutable by contract — mutating it would corrupt the
+    /// dedup registry under every sibling).  Free function over the table
+    /// so it can run while the pool guard is held.
+    fn writable_block(
+        table: &mut [Option<usize>],
+        k: usize,
+        pool: &mut PoolInner,
+    ) -> Result<usize> {
+        match table[k] {
+            Some(i) if pool.blocks[i].rc == 1 && pool.blocks[i].hash.is_none() => Ok(i),
+            Some(i) => {
+                let n = pool.alloc()?;
+                let src = pool.blocks[i].data.clone();
+                pool.blocks[n].data.copy_from_slice(&src);
+                pool.release(i);
+                table[k] = Some(n);
+                Ok(n)
+            }
+            None => {
+                let n = pool.alloc()?;
+                table[k] = Some(n);
+                Ok(n)
+            }
+        }
+    }
+
+    /// Write one row at absolute position `p` (copy-on-write), and
+    /// invalidate prefix-sum checkpoints covering it.
+    pub fn write_row(&mut self, p: usize, vals: &[f32]) -> Result<()> {
+        if p >= self.rows {
+            bail!("kv write at row {p} out of range {}", self.rows);
+        }
+        if vals.len() != self.row {
+            bail!("kv row width {} != {}", vals.len(), self.row);
+        }
+        if self.swapped.is_some() {
+            bail!("kv write on a swapped-out cache");
+        }
+        let k = p / self.bt;
+        let off = (p % self.bt) * self.row;
+        let mut pool = self.pool.lock();
+        let idx = Self::writable_block(&mut self.table, k, &mut pool)?;
+        pool.blocks[idx].data[off..off + self.row].copy_from_slice(vals);
+        drop(pool);
+        // Checkpoint j covers rows 0..(j+1)·bt — stale once any of those
+        // rows changes, so keep only checkpoints ending at or before p.
+        self.psums.truncate(k);
+        Ok(())
+    }
+
+    /// Write a row *and* fold it into the caller's running sequential sum,
+    /// recording a checkpoint when the write lands exactly on a block
+    /// boundary continuing the valid-checkpoint prefix.  `sum` must be the
+    /// exact sequential sum of rows `0..p` (as returned by
+    /// [`Self::prefix_sum`] and threaded through the compute loop).
+    pub fn write_row_accumulate(&mut self, p: usize, vals: &[f32], sum: &mut [f32]) -> Result<()> {
+        self.write_row(p, vals)?;
+        for (s, v) in sum.iter_mut().zip(vals) {
+            *s += v;
+        }
+        if (p + 1) % self.bt == 0 && self.psums.len() == (p + 1) / self.bt - 1 {
+            self.psums.push(sum.to_vec());
+        }
+        Ok(())
+    }
+
+    /// Exact sequential f32 sum of rows `0..p`, bit-identical to summing a
+    /// dense gather left to right: seeds from the deepest checkpoint not
+    /// past `p` and accumulates the remainder in order (recording any
+    /// checkpoints crossed, so repeated calls amortize to O(bt)).
+    pub fn prefix_sum(&mut self, p: usize) -> Vec<f32> {
+        debug_assert!(self.swapped.is_none(), "prefix_sum on a swapped-out cache");
+        let n = self.psums.len().min(p / self.bt);
+        let mut sum = if n > 0 { self.psums[n - 1].clone() } else { vec![0.0; self.row] };
+        if n * self.bt >= p {
+            return sum;
+        }
+        let pool = self.pool.lock();
+        for q in n * self.bt..p {
+            if let Some(idx) = self.table[q / self.bt] {
+                let off = (q % self.bt) * self.row;
+                let r = &pool.blocks[idx].data[off..off + self.row];
+                for (s, v) in sum.iter_mut().zip(r) {
+                    *s += v;
+                }
+            }
+            if (q + 1) % self.bt == 0 && self.psums.len() == (q + 1) / self.bt - 1 {
+                self.psums.push(sum.clone());
+            }
+        }
+        sum
+    }
+
+    // -- dense shim --------------------------------------------------------
+
+    /// Materialize the dense KV tensor (`dims`, leading `rows × row`
+    /// region gathered from the table, unmapped blocks and the tail zero)
+    /// — the input shape backends without a paged path expect.
+    pub fn gather_dense(&self) -> Result<Tensor> {
+        if self.swapped.is_some() {
+            bail!("gather on a swapped-out cache");
+        }
+        let mut data = vec![0.0f32; self.dims.iter().product()];
+        let pool = self.pool.lock();
+        for (k, slot) in self.table.iter().enumerate() {
+            if let Some(idx) = *slot {
+                let n_rows = self.bt.min(self.rows - k * self.bt);
+                let dst = k * self.bt * self.row;
+                let len = n_rows * self.row;
+                data[dst..dst + len].copy_from_slice(&pool.blocks[idx].data[..len]);
+            }
+        }
+        drop(pool);
+        Tensor::new(self.dims.clone(), data)
+    }
+
+    /// Scatter rows `start..start+count` (clipped to `rows`) of a dense KV
+    /// tensor's data back into the table — the write-back half of the
+    /// dense shim.  Only the rows the artifact actually wrote may be
+    /// scattered; re-writing the whole tensor would sever shared blocks
+    /// and void every checkpoint.
+    pub fn scatter_rows(&mut self, dense: &[f32], start: usize, count: usize) -> Result<()> {
+        let end = (start + count).min(self.rows);
+        for p in start..end {
+            self.write_row(p, &dense[p * self.row..(p + 1) * self.row])?;
+        }
+        Ok(())
+    }
+
+    // -- speculative forks -------------------------------------------------
+
+    /// A refcounted snapshot sharing every mapped block (copy-on-write):
+    /// the parallel-drafting branches write their speculative tails into
+    /// private copies, and adopting a branch is a move.  Checkpoints and
+    /// position state ride along.
+    pub fn fork(&self) -> KvCache {
+        debug_assert!(self.swapped.is_none(), "fork of a swapped-out cache");
+        let mut pool = self.pool.lock();
+        for idx in self.table.iter().flatten() {
+            pool.blocks[*idx].rc += 1;
+        }
+        drop(pool);
+        KvCache {
+            pool: self.pool.clone(),
+            dims: self.dims.clone(),
+            rows: self.rows,
+            row: self.row,
+            bt: self.bt,
+            table: self.table.clone(),
+            pos: self.pos,
+            psums: self.psums.clone(),
+            sealed: self.sealed,
+            swapped: None,
+        }
+    }
+
+    // -- swap --------------------------------------------------------------
+
+    /// Copy every mapped block to a host-side store and return the blocks
+    /// to the pool freelist.  Returns the bytes moved.  Idempotent.
+    pub fn swap_out(&mut self) -> u64 {
+        if self.swapped.is_some() {
+            return 0;
+        }
+        let mut store: Vec<Option<SwapBlock>> = Vec::with_capacity(self.table.len());
+        let mut bytes = 0u64;
+        let mut pool = self.pool.lock();
+        for slot in &mut self.table {
+            match slot.take() {
+                Some(idx) => {
+                    let b = &pool.blocks[idx];
+                    bytes += (b.data.len() * 4) as u64;
+                    store.push(Some(SwapBlock { data: b.data.clone(), hash: b.hash }));
+                    pool.release(idx);
+                }
+                None => store.push(None),
+            }
+        }
+        pool.swap_out_bytes += bytes;
+        drop(pool);
+        self.swapped = Some(store);
+        bytes
+    }
+
+    /// Restore a swapped-out cache: sealed blocks are first matched
+    /// against resident sealed siblings (bit-verified) and shared instead
+    /// of copied; the rest are re-allocated.  On pool exhaustion the
+    /// partial restore is rolled back and the host store kept, so the
+    /// caller can retry after pressure drops.  Returns bytes copied in
+    /// (shared blocks move zero bytes).
+    pub fn swap_in(&mut self) -> Result<u64> {
+        let Some(store) = self.swapped.as_ref() else {
+            return Ok(0);
+        };
+        let mut got: Vec<(usize, usize)> = Vec::new();
+        let mut bytes = 0u64;
+        let mut pool = self.pool.lock();
+        for (k, entry) in store.iter().enumerate() {
+            let Some(sb) = entry else { continue };
+            if let Some(h) = sb.hash {
+                let hit = pool.dedup.get(&h).and_then(|cands| {
+                    cands.iter().copied().find(|&i| bits_eq(&pool.blocks[i].data, &sb.data))
+                });
+                if let Some(i) = hit {
+                    pool.blocks[i].rc += 1;
+                    got.push((k, i));
+                    continue;
+                }
+            }
+            match pool.alloc() {
+                Ok(i) => {
+                    pool.blocks[i].data.copy_from_slice(&sb.data);
+                    if let Some(h) = sb.hash {
+                        pool.blocks[i].hash = Some(h);
+                        pool.dedup.entry(h).or_default().push(i);
+                    }
+                    bytes += (sb.data.len() * 4) as u64;
+                    got.push((k, i));
+                }
+                Err(e) => {
+                    for &(_, i) in &got {
+                        pool.release(i);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        pool.swap_in_bytes += bytes;
+        drop(pool);
+        for (k, i) in got {
+            self.table[k] = Some(i);
+        }
+        self.swapped = None;
+        Ok(bytes)
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        let mut pool = self.pool.lock();
+        for slot in &mut self.table {
+            if let Some(idx) = slot.take() {
+                pool.release(idx);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ROW: usize = 4;
+    const BT: usize = 8;
+    const ROWS: usize = 32;
+
+    fn pool(blocks: usize) -> KvPool {
+        KvPool::new(&KvConfig { block_tokens: BT, kv_blocks: blocks }, ROW, ROWS).unwrap()
+    }
+
+    fn cache(p: &KvPool) -> KvCache {
+        p.new_cache(vec![2, ROWS, ROW], ROWS)
+    }
+
+    /// Deterministic pseudo-row keyed by (stream, position).
+    fn row_vals(stream: u64, p: usize) -> Vec<f32> {
+        (0..ROW)
+            .map(|d| {
+                let z = (stream ^ ((p as u64) << 8) ^ ((d as u64) << 20))
+                    .wrapping_mul(0x9E3779B97F4A7C15);
+                ((z >> 40) as f32) / (1u64 << 24) as f32 - 0.5
+            })
+            .collect()
+    }
+
+    fn naive_prefix_sum(c: &KvCache, p: usize) -> Vec<f32> {
+        let dense = c.gather_dense().unwrap();
+        let mut sum = vec![0.0f32; ROW];
+        for q in 0..p {
+            for d in 0..ROW {
+                sum[d] += dense.data[q * ROW + d];
+            }
+        }
+        sum
+    }
+
+    #[test]
+    fn gather_starts_zero_and_roundtrips_writes() {
+        let p = pool(64);
+        let mut c = cache(&p);
+        let dense = c.gather_dense().unwrap();
+        assert_eq!(dense.dims, vec![2, ROWS, ROW]);
+        assert!(dense.data.iter().all(|&x| x == 0.0));
+        for q in 0..13 {
+            c.write_row(q, &row_vals(1, q)).unwrap();
+        }
+        let dense = c.gather_dense().unwrap();
+        for q in 0..13 {
+            assert_eq!(&dense.data[q * ROW..(q + 1) * ROW], &row_vals(1, q)[..]);
+        }
+        assert!(dense.data[13 * ROW..].iter().all(|&x| x == 0.0));
+        assert_eq!(c.resident_blocks(), 2, "13 rows at bt=8 touch 2 blocks");
+        assert!(c.write_row(ROWS, &row_vals(1, 0)).is_err(), "out of range");
+    }
+
+    #[test]
+    fn prefix_sum_matches_naive_bitwise_across_writes_and_checkpoints() {
+        let p = pool(64);
+        let mut c = cache(&p);
+        let mut sum = c.prefix_sum(0);
+        for q in 0..ROWS {
+            c.write_row_accumulate(q, &row_vals(2, q), &mut sum).unwrap();
+        }
+        for q in 0..=ROWS {
+            assert_eq!(c.prefix_sum(q), naive_prefix_sum(&c, q), "prefix {q}");
+        }
+        // Overwrite a mid-stream row: checkpoints past it must invalidate
+        // and the recomputed sums must still match the naive recompute.
+        c.write_row(9, &row_vals(3, 9)).unwrap();
+        for q in [0, 8, 9, 10, 16, ROWS] {
+            assert_eq!(c.prefix_sum(q), naive_prefix_sum(&c, q), "post-write prefix {q}");
+        }
+    }
+
+    #[test]
+    fn fork_is_copy_on_write() {
+        let p = pool(64);
+        let mut base = cache(&p);
+        for q in 0..10 {
+            base.write_row(q, &row_vals(4, q)).unwrap();
+        }
+        let mut fork = base.fork();
+        assert!(p.stats().shared_blocks >= 2, "fork shares the mapped blocks");
+        fork.write_row(9, &row_vals(5, 9)).unwrap();
+        let b = base.gather_dense().unwrap();
+        let f = fork.gather_dense().unwrap();
+        assert_eq!(&b.data[9 * ROW..10 * ROW], &row_vals(4, 9)[..], "base untouched");
+        assert_eq!(&f.data[9 * ROW..10 * ROW], &row_vals(5, 9)[..], "fork diverged");
+        assert_eq!(&f.data[..9 * ROW], &b.data[..9 * ROW], "shared prefix intact");
+    }
+
+    #[test]
+    fn commit_seals_and_shares_identical_prefixes() {
+        let p = pool(64);
+        let mut a = cache(&p);
+        let mut b = cache(&p);
+        for q in 0..16 {
+            a.write_row(q, &row_vals(6, q)).unwrap();
+            b.write_row(q, &row_vals(6, q)).unwrap();
+        }
+        assert_eq!(p.stats().blocks_in_use, 4, "private before sealing");
+        a.wrote(16);
+        a.commit(16);
+        b.wrote(16);
+        b.commit(16);
+        let s = p.stats();
+        assert_eq!(s.blocks_in_use, 2, "identical sealed prefixes merge");
+        assert_eq!(s.shared_blocks, 2);
+        // Divergence past the shared prefix stays private.
+        b.write_row(16, &row_vals(7, 16)).unwrap();
+        assert_eq!(a.gather_dense().unwrap().data[..16 * ROW], b.gather_dense().unwrap().data[..16 * ROW]);
+        assert_eq!(p.stats().blocks_in_use, 3);
+    }
+
+    #[test]
+    fn same_content_different_position_does_not_alias() {
+        let p = pool(64);
+        let mut a = cache(&p);
+        // Identical contents in blocks 0 and 1 of the *same* stream: the
+        // positional hash tag must keep them distinct physical blocks.
+        for q in 0..16 {
+            a.write_row(q, &row_vals(8, q % BT)).unwrap();
+        }
+        a.wrote(16);
+        a.commit(16);
+        assert_eq!(p.stats().blocks_in_use, 2);
+        assert_eq!(p.stats().shared_blocks, 0);
+    }
+
+    #[test]
+    fn swap_roundtrip_preserves_contents_and_checkpoints() {
+        let p = pool(64);
+        let mut c = cache(&p);
+        let mut sum = c.prefix_sum(0);
+        for q in 0..20 {
+            c.write_row_accumulate(q, &row_vals(9, q), &mut sum).unwrap();
+        }
+        c.wrote(20);
+        c.commit(20);
+        let before = c.gather_dense().unwrap();
+        let bytes = c.swap_out();
+        assert!(bytes > 0);
+        assert!(c.is_swapped());
+        assert_eq!(c.resident_blocks(), 0);
+        assert!(c.gather_dense().is_err(), "swapped cache has no resident view");
+        assert_eq!(c.swap_out(), 0, "swap_out is idempotent");
+        c.swap_in().unwrap();
+        assert_eq!(c.gather_dense().unwrap(), before, "bitwise restore");
+        assert_eq!(c.prefix_sum(20), naive_prefix_sum(&c, 20), "checkpoints survive swap");
+        let s = p.stats();
+        assert_eq!(s.swap_out_bytes, bytes);
+        assert_eq!(s.swap_in_bytes, bytes);
+    }
+
+    #[test]
+    fn swap_in_rededups_against_resident_siblings() {
+        let p = pool(64);
+        let mut a = cache(&p);
+        let mut b = cache(&p);
+        for q in 0..16 {
+            a.write_row(q, &row_vals(10, q)).unwrap();
+            b.write_row(q, &row_vals(10, q)).unwrap();
+        }
+        a.wrote(16);
+        a.commit(16);
+        b.wrote(16);
+        b.commit(16);
+        assert_eq!(p.stats().blocks_in_use, 2);
+        b.swap_out();
+        assert_eq!(p.stats().blocks_in_use, 2, "a still holds the shared blocks");
+        let copied = b.swap_in().unwrap();
+        assert_eq!(copied, 0, "sealed blocks re-shared, not copied");
+        assert_eq!(p.stats().blocks_in_use, 2);
+        assert_eq!(p.stats().shared_blocks, 2);
+    }
+
+    #[test]
+    fn pool_sizing_floor_and_exhaustion() {
+        assert!(
+            KvPool::new(&KvConfig { block_tokens: BT, kv_blocks: 11 }, ROW, ROWS).is_err(),
+            "11 < 3 x ceil(32/8) blocks"
+        );
+        let p = pool(12);
+        let mut a = p.new_cache(vec![ROWS, ROW], ROWS);
+        let mut b = p.new_cache(vec![ROWS, ROW], ROWS);
+        let mut c = p.new_cache(vec![ROWS, ROW], ROWS);
+        for q in 0..ROWS {
+            a.write_row(q, &row_vals(11, q)).unwrap();
+            b.write_row(q, &row_vals(12, q)).unwrap();
+            c.write_row(q, &row_vals(13, q)).unwrap();
+        }
+        let mut d = p.new_cache(vec![ROWS, ROW], ROWS);
+        let err = d.write_row(0, &row_vals(14, 0)).unwrap_err();
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        drop(a);
+        d.write_row(0, &row_vals(14, 0)).unwrap();
+        // A failed swap_in keeps the host store for retry.
+        for q in 1..ROWS {
+            d.write_row(q, &row_vals(14, q)).unwrap();
+        }
+        b.swap_out();
+        let mut e = p.new_cache(vec![ROWS, ROW], ROWS);
+        for q in 0..ROWS {
+            e.write_row(q, &row_vals(15, q)).unwrap();
+        }
+        assert!(b.swap_in().is_err(), "no room to swap back in");
+        assert!(b.is_swapped(), "host store kept for retry");
+        drop(e);
+        b.swap_in().unwrap();
+        for q in 0..ROWS {
+            assert_eq!(
+                &b.gather_dense().unwrap().data[q * ROW..(q + 1) * ROW],
+                &row_vals(12, q)[..]
+            );
+        }
+    }
+
+    #[test]
+    fn pool_quiesces_after_all_caches_drop() {
+        let p = pool(64);
+        {
+            let mut a = cache(&p);
+            let mut b = cache(&p);
+            for q in 0..16 {
+                a.write_row(q, &row_vals(16, q)).unwrap();
+                b.write_row(q, &row_vals(16, q)).unwrap();
+            }
+            a.wrote(16);
+            a.commit(16);
+            b.wrote(16);
+            b.commit(16);
+            let f = a.fork();
+            let mut s = b.fork();
+            s.write_row(17, &row_vals(17, 17)).unwrap();
+            s.swap_out();
+            drop(f);
+            assert!(!p.quiesced());
+        }
+        assert!(p.quiesced(), "all blocks free, no stuck refcounts, dedup empty");
+        let s = p.stats();
+        assert_eq!(s.blocks_in_use, 0);
+        assert!(s.peak_in_use >= 4);
+    }
+}

@@ -34,6 +34,7 @@ pub mod config;
 pub mod devices;
 pub mod engine;
 pub mod frameworks;
+pub mod kv;
 pub mod metrics;
 pub mod model;
 pub mod net;

@@ -258,6 +258,20 @@ pub struct ServeStats {
     /// The `[specdec] seed` the scheduler's sessions sample with — `seed`
     /// in the STATS reply, so clients can reproduce a stochastic run.
     pub sampler_seed: u64,
+    /// Sessions preempted under `[serve] priority = preempt`: parked off
+    /// their slot with KV paged out to the host store, later resumed
+    /// (never cancelled) — `preempted` in the STATS reply.
+    pub preemptions: u64,
+    /// Bytes of KV moved by preemption swap-out plus resume swap-in
+    /// (dedup re-shares move zero) — `kv_swap_bytes` in the STATS reply.
+    pub kv_swap_bytes: u64,
+    /// KV pool blocks currently mapped by at least one cache table,
+    /// refreshed from the pool each scheduler iteration — `kv_blocks` in
+    /// the STATS reply.
+    pub kv_blocks_in_use: usize,
+    /// KV pool blocks mapped by more than one table (copy-on-write prefix
+    /// sharing) — `kv_shared` in the STATS reply.
+    pub kv_blocks_shared: usize,
 }
 
 impl ServeStats {
@@ -310,7 +324,8 @@ impl ServeStats {
         format!(
             "requests={} iterations={} queue_wait_ms={:.1} ttft_ms={:.1} tbt_ms={:.1} \
              rounds={} accept={:.3} accept_hist={} seed={} chunk_mean={:.1} batch_mean={:.2} \
-             fallbacks={} cancelled={} failed={} reaped={} deadline_expired={}",
+             fallbacks={} cancelled={} failed={} reaped={} deadline_expired={} \
+             preempted={} kv_swap_bytes={} kv_blocks={} kv_shared={}",
             self.finished,
             self.iterations,
             self.queue_wait_ms.mean(),
@@ -327,6 +342,10 @@ impl ServeStats {
             self.failed,
             self.reaped,
             self.deadline_expired,
+            self.preemptions,
+            self.kv_swap_bytes,
+            self.kv_blocks_in_use,
+            self.kv_blocks_shared,
         )
     }
 }
@@ -457,6 +476,10 @@ mod tests {
         s.failed = 1;
         s.reaped = 3;
         s.deadline_expired = 4;
+        s.preemptions = 2;
+        s.kv_swap_bytes = 4096;
+        s.kv_blocks_in_use = 12;
+        s.kv_blocks_shared = 5;
         assert!(s.stats_fields().contains("accept_hist=- "), "empty histogram renders as -");
         s.record_round(2);
         s.record_round(0);
@@ -478,6 +501,10 @@ mod tests {
             "failed=1",
             "reaped=3",
             "deadline_expired=4",
+            "preempted=2",
+            "kv_swap_bytes=4096",
+            "kv_blocks=12",
+            "kv_shared=5",
         ] {
             assert!(f.contains(key), "missing {key} in {f}");
         }

@@ -1,15 +1,15 @@
 //! Per-request model state: token streams and KV-cache handles.
 //!
-//! KV caches are whole-array tensors threaded through backend calls;
-//! masking is by absolute position, so *rolling back rejected draft tokens is just
-//! rewinding a position counter* (the stale cache rows are overwritten by
-//! the next contiguous write and can never be attended before that).
-//! `KvPos` encodes that state machine and its invariants.
+//! KV storage is paged: streams hold [`KvCache`] block tables drawing from
+//! a shared [`KvPool`] (see [`crate::kv`]), and backends read/write rows
+//! through the table.  Masking is by absolute position, so *rolling back
+//! rejected draft tokens is just rewinding a position counter* (the stale
+//! cache rows are overwritten by the next contiguous write and can never
+//! be attended before that).  `KvPos` encodes that state machine and its
+//! invariants; each cache carries its own.
 
-use anyhow::Result;
-
-use crate::backend::Tensor;
-use crate::runtime::{zeros_tensor, ModelSpec};
+use crate::kv::{KvCache, KvPool};
+use crate::runtime::ModelSpec;
 
 /// Token id in the tiny model's vocab.
 pub type TokenId = u32;
@@ -75,36 +75,41 @@ impl KvPos {
 }
 
 /// Device-side state of one request stream: shallow-layer KV + adapter KV.
+/// Each cache carries its own [`KvPos`] (shallow position is shared by the
+/// drafting and verification paths — they produce identical rows for
+/// identical tokens).
 pub struct DeviceStream {
-    pub skv: Tensor,
-    pub akv: Tensor,
-    /// Shallow KV position (shared by drafting and verification paths —
-    /// they produce identical rows for identical tokens).
-    pub spos: KvPos,
-    /// Adapter KV position.
-    pub apos: KvPos,
+    pub skv: KvCache,
+    pub akv: KvCache,
 }
 
 impl DeviceStream {
-    pub fn new(spec: &ModelSpec) -> Result<DeviceStream> {
-        Ok(DeviceStream {
-            skv: zeros_tensor(&spec.shallow_kv_dims()),
-            akv: zeros_tensor(&spec.adapter_kv_dims()),
-            spos: KvPos::new(),
-            apos: KvPos::new(),
-        })
+    pub fn new(spec: &ModelSpec, pool: &KvPool) -> DeviceStream {
+        DeviceStream {
+            skv: pool.new_cache(spec.shallow_kv_dims(), spec.max_seq),
+            akv: pool.new_cache(spec.adapter_kv_dims(), spec.max_seq),
+        }
+    }
+
+    /// Shallow KV position state.
+    pub fn spos(&self) -> KvPos {
+        self.skv.pos()
+    }
+
+    /// Adapter KV position state.
+    pub fn apos(&self) -> KvPos {
+        self.akv.pos()
     }
 }
 
 /// Cloud-side state of one request stream: middle-submodel KV.
 pub struct CloudStream {
-    pub mkv: Tensor,
-    pub pos: KvPos,
+    pub mkv: KvCache,
 }
 
 impl CloudStream {
-    pub fn new(spec: &ModelSpec) -> Result<CloudStream> {
-        Ok(CloudStream { mkv: zeros_tensor(&spec.middle_kv_dims()), pos: KvPos::new() })
+    pub fn new(spec: &ModelSpec, pool: &KvPool) -> CloudStream {
+        CloudStream { mkv: pool.new_cache(spec.middle_kv_dims(), spec.max_seq) }
     }
 }
 

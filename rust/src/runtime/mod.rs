@@ -15,8 +15,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
-use crate::backend::{BackendKind, ExecBackend, RuntimeStats, Tensor};
+use crate::backend::{BackendKind, ExecBackend, PagedItem, RuntimeStats, Tensor};
 use crate::backend::reference::ReferenceBackend;
+use crate::kv::KvCache;
 
 pub use crate::backend::{
     f32_tensor_padded, pos_tensor, to_f32_vec, tokens_tensor, zeros_tensor,
@@ -124,6 +125,29 @@ impl ArtifactRegistry {
     /// in [`crate::backend`]).  Item `i`'s outputs land at index `i`.
     pub fn run_batch(&self, name: &str, items: &[Vec<&Tensor>]) -> Result<Vec<Vec<Tensor>>> {
         self.backend.run_batch(name, items)
+    }
+
+    /// Execute artifact `name` against paged KV caches: non-KV dynamic
+    /// inputs plus one [`KvCache`] per KV input in spec order (the paged
+    /// contract in [`crate::backend`]).  KV outputs are applied to the
+    /// caches and dropped from the returned list.
+    pub fn run_paged(
+        &self,
+        name: &str,
+        dynamic: &[&Tensor],
+        kvs: &mut [&mut KvCache],
+    ) -> Result<Vec<Tensor>> {
+        self.backend.run_paged(name, dynamic, kvs)
+    }
+
+    /// Batched [`ArtifactRegistry::run_paged`]: one lane per
+    /// [`PagedItem`], outputs at matching indices.
+    pub fn run_batch_paged(
+        &self,
+        name: &str,
+        items: &mut [PagedItem<'_>],
+    ) -> Result<Vec<Vec<Tensor>>> {
+        self.backend.run_batch_paged(name, items)
     }
 
     /// Host copy of a named weight, if the backend materializes it.

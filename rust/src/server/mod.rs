@@ -17,6 +17,7 @@
 //!       tbt_ms=<t> rounds=<n> accept=<rate> accept_hist=<c0,c1,...|->
 //!       seed=<n> chunk_mean=<x> batch_mean=<x> fallbacks=<n>
 //!       cancelled=<n> failed=<n> reaped=<n> deadline_expired=<n>
+//!       preempted=<n> kv_swap_bytes=<n> kv_blocks=<n> kv_shared=<n>
 //!       g_learned=<0|1> queued=<n> live=<n> decode_q=<n> prefill_q=<n>\n
 //!                                                 (one line on the wire)
 //! C: QUIT\n
@@ -44,6 +45,14 @@
 //! submit-time rejections), `reaped` (requests dropped without a reply
 //! because their client was
 //! already gone), `deadline_expired` (`serve.deadline_ms` cancellations)
+//! — the paged-KV counters — `preempted` (sessions parked under
+//! `[serve] priority = preempt`: KV paged out to the host store and the
+//! slot handed to a waiting admission; the session resumes later, it is
+//! never cancelled), `kv_swap_bytes` (bytes moved by preemption swap-out
+//! plus resume swap-in; blocks the pool re-shares by content dedup move
+//! zero), `kv_blocks` (pool blocks currently mapped by live caches,
+//! refreshed each scheduler iteration), `kv_shared` (blocks mapped by
+//! more than one cache table via copy-on-write prefix sharing)
 //! — `g_learned` — 1 when the Eq. 3 optimizer is driven by the learned
 //! state-monitor delay curve, 0 while it still falls back to the static
 //! `GModel` calibration — and the current queue depth / live session
@@ -70,6 +79,16 @@
 //! slot is freed and the session's KV dropped instead of the old
 //! behaviour of running the abandoned generation to completion into a
 //! dead channel while live clients queued for the slot.
+//!
+//! Preemption: with `[serve] priority = preempt` (or `--priority
+//! preempt`), a full scheduler with waiting admissions parks a live
+//! session instead of making arrivals queue behind it: the victim's KV
+//! is paged out to the pool's host-side store, the slot is handed to the
+//! waiting request, and the victim resumes — swap-in re-shares
+//! bit-identical sealed blocks at zero copy cost — as soon as a slot
+//! frees.  Losslessness holds across the park/resume: the emitted stream
+//! is byte-identical to an uninterrupted run.  The default (`priority =
+//! none`) never preempts.
 
 pub mod scheduler;
 
@@ -83,7 +102,7 @@ use std::time::Duration;
 use crate::util::clock;
 
 use crate::cli::Flags;
-use crate::config::{AdmitPolicy, ServeConfig, SpecDecConfig};
+use crate::config::{AdmitPolicy, PriorityMode, ServeConfig, SpecDecConfig};
 use crate::engine::Engine;
 use crate::specdec::{chunk_sizes, Session};
 
@@ -270,6 +289,7 @@ fn worker_loop(
                 Some(WorkerMsg::Stats { reply }) => {
                     let s = engine.reg.stats();
                     let (dq, pq) = sched.job_depths();
+                    sched.refresh_kv_stats();
                     let _ = reply.send(format!(
                         "OK executions={} exec_ms={:.1} compiles={} compile_ms={:.1} {} \
                          g_learned={} queued={} live={} decode_q={dq} prefill_q={pq}",
@@ -517,7 +537,8 @@ pub fn serve_listener(
 /// (eta, max_draft, top_k, max_new_tokens, plus the sampling keys
 /// temperature, top_k_sample, top_p, rep_penalty, seed, verify_mode) and
 /// `[serve]` section (max_sessions, prefill_budget, min_chunk, max_chunk,
-/// alpha, pipeline_len, policy, sjf_aging_ms, deadline_ms) govern serving;
+/// alpha, pipeline_len, policy, sjf_aging_ms, deadline_ms, priority)
+/// govern serving;
 /// the flags override the file.  `--temperature 0` (the default) is greedy
 /// decoding; with a positive temperature every session samples with the
 /// shared `--seed`, position-keyed per session.
@@ -545,6 +566,10 @@ pub fn cmd_serve(f: &Flags) -> Result<(), String> {
     if let Some(p) = f.get("policy") {
         serve_cfg.policy =
             AdmitPolicy::parse(p).ok_or(format!("--policy: unknown policy {p:?} (fifo|sjf)"))?;
+    }
+    if let Some(p) = f.get("priority") {
+        serve_cfg.priority = PriorityMode::parse(p)
+            .ok_or(format!("--priority: unknown mode {p:?} (none|preempt)"))?;
     }
     if let Some(t) = f.get_usize("deadline-ms")? {
         serve_cfg.deadline_ms = t as u64;

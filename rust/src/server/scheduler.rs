@@ -46,7 +46,7 @@ use std::time::Instant;
 
 use crate::cloud::state_monitor::StateMonitor;
 use crate::cloud::{optimal_chunk, Batcher, Job, JobKind};
-use crate::config::{AdmitPolicy, ServeConfig, SpecDecConfig};
+use crate::config::{AdmitPolicy, PriorityMode, ServeConfig, SpecDecConfig};
 use crate::engine::Engine;
 use crate::metrics::ServeStats;
 use crate::model::{CloudStream, TokenId};
@@ -151,6 +151,12 @@ struct Active<'e> {
     enqueued: Instant,
     admitted: Instant,
     first_token: Option<Instant>,
+    /// Has this session already been preempted and resumed once?  A
+    /// resumed session is never picked as a preemption victim again —
+    /// the anti-thrash rule that bounds each request to at most one
+    /// park/resume cycle, so total preemption work is bounded by the
+    /// request count and every session provably finishes.
+    resumed: bool,
 }
 
 /// A job past its device half, awaiting its group's batched cloud call.
@@ -188,6 +194,12 @@ pub struct Scheduler<'e> {
     slots: Vec<Option<Active<'e>>>,
     /// Admission queue beyond `max_sessions`.
     waiting: VecDeque<Request>,
+    /// Sessions parked by preemption (`[serve] priority = preempt`): KV
+    /// paged out to the pool's host store, no slot, no resident blocks.
+    /// Resumed oldest-first into free slots *before* fresh admissions,
+    /// so a parked request cannot starve behind the arrivals that
+    /// displaced it.
+    preempted: VecDeque<Active<'e>>,
     /// Monotonic admission counter: every session admitted into a slot
     /// gets the next epoch, stamped into its jobs (slot-reuse identity).
     next_epoch: u64,
@@ -249,6 +261,7 @@ impl<'e> Scheduler<'e> {
             batcher: Batcher::new(),
             slots,
             waiting: VecDeque::new(),
+            preempted: VecDeque::new(),
             next_epoch: 1,
             monitor,
             stats,
@@ -293,6 +306,15 @@ impl<'e> Scheduler<'e> {
             }
             return true;
         }
+        if let Some(i) = self.preempted.iter().position(|a| a.id == id) {
+            if let Some(a) = self.preempted.remove(i) {
+                // Parked sessions hold no staged state and no resident
+                // blocks; dropping the Active frees the host-store copy.
+                a.reply.send("ERR cancelled".into());
+                self.stats.cancelled += 1;
+            }
+            return true;
+        }
         for slot in self.slots.iter_mut() {
             if slot.as_ref().is_some_and(|a| a.id == id) {
                 if let Some(mut a) = slot.take() {
@@ -315,6 +337,8 @@ impl<'e> Scheduler<'e> {
     pub fn reap_all(&mut self) {
         self.stats.reaped += self.waiting.len() as u64;
         self.waiting.clear();
+        self.stats.reaped += self.preempted.len() as u64;
+        self.preempted.clear();
         for i in 0..self.slots.len() {
             if let Some(mut a) = self.slots[i].take() {
                 a.sess.abort_staged();
@@ -324,14 +348,18 @@ impl<'e> Scheduler<'e> {
         }
     }
 
-    /// Anything queued or live?
+    /// Anything queued, parked, or live?
     pub fn has_work(&self) -> bool {
-        !self.waiting.is_empty() || self.slots.iter().any(|s| s.is_some())
+        !self.waiting.is_empty()
+            || !self.preempted.is_empty()
+            || self.slots.iter().any(|s| s.is_some())
     }
 
-    /// Requests waiting for a slot.
+    /// Requests waiting for a slot: fresh admissions plus preempted
+    /// sessions parked for resume (so in-flight submissions always
+    /// reconcile as queued + live + terminal outcomes).
     pub fn queued(&self) -> usize {
-        self.waiting.len()
+        self.waiting.len() + self.preempted.len()
     }
 
     /// Sessions currently occupying slots.
@@ -356,6 +384,7 @@ impl<'e> Scheduler<'e> {
         self.admit();
         let batch = self.batcher.form_batch(self.cfg.prefill_budget);
         if batch.is_empty() {
+            self.refresh_kv_stats();
             return 0;
         }
         self.stats.iterations += 1;
@@ -375,7 +404,18 @@ impl<'e> Scheduler<'e> {
         if executed_tokens > 0 {
             self.monitor.observe_step(executed_tokens, decode_cloud_ms + prefill_cloud_ms);
         }
+        self.refresh_kv_stats();
         n
+    }
+
+    /// Snapshot the shared KV pool's occupancy counters into `stats`
+    /// (`kv_blocks` / `kv_shared` on the STATS wire line).  Runs at every
+    /// iteration boundary and on each STATS request, so the numbers track
+    /// current block usage rather than usage at some past event.
+    pub fn refresh_kv_stats(&mut self) {
+        let p = self.engine.kv_pool().stats();
+        self.stats.kv_blocks_in_use = p.blocks_in_use;
+        self.stats.kv_blocks_shared = p.shared_blocks;
     }
 
     /// Cancel live sessions whose wall-clock deadline (measured from
@@ -421,16 +461,20 @@ impl<'e> Scheduler<'e> {
         }
     }
 
-    /// Move waiting requests into free slots and queue their first
-    /// prefill chunk.  Before anything takes a slot, the queue is swept:
-    /// entries whose reply channel is already dead are reaped silently
-    /// (their client disconnected while they waited), and entries past
-    /// the deadline are expired — a dead or doomed request must never
-    /// cost a slot or a token of cloud compute.
+    /// Admission pass: sweep dead/expired entries from both queues,
+    /// resume parked sessions into free slots (oldest first, ahead of
+    /// fresh admissions), fill the remaining slots from the waiting
+    /// queue, and — under `[serve] priority = preempt` — park live
+    /// sessions to make room for admissions that would otherwise wait.
+    /// A dead or doomed request must never cost a slot or a token of
+    /// cloud compute, so the sweeps run before anything takes a slot.
     fn admit(&mut self) {
         let before = self.waiting.len();
         self.waiting.retain(|r| !r.reply.is_dead());
         self.stats.reaped += (before - self.waiting.len()) as u64;
+        let before = self.preempted.len();
+        self.preempted.retain(|a| !a.reply.is_dead());
+        self.stats.reaped += (before - self.preempted.len()) as u64;
         if self.cfg.deadline_ms > 0 {
             let deadline = self.cfg.deadline_ms;
             let mut kept = VecDeque::with_capacity(self.waiting.len());
@@ -443,7 +487,100 @@ impl<'e> Scheduler<'e> {
                 }
             }
             self.waiting = kept;
+            let mut kept = VecDeque::with_capacity(self.preempted.len());
+            for a in self.preempted.drain(..) {
+                if a.enqueued.elapsed().as_millis() as u64 >= deadline {
+                    a.reply.send("ERR deadline".into());
+                    self.stats.deadline_expired += 1;
+                } else {
+                    kept.push_back(a);
+                }
+            }
+            self.preempted = kept;
         }
+        self.resume_preempted();
+        self.fill_free_slots();
+        if self.cfg.priority == PriorityMode::Preempt && !self.waiting.is_empty() {
+            self.preempt_for_waiting();
+            self.fill_free_slots();
+        }
+    }
+
+    /// Resume parked sessions into free slots, oldest first.  Swap-in can
+    /// fail under pool pressure; the session then goes back to the front
+    /// of the parked queue and is retried next iteration, once live
+    /// sessions have released blocks (a parked session holds none, so
+    /// with no live session left a failure is unrecoverable and fails
+    /// the lane instead of spinning).
+    fn resume_preempted(&mut self) {
+        while !self.preempted.is_empty() {
+            let Some(i) = self.slots.iter().position(|s| s.is_none()) else { break };
+            let Some(mut a) = self.preempted.pop_front() else { break };
+            match catch("swap_in", || a.sess.swap_in()) {
+                Ok(bytes) => {
+                    self.stats.kv_swap_bytes += bytes;
+                    a.resumed = true;
+                    // Fresh epoch: any job still queued from before the
+                    // preemption must not drive the resumed session.
+                    a.epoch = self.next_epoch;
+                    self.next_epoch += 1;
+                    // A preemption victim is always past prefill (it has
+                    // a pending token), so it resumes straight into the
+                    // decode loop.
+                    let j = self.decode_job(i, a.epoch);
+                    self.batcher.push(j);
+                    self.slots[i] = Some(a);
+                }
+                Err(e) => {
+                    if self.slots.iter().any(|s| s.is_some()) {
+                        self.preempted.push_front(a);
+                    } else {
+                        self.fail(&a.reply, &e);
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Park live sessions to free slots for waiting admissions
+    /// (`priority = preempt`).  Eligible victims are past prefill (they
+    /// hold a committed stream a resume can continue exactly) and have
+    /// never been resumed (the anti-thrash bound); among them, the one
+    /// with the most remaining tokens goes first — it holds the slot
+    /// longest.  The victim's staged state is aborted, its queued jobs
+    /// die on the epoch check, its KV pages out to the host store, and
+    /// it parks at the back of the resume queue.
+    fn preempt_for_waiting(&mut self) {
+        let mut want = self.waiting.len();
+        while want > 0 {
+            if self.slots.iter().any(|s| s.is_none()) {
+                break; // a slot is already free for the next admission
+            }
+            let victim = (0..self.slots.len())
+                .filter(|&i| {
+                    self.slots[i]
+                        .as_ref()
+                        .is_some_and(|a| !a.resumed && a.first_token.is_some())
+                })
+                .max_by_key(|&i| {
+                    self.slots[i].as_ref().map_or(0, |a| a.max_new.saturating_sub(a.out.len()))
+                });
+            let Some(i) = victim else { break };
+            if let Some(mut a) = self.slots[i].take() {
+                a.sess.abort_staged();
+                self.batcher.remove_session(i);
+                self.stats.kv_swap_bytes += a.sess.swap_out();
+                self.stats.preemptions += 1;
+                self.preempted.push_back(a);
+            }
+            want -= 1;
+        }
+    }
+
+    /// Move waiting requests into free slots and queue their first
+    /// prefill chunk.
+    fn fill_free_slots(&mut self) {
         while !self.waiting.is_empty() {
             let Some(i) = self.slots.iter().position(|s| s.is_none()) else { break };
             let Some(req) = self.next_admission() else { break };
@@ -475,6 +612,7 @@ impl<'e> Scheduler<'e> {
                         enqueued: req.enqueued,
                         admitted: clock::now(),
                         first_token: None,
+                        resumed: false,
                     });
                 }
                 Err(e) => {
@@ -1189,6 +1327,124 @@ mod tests {
         assert_eq!(rx_b.try_recv().unwrap(), "ERR deadline");
         assert_eq!(sched.stats.deadline_expired, 2);
         assert!(!sched.has_work());
+    }
+
+    #[test]
+    fn preemption_parks_resumes_and_preserves_streams() {
+        // One slot, priority = preempt: a long-running session is parked
+        // (KV paged out) so a later arrival can run, then resumed — and
+        // both streams stay byte-identical to serial generate().
+        let engine = Engine::synthetic();
+        let spec = SpecDecConfig::default();
+        let long: Vec<TokenId> = (0u32..40).map(|i| (i * 3 + 1) % 256).collect();
+        let short = vec![9u32, 7, 5];
+        let want_long = generate(&engine, &long, 24, &spec).unwrap().reply_line();
+        let want_short = generate(&engine, &short, 5, &spec).unwrap().reply_line();
+
+        let cfg = ServeConfig {
+            max_sessions: 1,
+            priority: PriorityMode::Preempt,
+            ..ServeConfig::default()
+        };
+        let mut sched = Scheduler::new(&engine, spec, cfg);
+        let (a, rx_a) = req(long, 24);
+        sched.submit(a);
+        // Drive A past prefill (a decode job pending marks it eligible).
+        let mut guard = 0;
+        while sched.job_depths().0 == 0 {
+            assert!(sched.step() > 0);
+            guard += 1;
+            assert!(guard < 100, "A never reached decode");
+        }
+        let (b, rx_b) = req(short, 5);
+        sched.submit(b);
+        assert!(sched.step() > 0);
+        assert_eq!(sched.stats.preemptions, 1, "A must be parked for B");
+        assert!(sched.stats.kv_swap_bytes > 0, "parking pages KV to the host store");
+        assert_eq!(sched.live_sessions(), 1, "B holds the slot");
+        assert_eq!(sched.queued(), 1, "parked A counts as queued");
+
+        drain(&mut sched);
+        assert_eq!(rx_b.recv().unwrap(), want_short, "preempting arrival diverged");
+        assert_eq!(rx_a.recv().unwrap(), want_long, "park/resume changed the stream");
+        assert_eq!(sched.stats.finished, 2);
+        assert!(
+            engine.kv_pool().quiesced(),
+            "leaked or refcount-stuck KV blocks after all sessions quiesced"
+        );
+    }
+
+    #[test]
+    fn resumed_sessions_are_never_preempted_twice() {
+        // Anti-thrash: once a session has been parked and resumed, a
+        // later arrival waits instead of re-parking it.
+        let engine = Engine::synthetic();
+        let spec = SpecDecConfig::default();
+        let long: Vec<TokenId> = (0u32..30).map(|i| (i * 5 + 2) % 256).collect();
+        let want_long = generate(&engine, &long, 16, &spec).unwrap().reply_line();
+        let cfg = ServeConfig {
+            max_sessions: 1,
+            priority: PriorityMode::Preempt,
+            ..ServeConfig::default()
+        };
+        let mut sched = Scheduler::new(&engine, spec, cfg);
+        let (a, rx_a) = req(long, 16);
+        sched.submit(a);
+        let mut guard = 0;
+        while sched.job_depths().0 == 0 {
+            assert!(sched.step() > 0);
+            guard += 1;
+            assert!(guard < 100, "A never reached decode");
+        }
+        let (b, rx_b) = req(vec![1, 2, 3], 4);
+        sched.submit(b);
+        // Park A, run B to completion, then one more step resumes A.
+        let mut guard = 0;
+        while rx_b.try_recv().is_err() {
+            assert!(sched.step() > 0);
+            guard += 1;
+            assert!(guard < 1000, "B never finished");
+        }
+        assert!(sched.step() > 0, "resuming A makes progress");
+        assert_eq!(sched.live_sessions(), 1, "A resumed into the freed slot");
+        let (c, rx_c) = req(vec![4, 5, 6], 4);
+        sched.submit(c);
+        drain(&mut sched);
+        assert_eq!(sched.stats.preemptions, 1, "resumed A was re-preempted for C");
+        assert_eq!(rx_a.recv().unwrap(), want_long);
+        assert!(rx_c.recv().unwrap().starts_with("OK "));
+    }
+
+    #[test]
+    fn cancel_reaches_parked_sessions() {
+        let engine = Engine::synthetic();
+        let cfg = ServeConfig {
+            max_sessions: 1,
+            priority: PriorityMode::Preempt,
+            ..ServeConfig::default()
+        };
+        let mut sched = Scheduler::new(&engine, SpecDecConfig::default(), cfg);
+        let (a, rx_a) = req((0u32..30).map(|i| (i * 7 + 3) % 256).collect(), 20);
+        let a_id = a.id;
+        sched.submit(a);
+        let mut guard = 0;
+        while sched.job_depths().0 == 0 {
+            assert!(sched.step() > 0);
+            guard += 1;
+            assert!(guard < 100, "A never reached decode");
+        }
+        let (b, rx_b) = req(vec![1, 2, 3], 4);
+        sched.submit(b);
+        assert!(sched.step() > 0);
+        assert_eq!(sched.stats.preemptions, 1);
+        // Cancel the parked session: reply sent, no resume ever happens.
+        assert!(sched.cancel(a_id));
+        assert_eq!(rx_a.try_recv().unwrap(), "ERR cancelled");
+        assert_eq!(sched.queued(), 0);
+        drain(&mut sched);
+        assert!(rx_b.recv().unwrap().starts_with("OK "));
+        assert_eq!(sched.stats.finished, 1);
+        assert!(engine.kv_pool().quiesced(), "cancelled parked session leaked blocks");
     }
 
     fn completion_token_counts(

@@ -27,9 +27,9 @@ pub mod profile;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::backend::Tensor;
 use crate::config::{SampleVerify, SpecDecConfig};
 use crate::engine::Engine;
+use crate::kv::KvCache;
 use crate::model::{CloudStream, DeviceStream, TokenId};
 use crate::sampler::Sampler;
 
@@ -64,8 +64,10 @@ struct PreDraft {
     /// Draft distributions each proposal was sampled from (empty under
     /// greedy decoding; needed for `SampleVerify::Rejection`).
     q_dists: Vec<Vec<f64>>,
-    skv: Tensor,
-    akv: Tensor,
+    /// Copy-on-write forks of the device caches with the branch's
+    /// speculative tail written past the fork point; adoption is a move.
+    skv: KvCache,
+    akv: KvCache,
     steps: usize,
 }
 
@@ -139,8 +141,8 @@ impl<'e> Session<'e> {
         let sampler = Sampler::from_cfg(&cfg);
         Ok(Session {
             engine,
-            dev: DeviceStream::new(engine.spec())?,
-            cloud: CloudStream::new(engine.spec())?,
+            dev: engine.new_device_stream(),
+            cloud: engine.new_cloud_stream(),
             ctx: Vec::new(),
             n_prompt: 0,
             prefill: None,
@@ -230,9 +232,9 @@ impl<'e> Session<'e> {
                 if let Some(st) = self.prefill.as_mut() {
                     st.staged = None;
                 }
-                self.dev.spos.rollback();
-                self.dev.apos.rollback();
-                self.cloud.pos.rollback();
+                self.dev.skv.rollback();
+                self.dev.akv.rollback();
+                self.cloud.mkv.rollback();
                 Err(e)
             }
         }
@@ -269,10 +271,14 @@ impl<'e> Session<'e> {
             Err(e) => {
                 // Restore the staged prompt and roll the device write
                 // heads back, so the chunk stays re-drivable instead of
-                // the prefill state vanishing with the error.
+                // the prefill state vanishing with the error.  Rolling
+                // back abandons any rows the failed chunk already wrote:
+                // they sit past the committed prefix in blocks this table
+                // still owns, so the re-driven chunk overwrites them and
+                // no pool block leaks.
                 self.prefill = Some(st);
-                self.dev.spos.rollback();
-                self.dev.apos.rollback();
+                self.dev.skv.rollback();
+                self.dev.akv.rollback();
                 Err(e)
             }
         }
@@ -322,9 +328,9 @@ impl<'e> Session<'e> {
             None
         };
         st.off += c;
-        self.dev.spos.commit(c);
-        self.dev.apos.commit(c);
-        self.cloud.pos.commit(c);
+        self.dev.skv.commit(c);
+        self.dev.akv.commit(c);
+        self.cloud.mkv.commit(c);
         let Some(logits) = logits else {
             self.prefill = Some(st);
             return Ok(None);
@@ -420,8 +426,8 @@ impl<'e> Session<'e> {
                 // — instead of panicking "already staged" on the next
                 // call.
                 self.verify = None;
-                self.dev.spos.rollback();
-                self.dev.apos.rollback();
+                self.dev.skv.rollback();
+                self.dev.akv.rollback();
                 Err(e)
             }
         }
@@ -451,10 +457,19 @@ impl<'e> Session<'e> {
         // --- drafting stage (or adopt a parallel-drafting branch) ---------
         let (proposed, shallow, draft_steps, pd_hit, q_dists) = match self.prebuilt.take() {
             Some(pb) if pb.base == d0 && !pb.proposed.is_empty() => {
-                self.dev.skv = pb.skv;
-                self.dev.akv = pb.akv;
-                self.dev.spos.wrote(pb.steps);
-                self.dev.apos.wrote(pb.steps);
+                // The branch forked before the last round's verification
+                // committed its rows; re-apply that commit to the adopted
+                // tables so their committed prefix matches the live
+                // stream's.  The rows are bit-identical (the branch only
+                // wrote past its fork point), so sealing re-seals the same
+                // physical blocks — a no-op — or dedups the boundary copy.
+                let committed = self.dev.skv.committed();
+                let mut skv = pb.skv;
+                let mut akv = pb.akv;
+                skv.commit(committed - skv.committed());
+                akv.commit(committed - akv.committed());
+                self.dev.skv = skv;
+                self.dev.akv = akv;
                 // No fresh candidates were computed this round: PD pauses
                 // for one round after a hit.
                 self.corr_candidates.clear();
@@ -488,7 +503,7 @@ impl<'e> Session<'e> {
         // Bonus case: next d_0 = b one past it (rows = k+1).
         let mut branches: Vec<PreDraft> = Vec::new();
         if parallel_draft && lambda > 0 {
-            let base_pos = self.dev.spos.committed; // p
+            let base_pos = self.dev.skv.committed(); // p
             for &c in self.corr_candidates.clone().iter().take(self.cfg.top_k) {
                 // Correction case: rows 0..k-1 emitted as d_1..d_{k-1}, c.
                 let mut em: Vec<TokenId> = proposed[..k - 1].to_vec();
@@ -651,12 +666,12 @@ impl<'e> Session<'e> {
         self.last_deep = deep[(committed_rows - 1) * h..committed_rows * h].to_vec();
 
         // --- KV bookkeeping: commit verified rows, roll back the rest -----
-        self.dev.spos.commit(committed_rows);
-        self.dev.spos.rollback();
-        self.dev.apos.commit(committed_rows);
-        self.dev.apos.rollback();
-        self.cloud.pos.commit(committed_rows);
-        self.cloud.pos.rollback();
+        self.dev.skv.commit(committed_rows);
+        self.dev.skv.rollback();
+        self.dev.akv.commit(committed_rows);
+        self.dev.akv.rollback();
+        self.cloud.mkv.commit(committed_rows);
+        self.cloud.mkv.rollback();
 
         // Adopt a branch whose assumed (token, position) both match.
         self.prebuilt = pv
@@ -743,18 +758,13 @@ impl<'e> Session<'e> {
         lambda: usize,
         assumed_emitted: &[TokenId],
     ) -> Result<PreDraft> {
-        let mut spos = self.dev.spos;
-        let mut apos = self.dev.apos;
-        // The live stream has written past this branch's start; rewind the
-        // write head (stale rows are overwritten, never attended).
-        spos.seek(write_pos);
-        apos.seek(write_pos);
-        let mut dev = DeviceStream {
-            skv: self.dev.skv.clone(),
-            akv: self.dev.akv.clone(),
-            spos,
-            apos,
-        };
+        // Copy-on-write forks share every block with the live stream; the
+        // branch's writes land in private copies.  The live stream has
+        // written past this branch's start, so rewind the forked write
+        // head (stale rows are overwritten, never attended).
+        let mut dev = DeviceStream { skv: self.dev.skv.fork(), akv: self.dev.akv.fork() };
+        dev.skv.seek(write_pos);
+        dev.akv.seek(write_pos);
         let mut proposed = Vec::new();
         let mut shallow = Vec::new();
         let mut q_dists: Vec<Vec<f64>> = Vec::new();
@@ -814,11 +824,54 @@ impl<'e> Session<'e> {
             any |= st.staged.take().is_some();
         }
         if any {
-            self.dev.spos.rollback();
-            self.dev.apos.rollback();
-            self.cloud.pos.rollback();
+            self.dev.skv.rollback();
+            self.dev.akv.rollback();
+            self.cloud.mkv.rollback();
         }
         any
+    }
+
+    /// Page this session's entire KV state (shallow, adapter and cloud
+    /// middle caches) out to the pool's host-side store, releasing every
+    /// resident block.  The serve scheduler preempts a session with this
+    /// under slot pressure; any staged round must be torn down first
+    /// ([`Session::abort_staged`]).  Idempotent — swapping an already
+    /// parked session moves zero bytes.  Returns bytes copied host-ward.
+    pub fn swap_out(&mut self) -> u64 {
+        // A prebuilt branch holds CoW forks of the device caches; parking
+        // must release those block refs too so the session pins nothing.
+        // Dropping it only discards a speculated branch — the round is
+        // re-drafted after resume, and losslessness keeps the emitted
+        // stream identical.
+        self.prebuilt = None;
+        self.dev.skv.swap_out() + self.dev.akv.swap_out() + self.cloud.mkv.swap_out()
+    }
+
+    /// Restore a parked session's caches from the host store, re-sharing
+    /// sealed blocks with bit-identical live content where the pool can
+    /// dedup them.  All-or-nothing: if any cache cannot obtain blocks
+    /// (pool exhausted), the caches already restored are swapped back out
+    /// so a parked session never holds resident blocks, and the caller
+    /// retries once live sessions release pressure.  Returns bytes copied
+    /// back in (dedup re-shares count as zero).
+    pub fn swap_in(&mut self) -> Result<u64> {
+        let mut total = self.dev.skv.swap_in()?;
+        match self.dev.akv.swap_in() {
+            Ok(b) => total += b,
+            Err(e) => {
+                self.dev.skv.swap_out();
+                return Err(e);
+            }
+        }
+        match self.cloud.mkv.swap_in() {
+            Ok(b) => total += b,
+            Err(e) => {
+                self.dev.skv.swap_out();
+                self.dev.akv.swap_out();
+                return Err(e);
+            }
+        }
+        Ok(total)
     }
 
     /// U-shape decode step: one token per device-cloud interaction.
@@ -835,8 +888,8 @@ impl<'e> Session<'e> {
         } else {
             self.p_sample_row(&logits, &[], self.ctx.len())
         };
-        self.dev.spos.commit(1);
-        self.cloud.pos.commit(1);
+        self.dev.skv.commit(1);
+        self.cloud.mkv.commit(1);
         self.last_deep = deep;
         self.ctx.push(next);
         self.pending = Some(next);
@@ -911,10 +964,10 @@ impl<'e> Session<'e> {
         let committed_rows = accepted + 1;
         self.last_deep = deep[(committed_rows - 1) * h..committed_rows * h].to_vec();
 
-        self.dev.spos.commit(committed_rows);
-        self.dev.spos.rollback();
-        self.cloud.pos.commit(committed_rows);
-        self.cloud.pos.rollback();
+        self.dev.skv.commit(committed_rows);
+        self.dev.skv.rollback();
+        self.cloud.mkv.commit(committed_rows);
+        self.cloud.mkv.rollback();
 
         self.ctx.extend_from_slice(&emitted);
         self.pending = Some(next_d0);

@@ -137,7 +137,8 @@ fn failed_rounds_roll_back_and_the_session_recovers() {
         fail_head: fail_head.clone(),
     };
     let engine =
-        Engine { reg: hat::runtime::ArtifactRegistry::with_backend(Box::new(flaky)).unwrap() };
+        Engine::with_registry(hat::runtime::ArtifactRegistry::with_backend(Box::new(flaky)).unwrap())
+            .unwrap();
 
     let cfg = SpecDecConfig::default();
     let prompt = [5u32, 9, 2, 14];
@@ -190,6 +191,74 @@ fn failed_rounds_roll_back_and_the_session_recovers() {
 }
 
 #[test]
+fn failed_prefill_chunks_leak_no_pool_blocks() {
+    // A chunk that dies mid-flight must leave the committed prefix where
+    // it was and must not leak staged KV rows: retrying the same failed
+    // chunk never grows the pool census (abandoned rows sit past the
+    // committed prefix in table-owned blocks and are overwritten on the
+    // re-drive), the recovered stream is bit-identical to a clean prefill,
+    // and every block returns to the free list when the session drops.
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    let fail_cloud = Rc::new(Cell::new(false));
+    let fail_head = Rc::new(Cell::new(false));
+    let flaky = FlakyBackend {
+        inner: ReferenceBackend::synthetic(42),
+        fail_cloud: fail_cloud.clone(),
+        fail_head: fail_head.clone(),
+    };
+    let engine =
+        Engine::with_registry(hat::runtime::ArtifactRegistry::with_backend(Box::new(flaky)).unwrap())
+            .unwrap();
+
+    let p = prompt(40, 21);
+    let first = {
+        let mut s = Session::new(&engine, SpecDecConfig::default()).unwrap();
+        s.prefill_begin(&p).unwrap();
+        assert!(s.prefill_step(16).unwrap().is_none());
+
+        // Two consecutive failures of the same chunk: the census after each
+        // must agree — a retry reuses the staged rows' blocks, it does not
+        // allocate fresh ones on top.
+        fail_cloud.set(true);
+        assert!(s.prefill_step(16).is_err());
+        let census = engine.kv_pool().stats().blocks_in_use;
+        assert!(s.prefill_step(16).is_err());
+        fail_cloud.set(false);
+        assert_eq!(
+            engine.kv_pool().stats().blocks_in_use,
+            census,
+            "retrying a failed chunk leaked staged KV blocks"
+        );
+        assert_eq!(s.prefill_remaining(), p.len() - 16, "failed chunks consumed tokens");
+
+        // Same invariant when the *final* chunk dies at the head stage,
+        // after the middle already advanced the cloud stream.
+        assert!(s.prefill_step(16).unwrap().is_none());
+        fail_head.set(true);
+        assert!(s.prefill_step(16).is_err());
+        let census = engine.kv_pool().stats().blocks_in_use;
+        assert!(s.prefill_step(16).is_err());
+        fail_head.set(false);
+        assert_eq!(
+            engine.kv_pool().stats().blocks_in_use,
+            census,
+            "retrying a failed final chunk leaked staged KV blocks"
+        );
+
+        s.prefill_step(16).unwrap()
+    };
+    assert!(engine.kv_pool().quiesced(), "session drop left blocks in use");
+
+    // The recovered stream is bit-identical to an uninterrupted prefill.
+    let clean_engine = Engine::synthetic();
+    let mut q = Session::new(&clean_engine, SpecDecConfig::default()).unwrap();
+    let t = q.prefill(&p, &chunk_sizes(p.len(), 16)).unwrap();
+    assert_eq!(first, Some(t), "recovered prefill diverged from clean run");
+}
+
+#[test]
 fn run_batch_default_loop_matches_vectorized_reference() {
     // The run_batch contract: the default loop implementation and the
     // reference backend's vectorized pass must produce bit-identical
@@ -230,6 +299,53 @@ fn run_batch_default_loop_matches_vectorized_reference() {
     let sl = looped.stats();
     assert_eq!((sv.executions, sv.batch_occupancy), (1, 3));
     assert_eq!((sl.executions, sl.batch_occupancy), (3, 3));
+}
+
+#[test]
+fn shared_prefix_sessions_dedup_kv_blocks() {
+    // The pool seals full blocks content-addressed, so two sessions
+    // prefilled with the same 512-token system prompt (plus distinct
+    // short tails) store the prefix once: they must consume measurably
+    // fewer blocks than two sessions with fully distinct prompts of the
+    // same length, and the sharing must be visible in `shared_blocks`.
+    let mut rng = hat::util::rng::Rng::new(3);
+    let mut toks = |n: usize| -> Vec<u32> { (0..n).map(|_| rng.below(256) as u32).collect() };
+    let system = toks(512);
+    let tail_a = toks(8);
+    let tail_b = toks(8);
+    let distinct_a = toks(520);
+    let distinct_b = toks(520);
+
+    // Prefill two concurrent sessions, return (blocks_in_use, shared).
+    let census = |p1: &[u32], p2: &[u32]| -> (usize, usize) {
+        let e = Engine::synthetic();
+        let mut a = Session::new(&e, SpecDecConfig::default()).unwrap();
+        a.prefill(p1, &chunk_sizes(p1.len(), 64)).unwrap();
+        let mut b = Session::new(&e, SpecDecConfig::default()).unwrap();
+        b.prefill(p2, &chunk_sizes(p2.len(), 64)).unwrap();
+        let s = e.kv_pool().stats();
+        drop(b);
+        drop(a);
+        assert!(e.kv_pool().quiesced(), "dropped sessions left blocks behind");
+        (s.blocks_in_use, s.shared_blocks)
+    };
+
+    let shared_p1: Vec<u32> = system.iter().chain(&tail_a).copied().collect();
+    let shared_p2: Vec<u32> = system.iter().chain(&tail_b).copied().collect();
+    let (shared_use, shared_shared) = census(&shared_p1, &shared_p2);
+    let (distinct_use, distinct_shared) = census(&distinct_a, &distinct_b);
+
+    assert_eq!(distinct_shared, 0, "distinct prompts must not alias blocks");
+    // 512 shared tokens = 8 sealed 64-token blocks per cache; with three
+    // caches per session the savings must be at least one full prefix.
+    assert!(
+        shared_use + 8 <= distinct_use,
+        "shared prefix saved too little: {shared_use} vs {distinct_use} blocks"
+    );
+    assert!(
+        shared_shared >= 8,
+        "a 512-token shared prefix must alias ≥ 8 blocks, saw {shared_shared}"
+    );
 }
 
 #[test]

@@ -12,7 +12,7 @@ use std::time::Duration;
 
 use hat::backend::reference::ReferenceBackend;
 use hat::backend::{ExecBackend, RuntimeStats, Tensor};
-use hat::config::{SampleVerify, ServeConfig, SpecDecConfig};
+use hat::config::{PriorityMode, SampleVerify, ServeConfig, SpecDecConfig};
 use hat::engine::Engine;
 use hat::runtime::{ArtifactRegistry, Manifest};
 use hat::server::scheduler::{ReplyHandle, Request, Scheduler};
@@ -222,7 +222,8 @@ impl ExecBackend for BatchRejectBackend {
 #[test]
 fn scheduler_degrades_to_serial_when_batched_calls_fail() {
     let backend = BatchRejectBackend(ReferenceBackend::synthetic(42));
-    let engine = Engine { reg: ArtifactRegistry::with_backend(Box::new(backend)).unwrap() };
+    let engine =
+        Engine::with_registry(ArtifactRegistry::with_backend(Box::new(backend)).unwrap()).unwrap();
     let spec = SpecDecConfig::default();
     let reqs: Vec<(Vec<u32>, usize)> = vec![
         ((0u32..30).map(|i| (i * 3 + 1) % 256).collect(), 10),
@@ -790,7 +791,8 @@ impl ExecBackend for PanicBatchBackend {
 #[test]
 fn panicking_batched_call_degrades_to_serial_not_a_crash() {
     let backend = PanicBatchBackend(ReferenceBackend::synthetic(42));
-    let engine = Engine { reg: ArtifactRegistry::with_backend(Box::new(backend)).unwrap() };
+    let engine =
+        Engine::with_registry(ArtifactRegistry::with_backend(Box::new(backend)).unwrap()).unwrap();
     let spec = SpecDecConfig::default();
     let reqs: Vec<(Vec<u32>, usize)> = vec![
         ((0u32..30).map(|i| (i * 3 + 1) % 256).collect(), 10),
@@ -880,7 +882,8 @@ fn panicking_lane_fails_alone_and_survivors_match_serial() {
         inner: ReferenceBackend::synthetic(42),
         armed: Cell::new(true),
     };
-    let engine = Engine { reg: ArtifactRegistry::with_backend(Box::new(backend)).unwrap() };
+    let engine =
+        Engine::with_registry(ArtifactRegistry::with_backend(Box::new(backend)).unwrap()).unwrap();
     let spec = SpecDecConfig::default();
     // Equal-length prompts: all three prefill chunks land in one bucket
     // group, so lane order is submit order and the injected panic
@@ -919,4 +922,123 @@ fn panicking_lane_fails_alone_and_survivors_match_serial() {
     }
     assert_eq!(sched.stats.failed, 1, "exactly the panicking lane fails");
     assert_eq!(sched.stats.finished, 2, "both survivors finish");
+}
+
+/// Property: preemption churn under `priority = preempt`.  Each case
+/// deterministically forces at least one park (full house plus a waiter,
+/// stepped until a victim is swapped out), then randomly interleaves
+/// admissions — half of them sharing a system-prompt prefix, so parked,
+/// resumed *and* CoW-shared sessions coexist — steps, and cancels that can
+/// land on running, waiting or parked sessions.  Every survivor's stream
+/// must be byte-identical to a serial `generate()` run, cancelled requests
+/// reply `ERR cancelled` exactly once, and after the drain the KV pool
+/// must quiesce: zero in-use, refcount-stuck or dedup-stuck blocks.
+#[test]
+fn prop_preemption_churn_preserves_streams_and_quiesces_pool() {
+    let engine = Engine::synthetic();
+    let spec = SpecDecConfig::default();
+    let vocab = engine.spec().vocab;
+    let mut total_preempted = 0u64;
+    forall(cases(8), |rng| {
+        let max_sessions = rng.range_usize(1, 3);
+        let cfg = ServeConfig {
+            max_sessions,
+            prefill_budget: rng.range_usize(32, 256),
+            priority: PriorityMode::Preempt,
+            ..ServeConfig::default()
+        };
+        let mut sched = Scheduler::new(&engine, spec.clone(), cfg);
+        // (id, prompt, max_new, rx, cancelled)
+        let mut items: Vec<(u64, Vec<u32>, usize, mpsc::Receiver<String>, bool)> = Vec::new();
+
+        // Fill every slot with a long-running generation, queue one more
+        // request, and step until the scheduler parks a victim — each case
+        // exercises preempt → swap-out → park before the random churn.
+        for _ in 0..max_sessions {
+            let prompt = prompt_of(rng, rng.range_usize(12, 32), vocab);
+            let max_new = rng.range_usize(24, 48);
+            let (r, rx) = request(prompt.clone(), max_new);
+            items.push((r.id, prompt, max_new, rx, false));
+            sched.submit(r);
+        }
+        {
+            let prompt = prompt_of(rng, rng.range_usize(8, 24), vocab);
+            let (r, rx) = request(prompt.clone(), 8);
+            items.push((r.id, prompt, 8, rx, false));
+            sched.submit(r);
+        }
+        let mut guard = 0usize;
+        while sched.stats.preemptions == 0 {
+            if sched.step() == 0 {
+                return Err("scheduler idle before any preemption".into());
+            }
+            guard += 1;
+            if guard > 5_000 {
+                return Err("no preemption despite a full house and a waiter".into());
+            }
+        }
+
+        let system = prompt_of(rng, rng.range_usize(24, 56), vocab);
+        for _ in 0..rng.range_usize(3, 7) {
+            let mut prompt = if rng.bool(0.5) {
+                system.clone()
+            } else {
+                prompt_of(rng, rng.range_usize(6, 30), vocab)
+            };
+            prompt.extend((0..rng.range_usize(2, 8)).map(|_| rng.below(vocab) as u32));
+            let max_new = rng.range_usize(2, 12);
+            let (r, rx) = request(prompt.clone(), max_new);
+            let id = r.id;
+            sched.submit(r);
+            items.push((id, prompt, max_new, rx, false));
+            for _ in 0..rng.range_usize(0, 4) {
+                sched.step();
+            }
+            if rng.bool(0.4) {
+                let k = rng.below(items.len());
+                let (id, _, _, _, cancelled) = &mut items[k];
+                if !*cancelled && sched.cancel(*id) {
+                    *cancelled = true;
+                }
+            }
+        }
+
+        let mut guard = 0usize;
+        while sched.has_work() {
+            if sched.step() == 0 {
+                return Err("scheduler idle with admitted work".into());
+            }
+            guard += 1;
+            if guard > 30_000 {
+                return Err("scheduler failed to drain".into());
+            }
+        }
+        total_preempted += sched.stats.preemptions;
+
+        for (id, prompt, max_new, rx, cancelled) in &items {
+            let line = rx.try_recv().map_err(|_| format!("request {id} got no reply"))?;
+            if *cancelled {
+                if line != "ERR cancelled" {
+                    return Err(format!("cancelled request {id} replied {line:?}"));
+                }
+                if let Ok(extra) = rx.try_recv() {
+                    return Err(format!("cancelled request {id} got a second reply {extra:?}"));
+                }
+            } else {
+                let want = generate(&engine, prompt, *max_new, &spec)
+                    .map_err(|e| e.to_string())?
+                    .reply_line();
+                if line != want {
+                    return Err(format!(
+                        "request {id} diverged under preemption churn: {line:?}"
+                    ));
+                }
+            }
+        }
+        if !engine.kv_pool().quiesced() {
+            return Err("drained scheduler left pool blocks in use or shared".into());
+        }
+        Ok(())
+    });
+    assert!(total_preempted >= 8, "every case must park at least one session");
 }

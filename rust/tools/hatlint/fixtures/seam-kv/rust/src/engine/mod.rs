@@ -1,0 +1,6 @@
+// Seeds exactly one seam-kv violation: engine code reaching through a
+// cache handle into raw KV tensor storage instead of passing the
+// block-table handle down to the backend.
+pub fn leak_rows(cache: &mut KvCache) -> Result<Tensor> {
+    cache.gather_dense()
+}

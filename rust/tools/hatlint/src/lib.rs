@@ -13,6 +13,7 @@
 //! |-------------------------|------------------------------------------------------------|
 //! | `seam-xla`              | `xla::` appears only in `backend/pjrt.rs`                  |
 //! | `seam-backend`          | `engine/`, `specdec/`, `server/` never name a concrete backend type |
+//! | `seam-kv`               | raw KV data-plane accessors (`write_row`, `gather_dense`, …) only in `backend/` and `kv/` |
 //! | `panic-path`            | no un-annotated `unwrap()`/`expect(`/`panic!`/`unreachable!`/`assert!` in the serve hot path (`server/`, `cloud/batcher.rs`, `specdec/mod.rs`) |
 //! | `lock-unwrap`           | no `.lock().unwrap()` / `.lock().expect(` anywhere in `rust/src` (poisoned-lock recovery required) |
 //! | `drift-config-readme`   | every key parsed in `config/parser.rs` is documented in README.md |
@@ -40,6 +41,7 @@ use std::path::{Path, PathBuf};
 pub const LINT_IDS: &[&str] = &[
     "seam-xla",
     "seam-backend",
+    "seam-kv",
     "panic-path",
     "lock-unwrap",
     "drift-config-readme",
@@ -504,6 +506,7 @@ pub fn run_lints(root: &Path) -> io::Result<Vec<Finding>> {
     check_bad_allows(&scanned, &mut findings);
     check_seam_xla(&scanned, &mut findings);
     check_seam_backend(&scanned, &mut findings);
+    check_seam_kv(&scanned, &mut findings);
     check_panic_path(&scanned, &mut findings);
     check_lock_unwrap(&scanned, &mut findings);
     check_config_drift(&scanned, &readme, &mut findings);
@@ -629,6 +632,44 @@ fn check_seam_backend(scanned: &[Scanned], findings: &mut Vec<Finding>) {
                         ),
                     );
                 }
+            }
+        }
+    }
+}
+
+/// Raw KV data-plane accessors: methods that read or write a cache's
+/// tensor storage row-by-row.  Everything above the backend seam must
+/// hold block-table *handles* only — the paged-KV analogue of
+/// `seam-backend`.
+const KV_DATA_PLANE: &[&str] =
+    &["write_row", "write_row_accumulate", "prefix_sum", "gather_dense", "scatter_rows"];
+
+fn check_seam_kv(scanned: &[Scanned], findings: &mut Vec<Finding>) {
+    for f in scanned {
+        if f.rel.starts_with("rust/src/backend/") || f.rel.starts_with("rust/src/kv/") {
+            continue;
+        }
+        for w in f.toks.windows(3) {
+            if w[1].in_test {
+                continue;
+            }
+            let (Tok::Punct('.'), Tok::Ident(name), Tok::Punct('(')) =
+                (&w[0].tok, &w[1].tok, &w[2].tok)
+            else {
+                continue;
+            };
+            if KV_DATA_PLANE.contains(&name.as_str()) {
+                push(
+                    findings,
+                    f,
+                    w[1].line,
+                    "seam-kv",
+                    format!(
+                        "raw KV data-plane accessor `.{name}(` above the backend seam — \
+                         only backend/ and kv/ may touch KV tensor storage; everything \
+                         else threads block-table handles"
+                    ),
+                );
             }
         }
     }
