@@ -1,0 +1,235 @@
+//! §PD — prefill/decode disaggregation benchmark (EXPERIMENTS.md §Perf).
+//!
+//! Workload: `N_INTERACTIVE` short-prompt interactive streams decoding
+//! `INTERACTIVE_MAX_NEW` tokens each, with `N_AGGRESSOR` long-prompt
+//! aggressors (`AGGRESSOR_PROMPT`-token prompts, tiny generations)
+//! submitted once the interactive fleet is live.  Run twice over the
+//! identical request set:
+//!
+//! - **baseline** — one single-pool [`Scheduler`] with
+//!   `N_INTERACTIVE + N_AGGRESSOR` slots: every iteration co-batches the
+//!   aggressors' 256-token prefill chunks with the interactive decode
+//!   rounds, so each chunk's wall time lands between two tokens of every
+//!   live stream;
+//! - **pools** — a [`PdScheduler`] (`PF_WORKERS` prefill slots,
+//!   `N_INTERACTIVE` decode slots): the decode pool is saturated by the
+//!   interactive fleet, so aggressor chunks are deferred to the
+//!   starvation-bounded forced steps instead of riding every iteration.
+//!
+//! Reported: per-request mean-TBT p99 over the interactive streams in
+//! both modes (the disaggregation win), aggressor completion, handoff
+//! count and per-pool occupancy.  Both modes must be byte-identical to
+//! serial `generate()` — losslessness is asserted before any number is
+//! reported.  Writes `BENCH_pd.json`.
+
+// Benches measure real wall time: the util::clock choke point is for the
+// runtime, not for measurement harnesses.
+#![allow(clippy::disallowed_methods)]
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use hat::config::{ServeConfig, SpecDecConfig};
+use hat::engine::Engine;
+use hat::runtime::ArtifactRegistry;
+use hat::server::generate;
+use hat::server::pools::{PdScheduler, ServeExec};
+use hat::server::scheduler::{ReplyHandle, Request, Scheduler};
+use hat::util::json::{obj, Value};
+use hat::util::report::{section, write_json};
+use hat::util::stats::quantile;
+
+const N_INTERACTIVE: usize = 12;
+const N_AGGRESSOR: usize = 3;
+const INTERACTIVE_MAX_NEW: usize = 24;
+const AGGRESSOR_PROMPT: usize = 600;
+const AGGRESSOR_MAX_NEW: usize = 4;
+const PF_WORKERS: usize = 2;
+/// Interactive ids are 1-based; aggressors live at `AGGRESSOR_ID_BASE+`.
+const AGGRESSOR_ID_BASE: u64 = 1000;
+
+fn interactive_reqs() -> Vec<(Vec<u32>, usize)> {
+    (0..N_INTERACTIVE)
+        .map(|i| {
+            let plen = 6 + i % 5;
+            let prompt = (0..plen).map(|j| ((j * 7 + 3 * i + 1) % 256) as u32).collect();
+            (prompt, INTERACTIVE_MAX_NEW)
+        })
+        .collect()
+}
+
+fn aggressor_reqs() -> Vec<(Vec<u32>, usize)> {
+    (0..N_AGGRESSOR)
+        .map(|i| {
+            let prompt =
+                (0..AGGRESSOR_PROMPT).map(|j| ((j * 11 + 5 * i + 2) % 256) as u32).collect();
+            (prompt, AGGRESSOR_MAX_NEW)
+        })
+        .collect()
+}
+
+/// How many iterations the interactive fleet decodes alone before the
+/// aggressors arrive — long enough to have every baseline session in a
+/// slot, short enough that every stream is still mid-decode (identical
+/// arrival schedule in both modes).
+const WARM_ITERS: usize = 2;
+
+struct ModeRun {
+    interactive_tbt: Vec<f64>,
+    wall_ms: f64,
+    replies: Vec<(u64, String)>,
+}
+
+/// Drive one mode over the shared workload: interactive fleet first,
+/// aggressors after [`WARM_ITERS`] iterations (their staggered arrival is
+/// what makes the aggressor prefill chunks compete with live decode
+/// rounds).  `interactive_tbt` is filled by the caller from the mode's
+/// per-request TBT attribution.
+fn run_mode(sched: &mut dyn ServeExec) -> ModeRun {
+    let mut rxs: Vec<(u64, mpsc::Receiver<String>)> = Vec::new();
+    for (i, (p, m)) in interactive_reqs().iter().enumerate() {
+        let (tx, rx) = mpsc::channel();
+        sched.submit(Request {
+            id: (i + 1) as u64,
+            prompt: p.clone(),
+            max_new: *m,
+            reply: ReplyHandle::new(tx),
+            enqueued: Instant::now(),
+        });
+        rxs.push(((i + 1) as u64, rx));
+    }
+    let t0 = Instant::now();
+    let mut guard = 0u32;
+    for _ in 0..WARM_ITERS {
+        assert!(sched.step() > 0, "idle before fleet admission completed");
+        guard += 1;
+    }
+    assert!(sched.live_sessions() > 0, "no interactive stream went live");
+    for (i, (p, m)) in aggressor_reqs().iter().enumerate() {
+        let (tx, rx) = mpsc::channel();
+        sched.submit(Request {
+            id: AGGRESSOR_ID_BASE + i as u64,
+            prompt: p.clone(),
+            max_new: *m,
+            reply: ReplyHandle::new(tx),
+            enqueued: Instant::now(),
+        });
+        rxs.push((AGGRESSOR_ID_BASE + i as u64, rx));
+    }
+    while sched.has_work() {
+        assert!(sched.step() > 0, "scheduler idle with pending work");
+        guard += 1;
+        assert!(guard < 200_000, "pd bench failed to drain");
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let replies: Vec<(u64, String)> =
+        rxs.iter().map(|(id, rx)| (*id, rx.recv().expect("reply"))).collect();
+    ModeRun { interactive_tbt: Vec::new(), wall_ms, replies }
+}
+
+fn interactive_only(tbt: &[(u64, f64)]) -> Vec<f64> {
+    tbt.iter().filter(|(id, _)| *id < AGGRESSOR_ID_BASE).map(|(_, t)| *t).collect()
+}
+
+fn main() {
+    section("PD: interactive TBT under long-prompt aggressors — pools vs single pool");
+    let spec = SpecDecConfig::default();
+
+    // Serial references (losslessness oracle for both modes).
+    let oracle = Engine::synthetic();
+    let mut want: Vec<(u64, String)> = Vec::new();
+    for (i, (p, m)) in interactive_reqs().iter().enumerate() {
+        want.push(((i + 1) as u64, generate(&oracle, p, *m, &spec).unwrap().reply_line()));
+    }
+    for (i, (p, m)) in aggressor_reqs().iter().enumerate() {
+        want.push((
+            AGGRESSOR_ID_BASE + i as u64,
+            generate(&oracle, p, *m, &spec).unwrap().reply_line(),
+        ));
+    }
+
+    // Baseline: one pool wide enough for everything.
+    let base_engine = Engine::synthetic();
+    let base_cfg = ServeConfig {
+        max_sessions: N_INTERACTIVE + N_AGGRESSOR,
+        ..ServeConfig::default()
+    };
+    let mut base = Scheduler::new(&base_engine, spec.clone(), base_cfg);
+    let mut baseline = run_mode(&mut base);
+    baseline.interactive_tbt = interactive_only(&base.stats.tbt_by_request);
+
+    // Disaggregated: prefill pool + decode pool over one shared KV pool.
+    let pf_engine = Engine::synthetic();
+    let dc_engine =
+        Engine::with_registry_shared(ArtifactRegistry::synthetic(), pf_engine.kv_pool())
+            .expect("sibling engine over the shared pool");
+    let pd_cfg = ServeConfig {
+        prefill_workers: PF_WORKERS,
+        decode_workers: N_INTERACTIVE,
+        ..ServeConfig::default()
+    };
+    let mut pd = PdScheduler::new(&pf_engine, &dc_engine, spec, pd_cfg).unwrap();
+    let mut pools = run_mode(&mut pd);
+    let handoffs = pd.handoffs();
+    let pd_stats = pd.merged_stats();
+    pools.interactive_tbt = interactive_only(&pd_stats.tbt_by_request);
+
+    // Losslessness gate: every stream in both modes byte-identical to the
+    // serial oracle.  Timings of a lossy serve path are worse than none.
+    for run in [&baseline, &pools] {
+        for ((id, got), (wid, w)) in run.replies.iter().zip(&want) {
+            assert_eq!(id, wid, "reply order drifted");
+            assert_eq!(got, w, "request {id}: stream differs from serial generate()");
+        }
+    }
+    assert_eq!(
+        handoffs,
+        (N_INTERACTIVE + N_AGGRESSOR) as u64,
+        "every multi-token request must cross the pool seam exactly once"
+    );
+    assert!(pf_engine.kv_pool().quiesced(), "pool leaked KV blocks");
+
+    let base_p99 = quantile(&baseline.interactive_tbt, 0.99);
+    let pd_p99 = quantile(&pools.interactive_tbt, 0.99);
+    let base_mean = baseline.interactive_tbt.iter().sum::<f64>() / N_INTERACTIVE as f64;
+    let pd_mean = pools.interactive_tbt.iter().sum::<f64>() / N_INTERACTIVE as f64;
+    println!(
+        "baseline: interactive TBT p99 {base_p99:>8.3} ms (mean {base_mean:.3}) wall {:>8.1} ms",
+        baseline.wall_ms
+    );
+    println!(
+        "pools:    interactive TBT p99 {pd_p99:>8.3} ms (mean {pd_mean:.3}) wall {:>8.1} ms \
+         ({handoffs} handoffs, pf_occ {:.2}, dc_occ {:.2})",
+        pools.wall_ms,
+        pd_stats.prefill_occ.mean(),
+        pd_stats.decode_occ.mean(),
+    );
+    // The CI run leans on this: the disaggregation's whole point is that
+    // aggressor prefill chunks stop inflating interactive tail TBT.
+    assert!(
+        pd_p99 < base_p99,
+        "pools must improve interactive TBT p99 ({pd_p99:.3} vs {base_p99:.3} ms)"
+    );
+    println!("interactive TBT p99 improvement: {:.2}x", base_p99 / pd_p99.max(1e-9));
+
+    let out = obj(vec![
+        ("n_interactive", Value::Num(N_INTERACTIVE as f64)),
+        ("n_aggressor", Value::Num(N_AGGRESSOR as f64)),
+        ("interactive_max_new", Value::Num(INTERACTIVE_MAX_NEW as f64)),
+        ("aggressor_prompt_tokens", Value::Num(AGGRESSOR_PROMPT as f64)),
+        ("prefill_workers", Value::Num(PF_WORKERS as f64)),
+        ("decode_workers", Value::Num(N_INTERACTIVE as f64)),
+        ("baseline_tbt_p99_ms", Value::Num(base_p99)),
+        ("baseline_tbt_mean_ms", Value::Num(base_mean)),
+        ("baseline_wall_ms", Value::Num(baseline.wall_ms)),
+        ("pools_tbt_p99_ms", Value::Num(pd_p99)),
+        ("pools_tbt_mean_ms", Value::Num(pd_mean)),
+        ("pools_wall_ms", Value::Num(pools.wall_ms)),
+        ("tbt_p99_improvement", Value::Num(base_p99 / pd_p99.max(1e-9))),
+        ("handoffs", Value::Num(handoffs as f64)),
+        ("prefill_occ_mean", Value::Num(pd_stats.prefill_occ.mean())),
+        ("decode_occ_mean", Value::Num(pd_stats.decode_occ.mean())),
+    ]);
+    let p = write_json("BENCH_pd", &out);
+    println!("wrote {}", p.display());
+}

@@ -6,6 +6,7 @@
 //!              [--requests N] [--seed S] [--config FILE]
 //! hat serve    [--addr HOST:PORT] [--config FILE] [--max-sessions N]
 //!              [--prefill-budget T] [--policy fifo|sjf] [--deadline-ms T]
+//!              [--prefill-workers N] [--decode-workers M]
 //!              [--max-conns N] [--temperature X] [--top-k-sample N]
 //!              [--top-p X] [--rep-penalty X] [--seed N]
 //!              [--verify-mode coupled|rejection]
@@ -15,6 +16,9 @@
 //!              is greedy, > 0 samples seeded and position-keyed)
 //! hat profile  [--rounds N]             measure SD round shapes
 //! hat inspect                           print manifest / artifact summary
+//! hat bench-diff <committed.json> <fresh.json>
+//!              schema-compare a committed BENCH_*.json trajectory file
+//!              against a fresh bench run (CI drift gate)
 //! ```
 
 use std::collections::BTreeMap;
@@ -142,6 +146,88 @@ fn cmd_inspect() -> Result<(), String> {
     Ok(())
 }
 
+/// Recursively compare the *schemas* of two bench-result JSON values:
+/// object key sets (and value kinds) must match; numeric values may
+/// differ — timings vary run to run, the committed trajectory files pin
+/// what each bench reports, not how fast the runner was.  Arrays compare
+/// element-wise when lengths match and are otherwise reported (bench row
+/// counts are workload constants).  Returns the drift messages.
+fn schema_drift(path: &str, a: &crate::util::json::Value, b: &crate::util::json::Value) -> Vec<String> {
+    use crate::util::json::Value;
+    let kind = |v: &Value| match v {
+        Value::Null => "null",
+        Value::Bool(_) => "bool",
+        Value::Num(_) => "number",
+        Value::Str(_) => "string",
+        Value::Arr(_) => "array",
+        Value::Obj(_) => "object",
+    };
+    match (a, b) {
+        (Value::Obj(ma), Value::Obj(mb)) => {
+            let mut out = Vec::new();
+            for k in ma.keys() {
+                if !mb.contains_key(k) {
+                    out.push(format!("{path}.{k}: missing from fresh results"));
+                }
+            }
+            for k in mb.keys() {
+                if !ma.contains_key(k) {
+                    out.push(format!("{path}.{k}: new key not in committed baseline"));
+                }
+            }
+            for (k, va) in ma {
+                if let Some(vb) = mb.get(k) {
+                    out.extend(schema_drift(&format!("{path}.{k}"), va, vb));
+                }
+            }
+            out
+        }
+        (Value::Arr(xa), Value::Arr(xb)) => {
+            if xa.len() != xb.len() {
+                return vec![format!(
+                    "{path}: array length {} vs {} (bench row count changed)",
+                    xa.len(),
+                    xb.len()
+                )];
+            }
+            xa.iter()
+                .zip(xb)
+                .enumerate()
+                .flat_map(|(i, (va, vb))| schema_drift(&format!("{path}[{i}]"), va, vb))
+                .collect()
+        }
+        _ if kind(a) == kind(b) => Vec::new(),
+        _ => vec![format!("{path}: {} became {}", kind(a), kind(b))],
+    }
+}
+
+/// `hat bench-diff <committed.json> <fresh.json>`: schema-compare a
+/// committed bench trajectory file against a freshly generated run.  CI
+/// runs this after each bench so a bench that silently drops or renames
+/// a reported field fails the build; exit 1 lists every drifted path.
+fn cmd_bench_diff(f: &Flags) -> Result<(), String> {
+    let [committed, fresh] = match f.positional.as_slice() {
+        [a, b] => [a, b],
+        _ => return Err("usage: hat bench-diff <committed.json> <fresh.json>".into()),
+    };
+    let load = |p: &str| -> Result<crate::util::json::Value, String> {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"))?;
+        crate::util::json::parse(&text).map_err(|e| format!("parse {p}: {e}"))
+    };
+    let a = load(committed)?;
+    let b = load(fresh)?;
+    let drift = schema_drift("$", &a, &b);
+    if drift.is_empty() {
+        println!("bench-diff: {committed} and {fresh} agree");
+        Ok(())
+    } else {
+        Err(format!(
+            "bench schema drift between {committed} and {fresh}:\n  {}",
+            drift.join("\n  ")
+        ))
+    }
+}
+
 fn cmd_profile(f: &Flags) -> Result<(), String> {
     let n = f.get_usize("rounds")?.unwrap_or(6);
     let cfg = crate::config::SpecDecConfig::default();
@@ -166,7 +252,7 @@ pub fn main() -> i32 {
     let cmd = match args.next() {
         Some(c) => c,
         None => {
-            eprintln!("usage: hat <simulate|serve|profile|inspect> [flags]");
+            eprintln!("usage: hat <simulate|serve|profile|inspect|bench-diff> [flags]");
             return 2;
         }
     };
@@ -182,6 +268,7 @@ pub fn main() -> i32 {
         "serve" => crate::server::cmd_serve(&flags),
         "profile" => cmd_profile(&flags),
         "inspect" => cmd_inspect(),
+        "bench-diff" => cmd_bench_diff(&flags),
         other => Err(format!("unknown command '{other}'")),
     };
     match r {
@@ -234,5 +321,38 @@ mod tests {
     #[test]
     fn config_from_flags_rejects_unknown_framework() {
         assert!(config_from_flags(&flags(&["--framework", "zzz"])).is_err());
+    }
+
+    #[test]
+    fn schema_drift_ignores_values_but_catches_shape() {
+        use crate::util::json::parse;
+        let a = parse(r#"{"x": 1.0, "y": {"z": 2}, "rows": [1, 2]}"#).unwrap();
+        // Different numbers, same shape: no drift.
+        let b = parse(r#"{"x": 9.5, "y": {"z": -1}, "rows": [7, 8]}"#).unwrap();
+        assert!(schema_drift("$", &a, &b).is_empty());
+        // Missing key, new key, kind change, row-count change: all named.
+        let c = parse(r#"{"x": "fast", "y": {}, "rows": [1], "extra": 0}"#).unwrap();
+        let drift = schema_drift("$", &a, &c);
+        assert!(drift.iter().any(|d| d.contains("$.x") && d.contains("number")), "{drift:?}");
+        assert!(drift.iter().any(|d| d.contains("$.y.z")), "{drift:?}");
+        assert!(drift.iter().any(|d| d.contains("$.rows") && d.contains("length")), "{drift:?}");
+        assert!(drift.iter().any(|d| d.contains("$.extra")), "{drift:?}");
+    }
+
+    #[test]
+    fn bench_diff_compares_files() {
+        let dir = std::env::temp_dir().join("hat_bench_diff_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = dir.join("committed.json");
+        let b = dir.join("fresh.json");
+        std::fs::write(&a, r#"{"wall_ms": 10.0}"#).unwrap();
+        std::fs::write(&b, r#"{"wall_ms": 99.9}"#).unwrap();
+        let ok = flags(&[a.to_str().unwrap(), b.to_str().unwrap()]);
+        assert!(cmd_bench_diff(&ok).is_ok());
+        std::fs::write(&b, r#"{"renamed_ms": 99.9}"#).unwrap();
+        let err = cmd_bench_diff(&ok).unwrap_err();
+        assert!(err.contains("wall_ms") && err.contains("renamed_ms"), "{err}");
+        assert!(cmd_bench_diff(&flags(&["only-one.json"])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

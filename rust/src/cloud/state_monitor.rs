@@ -126,10 +126,21 @@ impl DeviceState {
 }
 
 /// The full state-monitoring module.
+///
+/// The delay curve is kept *per phase*: prefill chunks (wide, compute-bound
+/// batches) and decode verify rounds (narrow, latency-bound batches) have
+/// different delay profiles, and Eq. 3 chunk sizing only ever queries the
+/// prefill curve.  Folding both phases into one EWMA lets a burst of small
+/// decode rounds drag the small-batch buckets of the curve toward decode
+/// latencies and skew the chunk optimizer — so decode observations land in
+/// their own `g_decode` curve and never touch `g`.
 #[derive(Debug, Clone)]
 pub struct StateMonitor {
     pub mu: Ewma,
+    /// Prefill-phase delay curve — the one Eq. 3 chunk sizing reads.
     pub g: GPredictor,
+    /// Decode-phase delay curve (verify rounds), tracked separately.
+    pub g_decode: GPredictor,
     pub devices: Vec<DeviceState>,
 }
 
@@ -138,14 +149,31 @@ impl StateMonitor {
         StateMonitor {
             mu: Ewma::new(alpha),
             g: GPredictor::new(alpha, max_tokens),
+            g_decode: GPredictor::new(alpha, max_tokens),
             devices: (0..n_devices).map(|_| DeviceState::new(alpha)).collect(),
         }
     }
 
-    /// Record one completed cloud step.
+    /// Record one completed cloud step (single-phase callers, e.g. the
+    /// fleet simulator, whose steps are all chunk-shaped).  Feeds the
+    /// prefill curve; per-phase callers use [`StateMonitor::observe_prefill`]
+    /// / [`StateMonitor::observe_decode`].
     pub fn observe_step(&mut self, batch_tokens: usize, delay_ms: f64) {
+        self.observe_prefill(batch_tokens, delay_ms);
+    }
+
+    /// Record one completed prefill-chunk cloud step (updates μ and the
+    /// prefill g curve that Eq. 3 reads).
+    pub fn observe_prefill(&mut self, batch_tokens: usize, delay_ms: f64) {
         self.mu.observe(batch_tokens as f64);
         self.g.observe(batch_tokens as f64, delay_ms);
+    }
+
+    /// Record one completed decode-round cloud step (updates μ and the
+    /// decode curve only — the prefill g curve is untouched).
+    pub fn observe_decode(&mut self, batch_tokens: usize, delay_ms: f64) {
+        self.mu.observe(batch_tokens as f64);
+        self.g_decode.observe(batch_tokens as f64, delay_ms);
     }
 
     /// Record a device report.
@@ -233,5 +261,31 @@ mod tests {
         m.observe_step(256, 14.0);
         assert!(m.mu_t() > 128.0 && m.mu_t() < 256.0);
         assert!(m.g_t(128.0, |_| 0.0) > 0.0);
+    }
+
+    #[test]
+    fn decode_rounds_do_not_move_prefill_g_curve() {
+        // Regression for mixed-phase delay learning: establish a prefill
+        // curve, then hammer the monitor with fast small decode rounds.
+        // The prefill curve Eq. 3 reads must be bit-identical afterwards.
+        let mut m = StateMonitor::new(0.8, 1, 2048);
+        for _ in 0..20 {
+            for &b in &[64usize, 256, 1024] {
+                m.observe_prefill(b, 5.0 + 0.1 * b as f64);
+            }
+        }
+        let before: Vec<Option<f64>> =
+            (0..12).map(|i| m.g.predict((1u64 << i) as f64)).collect();
+        for _ in 0..200 {
+            m.observe_decode(4, 2.0);
+            m.observe_decode(9, 2.5);
+        }
+        let after: Vec<Option<f64>> =
+            (0..12).map(|i| m.g.predict((1u64 << i) as f64)).collect();
+        assert_eq!(before, after, "decode observations moved the prefill g curve");
+        // The decode curve did learn something, in its own estimator.
+        assert!(m.g_decode.predict(4.0).is_some());
+        // μ still tracks overall load (both phases feed it).
+        assert!(m.mu_t() < 64.0);
     }
 }

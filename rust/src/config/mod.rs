@@ -359,6 +359,12 @@ pub struct ServeConfig {
     /// Preemption policy under slot pressure
     /// (`[serve] priority = "none" | "preempt"`).
     pub priority: PriorityMode,
+    /// Prefill-pool slots for disaggregated serving
+    /// (`--prefill-workers`).  0 (with `decode_workers = 0`) keeps the
+    /// single co-scheduled pool; both must be set together.
+    pub prefill_workers: usize,
+    /// Decode-pool slots for disaggregated serving (`--decode-workers`).
+    pub decode_workers: usize,
 }
 
 impl Default for ServeConfig {
@@ -380,6 +386,8 @@ impl Default for ServeConfig {
             sjf_aging_ms: 1000,
             deadline_ms: 0,
             priority: PriorityMode::None,
+            prefill_workers: 0,
+            decode_workers: 0,
         }
     }
 }
@@ -572,6 +580,13 @@ impl ExperimentConfig {
         }
         if self.serve.prefill_budget == 0 {
             errs.push("serve.prefill_budget must be > 0".into());
+        }
+        if (self.serve.prefill_workers == 0) != (self.serve.decode_workers == 0) {
+            errs.push(
+                "serve.prefill_workers and serve.decode_workers must be set together \
+                 (both 0 = single pool, both > 0 = disaggregated)"
+                    .into(),
+            );
         }
         if self.serve.min_chunk == 0 || self.serve.min_chunk > self.serve.max_chunk {
             errs.push("serve chunk bounds invalid".into());

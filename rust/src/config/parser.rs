@@ -180,6 +180,8 @@ pub fn build(map: &BTreeMap<String, Scalar>) -> Result<ExperimentConfig, String>
                 cfg.serve.priority = super::PriorityMode::parse(s)
                     .ok_or_else(|| format!("unknown serve.priority {s:?} (none|preempt)"))?;
             }
+            "serve.prefill_workers" => cfg.serve.prefill_workers = us()?,
+            "serve.decode_workers" => cfg.serve.decode_workers = us()?,
             "kv.block_tokens" => cfg.kv.block_tokens = us()?,
             "kv.kv_blocks" => cfg.kv.kv_blocks = us()?,
             // hatlint: allow(drift-config-validate) bool toggle, both values valid
@@ -275,6 +277,21 @@ mod tests {
         assert!(build(&m).unwrap_err().contains("serve.policy"));
         let m = parse("[serve]\npolicy = 3\n").unwrap();
         assert!(build(&m).unwrap_err().contains("string"));
+    }
+
+    #[test]
+    fn pool_worker_keys_overlay_and_validate_together() {
+        let m = parse("[serve]\nprefill_workers = 2\ndecode_workers = 6\n").unwrap();
+        let cfg = build(&m).unwrap();
+        assert_eq!(cfg.serve.prefill_workers, 2);
+        assert_eq!(cfg.serve.decode_workers, 6);
+        assert_eq!(crate::config::ServeConfig::default().prefill_workers, 0);
+        assert_eq!(crate::config::ServeConfig::default().decode_workers, 0);
+        // One without the other is a config error, both directions.
+        let m = parse("[serve]\nprefill_workers = 2\n").unwrap();
+        assert!(build(&m).unwrap_err().contains("serve.prefill_workers"));
+        let m = parse("[serve]\ndecode_workers = 4\n").unwrap();
+        assert!(build(&m).unwrap_err().contains("serve.decode_workers"));
     }
 
     #[test]

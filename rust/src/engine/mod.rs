@@ -75,6 +75,36 @@ impl Engine {
         Ok(Engine { reg, pool })
     }
 
+    /// Engine over an explicit registry that *shares* an existing KV pool
+    /// instead of allocating its own.  This is what prefill/decode
+    /// disaggregation needs: the two pool executors run separate engines
+    /// (separate backend clients and runtime stats) but a session's paged
+    /// block tables must stay valid across the prefill→decode handoff, so
+    /// both engines allocate from one physical pool and the handoff moves
+    /// block-table handles, never dense KV bytes.  Errors when the pool
+    /// row width cannot be shared (different hidden size).
+    pub fn with_registry_shared(reg: ArtifactRegistry, pool: &KvPool) -> Result<Engine> {
+        let hidden = reg.model().hidden;
+        anyhow::ensure!(
+            pool.block_bytes() == pool.block_tokens() * hidden * 4,
+            "shared kv pool row width does not match model hidden size {hidden}"
+        );
+        Ok(Engine { reg, pool: pool.clone() })
+    }
+
+    /// A sibling engine: fresh registry (own backend client + compile/exec
+    /// stats) over the *same* artifacts and the *same* KV pool as `self`.
+    /// Deterministic backends make siblings bit-identical executors, so a
+    /// session can be handed from one to the other mid-stream.
+    pub fn sibling(&self) -> Result<Engine> {
+        let reg = ArtifactRegistry::load_or_synthetic(&ArtifactRegistry::default_dir())?;
+        anyhow::ensure!(
+            reg.model() == self.reg.model(),
+            "sibling registry resolved a different model spec"
+        );
+        Engine::with_registry_shared(reg, &self.pool)
+    }
+
     /// The paged KV pool all of this engine's streams draw from.
     pub fn kv_pool(&self) -> &KvPool {
         &self.pool

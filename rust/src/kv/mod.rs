@@ -255,6 +255,14 @@ impl KvPool {
         }
     }
 
+    /// Whether two handles refer to the *same* physical pool (Arc
+    /// identity).  The prefill→decode handoff uses this to prove a
+    /// session's block tables stay valid across the engine switch: block
+    /// indices are only meaningful within the pool that allocated them.
+    pub fn same_pool(&self, other: &KvPool) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+
     /// True when every block is free, no refcount is stuck and the dedup
     /// registry is empty — the zero-leak invariant the lifecycle property
     /// tests assert after all sessions quiesce.

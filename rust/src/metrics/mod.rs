@@ -272,6 +272,26 @@ pub struct ServeStats {
     /// KV pool blocks mapped by more than one table (copy-on-write prefix
     /// sharing) — `kv_shared` in the STATS reply.
     pub kv_blocks_shared: usize,
+    /// Prefill→decode pool handoffs completed (disaggregated mode only;
+    /// 0 in single-pool mode) — `handoffs` in the STATS reply.
+    pub handoffs: u64,
+    /// Queue-wait split by phase: arrival → prefill-slot admission, ms —
+    /// `pf_wait_ms` in the STATS reply.  In single-pool mode this equals
+    /// `queue_wait_ms`.
+    pub prefill_wait_ms: Welford,
+    /// Handoff-ready → decode-slot adoption wait, ms — `dc_wait_ms` in
+    /// the STATS reply (0-sample in single-pool mode).
+    pub decode_wait_ms: Welford,
+    /// Occupied-slot fraction of the prefill pool, sampled once per
+    /// scheduler iteration — `pf_occ` in the STATS reply.
+    pub prefill_occ: Welford,
+    /// Occupied-slot fraction of the decode pool, sampled once per
+    /// scheduler iteration — `dc_occ` in the STATS reply.
+    pub decode_occ: Welford,
+    /// Per-request mean TBT keyed by request id — the bench harness reads
+    /// this to attribute tail latency to specific streams (e.g. interactive
+    /// vs aggressor).  Off the STATS wire line.
+    pub tbt_by_request: Vec<(u64, f64)>,
 }
 
 impl ServeStats {
@@ -314,6 +334,47 @@ impl ServeStats {
         accept_rate(self.accepted, self.proposed)
     }
 
+    /// Fold another pool's stats into this one — the disaggregated serve
+    /// path merges the prefill and decode schedulers' aggregates into one
+    /// STATS view.  Counters sum, Welford streams merge losslessly, and
+    /// the acceptance histogram adds elementwise.  The KV snapshots take
+    /// the max, not the sum: both pools snapshot the *same* shared block
+    /// pool each iteration, so summing would double-count every block.
+    pub fn merge(&mut self, other: &ServeStats) {
+        self.finished += other.finished;
+        self.iterations += other.iterations;
+        self.queue_wait_ms.merge(&other.queue_wait_ms);
+        self.ttft_ms.merge(&other.ttft_ms);
+        self.tbt_ms.merge(&other.tbt_ms);
+        self.rounds += other.rounds;
+        self.proposed += other.proposed;
+        self.accepted += other.accepted;
+        self.chunk_sizes.merge(&other.chunk_sizes);
+        self.batch_occupancy.merge(&other.batch_occupancy);
+        self.fallbacks += other.fallbacks;
+        self.cancelled += other.cancelled;
+        self.failed += other.failed;
+        self.reaped += other.reaped;
+        self.deadline_expired += other.deadline_expired;
+        self.stale_dropped += other.stale_dropped;
+        if self.accept_hist.len() < other.accept_hist.len() {
+            self.accept_hist.resize(other.accept_hist.len(), 0);
+        }
+        for (i, &c) in other.accept_hist.iter().enumerate() {
+            self.accept_hist[i] += c;
+        }
+        self.preemptions += other.preemptions;
+        self.kv_swap_bytes += other.kv_swap_bytes;
+        self.kv_blocks_in_use = self.kv_blocks_in_use.max(other.kv_blocks_in_use);
+        self.kv_blocks_shared = self.kv_blocks_shared.max(other.kv_blocks_shared);
+        self.handoffs += other.handoffs;
+        self.prefill_wait_ms.merge(&other.prefill_wait_ms);
+        self.decode_wait_ms.merge(&other.decode_wait_ms);
+        self.prefill_occ.merge(&other.prefill_occ);
+        self.decode_occ.merge(&other.decode_occ);
+        self.tbt_by_request.extend_from_slice(&other.tbt_by_request);
+    }
+
     /// Scheduler fields of the `STATS` reply line.
     pub fn stats_fields(&self) -> String {
         let hist = if self.accept_hist.is_empty() {
@@ -325,7 +386,8 @@ impl ServeStats {
             "requests={} iterations={} queue_wait_ms={:.1} ttft_ms={:.1} tbt_ms={:.1} \
              rounds={} accept={:.3} accept_hist={} seed={} chunk_mean={:.1} batch_mean={:.2} \
              fallbacks={} cancelled={} failed={} reaped={} deadline_expired={} \
-             preempted={} kv_swap_bytes={} kv_blocks={} kv_shared={}",
+             preempted={} kv_swap_bytes={} kv_blocks={} kv_shared={} handoffs={} \
+             pf_wait_ms={:.1} dc_wait_ms={:.1} pf_occ={:.2} dc_occ={:.2}",
             self.finished,
             self.iterations,
             self.queue_wait_ms.mean(),
@@ -346,6 +408,11 @@ impl ServeStats {
             self.kv_swap_bytes,
             self.kv_blocks_in_use,
             self.kv_blocks_shared,
+            self.handoffs,
+            self.prefill_wait_ms.mean(),
+            self.decode_wait_ms.mean(),
+            self.prefill_occ.mean(),
+            self.decode_occ.mean(),
         )
     }
 }
@@ -505,9 +572,47 @@ mod tests {
             "kv_swap_bytes=4096",
             "kv_blocks=12",
             "kv_shared=5",
+            "handoffs=0",
+            "pf_wait_ms=",
+            "dc_wait_ms=",
+            "pf_occ=",
+            "dc_occ=",
         ] {
             assert!(f.contains(key), "missing {key} in {f}");
         }
+    }
+
+    #[test]
+    fn serve_stats_merge_pools() {
+        let mut a = ServeStats::new();
+        a.record_finish(2.0, 10.0, Some(4.0), 3, 10, 4);
+        a.record_round(2);
+        a.handoffs = 3;
+        a.kv_blocks_in_use = 12;
+        a.kv_blocks_shared = 2;
+        a.kv_swap_bytes = 100;
+        a.tbt_by_request.push((1, 4.0));
+        let mut b = ServeStats::new();
+        b.record_finish(4.0, 20.0, Some(6.0), 2, 5, 2);
+        b.record_round(0);
+        b.record_round(4);
+        b.kv_blocks_in_use = 9;
+        b.kv_blocks_shared = 5;
+        b.kv_swap_bytes = 50;
+        b.tbt_by_request.push((2, 6.0));
+        a.merge(&b);
+        assert_eq!(a.finished, 2);
+        assert_eq!(a.rounds, 5);
+        assert!((a.queue_wait_ms.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(a.tbt_ms.count(), 2);
+        assert_eq!(a.accept_hist, vec![1, 0, 1, 0, 1]);
+        assert_eq!(a.handoffs, 3);
+        // Shared-pool snapshots take the max (summing would double-count),
+        // swap traffic (per-pool work) sums.
+        assert_eq!(a.kv_blocks_in_use, 12);
+        assert_eq!(a.kv_blocks_shared, 5);
+        assert_eq!(a.kv_swap_bytes, 150);
+        assert_eq!(a.tbt_by_request.len(), 2);
     }
 
     #[test]

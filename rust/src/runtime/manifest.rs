@@ -10,7 +10,7 @@ use crate::util::json::{self, Value};
 
 /// Model dimensions of the executable tiny model (NOT the paper-scale
 /// delay-model dims — see DESIGN.md §3 dual-scale principle).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelSpec {
     pub vocab: usize,
     pub hidden: usize,

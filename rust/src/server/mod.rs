@@ -18,6 +18,7 @@
 //!       seed=<n> chunk_mean=<x> batch_mean=<x> fallbacks=<n>
 //!       cancelled=<n> failed=<n> reaped=<n> deadline_expired=<n>
 //!       preempted=<n> kv_swap_bytes=<n> kv_blocks=<n> kv_shared=<n>
+//!       handoffs=<n> pf_wait_ms=<t> dc_wait_ms=<t> pf_occ=<x> dc_occ=<x>
 //!       g_learned=<0|1> queued=<n> live=<n> decode_q=<n> prefill_q=<n>\n
 //!                                                 (one line on the wire)
 //! C: QUIT\n
@@ -53,6 +54,13 @@
 //! zero), `kv_blocks` (pool blocks currently mapped by live caches,
 //! refreshed each scheduler iteration), `kv_shared` (blocks mapped by
 //! more than one cache table via copy-on-write prefix sharing)
+//! — the disaggregation counters — `handoffs` (sessions transferred
+//! prefill→decode across the pool seam; 0 in single-pool mode),
+//! `pf_wait_ms` (mean arrival→prefill-slot admission wait),
+//! `dc_wait_ms` (mean handoff-ready→decode-slot adoption wait; the two
+//! splits of the old single queue-wait), `pf_occ` / `dc_occ` (mean
+//! per-pool slot occupancy in [0,1], sampled each coordinator
+//! iteration; in single-pool mode both read 0)
 //! — `g_learned` — 1 when the Eq. 3 optimizer is driven by the learned
 //! state-monitor delay curve, 0 while it still falls back to the static
 //! `GModel` calibration — and the current queue depth / live session
@@ -89,7 +97,22 @@
 //! frees.  Losslessness holds across the park/resume: the emitted stream
 //! is byte-identical to an uninterrupted run.  The default (`priority =
 //! none`) never preempts.
+//!
+//! Disaggregation: with `[serve] prefill_workers = N` and
+//! `decode_workers = M` both set (or `--prefill-workers` /
+//! `--decode-workers`), the worker drives a [`pools::PdScheduler`]
+//! instead of one [`scheduler::Scheduler`]: a throughput-oriented
+//! prefill pool (N slots) and a latency-oriented decode pool (M slots),
+//! each with its own engine, batcher queue and per-phase g^t monitor,
+//! sharing one paged KV pool.  Sessions finish prefill in the first
+//! pool and are handed off — hidden state plus KV block tables, no
+//! dense copy — to the second for their hat rounds; the coordinator
+//! steps decode-first so aggressor prefill chunks stop inflating
+//! interactive TBT.  Both workers unset (the default) keeps the
+//! single-pool scheduler.  See [`pools`] for the discipline and seam
+//! lifecycle.
 
+pub mod pools;
 pub mod scheduler;
 
 use std::collections::VecDeque;
@@ -106,6 +129,7 @@ use crate::config::{AdmitPolicy, PriorityMode, ServeConfig, SpecDecConfig};
 use crate::engine::Engine;
 use crate::specdec::{chunk_sizes, Session};
 
+use pools::{PdScheduler, ServeExec};
 use scheduler::{ReplyHandle, Request, Scheduler};
 
 /// A parsed request.
@@ -257,7 +281,36 @@ fn worker_loop(
     serve_cfg: ServeConfig,
     rx: mpsc::Receiver<WorkerMsg>,
 ) {
+    if serve_cfg.prefill_workers > 0 && serve_cfg.decode_workers > 0 {
+        // Disaggregated path: the prefill pool runs on this engine, the
+        // decode pool on a sibling sharing its KV pool (block tables
+        // must be valid across the handoff).  Both live on this one
+        // thread — the backend is not Send; the split is in iteration
+        // composition, not threads.
+        match engine.sibling() {
+            Ok(decode_engine) => {
+                match PdScheduler::new(&engine, &decode_engine, spec_cfg, serve_cfg) {
+                    Ok(mut sched) => return drive(&mut sched, &rx),
+                    Err(e) => {
+                        eprintln!("serve: disaggregated pools unavailable ({e}); exiting");
+                        return;
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("serve: sibling engine for decode pool failed ({e}); exiting");
+                return;
+            }
+        }
+    }
     let mut sched = Scheduler::new(&engine, spec_cfg, serve_cfg);
+    drive(&mut sched, &rx);
+}
+
+/// The executor-generic worker body: drains commands between iterations
+/// (blocking only when fully idle) and steps the scheduler — single-pool
+/// or disaggregated, anything behind [`ServeExec`].
+fn drive(sched: &mut dyn ServeExec, rx: &mpsc::Receiver<WorkerMsg>) {
     let mut connected = true;
     loop {
         loop {
@@ -287,21 +340,7 @@ fn worker_loop(
                     sched.cancel(id);
                 }
                 Some(WorkerMsg::Stats { reply }) => {
-                    let s = engine.reg.stats();
-                    let (dq, pq) = sched.job_depths();
-                    sched.refresh_kv_stats();
-                    let _ = reply.send(format!(
-                        "OK executions={} exec_ms={:.1} compiles={} compile_ms={:.1} {} \
-                         g_learned={} queued={} live={} decode_q={dq} prefill_q={pq}",
-                        s.executions,
-                        s.execute_ms,
-                        s.compiles,
-                        s.compile_ms,
-                        sched.stats.stats_fields(),
-                        sched.predictor_learned() as u8,
-                        sched.queued(),
-                        sched.live_sessions(),
-                    ));
+                    let _ = reply.send(sched.stats_line());
                 }
                 None => break,
             }
@@ -530,6 +569,7 @@ pub fn serve_listener(
 
 /// `hat serve --addr 127.0.0.1:7071 [--config FILE] [--max-sessions N]
 /// [--prefill-budget T] [--policy fifo|sjf] [--deadline-ms T]
+/// [--prefill-workers N] [--decode-workers M]
 /// [--max-conns N] [--temperature X] [--top-k-sample N] [--top-p X]
 /// [--rep-penalty X] [--seed N] [--verify-mode coupled|rejection]`
 ///
@@ -537,11 +577,15 @@ pub fn serve_listener(
 /// (eta, max_draft, top_k, max_new_tokens, plus the sampling keys
 /// temperature, top_k_sample, top_p, rep_penalty, seed, verify_mode) and
 /// `[serve]` section (max_sessions, prefill_budget, min_chunk, max_chunk,
-/// alpha, pipeline_len, policy, sjf_aging_ms, deadline_ms, priority)
+/// alpha, pipeline_len, policy, sjf_aging_ms, deadline_ms, priority,
+/// prefill_workers, decode_workers)
 /// govern serving;
 /// the flags override the file.  `--temperature 0` (the default) is greedy
 /// decoding; with a positive temperature every session samples with the
-/// shared `--seed`, position-keyed per session.
+/// shared `--seed`, position-keyed per session.  `--prefill-workers` and
+/// `--decode-workers` (set together) switch the worker to the
+/// disaggregated P/D pools; `--max-sessions` then only applies to the
+/// single-pool fallback.
 pub fn cmd_serve(f: &Flags) -> Result<(), String> {
     let addr = f.get("addr").unwrap_or("127.0.0.1:7071").to_string();
     let (mut spec_cfg, mut serve_cfg) = match f.get("config") {
@@ -573,6 +617,17 @@ pub fn cmd_serve(f: &Flags) -> Result<(), String> {
     }
     if let Some(t) = f.get_usize("deadline-ms")? {
         serve_cfg.deadline_ms = t as u64;
+    }
+    if let Some(n) = f.get_usize("prefill-workers")? {
+        serve_cfg.prefill_workers = n;
+    }
+    if let Some(n) = f.get_usize("decode-workers")? {
+        serve_cfg.decode_workers = n;
+    }
+    if (serve_cfg.prefill_workers == 0) != (serve_cfg.decode_workers == 0) {
+        return Err(
+            "--prefill-workers and --decode-workers must be set together (both > 0)".into()
+        );
     }
     if let Some(t) = f.get_f64("temperature")? {
         if t < 0.0 {

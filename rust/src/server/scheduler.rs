@@ -135,8 +135,14 @@ pub struct Request {
 }
 
 /// A request occupying a scheduler slot, with its live session.
-struct Active<'e> {
-    id: u64,
+///
+/// `pub(super)` because it is also the currency of the prefill→decode
+/// handoff: [`super::pools::PdScheduler`] moves whole `Active`s between
+/// its two schedulers — the session *is* the hidden state plus the paged
+/// KV block tables, so moving the struct moves the request with zero
+/// dense-KV copies.
+pub(super) struct Active<'e> {
+    pub(super) id: u64,
     /// Admission epoch stamped into this session's batcher jobs: slot
     /// indices are reused, so a popped job is only valid for the slot's
     /// occupant if the epochs agree.
@@ -147,8 +153,8 @@ struct Active<'e> {
     rounds: usize,
     proposed: usize,
     accepted: usize,
-    reply: ReplyHandle,
-    enqueued: Instant,
+    pub(super) reply: ReplyHandle,
+    pub(super) enqueued: Instant,
     admitted: Instant,
     first_token: Option<Instant>,
     /// Has this session already been preempted and resumed once?  A
@@ -203,6 +209,14 @@ pub struct Scheduler<'e> {
     /// Monotonic admission counter: every session admitted into a slot
     /// gets the next epoch, stamped into its jobs (slot-reuse identity).
     next_epoch: u64,
+    /// Handoff mode (the prefill pool of a disaggregated pair): a
+    /// completed prefill parks its session here — first token emitted,
+    /// nothing staged — instead of queueing a decode round, and the
+    /// [`super::pools::PdScheduler`] moves it to the decode pool.  The
+    /// timestamp is when the handoff became ready (`dc_wait_ms` measures
+    /// from here to decode-slot adoption).
+    handoff: bool,
+    handoff_ready: VecDeque<(Active<'e>, Instant)>,
     /// State monitor (§3.2): μ^t (Eq. 1) over executed batch token sizes
     /// and the learned delay curve g^t(·) (Eq. 2) over observed iteration
     /// wall times, feeding the Eq. 3 chunk optimizer.
@@ -263,9 +277,73 @@ impl<'e> Scheduler<'e> {
             waiting: VecDeque::new(),
             preempted: VecDeque::new(),
             next_epoch: 1,
+            handoff: false,
+            handoff_ready: VecDeque::new(),
             monitor,
             stats,
         }
+    }
+
+    /// Turn this scheduler into the *prefill pool* of a disaggregated
+    /// pair: completed prefills park in the handoff buffer (first token
+    /// emitted) instead of entering the decode loop here.
+    pub(super) fn enable_handoff(&mut self) {
+        self.handoff = true;
+    }
+
+    /// Total slots (pool size) — the denominator of the per-pool
+    /// occupancy metric.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The engine this scheduler's sessions execute on.
+    pub(super) fn engine(&self) -> &'e Engine {
+        self.engine
+    }
+
+    /// Is a request resident here, in any state — waiting, parked,
+    /// holding a slot, or sitting in the handoff buffer?  The
+    /// disaggregation invariant ("no session in both pools") is asserted
+    /// over this.
+    pub fn holds(&self, id: u64) -> bool {
+        self.waiting.iter().any(|r| r.id == id)
+            || self.preempted.iter().any(|a| a.id == id)
+            || self.handoff_ready.iter().any(|(a, _)| a.id == id)
+            || self.slots.iter().any(|s| s.as_ref().is_some_and(|a| a.id == id))
+    }
+
+    /// Drain the handoff buffer (prefill pool → [`super::pools`]).  Each
+    /// entry's session has its first token committed and nothing staged;
+    /// its old epoch dies with the move — adoption stamps a fresh one, so
+    /// a job queued here can never drive the session in the decode pool
+    /// (the handoff-racing-a-cancel hazard).
+    pub(super) fn take_handoffs(&mut self) -> Vec<(Active<'e>, Instant)> {
+        self.handoff_ready.drain(..).collect()
+    }
+
+    /// Adopt a handed-off session into a free slot (decode pool side):
+    /// re-home the session on this scheduler's engine (zero-copy — same
+    /// KV pool, block tables move by ownership), stamp a fresh admission
+    /// epoch, and queue its first decode round.  `Err(a)` hands the
+    /// session back when no slot is free (the caller retries next
+    /// iteration); a rebind failure fails the lane and consumes it.
+    pub(super) fn adopt(&mut self, mut a: Active<'e>) -> Result<(), Active<'e>> {
+        let Some(i) = self.slots.iter().position(|s| s.is_none()) else {
+            return Err(a);
+        };
+        let engine = self.engine;
+        if let Err(e) = catch("rebind", || a.sess.rebind(engine)) {
+            self.fail(&a.reply, &e);
+            return Ok(());
+        }
+        a.epoch = self.next_epoch;
+        self.next_epoch += 1;
+        let j = self.decode_job(i, a.epoch);
+        self.batcher.push(j);
+        self.slots[i] = Some(a);
+        self.stats.handoffs += 1;
+        Ok(())
     }
 
     /// Enqueue a request (admitted to a slot on a later [`Scheduler::step`]).
@@ -315,6 +393,16 @@ impl<'e> Scheduler<'e> {
             }
             return true;
         }
+        if let Some(i) = self.handoff_ready.iter().position(|(a, _)| a.id == id) {
+            if let Some((a, _)) = self.handoff_ready.remove(i) {
+                // A cancel arriving while the session sits between pools:
+                // it never reaches the decode pool (nothing staged, so
+                // dropping the Active releases its blocks cleanly).
+                a.reply.send("ERR cancelled".into());
+                self.stats.cancelled += 1;
+            }
+            return true;
+        }
         for slot in self.slots.iter_mut() {
             if slot.as_ref().is_some_and(|a| a.id == id) {
                 if let Some(mut a) = slot.take() {
@@ -339,6 +427,8 @@ impl<'e> Scheduler<'e> {
         self.waiting.clear();
         self.stats.reaped += self.preempted.len() as u64;
         self.preempted.clear();
+        self.stats.reaped += self.handoff_ready.len() as u64;
+        self.handoff_ready.clear();
         for i in 0..self.slots.len() {
             if let Some(mut a) = self.slots[i].take() {
                 a.sess.abort_staged();
@@ -348,18 +438,20 @@ impl<'e> Scheduler<'e> {
         }
     }
 
-    /// Anything queued, parked, or live?
+    /// Anything queued, parked, handoff-pending, or live?
     pub fn has_work(&self) -> bool {
         !self.waiting.is_empty()
             || !self.preempted.is_empty()
+            || !self.handoff_ready.is_empty()
             || self.slots.iter().any(|s| s.is_some())
     }
 
-    /// Requests waiting for a slot: fresh admissions plus preempted
-    /// sessions parked for resume (so in-flight submissions always
-    /// reconcile as queued + live + terminal outcomes).
+    /// Requests waiting for a slot: fresh admissions, preempted sessions
+    /// parked for resume, and handoff-ready sessions awaiting decode
+    /// adoption (so in-flight submissions always reconcile as queued +
+    /// live + terminal outcomes).
     pub fn queued(&self) -> usize {
-        self.waiting.len() + self.preempted.len()
+        self.waiting.len() + self.preempted.len() + self.handoff_ready.len()
     }
 
     /// Sessions currently occupying slots.
@@ -398,11 +490,17 @@ impl<'e> Scheduler<'e> {
         // computation delay of the iteration's batched cloud calls — not
         // whole-iteration wall time, which would fold device drafting into
         // the curve Eq. 3 treats as cloud-side — so the optimizer tracks
-        // the real engine instead of the static GModel.  Stale-job-only
-        // iterations execute nothing and must not drag the curves to zero.
-        let executed_tokens = decode_tokens + prefill_tokens;
-        if executed_tokens > 0 {
-            self.monitor.observe_step(executed_tokens, decode_cloud_ms + prefill_cloud_ms);
+        // the real engine instead of the static GModel.  The phases feed
+        // *separate* delay curves: Eq. 3 chunk sizing reads only the
+        // prefill curve, so a burst of small fast decode rounds must not
+        // drag its small-batch buckets toward decode latencies.
+        // Stale-job-only iterations execute nothing and must not drag the
+        // curves to zero.
+        if decode_tokens > 0 {
+            self.monitor.observe_decode(decode_tokens, decode_cloud_ms);
+        }
+        if prefill_tokens > 0 {
+            self.monitor.observe_prefill(prefill_tokens, prefill_cloud_ms);
         }
         self.refresh_kv_stats();
         n
@@ -426,6 +524,17 @@ impl<'e> Scheduler<'e> {
         if self.cfg.deadline_ms == 0 {
             return;
         }
+        let deadline = self.cfg.deadline_ms;
+        let mut kept = VecDeque::with_capacity(self.handoff_ready.len());
+        for (a, ready) in self.handoff_ready.drain(..) {
+            if a.enqueued.elapsed().as_millis() as u64 >= deadline {
+                a.reply.send("ERR deadline".into());
+                self.stats.deadline_expired += 1;
+            } else {
+                kept.push_back((a, ready));
+            }
+        }
+        self.handoff_ready = kept;
         for i in 0..self.slots.len() {
             let expired = self.slots[i]
                 .as_ref()
@@ -475,6 +584,9 @@ impl<'e> Scheduler<'e> {
         let before = self.preempted.len();
         self.preempted.retain(|a| !a.reply.is_dead());
         self.stats.reaped += (before - self.preempted.len()) as u64;
+        let before = self.handoff_ready.len();
+        self.handoff_ready.retain(|(a, _)| !a.reply.is_dead());
+        self.stats.reaped += (before - self.handoff_ready.len()) as u64;
         if self.cfg.deadline_ms > 0 {
             let deadline = self.cfg.deadline_ms;
             let mut kept = VecDeque::with_capacity(self.waiting.len());
@@ -557,25 +669,37 @@ impl<'e> Scheduler<'e> {
             if self.slots.iter().any(|s| s.is_none()) {
                 break; // a slot is already free for the next admission
             }
-            let victim = (0..self.slots.len())
-                .filter(|&i| {
-                    self.slots[i]
-                        .as_ref()
-                        .is_some_and(|a| !a.resumed && a.first_token.is_some())
-                })
-                .max_by_key(|&i| {
-                    self.slots[i].as_ref().map_or(0, |a| a.max_new.saturating_sub(a.out.len()))
-                });
-            let Some(i) = victim else { break };
-            if let Some(mut a) = self.slots[i].take() {
-                a.sess.abort_staged();
-                self.batcher.remove_session(i);
-                self.stats.kv_swap_bytes += a.sess.swap_out();
-                self.stats.preemptions += 1;
-                self.preempted.push_back(a);
+            if !self.preempt_one() {
+                break;
             }
             want -= 1;
         }
+    }
+
+    /// Park one preemption victim (the shared step of
+    /// [`Scheduler::preempt_for_waiting`], also driven directly by the
+    /// disaggregated pool coordinator to make room for a handoff
+    /// adoption).  Victim rules unchanged: past prefill, never resumed,
+    /// most remaining tokens.  Returns whether a victim was parked.
+    pub(super) fn preempt_one(&mut self) -> bool {
+        let victim = (0..self.slots.len())
+            .filter(|&i| {
+                self.slots[i]
+                    .as_ref()
+                    .is_some_and(|a| !a.resumed && a.first_token.is_some())
+            })
+            .max_by_key(|&i| {
+                self.slots[i].as_ref().map_or(0, |a| a.max_new.saturating_sub(a.out.len()))
+            });
+        let Some(i) = victim else { return false };
+        if let Some(mut a) = self.slots[i].take() {
+            a.sess.abort_staged();
+            self.batcher.remove_session(i);
+            self.stats.kv_swap_bytes += a.sess.swap_out();
+            self.stats.preemptions += 1;
+            self.preempted.push_back(a);
+        }
+        true
     }
 
     /// Move waiting requests into free slots and queue their first
@@ -599,6 +723,12 @@ impl<'e> Scheduler<'e> {
                         tokens: chunk,
                         epoch,
                     });
+                    // Queue-wait split, prefill side: arrival →
+                    // prefill-slot admission (the handoff→decode wait is
+                    // recorded separately as dc_wait_ms).
+                    self.stats
+                        .prefill_wait_ms
+                        .push(req.enqueued.elapsed().as_secs_f64() * 1e3);
                     self.slots[i] = Some(Active {
                         id: req.id,
                         epoch,
@@ -939,7 +1069,16 @@ impl<'e> Scheduler<'e> {
                 a.first_token = Some(clock::now());
                 a.out.push(t1);
                 if a.out.len() >= a.max_new {
+                    // max_new == 1: the prefill's own first token is the
+                    // whole generation — finish here, never hand off.
                     self.finish(a);
+                } else if self.handoff {
+                    // Prefill pool: the prefill→decode boundary.  The
+                    // session carries its hidden state (pending token +
+                    // last deep row) and its paged block tables; the slot
+                    // is already free (taken by the job runner), so the
+                    // next prompt can start prefilling immediately.
+                    self.handoff_ready.push_back((a, clock::now()));
                 } else {
                     let j = self.decode_job(slot, a.epoch);
                     self.batcher.push(j);
@@ -975,6 +1114,11 @@ impl<'e> Scheduler<'e> {
             None
         };
         self.stats.record_finish(queue_wait, ttft, tbt, a.rounds, a.proposed, a.accepted);
+        if let Some(t) = tbt {
+            // Off-wire per-request TBT: the pd bench attributes tail
+            // latency to specific streams (interactive vs aggressor).
+            self.stats.tbt_by_request.push((a.id, t));
+        }
         let gen = Generation {
             tokens: a.out,
             rounds: a.rounds,

@@ -831,6 +831,35 @@ impl<'e> Session<'e> {
         any
     }
 
+    /// Re-home this session onto another engine — the prefill→decode
+    /// handoff of the disaggregated serve pools.  The session's hidden
+    /// state (`last_deep`, the pending d_0) and its paged KV block tables
+    /// move by ownership: the caches hold their own pool handles, so no
+    /// dense KV bytes are copied — only the engine reference changes.
+    ///
+    /// Sound only between *sibling* engines: the target must draw from the
+    /// same physical [`KvPool`](crate::kv::KvPool) (block indices are
+    /// meaningless in any other pool) and present the same model spec
+    /// (deterministic backends then make the two engines bit-identical
+    /// executors).  Nothing may be staged mid-flight — a staged prefill
+    /// chunk or verify round holds rows the old engine's call must finish;
+    /// the scheduler tears those down (or completes them) before handing
+    /// off.  All violations are `Err`s, not panics: a handoff bug must
+    /// fail one lane, not the serve worker.
+    pub fn rebind(&mut self, engine: &'e Engine) -> Result<()> {
+        ensure!(self.verify.is_none(), "rebind with a staged verify round");
+        if let Some(st) = self.prefill.as_ref() {
+            ensure!(st.staged.is_none(), "rebind with a staged prefill chunk");
+        }
+        ensure!(
+            engine.kv_pool().same_pool(self.engine.kv_pool()),
+            "rebind across different kv pools"
+        );
+        ensure!(engine.spec() == self.engine.spec(), "rebind across different model specs");
+        self.engine = engine;
+        Ok(())
+    }
+
     /// Page this session's entire KV state (shallow, adapter and cloud
     /// middle caches) out to the pool's host-side store, releasing every
     /// resident block.  The serve scheduler preempts a session with this

@@ -38,6 +38,24 @@ impl Welford {
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
+
+    /// Fold another accumulator into this one (parallel Welford / Chan et
+    /// al.): the result is identical to having pushed both sample streams
+    /// into a single accumulator.  Used to merge per-pool serve stats.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+    }
 }
 
 /// Summary of a sample: mean/std/min/max/percentiles.
@@ -210,6 +228,29 @@ mod tests {
         assert!((w.mean() - mean).abs() < 1e-12);
         assert!((w.var() - var).abs() < 1e-12);
         assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn welford_merge_equals_single_stream() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0, -2.5, 7.0];
+        for split in 0..=xs.len() {
+            let mut a = Welford::new();
+            let mut b = Welford::new();
+            for &x in &xs[..split] {
+                a.push(x);
+            }
+            for &x in &xs[split..] {
+                b.push(x);
+            }
+            let mut whole = Welford::new();
+            for &x in &xs {
+                whole.push(x);
+            }
+            a.merge(&b);
+            assert_eq!(a.count(), whole.count());
+            assert!((a.mean() - whole.mean()).abs() < 1e-12);
+            assert!((a.var() - whole.var()).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@ use hat::backend::{ExecBackend, RuntimeStats, Tensor};
 use hat::config::{PriorityMode, SampleVerify, ServeConfig, SpecDecConfig};
 use hat::engine::Engine;
 use hat::runtime::{ArtifactRegistry, Manifest};
+use hat::server::pools::{PdScheduler, ServeExec};
 use hat::server::scheduler::{ReplyHandle, Request, Scheduler};
 use hat::server::{generate, serve_listener};
 use hat::util::clock;
@@ -1041,4 +1042,223 @@ fn prop_preemption_churn_preserves_streams_and_quiesces_pool() {
         Ok(())
     });
     assert!(total_preempted >= 8, "every case must park at least one session");
+}
+
+/// Property: prefill/decode pool-seam churn.  Each case draws a random
+/// pool shape (1–2 prefill, 1–3 decode slots) and priority mode over one
+/// shared KV pool, then interleaves admissions — half sharing a
+/// system-prompt prefix — with step bursts and cancels that can land on
+/// prefill-resident, seam-pending or decode-resident sessions.  After
+/// every step, no request may be resident in both pools at once.  A
+/// second stanza reruns a small fleet under a 2 ms deadline so expiry
+/// fires in the pools and at the seam.  Every survivor's stream must be
+/// byte-identical to serial `generate()`, cancelled requests reply
+/// `ERR cancelled` exactly once, deadline casualties reply
+/// `ERR deadline`, and the shared pool must quiesce after each drain.
+#[test]
+fn prop_pd_pool_churn_preserves_streams_and_quiesces_pool() {
+    let pf_engine = Engine::synthetic();
+    let dc_engine =
+        Engine::with_registry_shared(ArtifactRegistry::synthetic(), pf_engine.kv_pool()).unwrap();
+    let spec = SpecDecConfig::default();
+    let vocab = pf_engine.spec().vocab;
+    let mut total_handoffs = 0u64;
+    let mut total_preempted = 0u64;
+    let mut total_deadline = 0u64;
+    forall(cases(8), |rng| {
+        let cfg = ServeConfig {
+            prefill_workers: rng.range_usize(1, 2),
+            decode_workers: rng.range_usize(1, 3),
+            prefill_budget: rng.range_usize(32, 256),
+            priority: if rng.bool(0.5) { PriorityMode::Preempt } else { PriorityMode::None },
+            ..ServeConfig::default()
+        };
+        let mut sched = PdScheduler::new(&pf_engine, &dc_engine, spec.clone(), cfg)
+            .map_err(|e| e.to_string())?;
+        // (id, prompt, max_new, rx, cancelled)
+        let mut items: Vec<(u64, Vec<u32>, usize, mpsc::Receiver<String>, bool)> = Vec::new();
+
+        let system = prompt_of(rng, rng.range_usize(24, 56), vocab);
+        for _ in 0..rng.range_usize(6, 12) {
+            let mut prompt = if rng.bool(0.5) {
+                system.clone()
+            } else {
+                prompt_of(rng, rng.range_usize(6, 40), vocab)
+            };
+            prompt.extend((0..rng.range_usize(2, 8)).map(|_| rng.below(vocab) as u32));
+            let max_new = rng.range_usize(1, 14);
+            let (r, rx) = request(prompt.clone(), max_new);
+            let id = r.id;
+            sched.submit(r);
+            items.push((id, prompt, max_new, rx, false));
+            for _ in 0..rng.range_usize(0, 4) {
+                sched.step();
+                for (id, _, _, _, _) in &items {
+                    if sched.in_prefill(*id) && sched.in_decode(*id) {
+                        return Err(format!("request {id} resident in both pools"));
+                    }
+                }
+            }
+            if rng.bool(0.35) {
+                let k = rng.below(items.len());
+                let (id, _, _, _, cancelled) = &mut items[k];
+                if !*cancelled && sched.cancel(*id) {
+                    *cancelled = true;
+                }
+            }
+        }
+
+        let mut guard = 0usize;
+        while sched.has_work() {
+            if sched.step() == 0 {
+                return Err("pd scheduler idle with admitted work".into());
+            }
+            for (id, _, _, _, _) in &items {
+                if sched.in_prefill(*id) && sched.in_decode(*id) {
+                    return Err(format!("request {id} resident in both pools during drain"));
+                }
+            }
+            guard += 1;
+            if guard > 30_000 {
+                return Err("pd scheduler failed to drain".into());
+            }
+        }
+        total_handoffs += sched.handoffs();
+        total_preempted += sched.merged_stats().preemptions;
+
+        for (id, prompt, max_new, rx, cancelled) in &items {
+            let line = rx.try_recv().map_err(|_| format!("request {id} got no reply"))?;
+            if *cancelled {
+                if line != "ERR cancelled" {
+                    return Err(format!("cancelled request {id} replied {line:?}"));
+                }
+                if let Ok(extra) = rx.try_recv() {
+                    return Err(format!("cancelled request {id} got a second reply {extra:?}"));
+                }
+            } else {
+                let want = generate(&pf_engine, prompt, *max_new, &spec)
+                    .map_err(|e| e.to_string())?
+                    .reply_line();
+                if line != want {
+                    return Err(format!("request {id} diverged across the pool seam: {line:?}"));
+                }
+            }
+        }
+        if !pf_engine.kv_pool().quiesced() {
+            return Err("drained pd scheduler left pool blocks in use or shared".into());
+        }
+
+        // Forced-park stanza: two prefill slots handing off into a single
+        // decode slot under preempt priority.  The long stream outlives the
+        // starvation bound, so the second handoff always meets a full
+        // decode pool and must park it — each case exercises
+        // handoff → preempt → park → resume deterministically.
+        let park_cfg = ServeConfig {
+            prefill_workers: 2,
+            decode_workers: 1,
+            priority: PriorityMode::Preempt,
+            ..ServeConfig::default()
+        };
+        let mut park = PdScheduler::new(&pf_engine, &dc_engine, spec.clone(), park_cfg)
+            .map_err(|e| e.to_string())?;
+        let long_prompt = prompt_of(rng, 16, vocab);
+        let short_prompt = prompt_of(rng, 16, vocab);
+        let (r_long, rx_long) = request(long_prompt.clone(), 64);
+        let (r_short, rx_short) = request(short_prompt.clone(), 8);
+        park.submit(r_long);
+        park.submit(r_short);
+        let mut guard = 0usize;
+        while park.merged_stats().preemptions == 0 {
+            if park.step() == 0 {
+                return Err("park stanza idle before any preemption".into());
+            }
+            guard += 1;
+            if guard > 5_000 {
+                return Err("two handoffs into one decode slot never parked a victim".into());
+            }
+        }
+        total_preempted += 1;
+        let mut guard = 0usize;
+        while park.has_work() {
+            if park.step() == 0 {
+                return Err("park stanza idle with admitted work".into());
+            }
+            guard += 1;
+            if guard > 30_000 {
+                return Err("park stanza failed to drain".into());
+            }
+        }
+        for (prompt, max_new, rx) in
+            [(&long_prompt, 64usize, &rx_long), (&short_prompt, 8usize, &rx_short)]
+        {
+            let want = generate(&pf_engine, prompt, max_new, &spec)
+                .map_err(|e| e.to_string())?
+                .reply_line();
+            let line = rx.try_recv().map_err(|_| "park stanza request got no reply".to_string())?;
+            if line != want {
+                return Err(format!("parked/resumed stream diverged: {line:?}"));
+            }
+        }
+        if !pf_engine.kv_pool().quiesced() {
+            return Err("park stanza left pool blocks in use or shared".into());
+        }
+
+        // Deadline stanza: a fresh pool pair under a 2 ms deadline.  One
+        // stream is stepped live into the decode pool, the rest queue at
+        // admission or the seam; sleeping past the deadline must expire
+        // whatever has not finished, wherever it is resident.
+        let dl_cfg = ServeConfig {
+            prefill_workers: 1,
+            decode_workers: 1,
+            deadline_ms: 2,
+            ..ServeConfig::default()
+        };
+        let mut dl = PdScheduler::new(&pf_engine, &dc_engine, spec.clone(), dl_cfg)
+            .map_err(|e| e.to_string())?;
+        let mut dl_items: Vec<(u64, Vec<u32>, usize, mpsc::Receiver<String>)> = Vec::new();
+        {
+            let prompt = prompt_of(rng, rng.range_usize(12, 32), vocab);
+            let (r, rx) = request(prompt.clone(), 48);
+            dl_items.push((r.id, prompt, 48, rx));
+            dl.submit(r);
+        }
+        dl.step();
+        dl.step();
+        for _ in 0..2 {
+            let prompt = prompt_of(rng, rng.range_usize(6, 20), vocab);
+            let max_new = rng.range_usize(2, 8);
+            let (r, rx) = request(prompt.clone(), max_new);
+            dl_items.push((r.id, prompt, max_new, rx));
+            dl.submit(r);
+        }
+        clock::sleep(Duration::from_millis(6));
+        let mut guard = 0usize;
+        while dl.has_work() {
+            dl.step();
+            guard += 1;
+            if guard > 30_000 {
+                return Err("deadline pools failed to drain".into());
+            }
+        }
+        for (id, prompt, max_new, rx) in &dl_items {
+            let line = rx.try_recv().map_err(|_| format!("deadline request {id} got no reply"))?;
+            if line == "ERR deadline" {
+                total_deadline += 1;
+            } else {
+                let want = generate(&pf_engine, prompt, *max_new, &spec)
+                    .map_err(|e| e.to_string())?
+                    .reply_line();
+                if line != want {
+                    return Err(format!("deadline survivor {id} diverged: {line:?}"));
+                }
+            }
+        }
+        if !pf_engine.kv_pool().quiesced() {
+            return Err("deadline-drained pools left blocks in use or shared".into());
+        }
+        Ok(())
+    });
+    assert!(total_handoffs >= 8, "every case must cross the pool seam");
+    assert!(total_preempted >= 8, "every case's park stanza must park a victim");
+    assert!(total_deadline >= 8, "the 48-token stream must outlive a 2 ms deadline in every case");
 }

@@ -1,0 +1,6 @@
+// Seeds exactly one seam-pool violation: admission code invoking the
+// backend's execution entry point directly instead of driving the
+// session through the Engine layer.
+pub fn admit(backend: &dyn ExecBackend, prompt: &Tensor) -> Result<Vec<Tensor>> {
+    backend.run("prefill_256", &[prompt])
+}

@@ -14,6 +14,7 @@
 //! | `seam-xla`              | `xla::` appears only in `backend/pjrt.rs`                  |
 //! | `seam-backend`          | `engine/`, `specdec/`, `server/` never name a concrete backend type |
 //! | `seam-kv`               | raw KV data-plane accessors (`write_row`, `gather_dense`, …) only in `backend/` and `kv/` |
+//! | `seam-pool`             | no direct ExecBackend execution calls (`run`, `run_batch`, …) in `server/` — pool code drives sessions, not the backend |
 //! | `panic-path`            | no un-annotated `unwrap()`/`expect(`/`panic!`/`unreachable!`/`assert!` in the serve hot path (`server/`, `cloud/batcher.rs`, `specdec/mod.rs`) |
 //! | `lock-unwrap`           | no `.lock().unwrap()` / `.lock().expect(` anywhere in `rust/src` (poisoned-lock recovery required) |
 //! | `drift-config-readme`   | every key parsed in `config/parser.rs` is documented in README.md |
@@ -42,6 +43,7 @@ pub const LINT_IDS: &[&str] = &[
     "seam-xla",
     "seam-backend",
     "seam-kv",
+    "seam-pool",
     "panic-path",
     "lock-unwrap",
     "drift-config-readme",
@@ -507,6 +509,7 @@ pub fn run_lints(root: &Path) -> io::Result<Vec<Finding>> {
     check_seam_xla(&scanned, &mut findings);
     check_seam_backend(&scanned, &mut findings);
     check_seam_kv(&scanned, &mut findings);
+    check_seam_pool(&scanned, &mut findings);
     check_panic_path(&scanned, &mut findings);
     check_lock_unwrap(&scanned, &mut findings);
     check_config_drift(&scanned, &readme, &mut findings);
@@ -668,6 +671,44 @@ fn check_seam_kv(scanned: &[Scanned], findings: &mut Vec<Finding>) {
                         "raw KV data-plane accessor `.{name}(` above the backend seam — \
                          only backend/ and kv/ may touch KV tensor storage; everything \
                          else threads block-table handles"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// ExecBackend execution entry points.  Scheduler/pool code admits,
+/// batches and hands sessions off; actually *running* an artifact is the
+/// Session/Engine layer's job.  A pool that calls the backend directly
+/// bypasses the g^t monitors, KV accounting and speculative-decode state
+/// that make pool handoff lossless.
+const EXEC_ENTRY_POINTS: &[&str] = &["run", "run_batch", "run_paged", "run_batch_paged"];
+
+fn check_seam_pool(scanned: &[Scanned], findings: &mut Vec<Finding>) {
+    for f in scanned {
+        if !f.rel.starts_with("rust/src/server/") {
+            continue;
+        }
+        for w in f.toks.windows(3) {
+            if w[1].in_test {
+                continue;
+            }
+            let (Tok::Punct('.'), Tok::Ident(name), Tok::Punct('(')) =
+                (&w[0].tok, &w[1].tok, &w[2].tok)
+            else {
+                continue;
+            };
+            if EXEC_ENTRY_POINTS.contains(&name.as_str()) {
+                push(
+                    findings,
+                    f,
+                    w[1].line,
+                    "seam-pool",
+                    format!(
+                        "direct ExecBackend execution call `.{name}(` in server/ — \
+                         pool and scheduler code must drive Session/Engine, never \
+                         the backend itself"
                     ),
                 );
             }
