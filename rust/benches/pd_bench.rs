@@ -26,15 +26,15 @@
 // runtime, not for measurement harnesses.
 #![allow(clippy::disallowed_methods)]
 
-use std::sync::mpsc;
 use std::time::Instant;
 
 use hat::config::{ServeConfig, SpecDecConfig};
 use hat::engine::Engine;
 use hat::runtime::ArtifactRegistry;
+use hat::server::conn::ReplySink;
 use hat::server::generate;
 use hat::server::pools::{PdScheduler, ServeExec};
-use hat::server::scheduler::{ReplyHandle, Request, Scheduler};
+use hat::server::scheduler::{Request, Scheduler};
 use hat::util::json::{obj, Value};
 use hat::util::report::{section, write_json};
 use hat::util::stats::quantile;
@@ -86,14 +86,14 @@ struct ModeRun {
 /// rounds).  `interactive_tbt` is filled by the caller from the mode's
 /// per-request TBT attribution.
 fn run_mode(sched: &mut dyn ServeExec) -> ModeRun {
-    let mut rxs: Vec<(u64, mpsc::Receiver<String>)> = Vec::new();
+    let mut rxs: Vec<(u64, ReplySink)> = Vec::new();
     for (i, (p, m)) in interactive_reqs().iter().enumerate() {
-        let (tx, rx) = mpsc::channel();
+        let rx = ReplySink::new();
         sched.submit(Request {
             id: (i + 1) as u64,
             prompt: p.clone(),
             max_new: *m,
-            reply: ReplyHandle::new(tx),
+            reply: rx.clone(),
             enqueued: Instant::now(),
         });
         rxs.push(((i + 1) as u64, rx));
@@ -106,12 +106,12 @@ fn run_mode(sched: &mut dyn ServeExec) -> ModeRun {
     }
     assert!(sched.live_sessions() > 0, "no interactive stream went live");
     for (i, (p, m)) in aggressor_reqs().iter().enumerate() {
-        let (tx, rx) = mpsc::channel();
+        let rx = ReplySink::new();
         sched.submit(Request {
             id: AGGRESSOR_ID_BASE + i as u64,
             prompt: p.clone(),
             max_new: *m,
-            reply: ReplyHandle::new(tx),
+            reply: rx.clone(),
             enqueued: Instant::now(),
         });
         rxs.push((AGGRESSOR_ID_BASE + i as u64, rx));

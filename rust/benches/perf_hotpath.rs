@@ -10,15 +10,15 @@
 // runtime, not for measurement harnesses.
 #![allow(clippy::disallowed_methods)]
 
-use std::sync::mpsc;
 use std::time::Instant;
 
 use hat::cloud::{optimal_chunk, Batcher, Job, JobKind};
 use hat::config::{Dataset, ExperimentConfig, Framework, GModel, ServeConfig, SpecDecConfig};
 use hat::engine::Engine;
 use hat::frameworks::run_experiment;
+use hat::server::conn::ReplySink;
 use hat::server::generate;
-use hat::server::scheduler::{ReplyHandle, Request, Scheduler};
+use hat::server::scheduler::{Request, Scheduler};
 use hat::sim::{EventQueue, SimTime};
 use hat::specdec::profile::SdProfile;
 use hat::util::json::{obj, Value};
@@ -174,12 +174,12 @@ fn main() {
     let t0 = Instant::now();
     let mut rxs = Vec::new();
     for (i, (p, m)) in reqs.iter().enumerate() {
-        let (tx, rx) = mpsc::channel();
+        let rx = ReplySink::new();
         sched.submit(Request {
             id: (i + 1) as u64,
             prompt: p.clone(),
             max_new: *m,
-            reply: ReplyHandle::new(tx),
+            reply: rx.clone(),
             enqueued: Instant::now(),
         });
         rxs.push(rx);

@@ -1,38 +1,51 @@
 //! §Churn — disconnect-storm benchmark for the serve scheduler's
 //! session-lifecycle subsystem (EXPERIMENTS.md §Perf).
 //!
-//! Workload: `N_DEAD` long generations whose clients vanish right after
-//! their sessions take slots, plus `N_LIVE` short live requests queued
-//! behind them, on a 2-slot scheduler.  Run twice over identical
-//! requests:
+//! Two scenarios, both written to `BENCH_churn.json`:
 //!
-//! - **reaping on** — the disconnects are noticed (reply handles marked
-//!   dead, cancels forwarded), exactly what `server::handle_conn`'s reply
-//!   wait does: slots are reclaimed at the next iteration boundary;
+//! **Slot reclamation** (direct-driven scheduler): `N_DEAD` long
+//! generations whose clients vanish right after their sessions take
+//! slots, plus `N_LIVE` short live requests queued behind them, on a
+//! 2-slot scheduler.  Run twice over identical requests:
+//!
+//! - **reaping on** — the disconnects are noticed (reply sinks marked
+//!   dead, cancels forwarded), exactly what the serve event loop does
+//!   when a read returns EOF: slots are reclaimed at the next iteration
+//!   boundary;
 //! - **reaping off** — the pre-lifecycle behaviour: abandoned
-//!   generations run to completion into dead channels while live clients
+//!   generations run to completion into dead sinks while live clients
 //!   wait for a slot.
 //!
-//! Reported: scheduler iterations and wall ms until every live request
-//! completes, mean live-client completion latency, and the ON-mode
-//! lifecycle counters.  Writes `BENCH_churn.json`.
+//! **Connection storm** (full TCP front end): `STORM_THREADS ×
+//! STORM_PER_THREAD` = 10k connections against a real `serve_listener`
+//! event loop — half connect and vanish without a byte, a quarter
+//! complete a short generation, a quarter abandon a long one mid-flight.
+//! Exercises accept, framing, submit, cancel-on-disconnect and loop exit
+//! under churn; reports wall time, accept throughput, and the cancel
+//! count read back over STATS.
 
 // Benches measure real wall time: the util::clock choke point is for the
 // runtime, not for measurement harnesses.
 #![allow(clippy::disallowed_methods)]
 
-use std::sync::mpsc;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
 use std::time::Instant;
 
 use hat::config::{ServeConfig, SpecDecConfig};
 use hat::engine::Engine;
-use hat::server::scheduler::{ReplyHandle, Request, Scheduler};
+use hat::server::conn::ReplySink;
+use hat::server::scheduler::{Request, Scheduler};
+use hat::server::serve_listener;
 use hat::util::json::{obj, Value};
 use hat::util::report::{section, write_json};
 
 const N_DEAD: usize = 2;
 const N_LIVE: usize = 3;
 const DEAD_MAX_NEW: usize = 200;
+
+const STORM_THREADS: usize = 8;
+const STORM_PER_THREAD: usize = 1250;
 
 struct ChurnRun {
     iterations: usize,
@@ -51,8 +64,7 @@ fn run(reap: bool) -> ChurnRun {
     // The storm: long generations that take both slots, clients gone.
     let mut dead = Vec::new();
     for i in 0..N_DEAD {
-        let (tx, rx) = mpsc::channel();
-        let reply = ReplyHandle::new(tx);
+        let reply = ReplySink::new();
         let prompt: Vec<u32> = (0u32..80).map(|j| (j * 3 + i as u32 + 1) % 256).collect();
         sched.submit(Request {
             id: (i + 1) as u64,
@@ -61,7 +73,6 @@ fn run(reap: bool) -> ChurnRun {
             reply: reply.clone(),
             enqueued: Instant::now(),
         });
-        drop(rx); // client disconnects immediately after submitting
         dead.push(((i + 1) as u64, reply));
     }
     let mut iterations = 0usize;
@@ -71,22 +82,22 @@ fn run(reap: bool) -> ChurnRun {
 
     // Live clients queue behind it.
     let t0 = Instant::now();
-    let mut live: Vec<(mpsc::Receiver<String>, Instant, Option<f64>)> = Vec::new();
+    let mut live: Vec<(ReplySink, Instant, Option<f64>)> = Vec::new();
     for i in 0..N_LIVE {
-        let (tx, rx) = mpsc::channel();
+        let rx = ReplySink::new();
         let prompt: Vec<u32> = (0u32..12).map(|j| (j * 5 + i as u32 + 2) % 256).collect();
         sched.submit(Request {
             id: (100 + i) as u64,
             prompt,
             max_new: 8,
-            reply: ReplyHandle::new(tx),
+            reply: rx.clone(),
             enqueued: Instant::now(),
         });
         live.push((rx, Instant::now(), None));
     }
 
     if reap {
-        // What each dead client's connection thread would do on EOF.
+        // What the event loop does when each dead client's read EOFs.
         for (id, reply) in &dead {
             reply.mark_dead();
             assert!(sched.cancel(*id), "slot holder must cancel");
@@ -119,6 +130,88 @@ fn run(reap: bool) -> ChurnRun {
     }
 }
 
+struct StormRun {
+    conns: usize,
+    live_completed: usize,
+    cancelled: u64,
+    wall_ms: f64,
+    conns_per_sec: f64,
+}
+
+/// Pull one `key=value` integer out of a STATS reply line.
+fn stats_field(line: &str, key: &str) -> u64 {
+    line.split_whitespace()
+        .find_map(|kv| kv.strip_prefix(key).and_then(|v| v.strip_prefix('=')))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("STATS missing {key}: {line}"))
+}
+
+fn storm() -> StormRun {
+    let total = STORM_THREADS * STORM_PER_THREAD;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = ServeConfig { max_sessions: 8, ..ServeConfig::default() };
+    // One extra accept: the post-storm STATS probe retires the listener.
+    let server = std::thread::spawn(move || {
+        serve_listener(listener, SpecDecConfig::default(), cfg, total + 1).unwrap();
+    });
+
+    let t0 = Instant::now();
+    let drivers: Vec<_> = (0..STORM_THREADS)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut completed = 0usize;
+                for i in 0..STORM_PER_THREAD {
+                    match i % 4 {
+                        // Half the storm: connect, vanish without a byte.
+                        0 | 2 => drop(TcpStream::connect(addr).unwrap()),
+                        // A quarter: complete a short generation.
+                        1 => {
+                            let mut s = TcpStream::connect(addr).unwrap();
+                            let mut r = BufReader::new(s.try_clone().unwrap());
+                            writeln!(s, "GENERATE 4 {} {} 3 1", t + 1, (i % 251) + 1).unwrap();
+                            let mut line = String::new();
+                            r.read_line(&mut line).unwrap();
+                            assert!(line.starts_with("OK "), "storm request failed: {line}");
+                            completed += 1;
+                            writeln!(s, "QUIT").unwrap();
+                        }
+                        // A quarter: abandon a long generation mid-flight.
+                        _ => {
+                            let mut s = TcpStream::connect(addr).unwrap();
+                            writeln!(s, "GENERATE 200 {} 7 5 3 2", t + 1).unwrap();
+                        }
+                    }
+                }
+                completed
+            })
+        })
+        .collect();
+    let live_completed: usize = drivers.into_iter().map(|d| d.join().unwrap()).sum();
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // The probe connection reads the lifecycle counters, then retires
+    // the loop's last accept slot so the server exits.
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    writeln!(s, "STATS").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "bad STATS reply: {line}");
+    let cancelled = stats_field(&line, "cancelled");
+    writeln!(s, "QUIT").unwrap();
+    drop((s, r));
+    server.join().unwrap();
+
+    StormRun {
+        conns: total,
+        live_completed,
+        cancelled,
+        wall_ms,
+        conns_per_sec: total as f64 / (wall_ms / 1e3),
+    }
+}
+
 fn main() {
     section("Churn: disconnect storm — reaping on vs off");
     let on = run(true);
@@ -144,6 +237,23 @@ fn main() {
     let speedup = off.iterations as f64 / on.iterations.max(1) as f64;
     println!("slot-reclamation speedup: {speedup:.2}x fewer iterations to serve live clients");
 
+    section("Churn: 10k-connection storm against the event-loop front end");
+    let st = storm();
+    let abandoned = STORM_THREADS * (0..STORM_PER_THREAD).filter(|i| i % 4 == 3).count();
+    println!(
+        "{} conns in {:.1} ms ({:.0} conns/s): {} live completed, {} cancelled",
+        st.conns, st.wall_ms, st.conns_per_sec, st.live_completed, st.cancelled
+    );
+    assert_eq!(
+        st.live_completed,
+        STORM_THREADS * (0..STORM_PER_THREAD).filter(|i| i % 4 == 1).count(),
+        "every live storm request must complete"
+    );
+    assert_eq!(
+        st.cancelled, abandoned as u64,
+        "every abandoned storm generation must be cancelled on disconnect"
+    );
+
     let out = obj(vec![
         ("n_dead", Value::Num(N_DEAD as f64)),
         ("n_live", Value::Num(N_LIVE as f64)),
@@ -158,6 +268,11 @@ fn main() {
         ("reap_off_wall_ms", Value::Num(off.wall_ms)),
         ("reap_off_live_mean_ms", Value::Num(off.live_mean_ms)),
         ("iteration_speedup", Value::Num(speedup)),
+        ("storm_conns", Value::Num(st.conns as f64)),
+        ("storm_live_completed", Value::Num(st.live_completed as f64)),
+        ("storm_cancelled", Value::Num(st.cancelled as f64)),
+        ("storm_wall_ms", Value::Num(st.wall_ms)),
+        ("storm_conns_per_sec", Value::Num(st.conns_per_sec)),
     ]);
     let p = write_json("BENCH_churn", &out);
     println!("wrote {}", p.display());

@@ -7,12 +7,14 @@
 //! hat serve    [--addr HOST:PORT] [--config FILE] [--max-sessions N]
 //!              [--prefill-budget T] [--policy fifo|sjf] [--deadline-ms T]
 //!              [--prefill-workers N] [--decode-workers M]
-//!              [--max-conns N] [--temperature X] [--top-k-sample N]
-//!              [--top-p X] [--rep-penalty X] [--seed N]
+//!              [--max-conns N] [--rate-limit X] [--temperature X]
+//!              [--top-k-sample N] [--top-p X] [--rep-penalty X] [--seed N]
 //!              [--verify-mode coupled|rejection]
-//!              real TCP serving: continuous-batching scheduler over the
+//!              real TCP serving: one event loop multiplexing every
+//!              connection with a continuous-batching scheduler over the
 //!              engine (N concurrent sessions, T prefill tokens/iteration,
-//!              slot admission policy + per-request deadline; temperature 0
+//!              slot admission policy + per-request deadline, X GENERATEs/s
+//!              per-connection rate limit; temperature 0
 //!              is greedy, > 0 samples seeded and position-keyed)
 //! hat profile  [--rounds N]             measure SD round shapes
 //! hat inspect                           print manifest / artifact summary

@@ -365,6 +365,19 @@ pub struct ServeConfig {
     pub prefill_workers: usize,
     /// Decode-pool slots for disaggregated serving (`--decode-workers`).
     pub decode_workers: usize,
+    /// Per-connection token-bucket refill rate, GENERATEs per second
+    /// (`--rate-limit`); excess requests get `ERR rate limited`.
+    /// 0 (the default) disables rate limiting.
+    pub rate_limit_rps: f64,
+    /// Token-bucket capacity: the burst of GENERATEs a connection may
+    /// spend before the `rate_limit_rps` refill gates it.
+    pub burst: usize,
+    /// Bound on the executor's queued-request depth above which new
+    /// GENERATEs are shed with `ERR busy`.
+    pub admit_queue: usize,
+    /// Bound on a connection's queued-but-unwritten reply lines; a
+    /// client exceeding it (a reader that stopped reading) is dropped.
+    pub outbox_lines: usize,
 }
 
 impl Default for ServeConfig {
@@ -388,6 +401,10 @@ impl Default for ServeConfig {
             priority: PriorityMode::None,
             prefill_workers: 0,
             decode_workers: 0,
+            rate_limit_rps: 0.0,
+            burst: 8,
+            admit_queue: 1024,
+            outbox_lines: 64,
         }
     }
 }
@@ -596,6 +613,18 @@ impl ExperimentConfig {
         }
         if self.serve.pipeline_len == 0 {
             errs.push("serve.pipeline_len must be > 0".into());
+        }
+        if !self.serve.rate_limit_rps.is_finite() || self.serve.rate_limit_rps < 0.0 {
+            errs.push("serve.rate_limit_rps must be >= 0 (0 disables limiting)".into());
+        }
+        if self.serve.burst == 0 {
+            errs.push("serve.burst must be > 0".into());
+        }
+        if self.serve.admit_queue == 0 {
+            errs.push("serve.admit_queue must be > 0".into());
+        }
+        if self.serve.outbox_lines == 0 {
+            errs.push("serve.outbox_lines must be > 0".into());
         }
         if self.workload.min_prompt > self.workload.max_prompt {
             errs.push("prompt bounds invalid".into());

@@ -182,6 +182,10 @@ pub fn build(map: &BTreeMap<String, Scalar>) -> Result<ExperimentConfig, String>
             }
             "serve.prefill_workers" => cfg.serve.prefill_workers = us()?,
             "serve.decode_workers" => cfg.serve.decode_workers = us()?,
+            "serve.rate_limit_rps" => cfg.serve.rate_limit_rps = num()?,
+            "serve.burst" => cfg.serve.burst = us()?,
+            "serve.admit_queue" => cfg.serve.admit_queue = us()?,
+            "serve.outbox_lines" => cfg.serve.outbox_lines = us()?,
             "kv.block_tokens" => cfg.kv.block_tokens = us()?,
             "kv.kv_blocks" => cfg.kv.kv_blocks = us()?,
             // hatlint: allow(drift-config-validate) bool toggle, both values valid

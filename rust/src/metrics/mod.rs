@@ -292,6 +292,21 @@ pub struct ServeStats {
     /// this to attribute tail latency to specific streams (e.g. interactive
     /// vs aggressor).  Off the STATS wire line.
     pub tbt_by_request: Vec<(u64, f64)>,
+    /// GENERATEs refused `ERR rate limited` by a connection's token
+    /// bucket (`serve.rate_limit_rps` / `serve.burst`) — `rate_limited`
+    /// in the STATS reply.
+    pub rate_limited: u64,
+    /// GENERATEs refused `ERR busy` because the executor already held
+    /// `serve.admit_queue` queued requests — `shed_busy` in the STATS
+    /// reply.
+    pub shed_busy: u64,
+    /// Connections dropped because their bounded reply outbox
+    /// (`serve.outbox_lines`) overflowed — a client that stopped reading
+    /// — `slow_reader_dropped` in the STATS reply.
+    pub slow_reader_dropped: u64,
+    /// Connections currently held by the serve event loop — a gauge, not
+    /// a counter; `open_conns` in the STATS reply.
+    pub open_conns: usize,
 }
 
 impl ServeStats {
@@ -373,6 +388,12 @@ impl ServeStats {
         self.prefill_occ.merge(&other.prefill_occ);
         self.decode_occ.merge(&other.decode_occ);
         self.tbt_by_request.extend_from_slice(&other.tbt_by_request);
+        self.rate_limited += other.rate_limited;
+        self.shed_busy += other.shed_busy;
+        self.slow_reader_dropped += other.slow_reader_dropped;
+        // A gauge: both pools see the same front end, so merging takes
+        // the max (the non-zero side), like the shared-KV snapshots.
+        self.open_conns = self.open_conns.max(other.open_conns);
     }
 
     /// Scheduler fields of the `STATS` reply line.
@@ -387,7 +408,8 @@ impl ServeStats {
              rounds={} accept={:.3} accept_hist={} seed={} chunk_mean={:.1} batch_mean={:.2} \
              fallbacks={} cancelled={} failed={} reaped={} deadline_expired={} \
              preempted={} kv_swap_bytes={} kv_blocks={} kv_shared={} handoffs={} \
-             pf_wait_ms={:.1} dc_wait_ms={:.1} pf_occ={:.2} dc_occ={:.2}",
+             pf_wait_ms={:.1} dc_wait_ms={:.1} pf_occ={:.2} dc_occ={:.2} \
+             rate_limited={} shed_busy={} slow_reader_dropped={} open_conns={}",
             self.finished,
             self.iterations,
             self.queue_wait_ms.mean(),
@@ -413,6 +435,10 @@ impl ServeStats {
             self.decode_wait_ms.mean(),
             self.prefill_occ.mean(),
             self.decode_occ.mean(),
+            self.rate_limited,
+            self.shed_busy,
+            self.slow_reader_dropped,
+            self.open_conns,
         )
     }
 }
@@ -547,6 +573,10 @@ mod tests {
         s.kv_swap_bytes = 4096;
         s.kv_blocks_in_use = 12;
         s.kv_blocks_shared = 5;
+        s.rate_limited = 6;
+        s.shed_busy = 7;
+        s.slow_reader_dropped = 8;
+        s.open_conns = 9;
         assert!(s.stats_fields().contains("accept_hist=- "), "empty histogram renders as -");
         s.record_round(2);
         s.record_round(0);
@@ -577,6 +607,10 @@ mod tests {
             "dc_wait_ms=",
             "pf_occ=",
             "dc_occ=",
+            "rate_limited=6",
+            "shed_busy=7",
+            "slow_reader_dropped=8",
+            "open_conns=9",
         ] {
             assert!(f.contains(key), "missing {key} in {f}");
         }
@@ -600,6 +634,10 @@ mod tests {
         b.kv_blocks_shared = 5;
         b.kv_swap_bytes = 50;
         b.tbt_by_request.push((2, 6.0));
+        b.rate_limited = 2;
+        b.shed_busy = 3;
+        b.slow_reader_dropped = 1;
+        b.open_conns = 4;
         a.merge(&b);
         assert_eq!(a.finished, 2);
         assert_eq!(a.rounds, 5);
@@ -613,6 +651,12 @@ mod tests {
         assert_eq!(a.kv_blocks_shared, 5);
         assert_eq!(a.kv_swap_bytes, 150);
         assert_eq!(a.tbt_by_request.len(), 2);
+        // Front-end flow-control counters sum; open_conns is a gauge of
+        // the one shared front end, so merging takes the max.
+        assert_eq!(a.rate_limited, 2);
+        assert_eq!(a.shed_busy, 3);
+        assert_eq!(a.slow_reader_dropped, 1);
+        assert_eq!(a.open_conns, 4);
     }
 
     #[test]

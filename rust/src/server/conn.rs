@@ -1,0 +1,555 @@
+//! Event-driven serve front end: the connection layer.
+//!
+//! One non-blocking readiness loop ([`event_loop`]) owns the listener,
+//! every client connection *and* the engine-stepping [`ServeExec`]
+//! executor.  Each connection is a [`Conn`] state machine — incremental
+//! read buffer → line framing → parse/validate → submit; replies drain
+//! through a bounded per-client outbox on writability — polled between
+//! scheduler iterations on the one engine-owning thread.  No
+//! per-connection OS threads, no reply channels, no timeout-bounded
+//! socket probes: the loop that steps the engine is the loop that sees a
+//! client disconnect, so cancel-on-disconnect is an *event* (the `Ok(0)`
+//! read), not a poll.
+//!
+//! Flow control the old thread-per-connection design could not express:
+//!
+//! - **Admission shedding** — a GENERATE arriving while the executor
+//!   already holds `serve.admit_queue` queued requests is refused with
+//!   `ERR busy` (counted in `shed_busy`) instead of growing the queue
+//!   without bound.
+//! - **Bounded outbox** — a client that stops reading past
+//!   `serve.outbox_lines` queued reply lines is dropped
+//!   (`slow_reader_dropped`); the loop never blocks on, and never
+//!   buffers unboundedly for, a slow reader.
+//! - **Per-client rate limits** — a token bucket per connection
+//!   (`serve.rate_limit_rps` refill, `serve.burst` cap; 0 rps = off)
+//!   refuses excess GENERATEs with `ERR rate limited` (`rate_limited`).
+//! - **Incremental line cap** — the [`MAX_LINE_BYTES`] frame cap is
+//!   enforced byte-by-byte as data arrives, so a never-terminating
+//!   sender is rejected (`ERR line too long`, connection closed) while
+//!   its line is still arriving, not after an unbounded buffered read.
+//!
+//! This module is the one sanctioned home of socket I/O in
+//! `rust/src/server/` — hatlint's `seam-conn` lint keeps thread spawns
+//! and blocking socket calls out of the rest of the server tree.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::util::clock;
+
+use super::pools::ServeExec;
+use super::scheduler::Request;
+use super::{parse_line, Command};
+
+/// Hard per-line byte cap, enforced *incrementally* during framing: the
+/// connection is refused (`ERR line too long`, then closed) as soon as
+/// an unterminated line crosses the cap, while the bytes are still
+/// arriving.  Generous for the protocol's longest legitimate line (a
+/// GENERATE carrying a full-context prompt).
+pub const MAX_LINE_BYTES: usize = 16 * 1024;
+
+/// Complete-but-unprocessed lines buffered per connection before the
+/// loop stops draining its socket (TCP backpressure does the rest).
+const PENDING_MAX: usize = 64;
+
+/// Per-`read(2)` scratch size.
+const READ_CHUNK: usize = 4096;
+
+/// Consecutive fully-idle loop iterations (no accepts, no bytes, no
+/// scheduler progress) before the loop naps instead of spinning.  The
+/// spin window keeps accept/read latency in the microseconds while a
+/// storm is in progress; the nap caps idle CPU burn.
+const IDLE_SPINS: u32 = 256;
+const IDLE_SLEEP: Duration = Duration::from_millis(1);
+
+/// Error returned by [`ReplySink::recv`] / [`ReplySink::try_recv`] when
+/// no reply line is queued.  Everything runs on one thread, so "empty"
+/// is not "not yet": a reply either is queued or will never be.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecvError;
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("no reply queued in sink")
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+#[derive(Default)]
+struct SinkInner {
+    queue: VecDeque<String>,
+    closed: bool,
+}
+
+/// Reply mailbox for one request, with an observable liveness flag.
+///
+/// The single-threaded successor to the old mpsc `ReplyHandle`: the
+/// scheduler `send`s the protocol reply line into the sink, the event
+/// loop drains it into the owning connection's outbox, and the loop
+/// marks the sink dead the moment it observes the client disconnect —
+/// which is what lets `Scheduler::admit` prune queued work for dead
+/// clients before it ever takes a slot.  Sends into a dead sink are
+/// dropped (the old failed-channel-send semantics).
+#[derive(Clone, Default)]
+pub struct ReplySink {
+    inner: Rc<RefCell<SinkInner>>,
+}
+
+impl ReplySink {
+    pub fn new() -> ReplySink {
+        ReplySink::default()
+    }
+
+    /// Queue a reply line; dropped if the client is already gone.
+    pub fn send(&self, line: String) {
+        let mut inner = self.inner.borrow_mut();
+        if !inner.closed {
+            inner.queue.push_back(line);
+        }
+    }
+
+    /// Has the client been observed gone?
+    pub fn is_dead(&self) -> bool {
+        self.inner.borrow().closed
+    }
+
+    /// Mark the client gone (the event loop saw EOF/error, or a test
+    /// simulating a disconnect).
+    pub fn mark_dead(&self) {
+        self.inner.borrow_mut().closed = true;
+    }
+
+    /// Pop the next queued reply line, if any.
+    pub fn try_recv(&self) -> Result<String, RecvError> {
+        self.inner.borrow_mut().queue.pop_front().ok_or(RecvError)
+    }
+
+    /// Alias of [`ReplySink::try_recv`]; named for the mpsc receiver
+    /// call shape the direct-driving tests and benches use.
+    pub fn recv(&self) -> Result<String, RecvError> {
+        self.try_recv()
+    }
+}
+
+/// Per-client token bucket: `rate_limit_rps` tokens/s refill up to a
+/// `burst` cap; each admitted GENERATE spends one token.  `rps <= 0`
+/// disables limiting (the default).
+struct TokenBucket {
+    rps: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn new(rps: f64, burst: usize) -> TokenBucket {
+        TokenBucket { rps, burst: burst as f64, tokens: burst as f64, last: clock::now() }
+    }
+
+    fn allow(&mut self) -> bool {
+        if self.rps <= 0.0 {
+            return true;
+        }
+        let now = clock::now();
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rps).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// One client connection as a state machine: non-blocking socket, the
+/// current partial line, complete-but-unprocessed lines (strict pipeline
+/// order — only CANCEL overtakes), the in-flight GENERATE's reply sink,
+/// and the bounded write outbox.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes of the current, not-yet-newline-terminated line.
+    rbuf: Vec<u8>,
+    /// Complete lines awaiting processing.
+    pending: VecDeque<String>,
+    /// Framed reply lines awaiting socket writability.
+    outbox: VecDeque<Vec<u8>>,
+    /// Bytes of `outbox.front()` already written.
+    wpos: usize,
+    /// Reply mailbox of the in-flight GENERATE (fresh per request).
+    sink: ReplySink,
+    /// Id of the in-flight GENERATE, if any.
+    inflight: Option<u64>,
+    bucket: TokenBucket,
+    max_new_cap: usize,
+    admit_queue: usize,
+    outbox_lines: usize,
+    /// Stop reading; close once the outbox drains (QUIT, oversized line).
+    close_after_flush: bool,
+    /// EOF observed: disconnect after already-received lines are
+    /// processed (a client's final pipelined command and its FIN can
+    /// arrive in the same read burst).
+    eof: bool,
+    /// Remove this connection from the loop's set.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, cfg: &ServeConfig, max_new_cap: usize) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            pending: VecDeque::new(),
+            outbox: VecDeque::new(),
+            wpos: 0,
+            sink: ReplySink::new(),
+            inflight: None,
+            bucket: TokenBucket::new(cfg.rate_limit_rps, cfg.burst),
+            max_new_cap,
+            admit_queue: cfg.admit_queue,
+            outbox_lines: cfg.outbox_lines,
+            close_after_flush: false,
+            eof: false,
+            dead: false,
+        }
+    }
+
+    /// One readiness pass: read/frame, process pending lines, drain the
+    /// reply sink into the outbox, flush writes.  Returns whether any
+    /// byte or state moved (the loop's idle detector).
+    fn pump(&mut self, exec: &mut dyn ServeExec, next_id: &mut u64) -> bool {
+        let mut activity = self.fill(exec);
+        self.process(exec, next_id);
+        if self.eof {
+            // Disconnect only after `process` has seen the lines that
+            // arrived with the FIN: a GENERATE pipelined right before
+            // the close is still submitted — and then cancelled here,
+            // which is what makes the disconnect observable as a
+            // `cancelled` count rather than silently swallowed work.
+            self.disconnect(exec);
+        }
+        self.drain_sink(exec);
+        activity |= self.flush(exec);
+        if self.close_after_flush && self.outbox.is_empty() && !self.dead {
+            // Clean close: everything queued has been written.
+            self.dead = true;
+            activity = true;
+        }
+        activity
+    }
+
+    /// Non-blocking read: frame complete lines into `pending`, enforcing
+    /// [`MAX_LINE_BYTES`] on every byte as it arrives.  EOF or a read
+    /// error is the disconnect event.
+    fn fill(&mut self, exec: &mut dyn ServeExec) -> bool {
+        if self.dead || self.close_after_flush || self.eof {
+            return false;
+        }
+        let mut buf = [0u8; READ_CHUNK];
+        let mut activity = false;
+        while self.pending.len() < PENDING_MAX {
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.eof = true;
+                    activity = true;
+                    break;
+                }
+                Ok(n) => {
+                    activity = true;
+                    for &b in &buf[..n] {
+                        if b == b'\n' {
+                            let line = String::from_utf8_lossy(&self.rbuf).into_owned();
+                            self.rbuf.clear();
+                            self.pending.push_back(line);
+                        } else {
+                            self.rbuf.push(b);
+                            if self.rbuf.len() > MAX_LINE_BYTES {
+                                // Reject while the oversized line is
+                                // still arriving — never buffer it out.
+                                self.rbuf.clear();
+                                self.pending.clear();
+                                if let Some(id) = self.inflight.take() {
+                                    self.sink.mark_dead();
+                                    exec.cancel(id);
+                                }
+                                self.queue_reply(exec, "ERR line too long");
+                                self.close_after_flush = true;
+                                return true;
+                            }
+                        }
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.disconnect(exec);
+                    break;
+                }
+            }
+        }
+        activity
+    }
+
+    /// Process pending lines in pipeline order.  While a GENERATE is in
+    /// flight only a pipelined `CANCEL` may overtake it (the pending
+    /// GENERATE then replies `ERR cancelled`); other lines wait.
+    fn process(&mut self, exec: &mut dyn ServeExec, next_id: &mut u64) {
+        loop {
+            if self.dead || self.close_after_flush {
+                return;
+            }
+            if let Some(id) = self.inflight {
+                match self.pending.front() {
+                    Some(l) if l.trim() == "CANCEL" => {
+                        self.pending.pop_front();
+                        exec.cancel(id);
+                    }
+                    _ => return,
+                }
+            } else {
+                let Some(line) = self.pending.pop_front() else { return };
+                self.handle_line(exec, &line, next_id);
+            }
+        }
+    }
+
+    fn handle_line(&mut self, exec: &mut dyn ServeExec, line: &str, next_id: &mut u64) {
+        let cmd = match parse_line(line.trim(), self.max_new_cap) {
+            Ok(c) => c,
+            Err(e) => {
+                self.queue_reply(exec, &format!("ERR {e}"));
+                return;
+            }
+        };
+        match cmd {
+            Command::Quit => {
+                self.queue_reply(exec, "OK bye");
+                self.close_after_flush = true;
+            }
+            // Reached only with no generation in flight (in-flight
+            // CANCELs are consumed by `process`).
+            Command::Cancel => self.queue_reply(exec, "ERR nothing in flight"),
+            Command::Stats => {
+                let stats = exec.stats_line();
+                self.queue_reply(exec, &stats);
+            }
+            Command::Generate { max_new, prompt } => {
+                if !self.bucket.allow() {
+                    exec.serve_stats().rate_limited += 1;
+                    self.queue_reply(exec, "ERR rate limited");
+                    return;
+                }
+                if exec.queued() >= self.admit_queue {
+                    exec.serve_stats().shed_busy += 1;
+                    self.queue_reply(exec, "ERR busy");
+                    return;
+                }
+                let id = *next_id;
+                *next_id += 1;
+                self.sink = ReplySink::new();
+                self.inflight = Some(id);
+                exec.submit(Request {
+                    id,
+                    prompt,
+                    max_new,
+                    reply: self.sink.clone(),
+                    enqueued: clock::now(),
+                });
+            }
+        }
+    }
+
+    /// Move finished-generation replies from the sink to the outbox.
+    fn drain_sink(&mut self, exec: &mut dyn ServeExec) {
+        while let Ok(line) = self.sink.try_recv() {
+            self.inflight = None;
+            self.queue_reply(exec, &line);
+            if self.dead {
+                return;
+            }
+        }
+    }
+
+    /// Queue one reply line, enforcing the bounded outbox: a client that
+    /// stops reading past `serve.outbox_lines` queued replies is dropped
+    /// — the loop never stalls on a slow reader.
+    fn queue_reply(&mut self, exec: &mut dyn ServeExec, line: &str) {
+        if self.dead {
+            return;
+        }
+        if self.outbox.len() >= self.outbox_lines {
+            exec.serve_stats().slow_reader_dropped += 1;
+            self.disconnect(exec);
+            return;
+        }
+        let mut framed = Vec::with_capacity(line.len() + 1);
+        framed.extend_from_slice(line.as_bytes());
+        framed.push(b'\n');
+        self.outbox.push_back(framed);
+    }
+
+    /// Non-blocking write of as much outbox as the socket accepts.
+    fn flush(&mut self, exec: &mut dyn ServeExec) -> bool {
+        let mut activity = false;
+        while let Some(front) = self.outbox.front() {
+            match self.stream.write(&front[self.wpos..]) {
+                Ok(0) => break,
+                Ok(n) => {
+                    activity = true;
+                    self.wpos += n;
+                    if self.wpos >= front.len() {
+                        self.outbox.pop_front();
+                        self.wpos = 0;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.disconnect(exec);
+                    break;
+                }
+            }
+        }
+        activity
+    }
+
+    /// The client is gone (EOF, read/write error, slow-reader drop):
+    /// mark the sink dead so queued work is pruned, cancel any in-flight
+    /// generation — the disconnect *is* the cancel event — and drop the
+    /// connection from the loop's set.
+    fn disconnect(&mut self, exec: &mut dyn ServeExec) {
+        if self.dead {
+            return;
+        }
+        self.dead = true;
+        self.sink.mark_dead();
+        self.pending.clear();
+        if let Some(id) = self.inflight.take() {
+            exec.cancel(id);
+        }
+    }
+}
+
+/// The serve event loop: accept (until `max_conns` accepts retire the
+/// listener), pump every connection, step the executor, repeat — all on
+/// the calling thread, which owns the engine.
+///
+/// Exit is an explicit loop condition, not an inference from dead reply
+/// channels: once the listener is retired *and* no connection remains,
+/// nothing can ever submit again, so the loop reaps abandoned work and
+/// returns.  (`max_conns = usize::MAX` serves forever.)
+pub fn event_loop(
+    listener: &TcpListener,
+    exec: &mut dyn ServeExec,
+    max_new_cap: usize,
+    cfg: &ServeConfig,
+    max_conns: usize,
+) -> Result<(), String> {
+    listener.set_nonblocking(true).map_err(|e| format!("listener nonblocking: {e}"))?;
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut accepted = 0usize;
+    let mut next_id: u64 = 1;
+    let mut idle_spins: u32 = 0;
+    loop {
+        let mut activity = false;
+        while accepted < max_conns {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    // Only successful accepts count toward the bound:
+                    // callers size max_conns exactly (tests, benches).
+                    accepted += 1;
+                    activity = true;
+                    match stream.set_nonblocking(true) {
+                        Ok(()) => conns.push(Conn::new(stream, cfg, max_new_cap)),
+                        Err(e) => eprintln!("conn setup error: {e}"),
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    eprintln!("accept error: {e}");
+                    break;
+                }
+            }
+        }
+        exec.serve_stats().open_conns = conns.len();
+        for c in conns.iter_mut() {
+            activity |= c.pump(exec, &mut next_id);
+        }
+        if conns.iter().any(|c| c.dead) {
+            conns.retain(|c| !c.dead);
+            exec.serve_stats().open_conns = conns.len();
+            activity = true;
+        }
+        if exec.has_work() {
+            activity |= exec.step() > 0;
+        }
+        if accepted >= max_conns && conns.is_empty() {
+            exec.reap_all();
+            exec.serve_stats().open_conns = 0;
+            return Ok(());
+        }
+        if activity {
+            idle_spins = 0;
+        } else {
+            idle_spins = idle_spins.saturating_add(1);
+            if idle_spins >= IDLE_SPINS {
+                clock::sleep(IDLE_SLEEP);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_queues_in_order_and_reports_empty() {
+        let sink = ReplySink::new();
+        assert!(sink.try_recv().is_err());
+        sink.send("a".into());
+        sink.send("b".into());
+        assert_eq!(sink.recv().unwrap(), "a");
+        assert_eq!(sink.try_recv().unwrap(), "b");
+        assert!(sink.recv().is_err());
+    }
+
+    #[test]
+    fn dead_sink_drops_sends_and_clones_share_state() {
+        let sink = ReplySink::new();
+        let clone = sink.clone();
+        assert!(!clone.is_dead());
+        sink.mark_dead();
+        assert!(clone.is_dead());
+        clone.send("late".into());
+        assert!(sink.try_recv().is_err());
+    }
+
+    #[test]
+    fn token_bucket_disabled_at_zero_rps() {
+        let mut b = TokenBucket::new(0.0, 1);
+        for _ in 0..1000 {
+            assert!(b.allow());
+        }
+    }
+
+    #[test]
+    fn token_bucket_spends_burst_then_refuses() {
+        // Refill so slow (1 token per 10k seconds) the test window adds
+        // nothing: exactly `burst` spends succeed.
+        let mut b = TokenBucket::new(0.0001, 3);
+        assert!(b.allow());
+        assert!(b.allow());
+        assert!(b.allow());
+        assert!(!b.allow());
+        assert!(!b.allow());
+    }
+}

@@ -1,12 +1,16 @@
 //! Real serving mode: a TCP line-protocol server over the real engine
-//! (the offline crate set has no tokio/hyper; std::net + threads is the
-//! substrate we build instead).
+//! (the offline crate set has no tokio/hyper; std::net with
+//! `set_nonblocking` and a polled connection set is the substrate we
+//! build instead).
 //!
 //! Protocol (UTF-8 lines):
 //!
 //! ```text
 //! C: GENERATE <max_new_tokens> <tok> <tok> ...\n
 //! S: OK <tok> <tok> ... | rounds=<n> accept=<rate>\n
+//!    (or `ERR busy` — the admission queue is full, `serve.admit_queue`;
+//!     or `ERR rate limited` — the connection's token bucket is empty,
+//!     `serve.rate_limit_rps` / `serve.burst`)
 //! C: CANCEL\n            (only meaningful while a GENERATE is in flight)
 //! S: -                   (no reply of its own: the pending GENERATE
 //!                         replies `ERR cancelled`; a CANCEL with nothing
@@ -19,11 +23,18 @@
 //!       cancelled=<n> failed=<n> reaped=<n> deadline_expired=<n>
 //!       preempted=<n> kv_swap_bytes=<n> kv_blocks=<n> kv_shared=<n>
 //!       handoffs=<n> pf_wait_ms=<t> dc_wait_ms=<t> pf_occ=<x> dc_occ=<x>
+//!       rate_limited=<n> shed_busy=<n> slow_reader_dropped=<n>
+//!       open_conns=<n>
 //!       g_learned=<0|1> queued=<n> live=<n> decode_q=<n> prefill_q=<n>\n
 //!                                                 (one line on the wire)
 //! C: QUIT\n
 //! S: OK bye\n
 //! ```
+//!
+//! A single request line is capped at [`conn::MAX_LINE_BYTES`]; the cap
+//! is enforced incrementally during framing, so a line that crosses it
+//! is refused (`ERR line too long`, connection closed) while its bytes
+//! are still arriving.
 //!
 //! GENERATE's `accept` is the speculative-decoding acceptance rate
 //! Σ accepted / Σ proposed over the request's rounds (independent of the
@@ -61,32 +72,47 @@
 //! splits of the old single queue-wait), `pf_occ` / `dc_occ` (mean
 //! per-pool slot occupancy in [0,1], sampled each coordinator
 //! iteration; in single-pool mode both read 0)
+//! — the front-end flow-control counters — `rate_limited` (GENERATEs
+//! refused `ERR rate limited` by a connection's token bucket),
+//! `shed_busy` (GENERATEs refused `ERR busy` by the bounded admission
+//! queue), `slow_reader_dropped` (connections dropped because their
+//! bounded reply outbox overflowed — a client that stopped reading),
+//! `open_conns` (connections currently held by the event loop — a
+//! gauge, not a counter)
 //! — `g_learned` — 1 when the Eq. 3 optimizer is driven by the learned
 //! state-monitor delay curve, 0 while it still falls back to the static
 //! `GModel` calibration — and the current queue depth / live session
 //! count.
 //!
-//! Concurrency model: the engine is not thread-safe (one backend client),
-//! so a single worker thread owns it and connections are multiplexed
-//! through a channel.  Unlike the original serial worker (one whole
-//! request at a time), the worker drives a continuous-batching
-//! [`scheduler::Scheduler`]: up to `--max-sessions` live sessions
-//! interleave at prefill-chunk / verify-round granularity, with prefill
-//! admitted under a `--prefill-budget` token budget per iteration and
-//! chunk sizes from the Eq. 3 optimizer.  Losslessness makes the
-//! interleaving invisible in each connection's output: bit-for-bit under
-//! greedy decoding (`temperature = 0`, the default), and token-identical
-//! to a serial seeded run under stochastic sampling, because every
-//! session's draws are keyed by `(seed, context position)` rather than by
-//! call order.
+//! Concurrency model: the engine is not thread-safe (one backend
+//! client), so ONE thread owns it — and, since this refactor, that same
+//! thread owns the listener and every client connection.  There are no
+//! per-connection threads and no reply channels: [`conn::event_loop`] is
+//! a non-blocking readiness loop that accepts, reads, parses, submits,
+//! writes and *steps the scheduler* in one cycle, with each connection a
+//! [`conn`] state machine and each in-flight request's reply routed
+//! through a single-threaded [`conn::ReplySink`].  The worker drives a
+//! continuous-batching [`scheduler::Scheduler`]: up to `--max-sessions`
+//! live sessions interleave at prefill-chunk / verify-round granularity,
+//! with prefill admitted under a `--prefill-budget` token budget per
+//! iteration and chunk sizes from the Eq. 3 optimizer.  Losslessness
+//! makes the interleaving invisible in each connection's output:
+//! bit-for-bit under greedy decoding (`temperature = 0`, the default),
+//! and token-identical to a serial seeded run under stochastic sampling,
+//! because every session's draws are keyed by `(seed, context position)`
+//! rather than by call order.
 //!
-//! Session lifecycle: while a GENERATE is in flight its connection thread
-//! keeps watching the socket ([`handle_conn`]'s reply wait).  A client
-//! that disconnects mid-generation — or pipelines a `CANCEL` line — has
-//! its request cancelled at the scheduler's next iteration boundary: the
-//! slot is freed and the session's KV dropped instead of the old
-//! behaviour of running the abandoned generation to completion into a
-//! dead channel while live clients queued for the slot.
+//! Session lifecycle: because connection liveness is observed by the
+//! engine-owning loop itself, a client that disconnects mid-generation —
+//! or pipelines a `CANCEL` line — has its request cancelled at the next
+//! iteration boundary as a direct *event* (the EOF read), not via the
+//! old timeout-bounded socket probe: the slot is freed and the session's
+//! KV dropped instead of running the abandoned generation to completion
+//! into a dead channel while live clients queued for the slot.  Slow
+//! readers cannot stall the loop either: replies drain through a bounded
+//! per-connection outbox on writability, and a connection whose outbox
+//! overflows is dropped (`slow_reader_dropped`), its generation
+//! cancelled through the same path.
 //!
 //! Preemption: with `[serve] priority = preempt` (or `--priority
 //! preempt`), a full scheduler with waiting admissions parks a live
@@ -100,7 +126,7 @@
 //!
 //! Disaggregation: with `[serve] prefill_workers = N` and
 //! `decode_workers = M` both set (or `--prefill-workers` /
-//! `--decode-workers`), the worker drives a [`pools::PdScheduler`]
+//! `--decode-workers`), the loop drives a [`pools::PdScheduler`]
 //! instead of one [`scheduler::Scheduler`]: a throughput-oriented
 //! prefill pool (N slots) and a latency-oriented decode pool (M slots),
 //! each with its own engine, batcher queue and per-phase g^t monitor,
@@ -112,25 +138,19 @@
 //! single-pool scheduler.  See [`pools`] for the discipline and seam
 //! lifecycle.
 
+pub mod conn;
 pub mod pools;
 pub mod scheduler;
 
-use std::collections::VecDeque;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::time::Duration;
-
-use crate::util::clock;
+use std::net::TcpListener;
 
 use crate::cli::Flags;
 use crate::config::{AdmitPolicy, PriorityMode, ServeConfig, SpecDecConfig};
 use crate::engine::Engine;
 use crate::specdec::{chunk_sizes, Session};
 
-use pools::{PdScheduler, ServeExec};
-use scheduler::{ReplyHandle, Request, Scheduler};
+use pools::PdScheduler;
+use scheduler::Scheduler;
 
 /// A parsed request.
 #[derive(Debug, PartialEq)]
@@ -253,271 +273,14 @@ pub fn generate(
     Ok(Generation { tokens: out, rounds, proposed, accepted })
 }
 
-enum WorkerMsg {
-    Gen(Request),
-    /// Cancel the GENERATE with this [`Request::id`]: the connection
-    /// thread observed its client disconnect mid-generation, or the
-    /// client sent an explicit `CANCEL`.
-    Cancel { id: u64 },
-    Stats { reply: mpsc::Sender<String> },
-}
-
-/// The engine-owning worker: a continuous-batching scheduler loop.  New
-/// commands are drained between iterations (blocking only when fully
-/// idle), so cancels land at iteration boundaries; GENERATE replies are
-/// sent by the scheduler when each request finishes, so concurrent
-/// connections interleave at chunk/round granularity instead of
-/// head-of-line blocking.
-///
-/// Exit: when the command channel disconnects, the listener and every
-/// connection thread (each held a `Sender` clone) are gone, so every
-/// in-flight reply channel is provably dead — the worker reaps the
-/// remaining work and returns promptly instead of the old drain that ran
-/// abandoned generations to completion and only then noticed via a
-/// `recv()` error (spinning a `try_recv` per iteration on the way).
-fn worker_loop(
-    engine: Engine,
-    spec_cfg: SpecDecConfig,
-    serve_cfg: ServeConfig,
-    rx: mpsc::Receiver<WorkerMsg>,
-) {
-    if serve_cfg.prefill_workers > 0 && serve_cfg.decode_workers > 0 {
-        // Disaggregated path: the prefill pool runs on this engine, the
-        // decode pool on a sibling sharing its KV pool (block tables
-        // must be valid across the handoff).  Both live on this one
-        // thread — the backend is not Send; the split is in iteration
-        // composition, not threads.
-        match engine.sibling() {
-            Ok(decode_engine) => {
-                match PdScheduler::new(&engine, &decode_engine, spec_cfg, serve_cfg) {
-                    Ok(mut sched) => return drive(&mut sched, &rx),
-                    Err(e) => {
-                        eprintln!("serve: disaggregated pools unavailable ({e}); exiting");
-                        return;
-                    }
-                }
-            }
-            Err(e) => {
-                eprintln!("serve: sibling engine for decode pool failed ({e}); exiting");
-                return;
-            }
-        }
-    }
-    let mut sched = Scheduler::new(&engine, spec_cfg, serve_cfg);
-    drive(&mut sched, &rx);
-}
-
-/// The executor-generic worker body: drains commands between iterations
-/// (blocking only when fully idle) and steps the scheduler — single-pool
-/// or disaggregated, anything behind [`ServeExec`].
-fn drive(sched: &mut dyn ServeExec, rx: &mpsc::Receiver<WorkerMsg>) {
-    let mut connected = true;
-    loop {
-        loop {
-            // `connected` is always true here: both setters below yield
-            // None, breaking this loop into the reap-and-return exit.
-            let msg = if sched.has_work() {
-                match rx.try_recv() {
-                    Ok(m) => Some(m),
-                    Err(mpsc::TryRecvError::Empty) => None,
-                    Err(mpsc::TryRecvError::Disconnected) => {
-                        connected = false;
-                        None
-                    }
-                }
-            } else {
-                match rx.recv() {
-                    Ok(m) => Some(m),
-                    Err(_) => {
-                        connected = false;
-                        None
-                    }
-                }
-            };
-            match msg {
-                Some(WorkerMsg::Gen(req)) => sched.submit(req),
-                Some(WorkerMsg::Cancel { id }) => {
-                    sched.cancel(id);
-                }
-                Some(WorkerMsg::Stats { reply }) => {
-                    let _ = reply.send(sched.stats_line());
-                }
-                None => break,
-            }
-        }
-        if !connected {
-            sched.reap_all();
-            return;
-        }
-        sched.step();
-    }
-}
-
-/// Monotonic GENERATE identity for targeted cancellation — the
-/// connection thread needs the id before the worker ever sees the
-/// request, so it cannot be scheduler-assigned.
-static NEXT_REQ_ID: AtomicU64 = AtomicU64::new(1);
-
-/// How often a connection's reply wait polls its socket for
-/// disconnect / pipelined CANCEL.
-const REPLY_POLL: Duration = Duration::from_millis(10);
-
-/// Wait for an in-flight generation's reply while watching the
-/// connection.  A client that disconnects mid-generation (reader EOF or
-/// error) is the whole point of this loop: its reply handle is marked
-/// dead and a cancel forwarded to the worker, so the scheduler frees the
-/// slot instead of running the abandoned generation to completion.  A
-/// pipelined `CANCEL` line is the explicit form of the same thing (the
-/// pending GENERATE then replies `ERR cancelled`); other pipelined lines
-/// are queued for the main loop.  Returns false when the client is gone.
-#[allow(clippy::too_many_arguments)]
-fn await_reply(
-    stream: &mut TcpStream,
-    reader: &mut BufReader<TcpStream>,
-    pending: &mut VecDeque<String>,
-    partial: &mut String,
-    rrx: &mpsc::Receiver<String>,
-    reply: &ReplyHandle,
-    tx: &mpsc::Sender<WorkerMsg>,
-    id: u64,
-) -> std::io::Result<bool> {
-    // The *socket* read is the blocking poll (bounded by REPLY_POLL) and
-    // the reply check is non-blocking: an already-closed connection or an
-    // already-pipelined CANCEL is then acted on immediately on entry,
-    // before the generation can make progress — not after a reply-wait
-    // timeout it might win.  `partial` is the caller's buffer: a command
-    // prefix read here but not yet newline-terminated when the reply
-    // arrives must survive into the main loop's next read, not be
-    // dropped.
-    stream.set_read_timeout(Some(REPLY_POLL))?;
-    let alive = loop {
-        match rrx.try_recv() {
-            Ok(result) => {
-                writeln!(stream, "{result}")?;
-                break true;
-            }
-            Err(mpsc::TryRecvError::Disconnected) => {
-                writeln!(stream, "ERR worker gone")?;
-                break true;
-            }
-            Err(mpsc::TryRecvError::Empty) => {}
-        }
-        // Poll the socket.  On timeout, bytes read so far stay appended
-        // to `partial` (the protocol is ASCII, so no partial-UTF-8 loss)
-        // and the next poll continues the line.
-        match reader.read_line(partial) {
-            Ok(0) => {
-                reply.mark_dead();
-                let _ = tx.send(WorkerMsg::Cancel { id });
-                break false;
-            }
-            Ok(_) => {
-                if partial.ends_with('\n') {
-                    let line = std::mem::take(partial);
-                    if line.trim() == "CANCEL" {
-                        let _ = tx.send(WorkerMsg::Cancel { id });
-                    } else {
-                        pending.push_back(line);
-                    }
-                }
-            }
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock
-                        | std::io::ErrorKind::TimedOut
-                        | std::io::ErrorKind::Interrupted
-                ) => {}
-            Err(_) => {
-                reply.mark_dead();
-                let _ = tx.send(WorkerMsg::Cancel { id });
-                break false;
-            }
-        }
-    };
-    stream.set_read_timeout(None)?;
-    Ok(alive)
-}
-
-fn handle_conn(
-    mut stream: TcpStream,
-    tx: &mpsc::Sender<WorkerMsg>,
-    max_new_cap: usize,
-) -> std::io::Result<()> {
-    let peer = stream.peer_addr()?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    // Lines the client pipelined while a generation was in flight, and
-    // the prefix of a line whose tail had not arrived when the last
-    // reply wait ended.
-    let mut pending: VecDeque<String> = VecDeque::new();
-    let mut partial = String::new();
-    loop {
-        let next = match pending.pop_front() {
-            Some(l) => l,
-            None => {
-                // Blocking read; continues any partial line left over
-                // from a reply wait instead of dropping those bytes.
-                if reader.read_line(&mut partial)? == 0 {
-                    return Ok(());
-                }
-                std::mem::take(&mut partial)
-            }
-        };
-        let cmd = match parse_line(next.trim(), max_new_cap) {
-            Ok(c) => c,
-            Err(e) => {
-                writeln!(stream, "ERR {e}")?;
-                continue;
-            }
-        };
-        match cmd {
-            Command::Quit => {
-                writeln!(stream, "OK bye")?;
-                return Ok(());
-            }
-            Command::Cancel => {
-                // Reached only with no generation in flight (in-flight
-                // CANCELs are consumed by await_reply).
-                writeln!(stream, "ERR nothing in flight")?;
-            }
-            Command::Stats => {
-                let (rtx, rrx) = mpsc::channel();
-                let _ = tx.send(WorkerMsg::Stats { reply: rtx });
-                writeln!(stream, "{}", rrx.recv().unwrap_or_else(|_| "ERR worker gone".into()))?;
-            }
-            Command::Generate { max_new, prompt } => {
-                let id = NEXT_REQ_ID.fetch_add(1, Ordering::Relaxed);
-                let (rtx, rrx) = mpsc::channel();
-                let reply = ReplyHandle::new(rtx);
-                let _ = tx.send(WorkerMsg::Gen(Request {
-                    id,
-                    prompt,
-                    max_new,
-                    reply: reply.clone(),
-                    enqueued: clock::now(),
-                }));
-                let alive = await_reply(
-                    &mut stream,
-                    &mut reader,
-                    &mut pending,
-                    &mut partial,
-                    &rrx,
-                    &reply,
-                    tx,
-                    id,
-                )?;
-                if !alive {
-                    return Ok(()); // client disconnected mid-generation
-                }
-            }
-        }
-        let _ = peer; // keep for logging hooks
-    }
-}
-
 /// Run the serve loop on an already-bound listener (the testable core of
 /// [`cmd_serve`]; binding is the caller's job so tests can use port 0).
-/// Accepts at most `max_conns` connections, then returns.
+/// Accepts at most `max_conns` connections, then — once the last of them
+/// closes — returns.
+///
+/// Everything runs on the calling thread: the engine (whose backend
+/// client is `!Send`), the scheduler, the listener and every connection,
+/// multiplexed by [`conn::event_loop`].
 pub fn serve_listener(
     listener: TcpListener,
     spec_cfg: SpecDecConfig,
@@ -525,67 +288,47 @@ pub fn serve_listener(
     max_conns: usize,
 ) -> Result<(), String> {
     let max_new_cap = spec_cfg.max_new_tokens;
-    // The engine (backend client) is !Send: construct it inside its owning
-    // worker thread and hand back only the ready/failed signal.
-    let (tx, rx) = mpsc::channel::<WorkerMsg>();
-    let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-    std::thread::spawn(move || match Engine::load_default() {
-        Ok(engine) => {
-            let _ = ready_tx.send(Ok(()));
-            worker_loop(engine, spec_cfg, serve_cfg, rx);
-        }
-        Err(e) => {
-            let _ = ready_tx.send(Err(e.to_string()));
-        }
-    });
-    ready_rx
-        .recv()
-        .map_err(|_| "engine worker died".to_string())?
-        .map_err(|e| format!("engine load: {e}"))?;
-
-    let mut served = 0usize;
-    for stream in listener.incoming() {
-        match stream {
-            Ok(s) => {
-                let tx = tx.clone();
-                std::thread::spawn(move || {
-                    if let Err(e) = handle_conn(s, &tx, max_new_cap) {
-                        eprintln!("conn error: {e}");
-                    }
-                });
-                // Only successful accepts count toward the bound: callers
-                // size max_conns exactly (tests, examples), and a transient
-                // accept error must not strand the last expected client.
-                served += 1;
-            }
-            Err(e) => eprintln!("accept error: {e}"),
-        }
-        if served >= max_conns {
-            break; // test hook: bounded accept loop
-        }
+    let engine = Engine::load_default().map_err(|e| format!("engine load: {e}"))?;
+    if serve_cfg.prefill_workers > 0 && serve_cfg.decode_workers > 0 {
+        // Disaggregated path: the prefill pool runs on this engine, the
+        // decode pool on a sibling sharing its KV pool (block tables
+        // must be valid across the handoff).  Both live on this one
+        // thread — the backend is not Send; the split is in iteration
+        // composition, not threads.
+        let decode_engine = engine
+            .sibling()
+            .map_err(|e| format!("serve: sibling engine for decode pool failed ({e})"))?;
+        let mut sched = PdScheduler::new(&engine, &decode_engine, spec_cfg, serve_cfg.clone())
+            .map_err(|e| format!("serve: disaggregated pools unavailable ({e})"))?;
+        return conn::event_loop(&listener, &mut sched, max_new_cap, &serve_cfg, max_conns);
     }
-    Ok(())
+    let mut sched = Scheduler::new(&engine, spec_cfg, serve_cfg.clone());
+    conn::event_loop(&listener, &mut sched, max_new_cap, &serve_cfg, max_conns)
 }
 
 /// `hat serve --addr 127.0.0.1:7071 [--config FILE] [--max-sessions N]
 /// [--prefill-budget T] [--policy fifo|sjf] [--deadline-ms T]
 /// [--prefill-workers N] [--decode-workers M]
-/// [--max-conns N] [--temperature X] [--top-k-sample N] [--top-p X]
-/// [--rep-penalty X] [--seed N] [--verify-mode coupled|rejection]`
+/// [--max-conns N] [--rate-limit X] [--temperature X] [--top-k-sample N]
+/// [--top-p X] [--rep-penalty X] [--seed N]
+/// [--verify-mode coupled|rejection]`
 ///
 /// `--config` reuses the experiment-config format: its `[specdec]` section
 /// (eta, max_draft, top_k, max_new_tokens, plus the sampling keys
 /// temperature, top_k_sample, top_p, rep_penalty, seed, verify_mode) and
 /// `[serve]` section (max_sessions, prefill_budget, min_chunk, max_chunk,
 /// alpha, pipeline_len, policy, sjf_aging_ms, deadline_ms, priority,
-/// prefill_workers, decode_workers)
+/// prefill_workers, decode_workers, rate_limit_rps, burst, admit_queue,
+/// outbox_lines)
 /// govern serving;
 /// the flags override the file.  `--temperature 0` (the default) is greedy
 /// decoding; with a positive temperature every session samples with the
 /// shared `--seed`, position-keyed per session.  `--prefill-workers` and
 /// `--decode-workers` (set together) switch the worker to the
 /// disaggregated P/D pools; `--max-sessions` then only applies to the
-/// single-pool fallback.
+/// single-pool fallback.  `--rate-limit X` sets the per-connection token
+/// bucket to X GENERATEs per second (refill rate; `serve.burst` caps the
+/// bucket) — 0, the default, disables limiting.
 pub fn cmd_serve(f: &Flags) -> Result<(), String> {
     let addr = f.get("addr").unwrap_or("127.0.0.1:7071").to_string();
     let (mut spec_cfg, mut serve_cfg) = match f.get("config") {
@@ -629,6 +372,12 @@ pub fn cmd_serve(f: &Flags) -> Result<(), String> {
             "--prefill-workers and --decode-workers must be set together (both > 0)".into()
         );
     }
+    if let Some(r) = f.get_f64("rate-limit")? {
+        if r < 0.0 {
+            return Err("--rate-limit must be >= 0".into());
+        }
+        serve_cfg.rate_limit_rps = r;
+    }
     if let Some(t) = f.get_f64("temperature")? {
         if t < 0.0 {
             return Err("--temperature must be >= 0".into());
@@ -669,7 +418,11 @@ pub fn cmd_serve(f: &Flags) -> Result<(), String> {
 
 #[cfg(test)]
 mod tests {
+    use super::conn::ReplySink;
+    use super::scheduler::Request;
     use super::*;
+    use crate::util::clock;
+    use std::time::Duration;
 
     const CAP: usize = 512;
 
@@ -722,24 +475,24 @@ mod tests {
         let parse_err = parse_line("GENERATE 600 1", cap).unwrap_err();
         let mut sched =
             Scheduler::new(&engine, SpecDecConfig::default(), ServeConfig::default());
-        let (tx, rx) = mpsc::channel();
+        let rx = ReplySink::new();
         sched.submit(Request {
             id: 1,
             prompt: vec![1],
             max_new: 600,
-            reply: ReplyHandle::new(tx),
+            reply: rx.clone(),
             enqueued: clock::now(),
         });
         assert_eq!(rx.recv().unwrap(), format!("ERR {parse_err}"));
 
         let parse_err = parse_line("GENERATE 4", cap).unwrap_err();
         assert_eq!(parse_err, "empty prompt");
-        let (tx, rx) = mpsc::channel();
+        let rx = ReplySink::new();
         sched.submit(Request {
             id: 2,
             prompt: vec![],
             max_new: 4,
-            reply: ReplyHandle::new(tx),
+            reply: rx.clone(),
             enqueued: clock::now(),
         });
         assert_eq!(rx.recv().unwrap(), format!("ERR {parse_err}"));
@@ -748,36 +501,33 @@ mod tests {
 
     #[test]
     fn worker_exits_promptly_after_last_connection_closes() {
-        // Regression for the worker's shutdown path: with the command
-        // channel disconnected, the old loop finished all admitted work
-        // first (spinning a try_recv per iteration) and only exited via a
-        // recv() error once idle — an abandoned long generation kept the
-        // thread alive arbitrarily.  Every reply channel is provably dead
-        // at that point, so the worker must reap and return promptly.
-        let (tx, rx) = mpsc::channel();
-        let (done_tx, done_rx) = mpsc::channel();
+        // Regression for the serve loop's shutdown path: exit is an
+        // explicit loop condition — listener retired (accept budget
+        // spent) and no open connections — not an inference from dead
+        // reply channels.  The old loop finished all admitted work first
+        // and only noticed via a recv() error once idle; an abandoned
+        // long generation kept the thread alive arbitrarily.  The loop
+        // must reap the abandoned generation and return promptly.
+        use std::io::Write as _;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
         std::thread::spawn(move || {
-            // The engine's backend client is !Send: build it in the
-            // owning thread, exactly like serve_listener does.
-            let engine = Engine::synthetic();
-            worker_loop(engine, SpecDecConfig::default(), ServeConfig::default(), rx);
-            let _ = done_tx.send(());
+            let r =
+                serve_listener(listener, SpecDecConfig::default(), ServeConfig::default(), 1);
+            let _ = done_tx.send(r);
         });
-        // A long generation whose client vanishes immediately.
-        let (rtx, rrx) = mpsc::channel();
-        tx.send(WorkerMsg::Gen(Request {
-            id: 1,
-            prompt: (0u32..64).map(|i| (i * 7 + 3) % 256).collect(),
-            max_new: 200,
-            reply: ReplyHandle::new(rtx),
-            enqueued: clock::now(),
-        }))
-        .unwrap();
-        drop(rrx);
-        drop(tx);
+        {
+            // A long generation whose client vanishes immediately.
+            let mut c = std::net::TcpStream::connect(addr).unwrap();
+            let prompt: Vec<String> =
+                (0u32..64).map(|i| ((i * 7 + 3) % 256).to_string()).collect();
+            writeln!(c, "GENERATE 200 {}", prompt.join(" ")).unwrap();
+        }
         done_rx
             .recv_timeout(Duration::from_secs(20))
-            .expect("worker did not exit after the last connection closed");
+            .expect("serve loop did not exit after the last connection closed")
+            .unwrap();
     }
 
     #[test]

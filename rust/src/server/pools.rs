@@ -76,6 +76,14 @@ pub trait ServeExec {
     fn step(&mut self) -> usize;
     /// Sessions currently holding slots (across all pools).
     fn live_sessions(&self) -> usize;
+    /// Requests queued but not yet holding a slot (across all pools) —
+    /// the depth the front end's `serve.admit_queue` bound sheds
+    /// against.
+    fn queued(&self) -> usize;
+    /// The stats block the connection layer's flow-control counters
+    /// (`rate_limited`, `shed_busy`, `slow_reader_dropped`, the
+    /// `open_conns` gauge) are recorded into.
+    fn serve_stats(&mut self) -> &mut ServeStats;
     /// The full `OK …` STATS reply line (runtime counters + scheduler
     /// aggregates).
     fn stats_line(&mut self) -> String;
@@ -122,6 +130,12 @@ impl<'e> ServeExec for Scheduler<'e> {
     }
     fn live_sessions(&self) -> usize {
         Scheduler::live_sessions(self)
+    }
+    fn queued(&self) -> usize {
+        Scheduler::queued(self)
+    }
+    fn serve_stats(&mut self) -> &mut ServeStats {
+        &mut self.stats
     }
     fn stats_line(&mut self) -> String {
         self.refresh_kv_stats();
@@ -372,6 +386,17 @@ impl<'e> ServeExec for PdScheduler<'e> {
         PdScheduler::live_sessions(self)
     }
 
+    fn queued(&self) -> usize {
+        PdScheduler::queued(self)
+    }
+
+    /// Front-end counters live on the decode side (they are summed, not
+    /// doubled, by [`PdScheduler::merged_stats`] — the prefill pool's
+    /// stay zero).
+    fn serve_stats(&mut self) -> &mut ServeStats {
+        &mut self.decode.stats
+    }
+
     fn stats_line(&mut self) -> String {
         let mut rt = self.prefill.engine().reg.stats();
         let rt2 = self.decode.engine().reg.stats();
@@ -391,22 +416,21 @@ impl<'e> ServeExec for PdScheduler<'e> {
 mod tests {
     use super::*;
     use crate::model::TokenId;
+    use crate::server::conn::ReplySink;
     use crate::server::generate;
-    use crate::server::scheduler::ReplyHandle;
     use crate::util::clock;
     use std::sync::atomic::{AtomicU64, Ordering};
-    use std::sync::mpsc;
 
     static NEXT_ID: AtomicU64 = AtomicU64::new(1_000_000);
 
-    fn req(prompt: Vec<TokenId>, max_new: usize) -> (Request, mpsc::Receiver<String>) {
-        let (tx, rx) = mpsc::channel();
+    fn req(prompt: Vec<TokenId>, max_new: usize) -> (Request, ReplySink) {
+        let rx = ReplySink::new();
         (
             Request {
                 id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
                 prompt,
                 max_new,
-                reply: ReplyHandle::new(tx),
+                reply: rx.clone(),
                 enqueued: clock::now(),
             },
             rx,

@@ -40,8 +40,6 @@
 //! never drive a session admitted after it was queued.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::cloud::state_monitor::StateMonitor;
@@ -53,6 +51,7 @@ use crate::model::{CloudStream, TokenId};
 use crate::specdec::Session;
 use crate::util::clock;
 
+use super::conn::ReplySink;
 use super::Generation;
 
 /// Panic firewall for the serve hot path: run a session/engine call and
@@ -78,46 +77,6 @@ fn catch<T>(what: &str, f: impl FnOnce() -> anyhow::Result<T>) -> anyhow::Result
     }
 }
 
-/// Reply channel for one request, with an observable liveness flag.
-///
-/// `std::sync::mpsc` offers no way to ask whether a receiver is still
-/// alive without sending into it, so the connection thread that owns the
-/// receiver marks its handle dead when it observes the client disconnect
-/// (reader EOF in [`super::handle_conn`]'s reply wait) — that is what
-/// lets [`Scheduler::admit`] prune queued work for dead clients *before*
-/// it ever takes a slot.  A failed send records deadness too, covering
-/// receivers dropped without a mark.
-#[derive(Clone)]
-pub struct ReplyHandle {
-    tx: mpsc::Sender<String>,
-    dead: Arc<AtomicBool>,
-}
-
-impl ReplyHandle {
-    pub fn new(tx: mpsc::Sender<String>) -> ReplyHandle {
-        ReplyHandle { tx, dead: Arc::new(AtomicBool::new(false)) }
-    }
-
-    /// Send a reply line; a failed send (receiver gone) marks the handle
-    /// dead so later liveness checks prune without retrying.
-    pub fn send(&self, line: String) {
-        if self.tx.send(line).is_err() {
-            self.dead.store(true, Ordering::Relaxed);
-        }
-    }
-
-    /// Has the client been observed gone?
-    pub fn is_dead(&self) -> bool {
-        self.dead.load(Ordering::Relaxed)
-    }
-
-    /// Mark the client gone (connection thread saw EOF/error, or a test
-    /// simulating a disconnect).
-    pub fn mark_dead(&self) {
-        self.dead.store(true, Ordering::Relaxed);
-    }
-}
-
 /// One GENERATE request submitted to the scheduler.
 pub struct Request {
     /// Caller-assigned identity for targeted cancellation
@@ -128,7 +87,7 @@ pub struct Request {
     pub max_new: usize,
     /// Where the protocol reply line is sent when the request finishes
     /// (or fails / is cancelled).
-    pub reply: ReplyHandle,
+    pub reply: ReplySink,
     /// Arrival time (queue-wait, TTFT and the deadline are measured from
     /// here).
     pub enqueued: Instant,
@@ -153,7 +112,7 @@ pub(super) struct Active<'e> {
     rounds: usize,
     proposed: usize,
     accepted: usize,
-    pub(super) reply: ReplyHandle,
+    pub(super) reply: ReplySink,
     pub(super) enqueued: Instant,
     admitted: Instant,
     first_token: Option<Instant>,
@@ -179,7 +138,7 @@ impl<'e, P> Staged<'e, P> {
     fn stream(&mut self) -> &mut CloudStream {
         &mut self.a.sess.cloud
     }
-    fn reply(&self) -> &ReplyHandle {
+    fn reply(&self) -> &ReplySink {
         &self.a.reply
     }
 }
@@ -417,11 +376,10 @@ impl<'e> Scheduler<'e> {
     }
 
     /// Tear down every waiting and live request without sending replies.
-    /// The worker calls this when its command channel disconnects: every
-    /// connection thread held a `Sender` clone, so none are left and
-    /// every reply channel is provably dead — finishing the remaining
-    /// work would only burn compute into dead channels.  Counted as
-    /// `reaped`.
+    /// The event loop calls this on exit, once the listener is retired
+    /// and the last connection is gone: every reply sink is provably
+    /// dead, so finishing the remaining work would only burn compute
+    /// into dead sinks.  Counted as `reaped`.
     pub fn reap_all(&mut self) {
         self.stats.reaped += self.waiting.len() as u64;
         self.waiting.clear();
@@ -757,7 +715,7 @@ impl<'e> Scheduler<'e> {
     /// submit-time rejections included, so submissions reconcile against
     /// `finished + failed + cancelled + deadline_expired + reaped +
     /// queued + live`.
-    fn fail(&mut self, reply: &ReplyHandle, e: impl std::fmt::Display) {
+    fn fail(&mut self, reply: &ReplySink, e: impl std::fmt::Display) {
         reply.send(format!("ERR {e}"));
         self.stats.failed += 1;
     }
@@ -1133,36 +1091,32 @@ impl<'e> Scheduler<'e> {
 mod tests {
     use super::*;
     use crate::server::generate;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
-    fn req(prompt: Vec<TokenId>, max_new: usize) -> (Request, mpsc::Receiver<String>) {
-        let (tx, rx) = mpsc::channel();
+    fn req(prompt: Vec<TokenId>, max_new: usize) -> (Request, ReplySink) {
+        let rx = ReplySink::new();
         (
             Request {
                 id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
                 prompt,
                 max_new,
-                reply: ReplyHandle::new(tx),
+                reply: rx.clone(),
                 enqueued: clock::now(),
             },
             rx,
         )
     }
 
-    /// Like [`req`] but every request replies into one shared channel, so
+    /// Like [`req`] but every request replies into one shared sink, so
     /// the receive order *is* the completion order.
-    fn req_shared(
-        tx: &mpsc::Sender<String>,
-        prompt: Vec<TokenId>,
-        max_new: usize,
-    ) -> Request {
+    fn req_shared(tx: &ReplySink, prompt: Vec<TokenId>, max_new: usize) -> Request {
         Request {
             id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
             prompt,
             max_new,
-            reply: ReplyHandle::new(tx.clone()),
+            reply: tx.clone(),
             enqueued: clock::now(),
         }
     }
@@ -1593,7 +1547,7 @@ mod tests {
 
     fn completion_token_counts(
         sched: &mut Scheduler<'_>,
-        rx: &mpsc::Receiver<String>,
+        rx: &ReplySink,
         n: usize,
     ) -> Vec<usize> {
         drain(sched);
@@ -1612,7 +1566,7 @@ mod tests {
         // and distinct max_new (the reply's token count identifies the
         // request).  Shared reply channel: receive order = finish order.
         let engine = Engine::synthetic();
-        fn submit_all(sched: &mut Scheduler<'_>, tx: &mpsc::Sender<String>) {
+        fn submit_all(sched: &mut Scheduler<'_>, tx: &ReplySink) {
             sched.submit(req_shared(tx, (0u32..60).map(|i| (i * 3 + 1) % 256).collect(), 3));
             sched.submit(req_shared(tx, (0u32..30).map(|i| (i * 5 + 2) % 256).collect(), 4));
             sched.submit(req_shared(tx, vec![7, 3, 200, 41, 5, 9, 2, 14], 5));
@@ -1626,8 +1580,8 @@ mod tests {
             ..ServeConfig::default()
         };
         let mut sched = Scheduler::new(&engine, SpecDecConfig::default(), cfg);
-        let (tx, rx) = mpsc::channel();
-        submit_all(&mut sched, &tx);
+        let rx = ReplySink::new();
+        submit_all(&mut sched, &rx);
         assert_eq!(completion_token_counts(&mut sched, &rx, 3), vec![5, 4, 3]);
 
         // Aging bound 0: every oldest waiter is instantly "aged", so SJF
@@ -1639,15 +1593,15 @@ mod tests {
             ..ServeConfig::default()
         };
         let mut sched = Scheduler::new(&engine, SpecDecConfig::default(), cfg);
-        let (tx, rx) = mpsc::channel();
-        submit_all(&mut sched, &tx);
+        let rx = ReplySink::new();
+        submit_all(&mut sched, &rx);
         assert_eq!(completion_token_counts(&mut sched, &rx, 3), vec![3, 4, 5]);
 
         // FIFO control: arrival order.
         let cfg = ServeConfig { max_sessions: 1, ..ServeConfig::default() };
         let mut sched = Scheduler::new(&engine, SpecDecConfig::default(), cfg);
-        let (tx, rx) = mpsc::channel();
-        submit_all(&mut sched, &tx);
+        let rx = ReplySink::new();
+        submit_all(&mut sched, &rx);
         assert_eq!(completion_token_counts(&mut sched, &rx, 3), vec![3, 4, 5]);
     }
 }

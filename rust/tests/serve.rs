@@ -6,8 +6,8 @@
 use std::cell::Cell;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use hat::backend::reference::ReferenceBackend;
@@ -15,8 +15,9 @@ use hat::backend::{ExecBackend, RuntimeStats, Tensor};
 use hat::config::{PriorityMode, SampleVerify, ServeConfig, SpecDecConfig};
 use hat::engine::Engine;
 use hat::runtime::{ArtifactRegistry, Manifest};
+use hat::server::conn::{ReplySink, MAX_LINE_BYTES};
 use hat::server::pools::{PdScheduler, ServeExec};
-use hat::server::scheduler::{ReplyHandle, Request, Scheduler};
+use hat::server::scheduler::{Request, Scheduler};
 use hat::server::{generate, serve_listener};
 use hat::util::clock;
 use hat::util::proptest::{cases, forall};
@@ -28,18 +29,18 @@ fn prompt_of(rng: &mut Rng, len: usize, vocab: usize) -> Vec<u32> {
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
-/// A request with a fresh id and its own reply channel.
-fn request(prompt: Vec<u32>, max_new: usize) -> (Request, mpsc::Receiver<String>) {
-    let (tx, rx) = mpsc::channel();
+/// A request with a fresh id and its own reply sink.
+fn request(prompt: Vec<u32>, max_new: usize) -> (Request, ReplySink) {
+    let tx = ReplySink::new();
     (
         Request {
             id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
             prompt,
             max_new,
-            reply: ReplyHandle::new(tx),
+            reply: tx.clone(),
             enqueued: clock::now(),
         },
-        rx,
+        tx,
     )
 }
 
@@ -450,7 +451,7 @@ fn prop_slot_epoch_identity_under_cancellation_churn() {
         };
         let mut sched = Scheduler::new(&engine, spec.clone(), cfg);
         // (id, prompt, max_new, rx, cancelled)
-        let mut items: Vec<(u64, Vec<u32>, usize, mpsc::Receiver<String>, bool)> = Vec::new();
+        let mut items: Vec<(u64, Vec<u32>, usize, ReplySink, bool)> = Vec::new();
 
         // Deterministic seed of the hazard in every case: the first
         // request is admitted (fresh scheduler, free slot), stepped so it
@@ -608,7 +609,7 @@ fn prop_stochastic_survivors_match_serial_under_cancellation_churn() {
             ..ServeConfig::default()
         };
         let mut sched = Scheduler::new(&engine, spec.clone(), cfg);
-        let mut items: Vec<(u64, Vec<u32>, usize, mpsc::Receiver<String>, bool)> = Vec::new();
+        let mut items: Vec<(u64, Vec<u32>, usize, ReplySink, bool)> = Vec::new();
 
         // Seed the slot-reuse hazard: admit, step, cancel while live.
         let prompt = prompt_of(rng, 30, vocab);
@@ -950,7 +951,7 @@ fn prop_preemption_churn_preserves_streams_and_quiesces_pool() {
         };
         let mut sched = Scheduler::new(&engine, spec.clone(), cfg);
         // (id, prompt, max_new, rx, cancelled)
-        let mut items: Vec<(u64, Vec<u32>, usize, mpsc::Receiver<String>, bool)> = Vec::new();
+        let mut items: Vec<(u64, Vec<u32>, usize, ReplySink, bool)> = Vec::new();
 
         // Fill every slot with a long-running generation, queue one more
         // request, and step until the scheduler parks a victim — each case
@@ -1076,7 +1077,7 @@ fn prop_pd_pool_churn_preserves_streams_and_quiesces_pool() {
         let mut sched = PdScheduler::new(&pf_engine, &dc_engine, spec.clone(), cfg)
             .map_err(|e| e.to_string())?;
         // (id, prompt, max_new, rx, cancelled)
-        let mut items: Vec<(u64, Vec<u32>, usize, mpsc::Receiver<String>, bool)> = Vec::new();
+        let mut items: Vec<(u64, Vec<u32>, usize, ReplySink, bool)> = Vec::new();
 
         let system = prompt_of(rng, rng.range_usize(24, 56), vocab);
         for _ in 0..rng.range_usize(6, 12) {
@@ -1215,7 +1216,7 @@ fn prop_pd_pool_churn_preserves_streams_and_quiesces_pool() {
         };
         let mut dl = PdScheduler::new(&pf_engine, &dc_engine, spec.clone(), dl_cfg)
             .map_err(|e| e.to_string())?;
-        let mut dl_items: Vec<(u64, Vec<u32>, usize, mpsc::Receiver<String>)> = Vec::new();
+        let mut dl_items: Vec<(u64, Vec<u32>, usize, ReplySink)> = Vec::new();
         {
             let prompt = prompt_of(rng, rng.range_usize(12, 32), vocab);
             let (r, rx) = request(prompt.clone(), 48);
@@ -1261,4 +1262,280 @@ fn prop_pd_pool_churn_preserves_streams_and_quiesces_pool() {
     assert!(total_handoffs >= 8, "every case must cross the pool seam");
     assert!(total_preempted >= 8, "every case's park stanza must park a victim");
     assert!(total_deadline >= 8, "the 48-token stream must outlive a 2 ms deadline in every case");
+}
+
+/// A sender that never terminates its line must be rejected while the
+/// line is still arriving — the incremental [`MAX_LINE_BYTES`] frame cap
+/// — with `ERR line too long`, after which the connection is closed.
+/// The client holds its socket open throughout: termination must come
+/// from the server, not from the client giving up.
+#[test]
+fn oversized_line_is_rejected_incrementally_and_conn_closed() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve_listener(listener, SpecDecConfig::default(), ServeConfig::default(), 1).unwrap();
+    });
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // One byte past the cap, no newline ever: the reject must fire on
+    // byte count alone, mid-line.
+    let payload = vec![b'7'; MAX_LINE_BYTES + 1];
+    stream.write_all(&payload).unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "ERR line too long");
+    line.clear();
+    let n = reader.read_line(&mut line).unwrap();
+    assert_eq!(n, 0, "server must close after rejecting the oversized line, got {line:?}");
+    server.join().unwrap();
+}
+
+/// Admission shedding: with `admit_queue = 1` and a single session slot,
+/// a GENERATE arriving while another request is already queued is
+/// refused with `ERR busy` and counted in `shed_busy` — the queue never
+/// grows past the configured bound.
+#[test]
+fn generate_is_shed_with_err_busy_when_admit_queue_full() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = ServeConfig { max_sessions: 1, admit_queue: 1, ..ServeConfig::default() };
+    let server = std::thread::spawn(move || {
+        serve_listener(listener, SpecDecConfig::default(), cfg, 3).unwrap();
+    });
+
+    // A: a long generation that holds the single slot.
+    let mut a = TcpStream::connect(addr).unwrap();
+    let mut a_reader = BufReader::new(a.try_clone().unwrap());
+    let prompt: Vec<String> = (0u32..80).map(|i| ((i * 3 + 5) % 256).to_string()).collect();
+    writeln!(a, "GENERATE 400 {}", prompt.join(" ")).unwrap();
+
+    // B: queues behind A.
+    let mut b = TcpStream::connect(addr).unwrap();
+    let mut b_reader = BufReader::new(b.try_clone().unwrap());
+    writeln!(b, "GENERATE 3 5 9 2 14").unwrap();
+
+    // C: wait until B is visibly queued, then a GENERATE must shed.
+    let mut c = TcpStream::connect(addr).unwrap();
+    let mut c_reader = BufReader::new(c.try_clone().unwrap());
+    let deadline = clock::now() + Duration::from_secs(30);
+    let mut line = String::new();
+    loop {
+        assert!(clock::now() < deadline, "B never showed up queued; last STATS: {line}");
+        writeln!(c, "STATS").unwrap();
+        line.clear();
+        c_reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK "), "bad STATS reply: {line}");
+        if line.contains(" queued=1 ") {
+            break;
+        }
+        clock::sleep(Duration::from_millis(5));
+    }
+    writeln!(c, "GENERATE 2 7 7").unwrap();
+    line.clear();
+    c_reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "ERR busy");
+    writeln!(c, "STATS").unwrap();
+    line.clear();
+    c_reader.read_line(&mut line).unwrap();
+    assert!(line.contains("shed_busy=1"), "STATS missing the shed: {line}");
+    writeln!(c, "QUIT").unwrap();
+
+    // Unwind: cancel A; B's queued request then takes the slot and
+    // completes normally — shedding never touched admitted work.
+    writeln!(a, "CANCEL").unwrap();
+    line.clear();
+    a_reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "ERR cancelled");
+    writeln!(a, "QUIT").unwrap();
+    line.clear();
+    b_reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "B's queued GENERATE must finish: {line}");
+    writeln!(b, "QUIT").unwrap();
+    drop((a, b, c));
+    server.join().unwrap();
+}
+
+/// Per-client rate limiting: with a one-token bucket and a refill rate
+/// slow enough to add nothing inside the test window, the second
+/// GENERATE on a connection is refused with `ERR rate limited` and
+/// counted in `rate_limited`.  STATS is never limited.
+#[test]
+fn second_generate_is_rate_limited_with_one_token_bucket() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = ServeConfig { rate_limit_rps: 0.0001, burst: 1, ..ServeConfig::default() };
+    let server = std::thread::spawn(move || {
+        serve_listener(listener, SpecDecConfig::default(), cfg, 1).unwrap();
+    });
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, "GENERATE 2 5 9 2 14").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "first GENERATE must pass the bucket: {line}");
+    writeln!(stream, "GENERATE 2 5 9 2 14").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "ERR rate limited");
+    writeln!(stream, "STATS").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("rate_limited=1"), "STATS missing the refusal: {line}");
+    writeln!(stream, "QUIT").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "OK bye");
+    server.join().unwrap();
+}
+
+/// A reader that stops draining its socket is dropped once its reply
+/// outbox crosses `serve.outbox_lines` — the loop never stalls behind
+/// it, and the drop is visible to a live client as `slow_reader_dropped`
+/// while that client keeps getting served.
+#[test]
+fn slow_reader_is_dropped_and_loop_stays_live() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = ServeConfig { outbox_lines: 4, ..ServeConfig::default() };
+    let server = std::thread::spawn(move || {
+        serve_listener(listener, SpecDecConfig::default(), cfg, 2).unwrap();
+    });
+
+    // The slow reader: flood STATS without ever reading a byte back.
+    // Replies fill the kernel buffers, then the bounded outbox, then the
+    // server drops the connection (a later write here errors out).
+    let mut slow = TcpStream::connect(addr).unwrap();
+    let burst = "STATS\n".repeat(64);
+    for _ in 0..3_200 {
+        if slow.write_all(burst.as_bytes()).is_err() {
+            break;
+        }
+    }
+
+    // A live client observes the drop and stays served throughout.
+    let mut live = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(live.try_clone().unwrap());
+    let deadline = clock::now() + Duration::from_secs(30);
+    let mut line = String::new();
+    loop {
+        assert!(clock::now() < deadline, "slow reader never dropped; last STATS: {line}");
+        writeln!(live, "STATS").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK "), "bad STATS reply: {line}");
+        if line.contains("slow_reader_dropped=1") {
+            break;
+        }
+        clock::sleep(Duration::from_millis(5));
+    }
+    writeln!(live, "QUIT").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "OK bye");
+    drop(slow);
+    server.join().unwrap();
+}
+
+/// A slowloris — connected, dribbling bytes of a never-terminated line —
+/// must not inflate a live client's time-between-replies: the event loop
+/// charges it one non-blocking read per pass and nothing more, so three
+/// short generations beside it finish in bounded wall time.
+#[test]
+fn slowloris_does_not_stall_live_clients() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve_listener(listener, SpecDecConfig::default(), ServeConfig::default(), 2).unwrap();
+    });
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let loris_stop = stop.clone();
+    let loris = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        while !loris_stop.load(Ordering::Relaxed) {
+            if s.write_all(b"G").is_err() {
+                break;
+            }
+            clock::sleep(Duration::from_millis(2));
+        }
+    });
+
+    let mut live = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(live.try_clone().unwrap());
+    let t0 = clock::now();
+    for i in 0..3u32 {
+        writeln!(live, "GENERATE 4 {} 9 2 14", i + 5).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK "), "live client starved beside the slowloris: {line}");
+    }
+    let elapsed = clock::now().saturating_duration_since(t0);
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "three 4-token generations took {elapsed:?} beside a slowloris"
+    );
+    writeln!(live, "QUIT").unwrap();
+    stop.store(true, Ordering::Relaxed);
+    loris.join().unwrap();
+    server.join().unwrap();
+}
+
+/// Scaled-down churn storm (the 10k-connection version lives in the
+/// `serve_churn` bench): a few hundred connections from parallel driver
+/// threads — a third vanish before sending anything, a third complete a
+/// short generation, a third abandon a long one mid-flight — must all be
+/// absorbed with every live request served, and the loop must exit once
+/// the accept budget is consumed.
+#[test]
+fn connection_storm_completes_and_loop_exits() {
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 64;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = ServeConfig { max_sessions: 8, ..ServeConfig::default() };
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let r = serve_listener(listener, SpecDecConfig::default(), cfg, THREADS * PER_THREAD);
+        let _ = done_tx.send(r);
+    });
+
+    let drivers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut completed = 0usize;
+                for i in 0..PER_THREAD {
+                    match i % 3 {
+                        // Vanish before sending anything.
+                        0 => drop(TcpStream::connect(addr).unwrap()),
+                        // Complete a short generation end to end.
+                        1 => {
+                            let mut s = TcpStream::connect(addr).unwrap();
+                            let mut r = BufReader::new(s.try_clone().unwrap());
+                            writeln!(s, "GENERATE 2 {} {} 3 1", t + 1, i + 1).unwrap();
+                            let mut line = String::new();
+                            r.read_line(&mut line).unwrap();
+                            assert!(line.starts_with("OK "), "storm request failed: {line}");
+                            completed += 1;
+                            writeln!(s, "QUIT").unwrap();
+                        }
+                        // Abandon a long generation mid-flight.
+                        _ => {
+                            let mut s = TcpStream::connect(addr).unwrap();
+                            writeln!(s, "GENERATE 300 {} 7 5 3 2", t + 1).unwrap();
+                        }
+                    }
+                }
+                completed
+            })
+        })
+        .collect();
+    let completed: usize = drivers.into_iter().map(|d| d.join().unwrap()).sum();
+    let live_per_thread = (0..PER_THREAD).filter(|i| i % 3 == 1).count();
+    assert_eq!(completed, THREADS * live_per_thread, "every live storm request must complete");
+    done_rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("serve loop did not exit after the storm consumed its accept budget")
+        .unwrap();
 }

@@ -1,0 +1,13 @@
+// Seeds seam-conn violations: a per-connection thread and blocking
+// socket calls outside server/conn.rs.  The serve front end is one
+// non-blocking event loop; conn.rs is the only sanctioned home of
+// socket I/O in the server tree.
+pub fn handle(listener: TcpListener) {
+    if let Ok((stream, _)) = listener.accept() {
+        std::thread::spawn(move || {
+            let mut reader = BufReader::new(stream);
+            let mut line = String::new();
+            let _ = reader.read_line(&mut line);
+        });
+    }
+}

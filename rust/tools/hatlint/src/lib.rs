@@ -15,6 +15,7 @@
 //! | `seam-backend`          | `engine/`, `specdec/`, `server/` never name a concrete backend type |
 //! | `seam-kv`               | raw KV data-plane accessors (`write_row`, `gather_dense`, …) only in `backend/` and `kv/` |
 //! | `seam-pool`             | no direct ExecBackend execution calls (`run`, `run_batch`, …) in `server/` — pool code drives sessions, not the backend |
+//! | `seam-conn`             | no `thread::spawn` and no blocking socket calls (`accept`, `read_line`, `write_all`, …) in `server/` outside `conn.rs` — the serve front end is one non-blocking event loop |
 //! | `panic-path`            | no un-annotated `unwrap()`/`expect(`/`panic!`/`unreachable!`/`assert!` in the serve hot path (`server/`, `cloud/batcher.rs`, `specdec/mod.rs`) |
 //! | `lock-unwrap`           | no `.lock().unwrap()` / `.lock().expect(` anywhere in `rust/src` (poisoned-lock recovery required) |
 //! | `drift-config-readme`   | every key parsed in `config/parser.rs` is documented in README.md |
@@ -44,6 +45,7 @@ pub const LINT_IDS: &[&str] = &[
     "seam-backend",
     "seam-kv",
     "seam-pool",
+    "seam-conn",
     "panic-path",
     "lock-unwrap",
     "drift-config-readme",
@@ -510,6 +512,7 @@ pub fn run_lints(root: &Path) -> io::Result<Vec<Finding>> {
     check_seam_backend(&scanned, &mut findings);
     check_seam_kv(&scanned, &mut findings);
     check_seam_pool(&scanned, &mut findings);
+    check_seam_conn(&scanned, &mut findings);
     check_panic_path(&scanned, &mut findings);
     check_lock_unwrap(&scanned, &mut findings);
     check_config_drift(&scanned, &readme, &mut findings);
@@ -709,6 +712,77 @@ fn check_seam_pool(scanned: &[Scanned], findings: &mut Vec<Finding>) {
                         "direct ExecBackend execution call `.{name}(` in server/ — \
                          pool and scheduler code must drive Session/Engine, never \
                          the backend itself"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Blocking socket entry points and thread hand-offs.  The serve front
+/// end is a single non-blocking event loop owning listener, connections
+/// and engine; `server/conn.rs` is its one sanctioned home.  A
+/// `thread::spawn` or a blocking socket call anywhere else in `server/`
+/// reintroduces the thread-per-connection model the event loop replaced
+/// (and with it the reply channels and timeout-bounded disconnect
+/// probes the refactor deleted).
+const BLOCKING_SOCKET_CALLS: &[&str] = &[
+    "accept",
+    "read_line",
+    "read_to_end",
+    "read_to_string",
+    "read_exact",
+    "write_all",
+    "set_read_timeout",
+    "set_write_timeout",
+    "spawn",
+];
+
+fn check_seam_conn(scanned: &[Scanned], findings: &mut Vec<Finding>) {
+    for f in scanned {
+        if !f.rel.starts_with("rust/src/server/") || f.rel.ends_with("/conn.rs") {
+            continue;
+        }
+        for w in f.toks.windows(4) {
+            if w[0].in_test {
+                continue;
+            }
+            if let (Tok::Ident(a), Tok::Punct(':'), Tok::Punct(':'), Tok::Ident(b)) =
+                (&w[0].tok, &w[1].tok, &w[2].tok, &w[3].tok)
+            {
+                if a == "thread" && b == "spawn" {
+                    push(
+                        findings,
+                        f,
+                        w[3].line,
+                        "seam-conn",
+                        "`thread::spawn` in server/ outside conn.rs — the serve front \
+                         end is one event loop on the engine-owning thread; connection \
+                         concurrency belongs in server/conn.rs"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+        for w in f.toks.windows(3) {
+            if w[1].in_test {
+                continue;
+            }
+            let (Tok::Punct('.'), Tok::Ident(name), Tok::Punct('(')) =
+                (&w[0].tok, &w[1].tok, &w[2].tok)
+            else {
+                continue;
+            };
+            if BLOCKING_SOCKET_CALLS.contains(&name.as_str()) {
+                push(
+                    findings,
+                    f,
+                    w[1].line,
+                    "seam-conn",
+                    format!(
+                        "blocking socket call `.{name}(` in server/ outside conn.rs — \
+                         socket I/O lives in the conn.rs event loop (non-blocking), \
+                         nowhere else in the server tree"
                     ),
                 );
             }
